@@ -1,0 +1,97 @@
+"""AOT pipeline: lower the LROT model to HLO text per shape bucket.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts land in artifacts/ as
+
+    lrot_s{S}_r{R}_k{K}.hlo.txt     one per (sample, rank, cost-factor) bucket
+    manifest.tsv                    "s<TAB>r<TAB>k<TAB>outer<TAB>inner<TAB>gamma<TAB>tau<TAB>path"
+
+The Rust runtime reads manifest.tsv, compiles each bucket once on the PJRT
+CPU client, and serves every HiRef sub-problem from the smallest bucket that
+fits (padding is exact — see model.py).  Python runs only here, never on the
+request path.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--grid small|default|large]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import LrotHyper, example_args, make_lrot
+
+# Bucket grids: (sample sizes) × (ranks) × (cost-factor widths).
+# k = d + 2 for the exact squared-Euclidean factorisation: k=4 covers the
+# 2-D synthetic suites, k=64 covers 60-dim PCA transcriptomics and Indyk
+# factorisations of high-dim embeddings (features are zero-padded, which is
+# exact for factorised costs).
+GRIDS = {
+    "small": dict(sizes=(256, 1024), ranks=(2, 8), ks=(4,)),
+    "default": dict(sizes=(256, 1024, 4096, 16384),
+                    ranks=(2, 8, 16), ks=(4, 64)),
+    "large": dict(sizes=(256, 1024, 4096, 16384, 65536),
+                  ranks=(2, 8, 16, 32), ks=(4, 64)),
+}
+
+HYPER = LrotHyper(rank=0)  # rank filled per bucket; rest are the defaults
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_bucket(s: int, r: int, k: int) -> str:
+    hyper = HYPER._replace(rank=r)
+    fn = make_lrot(s, k, hyper)
+    lowered = jax.jit(fn).lower(*example_args(s, k, r))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--grid", default="default", choices=sorted(GRIDS))
+    args = ap.parse_args()
+
+    grid = GRIDS[args.grid]
+    os.makedirs(args.out_dir, exist_ok=True)
+    rows = []
+    n_buckets = (len(grid["sizes"]) * len(grid["ranks"]) * len(grid["ks"]))
+    done = 0
+    for s in grid["sizes"]:
+        for r in grid["ranks"]:
+            if r * 2 > s:
+                continue
+            for k in grid["ks"]:
+                name = f"lrot_s{s}_r{r}_k{k}.hlo.txt"
+                path = os.path.join(args.out_dir, name)
+                text = lower_bucket(s, r, k)
+                with open(path, "w") as f:
+                    f.write(text)
+                rows.append((s, r, k, HYPER.outer, HYPER.inner,
+                             HYPER.gamma, HYPER.tau, name))
+                done += 1
+                print(f"[{done}/{n_buckets}] wrote {name} "
+                      f"({len(text)//1024} KiB)", file=sys.stderr)
+
+    manifest = os.path.join(args.out_dir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        for row in rows:
+            f.write("\t".join(str(x) for x in row) + "\n")
+    print(f"wrote {manifest} with {len(rows)} buckets", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

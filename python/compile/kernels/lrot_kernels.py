@@ -1,0 +1,124 @@
+"""Layer-1 Pallas kernels for the low-rank OT mirror-descent hot spot.
+
+Both kernels are the compute inner loop of every LROT call HiRef makes
+(one per co-cluster per scale).  They are tiled over the sample axis so
+each tile's working set fits VMEM: for a bucket (s, k, r) a tile holds
+`block_s·k` factor rows plus the small (k, r) intermediate — the BlockSpec
+expresses the HBM↔VMEM schedule that a GPU implementation would express
+with thread blocks, and the `U_tile @ W` contraction is MXU-shaped
+(bf16/f32 matmul over a (block_s, k) × (k, r) tile).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels lower to plain HLO (see DESIGN.md
+§Hardware-adaptation).  Numerics are pinned to kernels/ref.py by pytest.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG
+
+_INTERPRET = True
+
+
+def _pick_block(s: int, target: int = 256) -> int:
+    """Largest power-of-two tile ≤ target that divides s (s itself if none)."""
+    b = target
+    while b > 1:
+        if s % b == 0:
+            return b
+        b //= 2
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Kernel 1: fused low-rank gradient  (U @ (V^T @ R)) * inv_g
+# ---------------------------------------------------------------------------
+
+def _inner_matmul_kernel(v_ref, r_ref, w_ref):
+    """W = V^T @ R for one column-tile of V/R, accumulated over the grid."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        w_ref[...] = jnp.zeros_like(w_ref)
+
+    w_ref[...] += v_ref[...].T @ r_ref[...]
+
+
+def _outer_matmul_kernel(u_ref, w_ref, o_ref, *, inv_g: float):
+    """out_tile = (U_tile @ W) * inv_g."""
+    o_ref[...] = (u_ref[...] @ w_ref[...]) * inv_g
+
+
+def lowrank_grad(U: jnp.ndarray, V: jnp.ndarray, R: jnp.ndarray,
+                 inv_g: float) -> jnp.ndarray:
+    """Pallas version of ref.lowrank_grad_ref: (U @ (V^T @ R)) * inv_g.
+
+    U, V: (s, k) cost factors; R: (s, r) coupling factor.  Returns (s, r).
+    Stage 1 reduces V^T R over row tiles (k×r stays resident in VMEM);
+    stage 2 streams row tiles of U against the resident W.
+    """
+    s, k = U.shape
+    r = R.shape[1]
+    bs = _pick_block(s)
+    grid = (s // bs,)
+
+    W = pl.pallas_call(
+        _inner_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, k), lambda i: (i, 0)),
+            pl.BlockSpec((bs, r), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((k, r), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, r), U.dtype),
+        interpret=_INTERPRET,
+    )(V, R)
+
+    return pl.pallas_call(
+        functools.partial(_outer_matmul_kernel, inv_g=float(inv_g)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, r), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, r), U.dtype),
+        interpret=_INTERPRET,
+    )(U, W)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 2: masked row logsumexp (the Sinkhorn f-update reduction)
+# ---------------------------------------------------------------------------
+
+def _masked_lse_kernel(m_ref, mask_ref, o_ref):
+    m = m_ref[...]
+    mx = jnp.maximum(jnp.max(m, axis=-1, keepdims=True), NEG)
+    lse = mx[:, 0] + jnp.log(jnp.sum(jnp.exp(m - mx), axis=-1))
+    o_ref[...] = jnp.where(mask_ref[...] > 0.5, lse, NEG)
+
+
+def masked_row_logsumexp(M: jnp.ndarray, row_mask: jnp.ndarray) -> jnp.ndarray:
+    """Pallas version of ref.masked_row_logsumexp_ref.
+
+    M: (s, r); row_mask: (s,) 1.0 = active, 0.0 = padded.  Returns (s,).
+    """
+    s, r = M.shape
+    bs = _pick_block(s)
+    return pl.pallas_call(
+        _masked_lse_kernel,
+        grid=(s // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, r), lambda i: (i, 0)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((s,), M.dtype),
+        interpret=_INTERPRET,
+    )(M, row_mask)

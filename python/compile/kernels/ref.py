@@ -1,0 +1,104 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness spec).
+
+Every Pallas kernel in this package has an exact pure-`jax.numpy`
+counterpart here.  pytest/hypothesis sweeps shapes and dtypes asserting
+`assert_allclose(kernel(...), ref(...))` — this file is the single source
+of numerical truth for Layer 1.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Large negative used to mask log-weights of padded (zero-mass) points.
+# Chosen so exp(NEG) == 0 in f32 but NEG - NEG arithmetic stays finite.
+NEG = -1.0e9
+
+
+def lowrank_grad_ref(U: jnp.ndarray, V: jnp.ndarray, R: jnp.ndarray,
+                     inv_g: float) -> jnp.ndarray:
+    """Gradient of <C, Q diag(1/g) R^T> w.r.t. Q, with C = U @ V^T.
+
+    Computes (U @ (V^T @ R)) * inv_g without materialising the s×s cost
+    matrix — the core linear-space trick of low-rank OT.
+
+    U: (s, k) left cost factor, V: (s, k) right cost factor, R: (s, r).
+    Returns (s, r).
+    """
+    W = V.T @ R                      # (k, r) — small
+    return (U @ W) * inv_g           # (s, r)
+
+
+def masked_row_logsumexp_ref(M: jnp.ndarray, row_mask: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise logsumexp of M (s, r); rows with row_mask==0 return NEG.
+
+    Stable: subtracts the row max.  Padded rows must not produce NaN/Inf
+    that could leak into neighbouring rows under vectorised ops.
+    """
+    mx = jnp.max(M, axis=-1, keepdims=True)
+    mx = jnp.maximum(mx, NEG)  # guard all-NEG rows
+    lse = mx[:, 0] + jnp.log(jnp.sum(jnp.exp(M - mx), axis=-1))
+    return jnp.where(row_mask > 0.5, lse, NEG)
+
+
+def sinkhorn_project_ref(logK: jnp.ndarray, loga: jnp.ndarray,
+                         logg: jnp.ndarray, iters: int) -> jnp.ndarray:
+    """Project exp(logK) onto Π(a, g) in log domain (KL projection).
+
+    logK: (s, r) log kernel; loga: (s,) log row marginal (NEG = padded);
+    logg: (r,) log inner marginal.  Returns logQ with row sums == a and
+    column sums == g (up to `iters` Sinkhorn sweeps).
+    """
+    row_mask = (loga > NEG / 2).astype(logK.dtype)
+    f = jnp.zeros(logK.shape[0], logK.dtype)
+    h = jnp.zeros(logK.shape[1], logK.dtype)
+    for _ in range(iters):
+        # f-update: match row marginals a
+        lse_r = masked_row_logsumexp_ref(logK + h[None, :], row_mask)
+        f = jnp.where(row_mask > 0.5, loga - lse_r, NEG)
+        # h-update: match column marginals g (columns always active)
+        Mc = logK + f[:, None]
+        mx = jnp.maximum(jnp.max(Mc, axis=0), NEG)
+        lse_c = mx + jnp.log(jnp.sum(jnp.exp(Mc - mx[None, :]), axis=0))
+        h = logg - lse_c
+    return logK + f[:, None] + h[None, :]
+
+
+def lrot_ref(U, V, loga, logb, noise_q, noise_r, rank: int,
+             outer: int, inner: int, gamma: float):
+    """Reference low-rank OT: mirror descent on (Q, R), uniform inner g.
+
+    Solves  min <C, Q diag(1/g) R^T>  s.t. Q ∈ Π(a,g), R ∈ Π(b,g),
+    g = 1/r uniform (paper Eq. 7), with C = U V^T.  Python-loop version of
+    the lowered model — used as the oracle for model tests.
+    Returns (Q, R) as (s, r) nonnegative arrays.
+    """
+    logg = jnp.full((rank,), -jnp.log(float(rank)), U.dtype)
+    inv_g = float(rank)
+    tau = 0.01
+    logQ = sinkhorn_project_ref(
+        loga[:, None] + logg[None, :] + tau * noise_q, loga, logg, inner)
+    logR = sinkhorn_project_ref(
+        logb[:, None] + logg[None, :] + tau * noise_r, logb, logg, inner)
+    for _ in range(outer):
+        Q = jnp.exp(logQ)
+        R = jnp.exp(logR)
+        gq = lowrank_grad_ref(U, V, R, inv_g)
+        gr = lowrank_grad_ref(V, U, Q, inv_g)
+        scale = jnp.maximum(jnp.max(jnp.abs(gq)), jnp.max(jnp.abs(gr)))
+        step = gamma / jnp.maximum(scale, 1e-12)
+        logQ = sinkhorn_project_ref(logQ - step * gq, loga, logg, inner)
+        logR = sinkhorn_project_ref(logR - step * gr, logb, logg, inner)
+    return jnp.exp(logQ), jnp.exp(logR)
+
+
+def sqeuclid_factors_ref(X: jnp.ndarray, Y: jnp.ndarray):
+    """Exact rank-(d+2) factorisation of the squared-Euclidean cost matrix.
+
+    C_ij = |x_i|^2 - 2 x_i·y_j + |y_j|^2  =  (U V^T)_ij with
+    U = [|x|^2, 1, -2x],  V = [1, |y|^2, y].  Returns (U, V), each (n, d+2).
+    """
+    nx = jnp.sum(X * X, axis=1, keepdims=True)
+    ny = jnp.sum(Y * Y, axis=1, keepdims=True)
+    U = jnp.concatenate([nx, jnp.ones_like(nx), -2.0 * X], axis=1)
+    V = jnp.concatenate([jnp.ones_like(ny), ny, Y], axis=1)
+    return U, V

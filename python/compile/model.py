@@ -1,0 +1,114 @@
+"""Layer-2 JAX model: the low-rank OT (LROT) solver HiRef calls per co-cluster.
+
+Solves the paper's Eq. 7 —
+
+    min_{Q ∈ Π(a,g), R ∈ Π(b,g)}  <C, Q diag(1/g) R^T>,   g = 1_r / r
+
+— by FRLC-style mirror descent (Halmos et al. 2024) with the inner marginal
+pinned uniform (the paper sends the inner step-size τ_in → ∞, which is
+exactly a hard uniform constraint).  The cost matrix is never materialised:
+the model consumes low-rank cost factors U, V with C = U V^T, so one
+gradient costs O(s·k·r) (Layer-1 Pallas kernel `lowrank_grad`).
+
+Marginals arrive in log space; padded (phantom) points carry log-mass NEG,
+so a sub-problem of any size ≤ s runs exactly on a fixed (s, r, k) bucket —
+this is what makes static-shape AOT artifacts usable from the Rust
+coordinator.
+
+This module is build-time only: `aot.py` lowers `make_lrot` per bucket to
+HLO text; Python never runs on the Rust request path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lrot_kernels as K
+from .kernels.ref import NEG
+
+
+class LrotHyper(NamedTuple):
+    """Static hyper-parameters baked into each lowered artifact."""
+    rank: int
+    outer: int = 30      # mirror-descent steps (L in the paper's complexity)
+    inner: int = 12      # Sinkhorn sweeps per KL projection (B)
+    gamma: float = 8.0   # base mirror step, rescaled by ||grad||_inf
+    tau: float = 0.01    # init symmetry-breaking noise scale
+
+
+def sinkhorn_project(logK, loga, logg, inner: int):
+    """KL-project exp(logK) onto Π(a, g), log domain, masked rows.
+
+    Matches ref.sinkhorn_project_ref but runs the row reduction through the
+    Pallas kernel and the sweep through lax.fori_loop so it lowers compactly.
+    """
+    row_mask = (loga > NEG / 2).astype(logK.dtype)
+
+    def body(_, carry):
+        f, h = carry
+        lse_r = K.masked_row_logsumexp(logK + h[None, :], row_mask)
+        f = jnp.where(row_mask > 0.5, loga - lse_r, NEG)
+        Mc = logK + f[:, None]
+        mx = jnp.maximum(jnp.max(Mc, axis=0), NEG)
+        lse_c = mx + jnp.log(jnp.sum(jnp.exp(Mc - mx[None, :]), axis=0))
+        h = logg - lse_c
+        return f, h
+
+    f0 = jnp.zeros(logK.shape[0], logK.dtype)
+    h0 = jnp.zeros(logK.shape[1], logK.dtype)
+    f, h = jax.lax.fori_loop(0, inner, body, (f0, h0))
+    return logK + f[:, None] + h[None, :]
+
+
+def lrot(U, V, loga, logb, noise_q, noise_r, hyper: LrotHyper):
+    """Run mirror descent; return hard-assignable factors (Q, R), each (s, r).
+
+    U, V:   (s, k) cost factors (C = U V^T restricted to this co-cluster).
+    loga/b: (s,) log marginals, NEG on padded rows.
+    noise:  (s, r) symmetry-breaking perturbations (PRNG lives in Rust so
+            artifacts stay deterministic functions of their inputs).
+    """
+    r = hyper.rank
+    logg = jnp.full((r,), -jnp.log(float(r)), U.dtype)
+    inv_g = float(r)
+
+    logQ = sinkhorn_project(
+        loga[:, None] + logg[None, :] + hyper.tau * noise_q,
+        loga, logg, hyper.inner)
+    logR = sinkhorn_project(
+        logb[:, None] + logg[None, :] + hyper.tau * noise_r,
+        logb, logg, hyper.inner)
+
+    def body(_, carry):
+        logQ, logR = carry
+        Q = jnp.exp(logQ)
+        R = jnp.exp(logR)
+        gq = K.lowrank_grad(U, V, R, inv_g)    # (s, r) = U (V^T R) / g
+        gr = K.lowrank_grad(V, U, Q, inv_g)    # (s, r) = V (U^T Q) / g
+        scale = jnp.maximum(jnp.max(jnp.abs(gq)), jnp.max(jnp.abs(gr)))
+        step = hyper.gamma / jnp.maximum(scale, 1e-12)
+        logQ = sinkhorn_project(logQ - step * gq, loga, logg, hyper.inner)
+        logR = sinkhorn_project(logR - step * gr, logb, logg, hyper.inner)
+        return logQ, logR
+
+    logQ, logR = jax.lax.fori_loop(0, hyper.outer, body, (logQ, logR))
+    return jnp.exp(logQ), jnp.exp(logR)
+
+
+def make_lrot(s: int, k: int, hyper: LrotHyper):
+    """Return a jittable fn of (U, V, loga, logb, noise_q, noise_r) for a
+    fixed (s, r, k) bucket, returning the tuple (Q, R)."""
+
+    def fn(U, V, loga, logb, noise_q, noise_r):
+        return lrot(U, V, loga, logb, noise_q, noise_r, hyper)
+
+    return fn
+
+
+def example_args(s: int, k: int, rank: int, dtype=jnp.float32):
+    """ShapeDtypeStructs matching make_lrot's signature, for jit.lower."""
+    f = functools.partial(jax.ShapeDtypeStruct, dtype=dtype)
+    return (f((s, k)), f((s, k)), f((s,)), f((s,)), f((s, rank)), f((s, rank)))

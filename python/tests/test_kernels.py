@@ -1,0 +1,132 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (kernels/ref.py).
+
+hypothesis sweeps shapes (including non-power-of-two sample counts, which
+exercise the fallback tiling) and dtypes, asserting allclose against ref.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lrot_kernels as K
+from compile.kernels import ref
+
+F32 = np.float32
+
+
+def _rand(rng, *shape, dtype=F32):
+    return jnp.asarray(rng.normal(size=shape).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# lowrank_grad
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    s=st.sampled_from([8, 16, 64, 96, 256, 1000]),
+    k=st.sampled_from([1, 4, 7, 64]),
+    r=st.sampled_from([2, 3, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lowrank_grad_matches_ref(s, k, r, seed):
+    rng = np.random.default_rng(seed)
+    U = _rand(rng, s, k)
+    V = _rand(rng, s, k)
+    R = jnp.abs(_rand(rng, s, r)) / s
+    got = K.lowrank_grad(U, V, R, float(r))
+    want = ref.lowrank_grad_ref(U, V, R, float(r))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_lowrank_grad_equals_dense_product():
+    """The fused kernel must equal the dense (U V^T) R product it avoids."""
+    rng = np.random.default_rng(7)
+    U, V = _rand(rng, 32, 4), _rand(rng, 32, 4)
+    R = jnp.abs(_rand(rng, 32, 2))
+    C = np.asarray(U) @ np.asarray(V).T
+    want = C @ np.asarray(R) * 2.0
+    got = np.asarray(K.lowrank_grad(U, V, R, 2.0))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_lowrank_grad_bf16_runs():
+    rng = np.random.default_rng(3)
+    U = _rand(rng, 64, 4).astype(jnp.bfloat16)
+    V = _rand(rng, 64, 4).astype(jnp.bfloat16)
+    R = jnp.abs(_rand(rng, 64, 2)).astype(jnp.bfloat16)
+    got = K.lowrank_grad(U, V, R, 2.0)
+    want = ref.lowrank_grad_ref(U.astype(F32), V.astype(F32),
+                                R.astype(F32), 2.0)
+    np.testing.assert_allclose(np.asarray(got, dtype=F32), np.asarray(want),
+                               rtol=0.1, atol=0.1)
+
+
+# ---------------------------------------------------------------------------
+# masked_row_logsumexp
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    s=st.sampled_from([4, 16, 64, 100, 256]),
+    r=st.sampled_from([2, 5, 16]),
+    frac_masked=st.floats(0.0, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_lse_matches_ref(s, r, frac_masked, seed):
+    rng = np.random.default_rng(seed)
+    M = _rand(rng, s, r) * 10.0
+    mask = jnp.asarray((rng.random(s) >= frac_masked).astype(F32))
+    got = K.masked_row_logsumexp(M, mask)
+    want = ref.masked_row_logsumexp_ref(M, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_masked_lse_masked_rows_get_neg():
+    M = jnp.ones((8, 4))
+    mask = jnp.asarray([1, 0, 1, 0, 1, 0, 1, 0], dtype=F32)
+    out = np.asarray(K.masked_row_logsumexp(M, mask))
+    assert np.all(out[1::2] == ref.NEG)
+    np.testing.assert_allclose(out[::2], 1.0 + np.log(4.0), rtol=1e-6)
+
+
+def test_masked_lse_is_finite_on_all_masked():
+    """All-masked input must not produce NaN (padding safety)."""
+    M = jnp.full((16, 3), ref.NEG)
+    mask = jnp.zeros((16,), F32)
+    out = np.asarray(K.masked_row_logsumexp(M, mask))
+    assert np.all(np.isfinite(out))
+
+
+def test_masked_lse_large_values_stable():
+    M = jnp.asarray([[800.0, 800.0], [-800.0, -800.0]], dtype=F32)
+    mask = jnp.ones((2,), F32)
+    out = np.asarray(K.masked_row_logsumexp(M, mask))
+    np.testing.assert_allclose(out, [800.0 + np.log(2.0),
+                                     -800.0 + np.log(2.0)], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# sqeuclid factorisation oracle (consumed by both layers)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([2, 9, 33, 128]),
+    d=st.sampled_from([1, 2, 3, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sqeuclid_factorisation_exact(n, d, seed):
+    rng = np.random.default_rng(seed)
+    X = _rand(rng, n, d)
+    Y = _rand(rng, n, d)
+    U, V = ref.sqeuclid_factors_ref(X, Y)
+    assert U.shape == (n, d + 2) and V.shape == (n, d + 2)
+    C_lr = np.asarray(U) @ np.asarray(V).T
+    Xn, Yn = np.asarray(X), np.asarray(Y)
+    C = ((Xn[:, None, :] - Yn[None, :, :]) ** 2).sum(-1)
+    np.testing.assert_allclose(C_lr, C, rtol=1e-3, atol=1e-4)

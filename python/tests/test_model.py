@@ -1,0 +1,156 @@
+"""L2 correctness: the LROT mirror-descent model (compile/model.py).
+
+Checks the invariants HiRef's recursion relies on:
+  * factor feasibility (column sums == g, active-row sums == a),
+  * padding exactness (phantom rows receive no mass),
+  * the Proposition 3.1 behaviour: on a dataset and its shuffled copy,
+    the optimal factors co-cluster Monge pairs,
+  * model == python-loop oracle (ref.lrot_ref).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+F32 = np.float32
+
+
+def _problem(rng, s, d, noise=0.01):
+    """Dataset + shuffled copy; Monge map of W2 cost is the shuffle."""
+    X = rng.normal(size=(s, d)).astype(F32)
+    perm = rng.permutation(s)
+    Y = X[perm] + noise * rng.normal(size=(s, d)).astype(F32)
+    return X, Y, perm
+
+
+def _run(X, Y, rank, rng, loga=None, logb=None, hyper=None):
+    s, d = X.shape
+    hyper = hyper or model.LrotHyper(rank=rank)
+    U, V = ref.sqeuclid_factors_ref(jnp.asarray(X), jnp.asarray(Y))
+    if loga is None:
+        loga = jnp.full((s,), -np.log(s), F32)
+    if logb is None:
+        logb = jnp.full((s,), -np.log(s), F32)
+    nq = jnp.asarray(rng.normal(size=(s, rank)).astype(F32))
+    nr = jnp.asarray(rng.normal(size=(s, rank)).astype(F32))
+    fn = jax.jit(model.make_lrot(s, d + 2, hyper))
+    Q, R = fn(U, V, loga, logb, nq, nr)
+    return np.asarray(Q), np.asarray(R)
+
+
+def test_factor_feasibility():
+    rng = np.random.default_rng(0)
+    X, Y, _ = _problem(rng, 128, 2)
+    Q, R = _run(X, Y, 4, rng)
+    # column sums match uniform g = 1/r
+    np.testing.assert_allclose(Q.sum(0), 0.25, atol=2e-3)
+    np.testing.assert_allclose(R.sum(0), 0.25, atol=2e-3)
+    # total mass 1
+    np.testing.assert_allclose(Q.sum(), 1.0, atol=1e-3)
+    assert (Q >= 0).all() and (R >= 0).all()
+
+
+def test_monge_co_clustering_rank2():
+    """Proposition 3.1: q*(x) == r*(T(x)) for most points (approx solver)."""
+    rng = np.random.default_rng(1)
+    X, Y, perm = _problem(rng, 256, 2)
+    Q, R = _run(X, Y, 2, rng)
+    qa, ra = Q.argmax(1), R.argmax(1)
+    # y_j = T(x_{perm[j]}) so agreement is qa[perm] == ra
+    agree = float((qa[perm] == ra).mean())
+    assert agree > 0.9, f"Monge co-cluster agreement too low: {agree}"
+
+
+def test_monge_co_clustering_rank8():
+    rng = np.random.default_rng(2)
+    X, Y, perm = _problem(rng, 256, 4)
+    Q, R = _run(X, Y, 8, rng)
+    agree = float((Q.argmax(1)[perm] == R.argmax(1)).mean())
+    assert agree > 0.75, f"rank-8 agreement too low: {agree}"
+
+
+def test_split_is_balanced():
+    rng = np.random.default_rng(3)
+    X, Y, _ = _problem(rng, 256, 2)
+    Q, R = _run(X, Y, 2, rng)
+    for M in (Q, R):
+        counts = np.bincount(M.argmax(1), minlength=2)
+        assert abs(int(counts[0]) - 128) <= 26, counts
+
+
+def test_padding_rows_receive_no_mass():
+    """Phantom rows (log-mass NEG) must stay at ~zero in Q."""
+    rng = np.random.default_rng(4)
+    s, active = 64, 40
+    X, Y, _ = _problem(rng, s, 2)
+    loga = np.full(s, ref.NEG, F32)
+    loga[:active] = -np.log(active)
+    logb = loga.copy()
+    Q, R = _run(X, Y, 2, rng, jnp.asarray(loga), jnp.asarray(logb))
+    assert Q[active:].max() < 1e-12
+    assert R[active:].max() < 1e-12
+    np.testing.assert_allclose(Q[:active].sum(), 1.0, atol=1e-3)
+
+
+def test_padded_solution_matches_unpadded_assignment():
+    """Solving 48 active points inside a 64-bucket must give the same hard
+    assignment as solving the 48 points exactly (same noise)."""
+    rng = np.random.default_rng(5)
+    active, s = 48, 64
+    X, Y, _ = _problem(rng, active, 2)
+    Xp = np.zeros((s, 2), F32); Xp[:active] = X
+    Yp = np.zeros((s, 2), F32); Yp[:active] = Y
+    noise_q = rng.normal(size=(s, 2)).astype(F32)
+    noise_r = rng.normal(size=(s, 2)).astype(F32)
+
+    hyper = model.LrotHyper(rank=2)
+    # exact-size run
+    U, V = ref.sqeuclid_factors_ref(jnp.asarray(X), jnp.asarray(Y))
+    la = jnp.full((active,), -np.log(active), F32)
+    Q0, R0 = jax.jit(model.make_lrot(active, 4, hyper))(
+        U, V, la, la, jnp.asarray(noise_q[:active]), jnp.asarray(noise_r[:active]))
+    # padded run
+    Up, Vp = ref.sqeuclid_factors_ref(jnp.asarray(Xp), jnp.asarray(Yp))
+    lap = np.full(s, ref.NEG, F32); lap[:active] = -np.log(active)
+    Q1, R1 = jax.jit(model.make_lrot(s, 4, hyper))(
+        Up, Vp, jnp.asarray(lap), jnp.asarray(lap),
+        jnp.asarray(noise_q), jnp.asarray(noise_r))
+
+    qa0 = np.asarray(Q0).argmax(1)
+    qa1 = np.asarray(Q1)[:active].argmax(1)
+    # identical up to a possible global label swap
+    same = (qa0 == qa1).mean()
+    assert same > 0.95 or same < 0.05, f"padded != unpadded: agree={same}"
+
+
+def test_model_matches_python_oracle():
+    rng = np.random.default_rng(6)
+    s, d, r = 64, 2, 2
+    X, Y, _ = _problem(rng, s, d)
+    U, V = ref.sqeuclid_factors_ref(jnp.asarray(X), jnp.asarray(Y))
+    loga = jnp.full((s,), -np.log(s), F32)
+    nq = jnp.asarray(rng.normal(size=(s, r)).astype(F32))
+    nr = jnp.asarray(rng.normal(size=(s, r)).astype(F32))
+    hyper = model.LrotHyper(rank=r, outer=5, inner=6)
+    Q, R = jax.jit(model.make_lrot(s, d + 2, hyper))(U, V, loga, loga, nq, nr)
+    Q2, R2 = ref.lrot_ref(U, V, loga, loga, nq, nr, r, 5, 6, hyper.gamma)
+    np.testing.assert_allclose(np.asarray(Q), np.asarray(Q2), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(R), np.asarray(R2), atol=2e-5)
+
+
+def test_lower_cost_than_independent_clustering():
+    """The coupled objective must beat assigning clusters at random."""
+    rng = np.random.default_rng(7)
+    X, Y, perm = _problem(rng, 128, 2, noise=0.05)
+    Q, R = _run(X, Y, 2, rng)
+    C = ((X[:, None, :] - Y[None, :, :]) ** 2).sum(-1)
+    P = Q @ np.diag([2.0, 2.0]) @ R.T
+    cost = float((C * P).sum())
+    # random-label baseline: expected cost of the trivial coupling a b^T
+    cost_trivial = float(C.mean())
+    assert cost < cost_trivial, (cost, cost_trivial)

@@ -1,0 +1,88 @@
+"""KL-projection invariants (L2): the masked log-domain Sinkhorn
+projection used by both the AOT model and (in its Rust twin) the
+coordinator's native solver.  hypothesis sweeps shapes and mask patterns.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+F32 = np.float32
+
+
+def _marginals(s, active):
+    la = np.full(s, ref.NEG, F32)
+    la[:active] = -np.log(active)
+    return jnp.asarray(la)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s=st.sampled_from([8, 32, 64, 200]),
+    r=st.sampled_from([2, 4, 8]),
+    frac_active=st.floats(0.3, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_projection_feasibility(s, r, frac_active, seed):
+    """Projected kernel satisfies both marginal families."""
+    rng = np.random.default_rng(seed)
+    active = max(2, int(s * frac_active))
+    loga = _marginals(s, active)
+    logg = jnp.full((r,), -np.log(float(r)), F32)
+    logK = jnp.asarray(rng.normal(size=(s, r)).astype(F32))
+    logQ = model.sinkhorn_project(logK + float(loga[0]), loga, logg, 40)
+    Q = np.asarray(jnp.exp(jnp.where(logQ < ref.NEG / 4, ref.NEG, logQ)))
+    # columns match g
+    np.testing.assert_allclose(Q.sum(0), 1.0 / r, atol=3e-3)
+    # active rows match a; padded rows empty
+    np.testing.assert_allclose(Q[:active].sum(1), 1.0 / active, atol=3e-3)
+    assert Q[active:].max(initial=0.0) < 1e-12
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    s=st.sampled_from([16, 64]),
+    r=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_projection_matches_ref_oracle(s, r, seed):
+    rng = np.random.default_rng(seed)
+    loga = jnp.full((s,), -np.log(s), F32)
+    logg = jnp.full((r,), -np.log(float(r)), F32)
+    logK = jnp.asarray(rng.normal(size=(s, r)).astype(F32))
+    got = model.sinkhorn_project(logK, loga, logg, 10)
+    want = ref.sinkhorn_project_ref(logK, loga, logg, 10)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_projection_idempotent_on_feasible_input():
+    """Projecting an already-feasible kernel changes (almost) nothing."""
+    s, r = 32, 2
+    loga = jnp.full((s,), -np.log(s), F32)
+    logg = jnp.full((r,), -np.log(float(r)), F32)
+    # feasible: product coupling a g^T
+    logK = loga[:, None] + logg[None, :]
+    out = model.sinkhorn_project(logK, loga, logg, 15)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(logK), atol=1e-5)
+
+
+def test_projection_preserves_row_argmax_order():
+    """The projection adds rank-one potentials: within a row the ordering
+    of entries is preserved (f_i shifts whole rows; h shifts columns
+    uniformly across rows) up to the column shift h."""
+    s, r = 24, 3
+    rng = np.random.default_rng(0)
+    loga = jnp.full((s,), -np.log(s), F32)
+    logg = jnp.full((r,), -np.log(float(r)), F32)
+    logK = jnp.asarray(rng.normal(size=(s, r)).astype(F32))
+    out = np.asarray(model.sinkhorn_project(logK, loga, logg, 25))
+    # out = logK + f 1^T + 1 h^T  =>  out - logK has rank ≤ 2 structure:
+    # column-differences constant across rows
+    diff = out - np.asarray(logK)
+    col_gap = diff[:, 1:] - diff[:, :-1]
+    assert np.allclose(col_gap, col_gap[0:1, :], atol=1e-4)

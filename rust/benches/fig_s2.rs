@@ -1,0 +1,75 @@
+//! Figure S2: runtime scaling (W2 cost, single worker thread as in the
+//! paper's "single CPU core" run):
+//!   a. HiRef runtime vs n — linear (log-linear) growth;
+//!   b. Sinkhorn runtime vs n — quadratic growth.
+//! We print measured seconds plus the fitted log-log slope over the last
+//! doublings: ≈1 for HiRef, ≈2 for Sinkhorn is the reproduced shape.
+
+use hiref::coordinator::hiref::{BackendKind, HiRef, HiRefConfig};
+use hiref::costs::{dense_cost, CostKind};
+use hiref::data::synthetic;
+use hiref::report::{full_scale, section, timed, Table};
+use hiref::solvers::sinkhorn;
+
+fn fit_slope(points: &[(f64, f64)]) -> f64 {
+    // least-squares slope of ln t vs ln n
+    let n = points.len() as f64;
+    let (mut sx, mut sy, mut sxx, mut sxy) = (0.0, 0.0, 0.0, 0.0);
+    for &(x, y) in points {
+        let (lx, ly) = (x.ln(), y.ln());
+        sx += lx;
+        sy += ly;
+        sxx += lx * lx;
+        sxy += lx * ly;
+    }
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+fn main() {
+    section("Figure S2a — HiRef runtime vs n (single worker thread)");
+    let hiref_max_log2 = if full_scale() { 20 } else { 15 };
+    let mut hiref_pts = Vec::new();
+    let mut t1 = Table::new(vec!["n", "seconds"]);
+    for log2 in (10..=hiref_max_log2).step_by(2) {
+        let n = 1usize << log2;
+        let (x, y) = synthetic::half_moon_s_curve(n, 0);
+        let solver = HiRef::new(HiRefConfig {
+            backend: BackendKind::Auto,
+            threads: 1,
+            ..Default::default()
+        });
+        let (out, secs) = timed(|| solver.align(&x, &y));
+        out.expect("hiref");
+        t1.row(vec![n.to_string(), format!("{secs:.2}")]);
+        hiref_pts.push((n as f64, secs.max(1e-3)));
+    }
+    t1.print();
+    let hiref_slope = fit_slope(&hiref_pts);
+    println!("fitted log-log slope = {hiref_slope:.2}  (paper: ≈1, linear)");
+
+    section("Figure S2b — Sinkhorn runtime vs n (same thread budget)");
+    let mut sk_pts = Vec::new();
+    let mut t2 = Table::new(vec!["n", "seconds"]);
+    for log2 in (7..=11).step_by(1) {
+        let n = 1usize << log2;
+        let (x, y) = synthetic::half_moon_s_curve(n, 0);
+        let (_, secs) = timed(|| {
+            let c = dense_cost(&x, &y, CostKind::SqEuclidean);
+            sinkhorn::solve(
+                &c,
+                &sinkhorn::SinkhornConfig { max_iters: 200, tol: 0.0, ..Default::default() },
+            )
+        });
+        t2.row(vec![n.to_string(), format!("{secs:.2}")]);
+        sk_pts.push((n as f64, secs.max(1e-3)));
+    }
+    t2.print();
+    let sk_slope = fit_slope(&sk_pts);
+    println!("fitted log-log slope = {sk_slope:.2}  (paper: ≈2, quadratic)");
+
+    println!(
+        "\nshape check: HiRef slope ({hiref_slope:.2}) ≈ 1 [log-linear], Sinkhorn slope \
+         ({sk_slope:.2}) ≈ 2 [quadratic]."
+    );
+    assert!(hiref_slope < sk_slope, "HiRef must scale better than Sinkhorn");
+}

@@ -1,0 +1,73 @@
+//! Table S2 (and §4.1): primal cost ⟨C, P⟩ of HiRef vs Sinkhorn vs ProgOT
+//! on the three synthetic suites, under both ‖·‖₂ and ‖·‖₂² costs,
+//! n = 1024 — the paper's headline "HiRef matches/beats entropic
+//! full-rank solvers" table.
+//!
+//! Paper values for reference (‖·‖₂ / ‖·‖₂²):
+//!   Checkerboard      Sinkhorn .3573/.1319  ProgOT –/.1320  HiRef .3533/.1248
+//!   MAF Moons&Rings   Sinkhorn .4422/.4440  ProgOT –/.4443  HiRef .4398/.4414
+//!   HalfMoon&S-Curve  Sinkhorn .5663/.5663  ProgOT –/.5709  HiRef .5741/.5737
+//! Expected shape: all methods within a few % of each other; HiRef wins
+//! most W2 columns.  Absolute values differ (our generators are seeded
+//! re-implementations), the ordering is the claim under test.
+
+use hiref::coordinator::hiref::{BackendKind, HiRef, HiRefConfig};
+use hiref::costs::{dense_cost, CostKind};
+use hiref::data::synthetic::Synthetic;
+use hiref::metrics;
+use hiref::report::{f4, section, Table};
+use hiref::solvers::{progot, sinkhorn};
+
+fn main() {
+    let n = 1024;
+    section("Table S2 — primal cost, synthetic suites (n = 1024)");
+    let mut table = Table::new(vec![
+        "Method",
+        "Checker ‖·‖₂",
+        "Checker ‖·‖₂²",
+        "MAF ‖·‖₂",
+        "MAF ‖·‖₂²",
+        "HalfMoon ‖·‖₂",
+        "HalfMoon ‖·‖₂²",
+    ]);
+
+    let mut rows: Vec<Vec<String>> = vec![
+        vec!["Sinkhorn".into()],
+        vec!["ProgOT".into()],
+        vec!["HiRef".into()],
+    ];
+
+    for ds in Synthetic::ALL {
+        for kind in [CostKind::Euclidean, CostKind::SqEuclidean] {
+            let (x, y) = ds.generate(n, 0);
+            let c = dense_cost(&x, &y, kind);
+
+            let sk = sinkhorn::solve(
+                &c,
+                &sinkhorn::SinkhornConfig { max_iters: 250, ..Default::default() },
+            );
+            rows[0].push(f4(metrics::dense_cost_of(&c, &sk.coupling)));
+
+            let pg = progot::solve(&x, &y, kind, &progot::ProgOtConfig { stages: 5, iters_per_stage: 150, ..Default::default() });
+            rows[1].push(f4(metrics::dense_cost_of(&c, &pg)));
+
+            let cfg = HiRefConfig {
+                cost: kind,
+                backend: BackendKind::Auto,
+                base_size: 128,
+                ..Default::default()
+            };
+            let out = HiRef::new(cfg).align(&x, &y).expect("hiref");
+            assert!(out.is_bijection());
+            rows[2].push(f4(out.cost(&x, &y, kind)));
+        }
+    }
+    for r in rows {
+        table.row(r);
+    }
+    table.print();
+    println!(
+        "\nshape check: HiRef within a few %% of the entropic solvers on every column\n\
+         (paper: HiRef slightly lower on 4/6 columns)."
+    );
+}

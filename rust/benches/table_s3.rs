@@ -1,0 +1,69 @@
+//! Table S3: entropy and non-zero count (entries > 1e-8) of the couplings
+//! produced by Sinkhorn, ProgOT and HiRef on the synthetic suites
+//! (W2 cost, n = 1024).
+//!
+//! Paper values: Sinkhorn ~12.6–12.9 entropy / 62–68×10⁴ non-zeros,
+//! ProgOT ~11.6–12.4 / 27–34×10⁴, HiRef exactly 6.9314 (= ln 1024) / 1024.
+//! The structural claim: HiRef's coupling is a bijection — n non-zeros and
+//! entropy exactly ln n — while the entropic solvers are dense.
+
+use hiref::coordinator::hiref::{BackendKind, HiRef, HiRefConfig};
+use hiref::costs::{dense_cost, CostKind};
+use hiref::data::synthetic::Synthetic;
+use hiref::metrics;
+use hiref::report::{f4, section, Table};
+use hiref::solvers::{progot, sinkhorn};
+
+fn main() {
+    let n = 1024;
+    let kind = CostKind::SqEuclidean;
+    section("Table S3 — coupling entropy and non-zeros (>1e-8), W2, n = 1024");
+    let mut table = Table::new(vec![
+        "Method",
+        "Checker H",
+        "Checker nnz",
+        "MAF H",
+        "MAF nnz",
+        "HalfMoon H",
+        "HalfMoon nnz",
+    ]);
+    let mut rows: Vec<Vec<String>> = vec![
+        vec!["Sinkhorn".into()],
+        vec!["ProgOT".into()],
+        vec!["HiRef".into()],
+    ];
+
+    for ds in Synthetic::ALL {
+        let (x, y) = ds.generate(n, 0);
+        let c = dense_cost(&x, &y, kind);
+
+        let sk = sinkhorn::solve(
+            &c,
+            &sinkhorn::SinkhornConfig { max_iters: 250, ..Default::default() },
+        );
+        rows[0].push(f4(metrics::coupling_entropy(&sk.coupling)));
+        rows[0].push(metrics::nonzeros(&sk.coupling, 1e-8).to_string());
+
+        let pg = progot::solve(&x, &y, kind, &progot::ProgOtConfig { stages: 5, iters_per_stage: 150, ..Default::default() });
+        rows[1].push(f4(metrics::coupling_entropy(&pg)));
+        rows[1].push(metrics::nonzeros(&pg, 1e-8).to_string());
+
+        let out = HiRef::new(HiRefConfig {
+            backend: BackendKind::Auto,
+            base_size: 128,
+            ..Default::default()
+        })
+        .align(&x, &y)
+        .expect("hiref");
+        assert!(out.is_bijection());
+        // bijection: entropy is exactly ln n, nnz exactly n
+        rows[2].push(f4(metrics::bijection_entropy(n)));
+        rows[2].push(n.to_string());
+    }
+    for r in rows {
+        table.row(r);
+    }
+    table.print();
+    println!("\nshape check: HiRef = ln(1024) = 6.9315 entropy and exactly 1024 non-zeros;");
+    println!("entropic couplings carry 10⁵–10⁶ non-zeros (paper: 2.7–6.8 ×10⁵).");
+}

@@ -1,0 +1,282 @@
+//! Hand-rolled CLI (the vendored crate universe has no clap).
+//!
+//! `hiref <subcommand> [--flag value ...]`; see [`print_usage`] or run
+//! `hiref help`.  The benches (`cargo bench`) regenerate the paper tables;
+//! this binary is the interactive entry point for one-off runs.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::annealing;
+use crate::coordinator::hiref::{BackendKind, HiRef, HiRefConfig};
+use crate::costs::CostKind;
+use crate::data::synthetic::Synthetic;
+use crate::metrics;
+use crate::report::{f4, Table};
+use crate::runtime::PjrtEngine;
+use crate::solvers::minibatch::{self, MiniBatchConfig};
+
+/// Parsed `--key value` flags plus positional arguments.
+pub struct Flags {
+    pub positional: Vec<String>,
+    pub named: HashMap<String, String>,
+}
+
+impl Flags {
+    /// Parse flags from raw args (after the subcommand).
+    pub fn parse(args: &[String]) -> Result<Flags> {
+        let mut positional = Vec::new();
+        let mut named = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    named.insert(k.to_string(), v.to_string());
+                } else {
+                    let v = args
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow!("flag --{key} missing a value"))?;
+                    named.insert(key.to_string(), v.clone());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Flags { positional, named })
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.named.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| anyhow!("could not parse --{key} {v}")),
+        }
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.named.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+}
+
+/// Build a [`HiRefConfig`] from common flags.
+pub fn config_from_flags(flags: &Flags) -> Result<HiRefConfig> {
+    let mut cfg = HiRefConfig::default();
+    cfg.max_rank = flags.get("max-rank", cfg.max_rank)?;
+    cfg.base_size = flags.get("base-size", cfg.base_size)?;
+    cfg.seed = flags.get("seed", cfg.seed)?;
+    cfg.threads = flags.get("threads", cfg.threads)?;
+    if let Some(d) = flags.named.get("depth") {
+        cfg.max_depth = Some(d.parse()?);
+    }
+    cfg.artifacts_dir = PathBuf::from(flags.get_str("artifacts", "artifacts"));
+    cfg.cost = match flags.get_str("cost", "sq").as_str() {
+        "sq" | "w2" | "sqeuclidean" => CostKind::SqEuclidean,
+        "euclid" | "w1" | "euclidean" => CostKind::Euclidean,
+        other => bail!("unknown --cost {other} (use sq|euclid)"),
+    };
+    cfg.backend = match flags.get_str("backend", "auto").as_str() {
+        "auto" => BackendKind::Auto,
+        "native" => BackendKind::Native,
+        "pjrt" => BackendKind::Pjrt,
+        other => bail!("unknown --backend {other} (use auto|native|pjrt)"),
+    };
+    Ok(cfg)
+}
+
+/// Generate the dataset named by `--dataset` at size `--n`.
+pub fn dataset_from_flags(flags: &Flags) -> Result<(crate::linalg::Mat, crate::linalg::Mat)> {
+    let n: usize = flags.get("n", 1024)?;
+    let seed: u64 = flags.get("seed", 0)?;
+    let name = flags.get_str("dataset", "halfmoon");
+    if let Some(ds) = Synthetic::parse(&name) {
+        return Ok(ds.generate(n, seed));
+    }
+    match name.as_str() {
+        "imagenet-sim" => {
+            let d: usize = flags.get("dim", 256)?;
+            Ok(crate::data::embeddings::imagenet_like(n, d, 100, seed))
+        }
+        "merfish-sim" => {
+            let (s, t) = crate::data::transcriptomics::merfish_pair(n, seed);
+            Ok((s.spatial, t.spatial))
+        }
+        other => bail!("unknown --dataset {other}"),
+    }
+}
+
+/// Entry point for the binary.
+pub fn run(args: Vec<String>) -> Result<()> {
+    let Some(cmd) = args.first().cloned() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = Flags::parse(&args[1..])?;
+    match cmd.as_str() {
+        "align" => cmd_align(&flags),
+        "compare" => cmd_compare(&flags),
+        "schedule" => cmd_schedule(&flags),
+        "buckets" => cmd_buckets(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            print_usage();
+            bail!("unknown subcommand: {other}")
+        }
+    }
+}
+
+fn cmd_align(flags: &Flags) -> Result<()> {
+    let cfg = config_from_flags(flags)?;
+    let (x, y) = dataset_from_flags(flags)?;
+    let kind = cfg.cost;
+    let solver = HiRef::new(cfg);
+    let out = solver.align(&x, &y)?;
+    assert!(out.is_bijection(), "internal error: output not a bijection");
+    println!("n            = {}", x.rows);
+    println!("schedule     = {:?}", out.schedule);
+    println!("primal cost  = {}", f4(out.cost(&x, &y, kind)));
+    println!("nonzeros     = {} (vs n² = {})", x.rows, x.rows * x.rows);
+    println!("lrot calls   = {} ({} pjrt, {} native)", out.stats.lrot_calls,
+             out.stats.pjrt_calls, out.stats.native_calls);
+    println!("base blocks  = {}", out.stats.base_calls);
+    println!("elapsed      = {:.3}s", out.stats.elapsed.as_secs_f64());
+    Ok(())
+}
+
+fn cmd_compare(flags: &Flags) -> Result<()> {
+    let cfg = config_from_flags(flags)?;
+    let (x, y) = dataset_from_flags(flags)?;
+    let kind = cfg.cost;
+    let mut table = Table::new(vec!["Method", "Primal cost", "Seconds"]);
+
+    let solver = HiRef::new(cfg.clone());
+    let (out, secs) = crate::report::timed(|| solver.align(&x, &y));
+    let out = out?;
+    table.row(vec!["HiRef".to_string(), f4(out.cost(&x, &y, kind)), format!("{secs:.2}")]);
+
+    for b in [128usize, 1024] {
+        if b < x.rows {
+            let (perm, secs) = crate::report::timed(|| {
+                minibatch::solve(&x, &y, kind, &MiniBatchConfig { batch: b, seed: cfg.seed, ..Default::default() })
+            });
+            table.row(vec![
+                format!("MB {b}"),
+                f4(metrics::bijection_cost(&x, &y, &perm, kind)),
+                format!("{secs:.2}"),
+            ]);
+        }
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_schedule(flags: &Flags) -> Result<()> {
+    let n: usize = flags.get("n", 1 << 20)?;
+    let base: usize = flags.get("base-size", 256)?;
+    let max_rank: usize = flags.get("max-rank", 16)?;
+    let depth = flags.named.get("depth").map(|d| d.parse()).transpose()?;
+    let sched = annealing::optimal_rank_schedule(n, base, max_rank, depth);
+    println!("n = {n}, base = {base}, max_rank = {max_rank}");
+    println!("schedule         = {sched:?}");
+    println!("effective ranks  = {:?}", annealing::effective_ranks(&sched));
+    println!("LROT-call proxy  = {}", annealing::schedule_cost(&sched));
+    Ok(())
+}
+
+fn cmd_buckets(flags: &Flags) -> Result<()> {
+    let dir = PathBuf::from(flags.get_str("artifacts", "artifacts"));
+    let engine = PjrtEngine::load(&dir)?;
+    let mut table = Table::new(vec!["s", "r", "k", "outer", "inner", "path"]);
+    for b in engine.buckets() {
+        table.row(vec![
+            b.s.to_string(),
+            b.r.to_string(),
+            b.k.to_string(),
+            b.outer.to_string(),
+            b.inner.to_string(),
+            b.path.file_name().unwrap().to_string_lossy().into_owned(),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn print_usage() {
+    println!(
+        "hiref — Hierarchical Refinement OT (ICML 2025 reproduction)
+
+USAGE: hiref <command> [flags]
+
+COMMANDS
+  align     run HiRef on a dataset and report cost/stats
+  compare   HiRef vs mini-batch baselines on a dataset
+  schedule  print the optimal rank-annealing schedule for given n
+  buckets   list AOT artifact buckets (artifacts/manifest.tsv)
+  help      this message
+
+COMMON FLAGS
+  --dataset checkerboard|maf|halfmoon|imagenet-sim|merfish-sim
+  --n <int>             dataset size                 [1024]
+  --cost sq|euclid      ground cost                  [sq]
+  --backend auto|native|pjrt                         [auto]
+  --max-rank <int>      annealing max rank C         [16]
+  --base-size <int>     exact base-case block Q      [256]
+  --depth <int>         cap hierarchy depth
+  --seed <int>                                       [0]
+  --threads <int>                                    [all cores]
+  --artifacts <dir>                                  [artifacts]"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flags(args: &[&str]) -> Flags {
+        Flags::parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parse_flags_and_positionals() {
+        let f = flags(&["pos1", "--n", "42", "--cost=euclid", "pos2"]);
+        assert_eq!(f.positional, vec!["pos1", "pos2"]);
+        assert_eq!(f.get::<usize>("n", 0).unwrap(), 42);
+        assert_eq!(f.get_str("cost", ""), "euclid");
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let args = vec!["--n".to_string()];
+        assert!(Flags::parse(&args).is_err());
+    }
+
+    #[test]
+    fn config_from_flags_defaults() {
+        let f = flags(&[]);
+        let cfg = config_from_flags(&f).unwrap();
+        assert_eq!(cfg.cost, CostKind::SqEuclidean);
+        assert_eq!(cfg.backend, BackendKind::Auto);
+    }
+
+    #[test]
+    fn config_rejects_bad_cost() {
+        let f = flags(&["--cost", "manhattan"]);
+        assert!(config_from_flags(&f).is_err());
+    }
+
+    #[test]
+    fn dataset_parsing() {
+        let f = flags(&["--dataset", "checkerboard", "--n", "64"]);
+        let (x, y) = dataset_from_flags(&f).unwrap();
+        assert_eq!(x.rows, 64);
+        assert_eq!(y.rows, 64);
+    }
+}

@@ -1,0 +1,221 @@
+//! Rank-annealing schedule optimisation (paper §3.3, Eq. 14, Appendix E.1).
+//!
+//! Given `n` points, a base-case capacity `Q` (blocks of size ≤ Q are
+//! finished by the exact solver) and a maximum intermediate rank `C`, find
+//! the schedule `(r_1, …, r_κ)` minimising the total number of LROT calls
+//! — proportional to the sum of partial products `Σ_j ρ_j`,
+//! `ρ_j = Π_{i≤j} r_i` — subject to `ρ_κ ≥ ⌈n/Q⌉` and `r_i ≤ C`.
+//!
+//! The paper's dynamic program over stored factor tables runs in
+//! `O(C·κ·n)`; ours memoises `f(depth, m) = min cost to cover m leaf
+//! blocks`, identical complexity with `m = ⌈n/Q⌉` (HiRef splits blocks
+//! into ±1-balanced parts, so exact divisibility of `n` is not required —
+//! see `assign.rs`).
+
+use std::collections::HashMap;
+
+/// Compute the optimal rank schedule.
+///
+/// * `n` — dataset size;
+/// * `base` — maximal base-case block (paper's "maximal base rank Q");
+/// * `max_rank` — maximal intermediate rank C;
+/// * `max_depth` — optional cap on κ (None = unconstrained).
+///
+/// Returns the schedule `(r_1, …, r_κ)`, possibly empty when `n ≤ base`.
+pub fn optimal_rank_schedule(
+    n: usize,
+    base: usize,
+    max_rank: usize,
+    max_depth: Option<usize>,
+) -> Vec<usize> {
+    assert!(base >= 1 && max_rank >= 2);
+    let m = n.div_ceil(base.max(1));
+    if m <= 1 {
+        return Vec::new();
+    }
+    // minimal feasible depth: ceil(log_C m); allow a little slack for the
+    // optimiser to trade depth against call count.
+    let min_depth = {
+        let mut d = 0usize;
+        let mut cover = 1usize;
+        while cover < m {
+            cover = cover.saturating_mul(max_rank);
+            d += 1;
+        }
+        d
+    };
+    let depth_cap = max_depth.unwrap_or(min_depth + 2).max(min_depth);
+
+    let mut memo: HashMap<(usize, usize), (f64, usize)> = HashMap::new();
+    let best = search(m, depth_cap, max_rank, &mut memo);
+    if best.0.is_infinite() {
+        // infeasible under the depth cap: fall back to repeated max_rank
+        let mut sched = Vec::new();
+        let mut cover = 1usize;
+        while cover < m {
+            sched.push(max_rank);
+            cover = cover.saturating_mul(max_rank);
+        }
+        return sched;
+    }
+    // reconstruct
+    let mut sched = Vec::new();
+    let mut rem = m;
+    let mut depth = depth_cap;
+    while rem > 1 {
+        let (_, r) = *memo.get(&(depth, rem)).expect("memo hole");
+        sched.push(r);
+        rem = rem.div_ceil(r);
+        depth -= 1;
+    }
+    sched
+}
+
+/// `f(depth, m)`: minimal Σ_j ρ_j to split one block into ≥ m leaves
+/// within `depth` levels.  Recursion: choosing first rank r costs
+/// `r · (1 + f(depth−1, ⌈m/r⌉))` — the paper's recursive identity.
+fn search(
+    m: usize,
+    depth: usize,
+    max_rank: usize,
+    memo: &mut HashMap<(usize, usize), (f64, usize)>,
+) -> (f64, usize) {
+    if m <= 1 {
+        return (0.0, 0);
+    }
+    if depth == 0 {
+        return (f64::INFINITY, 0);
+    }
+    if let Some(&v) = memo.get(&(depth, m)) {
+        return v;
+    }
+    let mut best = (f64::INFINITY, 0usize);
+    for r in 2..=max_rank.min(m.max(2)) {
+        let sub = search(m.div_ceil(r), depth - 1, max_rank, memo);
+        if sub.0.is_infinite() {
+            continue;
+        }
+        let cost = r as f64 * (1.0 + sub.0);
+        if cost < best.0 {
+            best = (cost, r);
+        }
+    }
+    memo.insert((depth, m), best);
+    best
+}
+
+/// Effective ranks `ρ_t = Π_{s≤t} r_s` (paper Eq. S6) — also the number of
+/// co-clusters at each scale.
+pub fn effective_ranks(schedule: &[usize]) -> Vec<usize> {
+    let mut out = Vec::with_capacity(schedule.len());
+    let mut p = 1usize;
+    for &r in schedule {
+        p = p.saturating_mul(r);
+        out.push(p);
+    }
+    out
+}
+
+/// Σ_j ρ_j — the LROT call count proxy minimised by the DP.
+pub fn schedule_cost(schedule: &[usize]) -> usize {
+    effective_ranks(schedule).iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn covers(schedule: &[usize], n: usize, base: usize) -> bool {
+        let rho: usize = schedule.iter().product();
+        rho >= n.div_ceil(base)
+    }
+
+    #[test]
+    fn trivial_when_n_fits_base() {
+        assert!(optimal_rank_schedule(100, 128, 16, None).is_empty());
+        assert!(optimal_rank_schedule(128, 128, 16, None).is_empty());
+    }
+
+    #[test]
+    fn covers_and_respects_bounds() {
+        for &(n, base, c) in &[
+            (1 << 20, 1024, 16),
+            (113_350, 1024, 128),
+            (1_281_000 / 2, 2048, 64),
+            (5913, 256, 16),
+            (1000, 1, 8),
+        ] {
+            let s = optimal_rank_schedule(n, base, c, None);
+            assert!(covers(&s, n, base), "schedule {s:?} fails n={n} base={base}");
+            assert!(s.iter().all(|&r| r >= 2 && r <= c), "{s:?}");
+        }
+    }
+
+    #[test]
+    fn power_of_two_exact() {
+        // n = 2^10, base 1, C = 2 → schedule must be ten 2s
+        let s = optimal_rank_schedule(1024, 1, 2, None);
+        assert_eq!(s, vec![2; 10]);
+    }
+
+    #[test]
+    fn beats_naive_binary_when_allowed() {
+        // with C = 16, covering 4096 leaves should use fewer LROT calls
+        // than the pure binary schedule
+        let s = optimal_rank_schedule(4096, 1, 16, None);
+        let binary = vec![2usize; 12];
+        assert!(covers(&s, 4096, 1));
+        assert!(
+            schedule_cost(&s) < schedule_cost(&binary),
+            "{:?} cost {} vs binary {}",
+            s,
+            schedule_cost(&s),
+            schedule_cost(&binary)
+        );
+    }
+
+    #[test]
+    fn matches_brute_force_small() {
+        // exhaustive over schedules of depth ≤ 3 with ranks ≤ 6
+        fn brute(m: usize, c: usize) -> usize {
+            let mut best = usize::MAX;
+            for r1 in 2..=c {
+                if r1 >= m {
+                    best = best.min(r1);
+                    continue;
+                }
+                for r2 in 2..=c {
+                    if r1 * r2 >= m {
+                        best = best.min(r1 + r1 * r2);
+                        continue;
+                    }
+                    for r3 in 2..=c {
+                        if r1 * r2 * r3 >= m {
+                            best = best.min(r1 + r1 * r2 + r1 * r2 * r3);
+                        }
+                    }
+                }
+            }
+            best
+        }
+        for &m in &[5usize, 12, 30, 64, 100] {
+            let s = optimal_rank_schedule(m, 1, 6, Some(3));
+            let got = schedule_cost(&s);
+            let want = brute(m, 6);
+            assert!(got <= want, "m={m}: got {got} want {want} ({s:?})");
+        }
+    }
+
+    #[test]
+    fn depth_cap_respected() {
+        let s = optimal_rank_schedule(1 << 16, 1, 16, Some(4));
+        assert!(s.len() <= 4, "{s:?}");
+        assert!(covers(&s, 1 << 16, 1));
+    }
+
+    #[test]
+    fn effective_ranks_partial_products() {
+        assert_eq!(effective_ranks(&[2, 8, 16]), vec![2, 16, 256]);
+        assert_eq!(schedule_cost(&[2, 8, 16]), 274);
+    }
+}

@@ -1,0 +1,160 @@
+//! Balanced hard assignment — the `Assign` subroutine of Algorithm 1 with
+//! the even-split guarantee of Lemma B.1 restored.
+//!
+//! An *optimal* LROT factor with uniform inner marginal is automatically a
+//! balanced partition (Lemma B.1), but the approximate mirror-descent
+//! solver returns soft factors whose plain row-argmax can be slightly
+//! unbalanced.  The recursion requires exactly matched child sizes on the
+//! X and Y sides, so we assign with **capacity constraints**: cluster `z`
+//! receives exactly `cap_z` points, where `Σ cap_z = active` and the
+//! capacities differ by at most one — identical on both sides, which is
+//! what places the child blocks in bijective correspondence (Eq. S7).
+//!
+//! Points are processed in decreasing confidence margin (best minus
+//! second-best factor weight), each taking its best cluster that still has
+//! room — the standard greedy that is exact when the factor is already a
+//! balanced partition.
+
+use crate::linalg::Mat;
+
+/// Exact child capacities for splitting `active` points into `r` parts:
+/// sizes differ by ≤ 1 and are deterministic (first `active % r` clusters
+/// get the extra point).
+pub fn capacities(active: usize, r: usize) -> Vec<usize> {
+    let base = active / r;
+    let rem = active % r;
+    (0..r).map(|z| base + usize::from(z < rem)).collect()
+}
+
+/// Assign each of the first `active` rows of factor `m` (s×r) to one of
+/// `r` clusters under [`capacities`].  Returns per-point labels.
+pub fn balanced_assign(m: &Mat, active: usize) -> Vec<u32> {
+    let r = m.cols;
+    let caps = capacities(active, r);
+    let mut remaining = caps;
+    // (margin, point) sorted by decreasing confidence
+    let mut order: Vec<(f32, u32)> = (0..active)
+        .map(|i| {
+            let row = m.row(i);
+            let (mut best, mut second) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
+            for &v in row {
+                if v > best {
+                    second = best;
+                    best = v;
+                } else if v > second {
+                    second = v;
+                }
+            }
+            (best - second.max(0.0), i as u32)
+        })
+        .collect();
+    order.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+
+    let mut labels = vec![u32::MAX; active];
+    for &(_, i) in &order {
+        let row = m.row(i as usize);
+        let mut best_z = usize::MAX;
+        let mut best_v = f32::NEG_INFINITY;
+        for (z, &v) in row.iter().enumerate() {
+            if remaining[z] > 0 && v > best_v {
+                best_v = v;
+                best_z = z;
+            }
+        }
+        debug_assert!(best_z != usize::MAX, "capacities exhausted early");
+        labels[i as usize] = best_z as u32;
+        remaining[best_z] -= 1;
+    }
+    labels
+}
+
+/// Split an index set by labels into `r` child index sets (preserving the
+/// original global indices).
+pub fn split_by_labels(indices: &[u32], labels: &[u32], r: usize) -> Vec<Vec<u32>> {
+    debug_assert_eq!(indices.len(), labels.len());
+    let mut out: Vec<Vec<u32>> = (0..r).map(|_| Vec::new()).collect();
+    for (&idx, &z) in indices.iter().zip(labels) {
+        out[z as usize].push(idx);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    #[test]
+    fn capacities_sum_and_balance() {
+        for &(n, r) in &[(10usize, 3usize), (1024, 2), (7, 7), (100, 8), (5, 2)] {
+            let c = capacities(n, r);
+            assert_eq!(c.iter().sum::<usize>(), n);
+            let mx = *c.iter().max().unwrap();
+            let mn = *c.iter().min().unwrap();
+            assert!(mx - mn <= 1, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn respects_capacities_exactly() {
+        let mut rng = Rng::new(0);
+        let mut m = Mat::zeros(101, 4);
+        for v in m.data.iter_mut() {
+            *v = rng.next_f32();
+        }
+        let labels = balanced_assign(&m, 101);
+        let mut counts = vec![0usize; 4];
+        for &z in &labels {
+            counts[z as usize] += 1;
+        }
+        assert_eq!(counts, capacities(101, 4));
+    }
+
+    #[test]
+    fn exact_partition_factor_is_preserved() {
+        // a factor that IS a balanced partition must round-trip exactly
+        let n = 64;
+        let mut m = Mat::zeros(n, 2);
+        for i in 0..n {
+            *m.at_mut(i, i % 2) = 1.0 / n as f32;
+        }
+        let labels = balanced_assign(&m, n);
+        for (i, &z) in labels.iter().enumerate() {
+            assert_eq!(z as usize, i % 2);
+        }
+    }
+
+    #[test]
+    fn confident_points_win_contested_slots() {
+        // 3 points, 2 clusters with caps [2, 1]; point 0 strongly prefers
+        // cluster 1, points 1-2 weakly prefer cluster 1 → point 0 gets it.
+        let m = Mat::from_vec(3, 2, vec![
+            0.01, 0.99, //
+            0.45, 0.55, //
+            0.48, 0.52,
+        ]);
+        let labels = balanced_assign(&m, 3);
+        assert_eq!(labels[0], 1);
+        assert_eq!(labels[1], 0);
+        assert_eq!(labels[2], 0);
+    }
+
+    #[test]
+    fn split_by_labels_round_trip() {
+        let indices = vec![10u32, 20, 30, 40];
+        let labels = vec![1u32, 0, 1, 0];
+        let parts = split_by_labels(&indices, &labels, 2);
+        assert_eq!(parts[0], vec![20, 40]);
+        assert_eq!(parts[1], vec![10, 30]);
+    }
+
+    #[test]
+    fn ignores_padded_rows() {
+        let mut m = Mat::zeros(8, 2);
+        for i in 0..8 {
+            *m.at_mut(i, 0) = 1.0;
+        }
+        let labels = balanced_assign(&m, 4);
+        assert_eq!(labels.len(), 4);
+    }
+}

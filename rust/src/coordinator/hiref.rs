@@ -1,0 +1,490 @@
+//! The Hierarchical Refinement engine — paper Algorithm 1/2.
+//!
+//! Starting from the trivial co-clustering `Γ_0 = {(X, Y)}`, each scale
+//! splits every co-cluster `(X_q, Y_q)` with a rank-`r_{t+1}` LROT solve
+//! whose factors co-cluster Monge pairs (Prop. 3.1); balanced assignment
+//! ([`super::assign`]) turns the factors into `r_{t+1}` equal-sized child
+//! pairs.  Blocks that reach the base size are sealed with an *exact*
+//! assignment solver.  The output is a bijection — `n` nonzeros, never an
+//! `n×n` matrix: linear space, and `O(n log n)` time for bounded ranks
+//! (paper §3.4).
+//!
+//! Co-clusters at the same scale are independent, so the engine fans them
+//! out over a work-queue thread pool; LROT solves are served either by the
+//! PJRT runtime (AOT artifacts from the JAX/Pallas layers) or by the
+//! native Rust solver, per block, whichever fits (`BackendKind::Auto`).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::annealing;
+use crate::coordinator::assign;
+use crate::costs::{self, CostKind};
+use crate::linalg::Mat;
+use crate::metrics;
+use crate::pool::{self, WorkQueue};
+use crate::runtime::PjrtEngine;
+use crate::solvers::exact;
+use crate::solvers::lrot::{self, LrotConfig};
+
+/// Which LROT backend serves refinement sub-problems.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust mirror descent ([`crate::solvers::lrot`]).
+    Native,
+    /// AOT artifacts through PJRT; error if an artifact is missing.
+    Pjrt,
+    /// PJRT when a bucket fits, native otherwise (default).
+    Auto,
+}
+
+/// Configuration for [`HiRef`].
+#[derive(Clone, Debug)]
+pub struct HiRefConfig {
+    /// Ground cost (paper uses both `‖·‖₂` and `‖·‖₂²`).
+    pub cost: CostKind,
+    /// Maximal intermediate rank C of the annealing schedule.
+    pub max_rank: usize,
+    /// Maximal base-case block (paper's "maximal base rank Q"): blocks of
+    /// at most this size are finished by the exact solver.
+    pub base_size: usize,
+    /// Optional cap on the hierarchy depth κ.
+    pub max_depth: Option<usize>,
+    /// Blocks up to this size use Hungarian; larger base blocks use the
+    /// ε-scaling auction (near-exact, much faster).
+    pub hungarian_cutoff: usize,
+    /// LROT hyper-parameters (rank is overridden per scale).
+    pub lrot: LrotConfig,
+    /// Factor width for non-factorisable costs (Indyk et al. 2019).
+    pub indyk_width: usize,
+    pub seed: u64,
+    pub threads: usize,
+    pub backend: BackendKind,
+    /// Where the AOT artifacts live (manifest.tsv + *.hlo.txt).
+    pub artifacts_dir: PathBuf,
+    /// Record the co-clustering Γ_t at every scale (Fig. S3 diagnostics;
+    /// costs O(n) extra memory per scale).
+    pub record_scales: bool,
+}
+
+impl Default for HiRefConfig {
+    fn default() -> Self {
+        HiRefConfig {
+            cost: CostKind::SqEuclidean,
+            max_rank: 16,
+            base_size: 256,
+            max_depth: None,
+            hungarian_cutoff: 128,
+            lrot: LrotConfig::default(),
+            indyk_width: 32,
+            seed: 0,
+            threads: pool::default_threads(),
+            backend: BackendKind::Auto,
+            artifacts_dir: PathBuf::from("artifacts"),
+            record_scales: false,
+        }
+    }
+}
+
+/// Counters from a run.
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    pub lrot_calls: usize,
+    pub pjrt_calls: usize,
+    pub native_calls: usize,
+    pub base_calls: usize,
+    pub elapsed: Duration,
+}
+
+/// Result of [`HiRef::align`]: a bijection plus diagnostics.
+pub struct Alignment {
+    /// `perm[i] = j` pairs `x_i ↔ y_j`; exactly the paper's output
+    /// `{(x_i, T(x_i))}` — n nonzeros.
+    pub perm: Vec<u32>,
+    /// The rank-annealing schedule used.
+    pub schedule: Vec<usize>,
+    pub stats: RunStats,
+    /// Γ_t per scale when `record_scales` was set: the co-cluster index
+    /// pairs entering each scale.
+    pub scales: Option<Vec<Vec<(Vec<u32>, Vec<u32>)>>>,
+}
+
+impl Alignment {
+    /// Primal transport cost ⟨C, P⟩ of the bijection (linear space/time).
+    pub fn cost(&self, x: &Mat, y: &Mat, kind: CostKind) -> f64 {
+        metrics::bijection_cost(x, y, &self.perm, kind)
+    }
+
+    /// Verify the output is a bijection.
+    pub fn is_bijection(&self) -> bool {
+        let n = self.perm.len();
+        let mut seen = vec![false; n];
+        self.perm.iter().all(|&j| {
+            let j = j as usize;
+            j < n && !std::mem::replace(&mut seen[j], true)
+        })
+    }
+}
+
+/// The Hierarchical Refinement solver.
+pub struct HiRef {
+    cfg: HiRefConfig,
+    engine: Option<Arc<PjrtEngine>>,
+}
+
+struct Block {
+    xs: Vec<u32>,
+    ys: Vec<u32>,
+    level: usize,
+}
+
+impl HiRef {
+    /// Build a solver; loads the PJRT artifact registry when the backend
+    /// allows it (Auto silently degrades to native if artifacts are
+    /// absent, Pjrt errors at align time).
+    pub fn new(cfg: HiRefConfig) -> HiRef {
+        let engine = match cfg.backend {
+            BackendKind::Native => None,
+            BackendKind::Pjrt | BackendKind::Auto => {
+                PjrtEngine::load(&cfg.artifacts_dir).ok().map(Arc::new)
+            }
+        };
+        HiRef { cfg, engine }
+    }
+
+    /// Borrow the loaded PJRT engine, if any.
+    pub fn engine(&self) -> Option<&Arc<PjrtEngine>> {
+        self.engine.as_ref()
+    }
+
+    /// Compute a bijective alignment between equal-sized `x` and `y`.
+    pub fn align(&self, x: &Mat, y: &Mat) -> Result<Alignment> {
+        let n = x.rows;
+        if n == 0 || n != y.rows {
+            bail!("HiRef needs equal-sized nonempty datasets (got {} vs {})", n, y.rows);
+        }
+        if x.cols != y.cols {
+            bail!("dimension mismatch: {} vs {}", x.cols, y.cols);
+        }
+        if self.cfg.backend == BackendKind::Pjrt && self.engine.is_none() {
+            bail!(
+                "backend = Pjrt but artifacts not loadable from {} (run `make artifacts`)",
+                self.cfg.artifacts_dir.display()
+            );
+        }
+        let t0 = Instant::now();
+
+        // Global cost factors; sub-blocks gather rows (both factorisations
+        // are row-separable, so gathering is exact).
+        let (fu, fv) =
+            costs::factors_for(x, y, self.cfg.cost, self.cfg.indyk_width, self.cfg.seed);
+
+        let schedule = annealing::optimal_rank_schedule(
+            n,
+            self.cfg.base_size,
+            self.cfg.max_rank,
+            self.cfg.max_depth,
+        );
+
+        let perm = Mutex::new(vec![u32::MAX; n]);
+        let scales: Option<Vec<Mutex<Vec<(Vec<u32>, Vec<u32>)>>>> = if self.cfg.record_scales {
+            Some((0..=schedule.len()).map(|_| Mutex::new(Vec::new())).collect())
+        } else {
+            None
+        };
+        let stats = StatsAtomics::default();
+
+        let root = Block { xs: (0..n as u32).collect(), ys: (0..n as u32).collect(), level: 0 };
+        let queue = WorkQueue::new(vec![root]);
+        queue.run(self.cfg.threads, |block, queue| {
+            if let Some(sc) = &scales {
+                if block.level < sc.len() {
+                    sc[block.level]
+                        .lock()
+                        .unwrap()
+                        .push((block.xs.clone(), block.ys.clone()));
+                }
+            }
+            if block.xs.len() <= self.cfg.base_size || block.level >= schedule.len() {
+                self.solve_base(x, y, &block, &perm, &stats);
+            } else {
+                self.refine(&fu, &fv, &schedule, block, queue, &stats);
+            }
+        });
+
+        let perm = perm.into_inner().unwrap();
+        debug_assert!(perm.iter().all(|&j| j != u32::MAX), "unassigned points");
+        Ok(Alignment {
+            perm,
+            schedule,
+            stats: stats.snapshot(t0.elapsed()),
+            scales: scales
+                .map(|sc| sc.into_iter().map(|m| m.into_inner().unwrap()).collect()),
+        })
+    }
+
+    /// One refinement step: LROT on the co-cluster, balanced assignment,
+    /// enqueue the children (Algorithm 1, lines 8–17).
+    fn refine(
+        &self,
+        fu: &Mat,
+        fv: &Mat,
+        schedule: &[usize],
+        block: Block,
+        queue: &WorkQueue<Block>,
+        stats: &StatsAtomics,
+    ) {
+        let level = block.level;
+        // Rank at this scale: schedule entry, clamped so a block is never
+        // split into more parts than it has points.
+        let rank = schedule[level].min(block.xs.len()).max(2);
+        let active = block.xs.len();
+        let u_blk = fu.gather_rows(&block.xs);
+        let v_blk = fv.gather_rows(&block.ys);
+        // per-block deterministic seed
+        let seed = self
+            .cfg
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add((level as u64) << 32)
+            .wrapping_add(block.xs[0] as u64);
+
+        stats.lrot.fetch_add(1, Ordering::Relaxed);
+        let (q, rmat) = self.solve_lrot(&u_blk, &v_blk, active, rank, seed, stats);
+
+        let labels_x = assign::balanced_assign(&q, active);
+        let labels_y = assign::balanced_assign(&rmat, active);
+        let children_x = assign::split_by_labels(&block.xs, &labels_x, rank);
+        let children_y = assign::split_by_labels(&block.ys, &labels_y, rank);
+        for (cx, cy) in children_x.into_iter().zip(children_y) {
+            debug_assert_eq!(cx.len(), cy.len(), "unbalanced children");
+            if !cx.is_empty() {
+                queue.push(Block { xs: cx, ys: cy, level: level + 1 });
+            }
+        }
+    }
+
+    /// LROT dispatch: PJRT bucket when available, else native.
+    fn solve_lrot(
+        &self,
+        u_blk: &Mat,
+        v_blk: &Mat,
+        active: usize,
+        rank: usize,
+        seed: u64,
+        stats: &StatsAtomics,
+    ) -> (Mat, Mat) {
+        if self.cfg.backend != BackendKind::Native {
+            if let Some(engine) = &self.engine {
+                match engine.lrot(u_blk, v_blk, active, active, rank, seed) {
+                    Ok(Some(qr)) => {
+                        stats.pjrt.fetch_add(1, Ordering::Relaxed);
+                        return qr;
+                    }
+                    Ok(None) => {} // no bucket: fall through to native
+                    Err(e) => {
+                        // degrade gracefully; correctness is identical
+                        eprintln!("[hiref] pjrt LROT failed ({e}); using native");
+                    }
+                }
+            }
+        }
+        stats.native.fetch_add(1, Ordering::Relaxed);
+        let cfg = LrotConfig { rank, ..self.cfg.lrot.clone() };
+        let out = lrot::solve_factored(u_blk, v_blk, active, active, &cfg, seed);
+        (out.q, out.r)
+    }
+
+    /// Base case: exact assignment inside the block (Hungarian below the
+    /// cutoff, ε-scaling auction above), sealing `perm`.
+    fn solve_base(
+        &self,
+        x: &Mat,
+        y: &Mat,
+        block: &Block,
+        perm: &Mutex<Vec<u32>>,
+        stats: &StatsAtomics,
+    ) {
+        stats.base.fetch_add(1, Ordering::Relaxed);
+        let xs = &block.xs;
+        let ys = &block.ys;
+        let local = if xs.len() == 1 {
+            vec![0u32]
+        } else {
+            let xb = x.gather_rows(xs);
+            let yb = y.gather_rows(ys);
+            let c = costs::dense_cost(&xb, &yb, self.cfg.cost);
+            if xs.len() <= self.cfg.hungarian_cutoff {
+                exact::hungarian(&c)
+            } else {
+                exact::auction(&c, 1.0)
+            }
+        };
+        let mut guard = perm.lock().unwrap();
+        for (i, &j) in local.iter().enumerate() {
+            guard[xs[i] as usize] = ys[j as usize];
+        }
+    }
+
+}
+
+/// Internal atomics for [`RunStats`].
+#[derive(Default)]
+struct StatsAtomics {
+    lrot: AtomicUsize,
+    pjrt: AtomicUsize,
+    native: AtomicUsize,
+    base: AtomicUsize,
+}
+
+impl StatsAtomics {
+    fn snapshot(&self, elapsed: Duration) -> RunStats {
+        RunStats {
+            lrot_calls: self.lrot.load(Ordering::Relaxed),
+            pjrt_calls: self.pjrt.load(Ordering::Relaxed),
+            native_calls: self.native.load(Ordering::Relaxed),
+            base_calls: self.base.load(Ordering::Relaxed),
+            elapsed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn native_cfg() -> HiRefConfig {
+        HiRefConfig {
+            backend: BackendKind::Native,
+            base_size: 32,
+            max_rank: 4,
+            threads: 2,
+            ..Default::default()
+        }
+    }
+
+    fn shuffled_pair(n: usize, d: usize, seed: u64) -> (Mat, Mat, Vec<u32>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Mat::zeros(n, d);
+        rng.fill_normal(&mut x.data);
+        let perm = rng.permutation(n);
+        let mut y = x.gather_rows(&perm);
+        for v in y.data.iter_mut() {
+            *v += 0.001 * rng.normal_f32();
+        }
+        (x, y, perm)
+    }
+
+    #[test]
+    fn output_is_bijection() {
+        let (x, y, _) = shuffled_pair(300, 2, 0);
+        let out = HiRef::new(native_cfg()).align(&x, &y).unwrap();
+        assert!(out.is_bijection());
+        assert_eq!(out.perm.len(), 300);
+    }
+
+    #[test]
+    fn recovers_near_monge_map_on_shuffled_data() {
+        // y is a shuffled copy of x (+tiny noise): the Monge map is the
+        // shuffle and its cost ~0.  HiRef must find a near-zero-cost map.
+        let (x, y, _) = shuffled_pair(256, 2, 1);
+        let out = HiRef::new(native_cfg()).align(&x, &y).unwrap();
+        let cost = out.cost(&x, &y, CostKind::SqEuclidean);
+        assert!(cost < 0.02, "cost {cost} too high for shuffled data");
+    }
+
+    #[test]
+    fn matches_exact_solver_on_small_instance() {
+        let (x, y, _) = shuffled_pair(64, 2, 2);
+        let out = HiRef::new(native_cfg()).align(&x, &y).unwrap();
+        let c = costs::dense_cost(&x, &y, CostKind::SqEuclidean);
+        let h = exact::hungarian(&c);
+        let opt = metrics::bijection_cost(&x, &y, &h, CostKind::SqEuclidean);
+        let got = out.cost(&x, &y, CostKind::SqEuclidean);
+        assert!(got >= opt - 1e-9);
+        assert!(got <= opt.max(1e-6) * 1.5 + 1e-4, "hiref {got} vs opt {opt}");
+    }
+
+    #[test]
+    fn odd_sizes_work() {
+        for n in [33usize, 97, 130] {
+            let (x, y, _) = shuffled_pair(n, 2, n as u64);
+            let cfg = HiRefConfig { base_size: 16, ..native_cfg() };
+            let out = HiRef::new(cfg).align(&x, &y).unwrap();
+            assert!(out.is_bijection(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, y, _) = shuffled_pair(128, 2, 5);
+        let a = HiRef::new(native_cfg()).align(&x, &y).unwrap();
+        let b = HiRef::new(native_cfg()).align(&x, &y).unwrap();
+        assert_eq!(a.perm, b.perm);
+    }
+
+    #[test]
+    fn mismatched_sizes_error() {
+        let (x, _, _) = shuffled_pair(16, 2, 6);
+        let (y, _, _) = shuffled_pair(17, 2, 7);
+        assert!(HiRef::new(native_cfg()).align(&x, &y).is_err());
+    }
+
+    #[test]
+    fn scales_recorded_when_asked() {
+        let (x, y, _) = shuffled_pair(128, 2, 8);
+        let cfg = HiRefConfig { record_scales: true, base_size: 16, ..native_cfg() };
+        let out = HiRef::new(cfg).align(&x, &y).unwrap();
+        let scales = out.scales.as_ref().unwrap();
+        assert!(!scales.is_empty());
+        // scale 0 is the root co-cluster
+        assert_eq!(scales[0].len(), 1);
+        assert_eq!(scales[0][0].0.len(), 128);
+        // each subsequent recorded scale partitions all points
+        for lvl in scales.iter().take(out.schedule.len() + 1) {
+            if lvl.is_empty() { continue; }
+            let total: usize = lvl.iter().map(|(xs, _)| xs.len()).sum();
+            assert_eq!(total, 128);
+        }
+    }
+
+    #[test]
+    fn euclidean_cost_path_works() {
+        let (x, y, _) = shuffled_pair(150, 3, 9);
+        let cfg = HiRefConfig { cost: CostKind::Euclidean, indyk_width: 8, ..native_cfg() };
+        let out = HiRef::new(cfg).align(&x, &y).unwrap();
+        assert!(out.is_bijection());
+        let cost = out.cost(&x, &y, CostKind::Euclidean);
+        // shuffled copy: near-zero optimal cost
+        assert!(cost < 0.25, "euclidean cost {cost}");
+    }
+
+    #[test]
+    fn refinement_monotone_improves_over_root(){
+        // Prop 3.4 lower bound: finer scales do not increase cost.
+        let (x, y, _) = shuffled_pair(256, 2, 10);
+        let cfg = HiRefConfig { record_scales: true, base_size: 16, ..native_cfg() };
+        let out = HiRef::new(cfg).align(&x, &y).unwrap();
+        let scales = out.scales.as_ref().unwrap();
+        let mut costs_per_scale = Vec::new();
+        for lvl in scales {
+            if lvl.is_empty() { continue; }
+            let total: usize = lvl.iter().map(|(a, _)| a.len()).sum();
+            if total != 256 { continue; }
+            costs_per_scale.push(metrics::block_coupling_cost(
+                &x, &y, lvl, CostKind::SqEuclidean));
+        }
+        assert!(costs_per_scale.len() >= 2);
+        for w in costs_per_scale.windows(2) {
+            assert!(w[1] <= w[0] * 1.05 + 1e-6, "scale cost increased: {w:?}");
+        }
+        // final bijection is at least as good as the last block coupling
+        let final_cost = out.cost(&x, &y, CostKind::SqEuclidean);
+        assert!(final_cost <= costs_per_scale.last().unwrap() + 1e-6);
+    }
+}

@@ -1,0 +1,12 @@
+//! Layer-3 coordinator: the paper's contribution.
+//!
+//! * [`annealing`] — the rank-annealing schedule DP (paper §3.3 / E.1).
+//! * [`assign`] — balanced capacity-constrained hard assignment (the
+//!   `Assign` subroutine of Algorithm 1 + Lemma B.1's even split).
+//! * [`hiref`] — the Hierarchical Refinement engine (Algorithm 1/2):
+//!   recursion over co-clusters, LROT backend dispatch (PJRT artifacts or
+//!   native), base-case exact assignment, thread-pool fan-out.
+
+pub mod annealing;
+pub mod assign;
+pub mod hiref;

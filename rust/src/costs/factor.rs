@@ -1,0 +1,93 @@
+//! Exact rank-(d+2) factorisation of the squared-Euclidean cost matrix
+//! (Scetbon et al. 2021): `C_ij = |x_i|² − 2 x_i·y_j + |y_j|²  = (U Vᵀ)_ij`
+//! with `U = [|x|², 1, −2x]` and `V = [1, |y|², y]`.
+//!
+//! This is the Rust twin of `python/compile/kernels/ref.sqeuclid_factors_ref`
+//! — both sides must produce identical factors because the Rust coordinator
+//! feeds them to AOT executables lowered from the Python model.
+
+use crate::linalg::Mat;
+
+/// Return `(U, V)`, each `n×(d+2)`, with `U Vᵀ` the exact squared-Euclidean
+/// cost matrix between the rows of `x` and `y`.
+pub fn sq_euclidean_factors(x: &Mat, y: &Mat) -> (Mat, Mat) {
+    assert_eq!(x.cols, y.cols, "dimension mismatch");
+    let d = x.cols;
+    let mut u = Mat::zeros(x.rows, d + 2);
+    let mut v = Mat::zeros(y.rows, d + 2);
+    for i in 0..x.rows {
+        let xi = x.row(i);
+        let n2: f64 = xi.iter().map(|&a| (a as f64) * (a as f64)).sum();
+        let urow = u.row_mut(i);
+        urow[0] = n2 as f32;
+        urow[1] = 1.0;
+        for (k, &a) in xi.iter().enumerate() {
+            urow[2 + k] = -2.0 * a;
+        }
+    }
+    for j in 0..y.rows {
+        let yj = y.row(j);
+        let n2: f64 = yj.iter().map(|&a| (a as f64) * (a as f64)).sum();
+        let vrow = v.row_mut(j);
+        vrow[0] = 1.0;
+        vrow[1] = n2 as f32;
+        vrow[2..2 + d].copy_from_slice(yj);
+    }
+    (u, v)
+}
+
+/// Zero-pad factor width from `k` to `k_target` columns (exact: padded
+/// columns contribute 0 to every inner product).  Used to fit a factor
+/// pair into a wider AOT bucket.
+pub fn pad_factor_width(m: &Mat, k_target: usize) -> Mat {
+    assert!(k_target >= m.cols);
+    if k_target == m.cols {
+        return m.clone();
+    }
+    let mut out = Mat::zeros(m.rows, k_target);
+    for i in 0..m.rows {
+        out.row_mut(i)[..m.cols].copy_from_slice(m.row(i));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costs::{dense_cost, CostKind};
+    use crate::prng::Rng;
+
+    #[test]
+    fn factorisation_is_exact() {
+        let mut rng = Rng::new(0);
+        for &(n, d) in &[(4usize, 1usize), (16, 2), (9, 5), (32, 16)] {
+            let mut x = Mat::zeros(n, d);
+            let mut y = Mat::zeros(n, d);
+            rng.fill_normal(&mut x.data);
+            rng.fill_normal(&mut y.data);
+            let (u, v) = sq_euclidean_factors(&x, &y);
+            assert_eq!(u.cols, d + 2);
+            let c = dense_cost(&x, &y, CostKind::SqEuclidean);
+            let lr = u.matmul(&v.t());
+            for (a, b) in lr.data.iter().zip(&c.data) {
+                assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn pad_width_preserves_products() {
+        let mut rng = Rng::new(1);
+        let mut x = Mat::zeros(8, 2);
+        let mut y = Mat::zeros(8, 2);
+        rng.fill_normal(&mut x.data);
+        rng.fill_normal(&mut y.data);
+        let (u, v) = sq_euclidean_factors(&x, &y);
+        let (up, vp) = (pad_factor_width(&u, 64), pad_factor_width(&v, 64));
+        let a = u.matmul(&v.t());
+        let b = up.matmul(&vp.t());
+        for (p, q) in a.data.iter().zip(&b.data) {
+            assert!((p - q).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Cost functions and linear-space cost-matrix factorisations.
+//!
+//! HiRef never materialises an `n×n` cost matrix.  LROT sub-problems
+//! consume a low-rank factorisation `C ≈ U Vᵀ`:
+//!
+//! * squared Euclidean — the **exact** rank-`d+2` factorisation of
+//!   Scetbon et al. 2021 ([`factor::sq_euclidean_factors`]);
+//! * any metric cost — the sample-linear randomized factorisation in the
+//!   spirit of Indyk et al. 2019 ([`indyk::factorize`]).
+//!
+//! Dense costs ([`dense_cost`]) exist only for baselines (Sinkhorn,
+//! Hungarian) and small base-case blocks.
+
+pub mod factor;
+pub mod indyk;
+
+use crate::linalg::{dist, sq_dist, Mat};
+
+/// Ground cost selector. Matches the paper's two evaluation costs:
+/// `‖·‖₂` (Wasserstein-1 ground cost) and `‖·‖₂²` (Wasserstein-2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CostKind {
+    Euclidean,
+    SqEuclidean,
+}
+
+impl CostKind {
+    /// Cost of a single pair.
+    #[inline]
+    pub fn pair(&self, x: &[f32], y: &[f32]) -> f64 {
+        match self {
+            CostKind::Euclidean => dist(x, y),
+            CostKind::SqEuclidean => sq_dist(x, y),
+        }
+    }
+
+    /// Human-readable label used in reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            CostKind::Euclidean => "‖·‖₂",
+            CostKind::SqEuclidean => "‖·‖₂²",
+        }
+    }
+}
+
+/// Dense `n×m` cost matrix (baselines and small blocks only).
+pub fn dense_cost(x: &Mat, y: &Mat, kind: CostKind) -> Mat {
+    let mut c = Mat::zeros(x.rows, y.rows);
+    for i in 0..x.rows {
+        let xi = x.row(i);
+        let crow = c.row_mut(i);
+        for (j, cv) in crow.iter_mut().enumerate() {
+            *cv = kind.pair(xi, y.row(j)) as f32;
+        }
+    }
+    c
+}
+
+/// Low-rank factors `(U, V)` with `C ≈ U Vᵀ`, choosing the best strategy
+/// for `kind`: exact `d+2` for squared Euclidean, Indyk-style sampling
+/// otherwise.  `target_k` bounds the factor width for the sampled path
+/// (ignored by the exact path, whose width is `d+2`).
+pub fn factors_for(
+    x: &Mat,
+    y: &Mat,
+    kind: CostKind,
+    target_k: usize,
+    seed: u64,
+) -> (Mat, Mat) {
+    match kind {
+        CostKind::SqEuclidean => factor::sq_euclidean_factors(x, y),
+        CostKind::Euclidean => indyk::factorize(x, y, kind, target_k, seed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn rand_mat(rng: &mut Rng, n: usize, d: usize) -> Mat {
+        let mut m = Mat::zeros(n, d);
+        rng.fill_normal(&mut m.data);
+        m
+    }
+
+    #[test]
+    fn pair_costs() {
+        let x = [0.0f32, 0.0];
+        let y = [3.0f32, 4.0];
+        assert_eq!(CostKind::Euclidean.pair(&x, &y), 5.0);
+        assert_eq!(CostKind::SqEuclidean.pair(&x, &y), 25.0);
+    }
+
+    #[test]
+    fn dense_cost_matches_pairs() {
+        let mut rng = Rng::new(0);
+        let x = rand_mat(&mut rng, 5, 3);
+        let y = rand_mat(&mut rng, 4, 3);
+        let c = dense_cost(&x, &y, CostKind::SqEuclidean);
+        for i in 0..5 {
+            for j in 0..4 {
+                let want = sq_dist(x.row(i), y.row(j)) as f32;
+                assert!((c.at(i, j) - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn factors_for_sqeuclid_is_exact() {
+        let mut rng = Rng::new(1);
+        let x = rand_mat(&mut rng, 8, 2);
+        let y = rand_mat(&mut rng, 8, 2);
+        let (u, v) = factors_for(&x, &y, CostKind::SqEuclidean, 16, 0);
+        let c = dense_cost(&x, &y, CostKind::SqEuclidean);
+        let approx = u.matmul(&v.t());
+        for (a, b) in approx.data.iter().zip(&c.data) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Simulated high-dimensional image-embedding clouds (ImageNet stand-in).
+//!
+//! §4.4 aligns 1.281M ResNet50 embeddings (2048-dim) split 50:50.  We
+//! generate a clustered shell distribution that preserves what the
+//! experiment actually measures — scalability and the cost ordering of
+//! HiRef vs mini-batch vs low-rank OT on a high-dimensional, strongly
+//! clustered distribution: `classes` anisotropic Gaussian clusters whose
+//! centres sit on a sphere (ResNet features are approximately norm-
+//! concentrated), sampled i.i.d. and split at random into X and Y.
+
+use crate::linalg::Mat;
+use crate::prng::Rng;
+
+/// Paper's full ImageNet size after the divisibility trim (§D.4).
+pub const IMAGENET_FULL: usize = 1_281_000;
+
+/// Generate `(X, Y)` by sampling `2n` embeddings from a clustered shell
+/// distribution in `d` dims with `classes` clusters and splitting 50:50
+/// at random (mirrors the paper's torch.randperm split).
+pub fn imagenet_like(n: usize, d: usize, classes: usize, seed: u64) -> (Mat, Mat) {
+    let mut rng = Rng::new(seed ^ 0x1A6E7);
+    // class centres: random directions scaled to a common shell radius
+    let mut centers = Mat::zeros(classes, d);
+    rng.fill_normal(&mut centers.data);
+    let radius = 8.0f32;
+    for c in 0..classes {
+        let row = centers.row_mut(c);
+        let norm: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-6);
+        for v in row.iter_mut() {
+            *v *= radius / norm;
+        }
+    }
+    let total = 2 * n;
+    let mut all = Mat::zeros(total, d);
+    let spread = 0.8f32;
+    for i in 0..total {
+        let c = rng.next_below(classes);
+        let crow = centers.row(c);
+        let row = all.row_mut(i);
+        for (o, &m) in row.iter_mut().zip(crow) {
+            *o = m + spread * rng.normal_f32();
+        }
+    }
+    // 50:50 random split
+    let perm = rng.permutation(total);
+    let xi: Vec<u32> = perm[..n].to_vec();
+    let yi: Vec<u32> = perm[n..].to_vec();
+    (all.gather_rows(&xi), all.gather_rows(&yi))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_split() {
+        let (x, y) = imagenet_like(500, 32, 10, 0);
+        assert_eq!((x.rows, x.cols), (500, 32));
+        assert_eq!((y.rows, y.cols), (500, 32));
+    }
+
+    #[test]
+    fn shell_concentration() {
+        let (x, _) = imagenet_like(400, 64, 20, 1);
+        let mut norms: Vec<f32> = (0..x.rows)
+            .map(|i| x.row(i).iter().map(|v| v * v).sum::<f32>().sqrt())
+            .collect();
+        norms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = norms[norms.len() / 2];
+        assert!((med - 8.0).abs() < 8.0 * 0.75, "median norm {med}");
+    }
+
+    #[test]
+    fn splits_share_distribution() {
+        // mean of X ≈ mean of Y (same underlying cloud)
+        let (x, y) = imagenet_like(2000, 16, 8, 2);
+        for c in 0..16 {
+            let mx: f64 = (0..x.rows).map(|i| x.at(i, c) as f64).sum::<f64>() / x.rows as f64;
+            let my: f64 = (0..y.rows).map(|i| y.at(i, c) as f64).sum::<f64>() / y.rows as f64;
+            assert!((mx - my).abs() < 0.6, "dim {c}: {mx} vs {my}");
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let (x1, _) = imagenet_like(100, 8, 4, 3);
+        let (x2, _) = imagenet_like(100, 8, 4, 3);
+        assert_eq!(x1.data, x2.data);
+    }
+}

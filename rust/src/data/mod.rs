@@ -1,0 +1,14 @@
+//! Dataset generators for every experiment in the paper.
+//!
+//! * [`synthetic`] — the three 2-D benchmark suites (Makkuva et al. 2020;
+//!   Buzun et al. 2024) used in §4.1 / Tables S2–S4 / Figs 2–3, S4–S5.
+//! * [`transcriptomics`] — simulated spatial-transcriptomics slices
+//!   standing in for the MOSTA embryo atlas (§4.2, Table 1/S6) and the
+//!   MERFISH brain-receptor slices (§4.3, Table S7); see DESIGN.md §3 for
+//!   the substitution argument.
+//! * [`embeddings`] — simulated high-dimensional image-embedding clouds
+//!   standing in for ResNet50 ImageNet embeddings (§4.4, Table 2/S8).
+
+pub mod embeddings;
+pub mod synthetic;
+pub mod transcriptomics;

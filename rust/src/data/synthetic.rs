@@ -1,0 +1,187 @@
+//! 2-D synthetic benchmark datasets from the paper's §4.1.
+//!
+//! Each generator returns a pair `(X, Y)` of equal-sized point clouds,
+//! reproducing the constructions described in Appendix D.1:
+//!
+//! * **Checkerboard** (Makkuva et al. 2020) — source on 5 diagonal cells,
+//!   target on the 4 anti-diagonal cells.
+//! * **MAF Moons & Rings** (Buzun et al. 2024) — crescent via a quadratic
+//!   warp of a Gaussian vs four noisy concentric rings.
+//! * **Half-moon & S-curve** (Buzun et al. 2024) — scikit-learn style
+//!   `make_moons` / `make_s_curve` projections with a rotation + scale +
+//!   translation applied.
+
+use crate::linalg::Mat;
+use crate::prng::Rng;
+
+/// Checkerboard dataset (Makkuva et al. 2020): returns `(X, Y)`, each
+/// `n×2`.  Source cells on the diagonal pattern, target on the off cells.
+pub fn checkerboard(n: usize, seed: u64) -> (Mat, Mat) {
+    let mut rng = Rng::new(seed ^ 0xC4EC);
+    let src_centers: [(f64, f64); 5] =
+        [(0.0, 0.0), (1.0, 1.0), (1.0, -1.0), (-1.0, 1.0), (-1.0, -1.0)];
+    let tgt_centers: [(f64, f64); 4] = [(0.0, 1.0), (0.0, -1.0), (1.0, 0.0), (-1.0, 0.0)];
+    let mut x = Mat::zeros(n, 2);
+    let mut y = Mat::zeros(n, 2);
+    for i in 0..n {
+        let (cx, cy) = src_centers[rng.next_below(5)];
+        x.row_mut(i)[0] = (cx + rng.uniform(-0.5, 0.5)) as f32;
+        x.row_mut(i)[1] = (cy + rng.uniform(-0.5, 0.5)) as f32;
+        let (cx, cy) = tgt_centers[rng.next_below(4)];
+        y.row_mut(i)[0] = (cx + rng.uniform(-0.5, 0.5)) as f32;
+        y.row_mut(i)[1] = (cy + rng.uniform(-0.5, 0.5)) as f32;
+    }
+    (x, y)
+}
+
+/// MAF Moons (crescent) & Rings (Buzun et al. 2024): `(X, Y)`, each `n×2`.
+pub fn maf_moons_rings(n: usize, seed: u64) -> (Mat, Mat) {
+    let mut rng = Rng::new(seed ^ 0x3A_F00);
+    let mut x = Mat::zeros(n, 2);
+    let mut y = Mat::zeros(n, 2);
+    for i in 0..n {
+        // crescent: y1 = 0.5*(x1 + x2^2) - 5, y2 = x2 over N(0, I)
+        let g1 = rng.normal();
+        let g2 = rng.normal();
+        x.row_mut(i)[0] = (0.5 * (g1 + g2 * g2) - 5.0) as f32;
+        x.row_mut(i)[1] = g2 as f32;
+        // rings: radius in {0.25, 0.55, 0.9, 1.2} * 3, angle uniform
+        const RADII: [f64; 4] = [0.25, 0.55, 0.9, 1.2];
+        let r = RADII[rng.next_below(4)];
+        let th = rng.uniform(0.0, std::f64::consts::TAU);
+        let sigma = 0.08;
+        y.row_mut(i)[0] = (3.0 * r * th.cos() + sigma * rng.normal()) as f32;
+        y.row_mut(i)[1] = (3.0 * r * th.sin() + sigma * rng.normal()) as f32;
+    }
+    (x, y)
+}
+
+/// Half-moon & S-curve (Buzun et al. 2024): `(X, Y)`, each `n×2`.
+/// The S-curve is the classic 3-D `make_s_curve` projected to (x, z); both
+/// clouds then get a rotation, scaling and translation as in the paper.
+pub fn half_moon_s_curve(n: usize, seed: u64) -> (Mat, Mat) {
+    let mut rng = Rng::new(seed ^ 0x5C0_2E);
+    let mut x = Mat::zeros(n, 2);
+    let mut y = Mat::zeros(n, 2);
+    let noise = 0.05;
+    for i in 0..n {
+        // two interleaved half moons (make_moons)
+        let upper = rng.next_below(2) == 0;
+        let t = rng.uniform(0.0, std::f64::consts::PI);
+        let (mx, my) = if upper {
+            (t.cos(), t.sin())
+        } else {
+            (1.0 - t.cos(), 0.5 - t.sin())
+        };
+        x.row_mut(i)[0] = (mx + noise * rng.normal()) as f32;
+        x.row_mut(i)[1] = (my + noise * rng.normal()) as f32;
+        // S-curve: t in [-3π/2, 3π/2); (sin t, sign(t)(cos t − 1))
+        let t = rng.uniform(-1.5 * std::f64::consts::PI, 1.5 * std::f64::consts::PI);
+        let sx = t.sin();
+        let sz = t.signum() * (t.cos() - 1.0);
+        y.row_mut(i)[0] = (sx + noise * rng.normal()) as f32;
+        y.row_mut(i)[1] = (sz + noise * rng.normal()) as f32;
+    }
+    // rotation + scaling + translation applied to the target (paper D.1)
+    let theta = 0.5f64;
+    let (c, s) = (theta.cos() as f32, theta.sin() as f32);
+    let lambda = 1.5f32;
+    let (tx, ty) = (1.0f32, -0.5f32);
+    for i in 0..n {
+        let r = y.row_mut(i);
+        let (a, b) = (r[0] * lambda, r[1] * lambda);
+        r[0] = c * a - s * b + tx;
+        r[1] = s * a + c * b + ty;
+    }
+    (x, y)
+}
+
+/// Dataset selector used by the CLI and the benches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Synthetic {
+    Checkerboard,
+    MafMoonsRings,
+    HalfMoonSCurve,
+}
+
+impl Synthetic {
+    pub const ALL: [Synthetic; 3] =
+        [Synthetic::Checkerboard, Synthetic::MafMoonsRings, Synthetic::HalfMoonSCurve];
+
+    pub fn generate(&self, n: usize, seed: u64) -> (Mat, Mat) {
+        match self {
+            Synthetic::Checkerboard => checkerboard(n, seed),
+            Synthetic::MafMoonsRings => maf_moons_rings(n, seed),
+            Synthetic::HalfMoonSCurve => half_moon_s_curve(n, seed),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Synthetic::Checkerboard => "Checkerboard",
+            Synthetic::MafMoonsRings => "MAF Moons & Rings",
+            Synthetic::HalfMoonSCurve => "Half Moon & S-Curve",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Synthetic> {
+        match s.to_ascii_lowercase().as_str() {
+            "checkerboard" | "checker" => Some(Synthetic::Checkerboard),
+            "moons-rings" | "maf" => Some(Synthetic::MafMoonsRings),
+            "halfmoon-scurve" | "halfmoon" => Some(Synthetic::HalfMoonSCurve),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        for ds in Synthetic::ALL {
+            let (x1, y1) = ds.generate(256, 7);
+            let (x2, y2) = ds.generate(256, 7);
+            assert_eq!((x1.rows, x1.cols), (256, 2));
+            assert_eq!((y1.rows, y1.cols), (256, 2));
+            assert_eq!(x1.data, x2.data);
+            assert_eq!(y1.data, y2.data);
+            let (x3, _) = ds.generate(256, 8);
+            assert_ne!(x1.data, x3.data);
+        }
+    }
+
+    #[test]
+    fn checkerboard_supports() {
+        let (x, y) = checkerboard(2000, 0);
+        for i in 0..x.rows {
+            // every source point within 1.5 of origin in sup norm
+            assert!(x.row(i)[0].abs() <= 1.5 + 1e-5);
+            assert!(x.row(i)[1].abs() <= 1.5 + 1e-5);
+            // target cells exclude the center cell: max coordinate ≥ 0.5
+            let r = y.row(i);
+            assert!(r[0].abs().max(r[1].abs()) >= 0.5 - 1e-5);
+        }
+    }
+
+    #[test]
+    fn rings_have_bounded_radius() {
+        let (_, y) = maf_moons_rings(2000, 1);
+        for i in 0..y.rows {
+            let r = (y.row(i)[0].powi(2) + y.row(i)[1].powi(2)).sqrt();
+            assert!(r < 3.0 * 1.2 + 1.0, "radius {r}");
+            assert!(r > 3.0 * 0.25 - 1.0, "radius {r}");
+        }
+    }
+
+    #[test]
+    fn halfmoon_is_finite_and_spread() {
+        let (x, y) = half_moon_s_curve(1000, 2);
+        assert!(x.data.iter().all(|v| v.is_finite()));
+        assert!(y.data.iter().all(|v| v.is_finite()));
+        // target was scaled by 1.5 => larger spread than raw s-curve
+        let span = y.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        assert!(span > 2.0);
+    }
+}

@@ -1,0 +1,271 @@
+//! Simulated spatial-transcriptomics substrates.
+//!
+//! The paper's §4.2 uses the MOSTA Stereo-seq mouse-embryo atlas (8 stages,
+//! 5.9k→122k cells, 60-dim PCA of expression) and §4.3 uses two MERFISH
+//! brain slices (~84k spots, 5 spatially-varying genes).  Both datasets are
+//! proprietary-download resources; per the substitution rule we generate
+//! synthetic equivalents that exercise identical code paths:
+//!
+//! * a *stage sequence* of growing anisotropic Gaussian-mixture "tissues"
+//!   whose component centres drift smoothly between consecutive stages —
+//!   consecutive-pair alignment in 60-dim feature space, growing `n`;
+//! * a *slice pair*: the same mixture "anatomy" sampled twice with jitter
+//!   and an affine misregistration, plus smooth synthetic spatial gene
+//!   fields used for the expression-transfer benchmark (cosine similarity
+//!   after 200µm-style binning, exactly as in Clifton et al. 2023).
+
+use crate::linalg::Mat;
+use crate::prng::Rng;
+
+/// Number of mixture components in the simulated tissue.
+const TISSUE_COMPONENTS: usize = 12;
+
+/// Paper stage sizes (E9.5 … E16.5).  `scale_down` divides them for
+/// CI-class runs (the benches use 10 by default, 1 under HIREF_FULL=1).
+pub const MOSTA_SIZES: [usize; 8] =
+    [5913, 18408, 30124, 51365, 77369, 102519, 113350, 121767];
+
+/// Stage labels as in the paper's tables.
+pub const MOSTA_LABELS: [&str; 8] =
+    ["E9.5", "E10.5", "E11.5", "E12.5", "E13.5", "E14.5", "E15.5", "E16.5"];
+
+/// A simulated tissue "anatomy": mixture component centres in feature
+/// space + spatial plane, with per-component anisotropy.
+struct Anatomy {
+    centers_feat: Mat,  // components × d_feat
+    centers_sp: Mat,    // components × 2
+    scales: Vec<f32>,
+}
+
+impl Anatomy {
+    fn new(rng: &mut Rng, d_feat: usize) -> Anatomy {
+        let mut centers_feat = Mat::zeros(TISSUE_COMPONENTS, d_feat);
+        rng.fill_normal(&mut centers_feat.data);
+        for v in centers_feat.data.iter_mut() {
+            *v *= 3.0;
+        }
+        let mut centers_sp = Mat::zeros(TISSUE_COMPONENTS, 2);
+        for i in 0..TISSUE_COMPONENTS {
+            let th = std::f64::consts::TAU * i as f64 / TISSUE_COMPONENTS as f64;
+            let rad = 4.0 + 2.0 * rng.next_f64();
+            centers_sp.row_mut(i)[0] = (rad * th.cos()) as f32;
+            centers_sp.row_mut(i)[1] = (rad * th.sin()) as f32;
+        }
+        let scales = (0..TISSUE_COMPONENTS).map(|_| 0.5 + rng.next_f32()).collect();
+        Anatomy { centers_feat, centers_sp, scales }
+    }
+
+    /// Drift component centres smoothly (consecutive embryo stages share
+    /// anatomy up to growth + drift — this is what makes a low-cost map
+    /// between consecutive stages exist, as in the real atlas).
+    fn drift(&mut self, rng: &mut Rng, amount: f32) {
+        for v in self.centers_feat.data.iter_mut() {
+            *v += amount * rng.normal_f32();
+        }
+        for v in self.centers_sp.data.iter_mut() {
+            *v += 0.3 * amount * rng.normal_f32();
+        }
+    }
+
+    /// Sample a slice of `n` cells: returns (features n×d_feat, spatial n×2).
+    fn sample(&self, rng: &mut Rng, n: usize) -> (Mat, Mat) {
+        let d = self.centers_feat.cols;
+        let mut feat = Mat::zeros(n, d);
+        let mut sp = Mat::zeros(n, 2);
+        for i in 0..n {
+            let c = rng.next_below(TISSUE_COMPONENTS);
+            let s = self.scales[c];
+            let fc = self.centers_feat.row(c);
+            let frow = feat.row_mut(i);
+            for (o, &m) in frow.iter_mut().zip(fc) {
+                *o = m + s * rng.normal_f32();
+            }
+            let sc = self.centers_sp.row(c);
+            let srow = sp.row_mut(i);
+            srow[0] = sc[0] + 0.8 * s * rng.normal_f32();
+            srow[1] = sc[1] + 0.8 * s * rng.normal_f32();
+        }
+        (feat, sp)
+    }
+}
+
+/// One simulated developmental stage.
+pub struct Stage {
+    pub label: &'static str,
+    /// `n × 60` PCA-like expression features.
+    pub features: Mat,
+    /// `n × 2` spatial coordinates.
+    pub spatial: Mat,
+}
+
+/// Generate the 8-stage simulated MOSTA sequence.  `scale_down ≥ 1`
+/// divides the paper's per-stage sizes.  Deterministic in `seed`.
+pub fn mosta_stages(scale_down: usize, d_feat: usize, seed: u64) -> Vec<Stage> {
+    let mut rng = Rng::new(seed ^ 0x0517A);
+    let mut anatomy = Anatomy::new(&mut rng, d_feat);
+    let mut out = Vec::with_capacity(8);
+    for (idx, (&size, &label)) in MOSTA_SIZES.iter().zip(&MOSTA_LABELS).enumerate() {
+        if idx > 0 {
+            anatomy.drift(&mut rng, 0.4);
+        }
+        let n = (size / scale_down.max(1)).max(64);
+        let (features, spatial) = anatomy.sample(&mut rng, n);
+        out.push(Stage { label, features, spatial });
+    }
+    out
+}
+
+/// A simulated MERFISH-style slice: spatial coordinates plus raw counts
+/// for `GENES` synthetic spatially-patterned genes.
+pub struct Slice {
+    /// `n × 2` registered spatial coordinates.
+    pub spatial: Mat,
+    /// `n × GENES` nonnegative expression counts.
+    pub genes: Mat,
+}
+
+/// The five "spatially-patterned genes" of Table S7.
+pub const GENE_LABELS: [&str; 5] = ["Slc17a7", "Grm4", "Olig1", "Gad1", "Peg10"];
+
+/// Smooth synthetic spatial expression field g(s) for gene `gi` — mixtures
+/// of bumps anchored on the anatomy, distinct per gene.
+fn gene_field(gi: usize, s: &[f32], anatomy_sp: &Mat) -> f32 {
+    let mut v = 0.0f64;
+    let k = anatomy_sp.rows;
+    for c in 0..k {
+        // per-gene sparse loading over components
+        if (c + gi) % 3 != 0 {
+            continue;
+        }
+        let d2 = crate::linalg::sq_dist(s, anatomy_sp.row(c));
+        let width = 2.0 + 0.7 * ((gi * 13 + c * 7) % 5) as f64;
+        v += (8.0 + (gi as f64) * 2.0) * (-d2 / width).exp();
+    }
+    v as f32
+}
+
+/// Generate a pair of MERFISH-like slices (source, target): same anatomy
+/// sampled twice with jitter, plus a small affine misregistration applied
+/// to the source (the evaluation registers it away with a rotation, as the
+/// paper does — we emit already-registered coordinates plus the residual
+/// jitter so the alignment is non-trivial).
+pub fn merfish_pair(n: usize, seed: u64) -> (Slice, Slice) {
+    let mut rng = Rng::new(seed ^ 0xEF15);
+    let anatomy = Anatomy::new(&mut rng, 8);
+    let make = |rng: &mut Rng, jitter: f32| {
+        let (_, mut sp) = anatomy.sample(rng, n);
+        for v in sp.data.iter_mut() {
+            *v += jitter * rng.normal_f32();
+        }
+        let mut genes = Mat::zeros(n, GENE_LABELS.len());
+        for i in 0..n {
+            let srow = [sp.at(i, 0), sp.at(i, 1)];
+            for gi in 0..GENE_LABELS.len() {
+                let lam = gene_field(gi, &srow, &anatomy.centers_sp) as f64;
+                // Poisson-ish counts: Gaussian approx, clipped at 0
+                let cnt = lam + lam.sqrt() * rng.normal();
+                *genes.at_mut(i, gi) = cnt.max(0.0) as f32;
+            }
+        }
+        Slice { spatial: sp, genes }
+    };
+    let source = make(&mut rng, 0.15);
+    let target = make(&mut rng, 0.15);
+    (source, target)
+}
+
+/// Spatially bin a per-spot scalar onto a `bins × bins` grid over the
+/// slice's bounding box and average within bins (Clifton et al. 2023 use
+/// 200µm windows ≈ 75×75 over a 15mm slice; the paper uses 5625 bins).
+/// Returns the flat binned vector (NaN-free; empty bins are 0).
+pub fn bin_average(spatial: &Mat, values: &[f32], bins: usize) -> Vec<f32> {
+    assert_eq!(spatial.rows, values.len());
+    let (mut xmin, mut xmax) = (f32::INFINITY, f32::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f32::INFINITY, f32::NEG_INFINITY);
+    for i in 0..spatial.rows {
+        xmin = xmin.min(spatial.at(i, 0));
+        xmax = xmax.max(spatial.at(i, 0));
+        ymin = ymin.min(spatial.at(i, 1));
+        ymax = ymax.max(spatial.at(i, 1));
+    }
+    let eps = 1e-6;
+    let mut sums = vec![0.0f64; bins * bins];
+    let mut counts = vec![0u32; bins * bins];
+    for i in 0..spatial.rows {
+        let bx = (((spatial.at(i, 0) - xmin) / (xmax - xmin + eps)) * bins as f32) as usize;
+        let by = (((spatial.at(i, 1) - ymin) / (ymax - ymin + eps)) * bins as f32) as usize;
+        let b = bx.min(bins - 1) * bins + by.min(bins - 1);
+        sums[b] += values[i] as f64;
+        counts[b] += 1;
+    }
+    sums.iter()
+        .zip(&counts)
+        .map(|(&s, &c)| if c > 0 { (s / c as f64) as f32 } else { 0.0 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stages_grow_and_are_deterministic() {
+        let stages = mosta_stages(50, 16, 3);
+        assert_eq!(stages.len(), 8);
+        for w in stages.windows(2) {
+            assert!(w[1].features.rows >= w[0].features.rows);
+        }
+        let stages2 = mosta_stages(50, 16, 3);
+        assert_eq!(stages[0].features.data, stages2[0].features.data);
+        assert_eq!(stages[3].features.cols, 16);
+        assert_eq!(stages[3].spatial.cols, 2);
+    }
+
+    #[test]
+    fn consecutive_stages_are_closer_than_random() {
+        // anatomy drift is small: mean NN-distance between consecutive
+        // stages should be far below distance to an unrelated anatomy
+        let stages = mosta_stages(100, 8, 1);
+        let other = mosta_stages(100, 8, 999);
+        let d_consec = mean_nn(&stages[0].features, &stages[1].features);
+        let d_other = mean_nn(&stages[0].features, &other[1].features);
+        assert!(d_consec < d_other, "{d_consec} vs {d_other}");
+    }
+
+    fn mean_nn(a: &Mat, b: &Mat) -> f64 {
+        let mut tot = 0.0;
+        for i in 0..a.rows.min(50) {
+            let mut best = f64::INFINITY;
+            for j in 0..b.rows {
+                best = best.min(crate::linalg::sq_dist(a.row(i), b.row(j)));
+            }
+            tot += best.sqrt();
+        }
+        tot / a.rows.min(50) as f64
+    }
+
+    #[test]
+    fn merfish_pair_has_correlated_genes() {
+        let (s, t) = merfish_pair(800, 5);
+        assert_eq!(s.genes.cols, 5);
+        assert!(s.genes.data.iter().all(|&v| v >= 0.0));
+        // same anatomy => binned gene-0 fields correlate across slices
+        let vs = bin_average(&s.spatial, &(0..800).map(|i| s.genes.at(i, 0)).collect::<Vec<_>>(), 10);
+        let vt = bin_average(&t.spatial, &(0..800).map(|i| t.genes.at(i, 0)).collect::<Vec<_>>(), 10);
+        let cos = crate::metrics::cosine(&vs, &vt);
+        assert!(cos > 0.7, "cross-slice field cosine {cos}");
+    }
+
+    #[test]
+    fn bin_average_constant_field() {
+        let mut sp = Mat::zeros(100, 2);
+        let mut rng = Rng::new(0);
+        rng.fill_normal(&mut sp.data);
+        let vals = vec![2.5f32; 100];
+        let binned = bin_average(&sp, &vals, 4);
+        assert_eq!(binned.len(), 16);
+        for v in binned {
+            assert!(v == 0.0 || (v - 2.5).abs() < 1e-6);
+        }
+    }
+}

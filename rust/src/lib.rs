@@ -1,0 +1,47 @@
+//! # HiRef — Hierarchical Refinement Optimal Transport
+//!
+//! Production reproduction of *“Hierarchical Refinement: Optimal Transport
+//! to Infinity and Beyond”* (Halmos, Gold, Liu, Raphael — ICML 2025).
+//!
+//! HiRef computes a **bijective, full-rank optimal-transport alignment**
+//! between two equally sized datasets in **linear space** and
+//! **log-linear time** by recursively refining co-clusters produced by
+//! low-rank OT (LROT) sub-problems (paper Alg. 1/2, Prop. 3.1).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — recursion over co-clusters, rank-annealing
+//!   schedule, balanced assignment, base-case exact solvers, baselines,
+//!   datasets and metrics.  Rust only; Python never runs on this path.
+//! * **L2 (python/compile/model.py)** — the LROT mirror-descent solver as
+//!   a jitted JAX computation, AOT-lowered to HLO text per shape bucket.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the fused
+//!   low-rank gradient and masked log-sum-exp, lowered into the same HLO.
+//!
+//! [`runtime`] loads the AOT artifacts through the PJRT C API (`xla`
+//! crate) and serves LROT calls from compiled executables; a pure-Rust
+//! fallback ([`solvers::lrot`]) covers shapes outside the bucket grid.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use hiref::coordinator::hiref::{HiRef, HiRefConfig};
+//! use hiref::data::synthetic;
+//!
+//! let (x, y) = synthetic::half_moon_s_curve(4096, 0);
+//! let out = HiRef::new(HiRefConfig::default()).align(&x, &y).unwrap();
+//! println!("primal W2^2 cost = {}", out.cost(&x, &y, hiref::costs::CostKind::SqEuclidean));
+//! ```
+
+pub mod cli;
+pub mod coordinator;
+pub mod costs;
+pub mod data;
+pub mod linalg;
+pub mod metrics;
+pub mod pool;
+pub mod prng;
+pub mod regress;
+pub mod report;
+pub mod runtime;
+pub mod solvers;

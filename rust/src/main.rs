@@ -1,0 +1,11 @@
+//! `hiref` binary — Layer-3 coordinator CLI.
+//!
+//! All heavy lifting lives in the library; see `hiref help`.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = hiref::cli::run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,199 @@
+//! Evaluation metrics — all computable in linear space for bijective
+//! couplings, streaming for dense ones (the paper's headline point is
+//! precisely that HiRef's output needs `n` nonzeros, not `n²`).
+
+use crate::costs::CostKind;
+use crate::linalg::Mat;
+use crate::pool;
+
+/// Primal transport cost `⟨C, P⟩` of a bijection `perm` (x_i ↔ y_perm[i]),
+/// i.e. the cost of the coupling with mass 1/n on each matched pair.
+pub fn bijection_cost(x: &Mat, y: &Mat, perm: &[u32], kind: CostKind) -> f64 {
+    assert_eq!(x.rows, perm.len());
+    let threads = pool::default_threads();
+    let chunk = (x.rows / (threads * 4)).max(1024).min(x.rows.max(1));
+    let n_chunks = x.rows.div_ceil(chunk);
+    let partial = pool::parallel_map(n_chunks, threads, |ci| {
+        let lo = ci * chunk;
+        let hi = ((ci + 1) * chunk).min(x.rows);
+        let mut s = 0.0f64;
+        for i in lo..hi {
+            s += kind.pair(x.row(i), y.row(perm[i] as usize));
+        }
+        s
+    });
+    partial.into_iter().sum::<f64>() / x.rows as f64
+}
+
+/// Primal cost `⟨C, P⟩` of a dense coupling (baselines only).
+pub fn dense_cost_of(c: &Mat, p: &Mat) -> f64 {
+    c.dot(p)
+}
+
+/// Shannon entropy `H(P) = −Σ P_ij (log P_ij − 1)` minus-one convention of
+/// the paper's Eq. 4; reported in Table S3 without the `−1` (the paper's
+/// table uses plain −Σ p log p; we match that).
+pub fn coupling_entropy(p: &Mat) -> f64 {
+    let mut h = 0.0f64;
+    for &v in &p.data {
+        if v > 0.0 {
+            let v = v as f64;
+            h -= v * v.ln();
+        }
+    }
+    h
+}
+
+/// Entropy of a bijective coupling with uniform weights: log n.
+pub fn bijection_entropy(n: usize) -> f64 {
+    (n as f64).ln()
+}
+
+/// Count entries above the paper's threshold (1e-8) in a dense coupling.
+pub fn nonzeros(p: &Mat, thresh: f32) -> usize {
+    p.data.iter().filter(|&&v| v > thresh).count()
+}
+
+/// Cosine similarity between two vectors (0 if either is null).
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for (&x, &y) in a.iter().zip(b) {
+        dot += x as f64 * y as f64;
+        na += (x as f64).powi(2);
+        nb += (y as f64).powi(2);
+    }
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot / (na.sqrt() * nb.sqrt())
+}
+
+/// Cost of the block-diagonal coupling `P^(t)` induced by a co-clustering
+/// (paper Eq. 12), computed streaming per block — used for the Fig. S3
+/// refinement-cost curve without instantiating `P`.
+/// `blocks` pairs index sets `(X_q, Y_q)`.
+pub fn block_coupling_cost(
+    x: &Mat,
+    y: &Mat,
+    blocks: &[(Vec<u32>, Vec<u32>)],
+    kind: CostKind,
+) -> f64 {
+    let n = x.rows as f64;
+    let rho = blocks.len() as f64;
+    let threads = pool::default_threads();
+    let contrib = pool::parallel_map(blocks.len(), threads, |q| {
+        let (bx, by) = &blocks[q];
+        let mut s = 0.0f64;
+        for &i in bx {
+            let xi = x.row(i as usize);
+            for &j in by {
+                s += kind.pair(xi, y.row(j as usize));
+            }
+        }
+        s
+    });
+    contrib.into_iter().sum::<f64>() * rho / (n * n)
+}
+
+/// Relative marginal violation of a dense coupling against uniform
+/// marginals — a convergence diagnostic for the iterative baselines.
+pub fn marginal_violation(p: &Mat) -> f64 {
+    let n = p.rows as f64;
+    let m = p.cols as f64;
+    let mut worst = 0.0f64;
+    for s in p.row_sums() {
+        worst = worst.max(((s as f64) - 1.0 / n).abs() * n);
+    }
+    for s in p.col_sums() {
+        worst = worst.max(((s as f64) - 1.0 / m).abs() * m);
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    #[test]
+    fn bijection_cost_identity_is_zero() {
+        let mut rng = Rng::new(0);
+        let mut x = Mat::zeros(100, 3);
+        rng.fill_normal(&mut x.data);
+        let perm: Vec<u32> = (0..100).collect();
+        assert_eq!(bijection_cost(&x, &x, &perm, CostKind::SqEuclidean), 0.0);
+    }
+
+    #[test]
+    fn bijection_cost_matches_dense() {
+        let mut rng = Rng::new(1);
+        let mut x = Mat::zeros(16, 2);
+        let mut y = Mat::zeros(16, 2);
+        rng.fill_normal(&mut x.data);
+        rng.fill_normal(&mut y.data);
+        let perm = rng.permutation(16);
+        let mut p = Mat::zeros(16, 16);
+        for (i, &j) in perm.iter().enumerate() {
+            *p.at_mut(i, j as usize) = 1.0 / 16.0;
+        }
+        let c = crate::costs::dense_cost(&x, &y, CostKind::SqEuclidean);
+        let want = dense_cost_of(&c, &p);
+        let got = bijection_cost(&x, &y, &perm, CostKind::SqEuclidean);
+        assert!((want - got).abs() < 1e-4, "{want} vs {got}");
+    }
+
+    #[test]
+    fn entropy_of_uniform_coupling() {
+        let n = 8;
+        let p = Mat::full(n, n, 1.0 / (n * n) as f32);
+        let h = coupling_entropy(&p);
+        assert!((h - ((n * n) as f64).ln() / 1.0).abs() < 1e-3 * ((n * n) as f64).ln());
+    }
+
+    #[test]
+    fn bijection_entropy_is_log_n() {
+        assert!((bijection_entropy(1024) - 6.9314718).abs() < 1e-4);
+    }
+
+    #[test]
+    fn nonzeros_counts() {
+        let mut p = Mat::zeros(4, 4);
+        *p.at_mut(0, 0) = 1.0;
+        *p.at_mut(1, 2) = 1e-9;
+        assert_eq!(nonzeros(&p, 1e-8), 1);
+    }
+
+    #[test]
+    fn cosine_basics() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-12);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-12);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn block_cost_matches_dense_blocks() {
+        let mut rng = Rng::new(2);
+        let mut x = Mat::zeros(8, 2);
+        let mut y = Mat::zeros(8, 2);
+        rng.fill_normal(&mut x.data);
+        rng.fill_normal(&mut y.data);
+        // 2 blocks of 4
+        let blocks = vec![
+            ((0..4).collect::<Vec<u32>>(), (0..4).collect::<Vec<u32>>()),
+            ((4..8).collect::<Vec<u32>>(), (4..8).collect::<Vec<u32>>()),
+        ];
+        let got = block_coupling_cost(&x, &y, &blocks, CostKind::SqEuclidean);
+        // dense check: P_ij = rho/n^2 inside blocks
+        let c = crate::costs::dense_cost(&x, &y, CostKind::SqEuclidean);
+        let mut want = 0.0;
+        for (bx, by) in &blocks {
+            for &i in bx {
+                for &j in by {
+                    want += c.at(i as usize, j as usize) as f64 * (2.0 / 64.0);
+                }
+            }
+        }
+        assert!((got - want).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,171 @@
+//! Scoped thread-pool primitives.
+//!
+//! The vendored universe has no rayon/tokio, so HiRef's fan-out over
+//! independent co-cluster sub-problems uses `std::thread::scope` with a
+//! shared atomic work cursor.  Tasks are compute-bound and coarse-grained
+//! (one LROT solve each), so a simple self-scheduling loop is within noise
+//! of a work-stealing deque.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use: `HIREF_THREADS` env var, else the
+/// machine's available parallelism, else 1.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("HIREF_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f` to every index `0..n` across `threads` workers, collecting
+/// results in index order.  `f` must be `Sync`; per-item state should be
+/// created inside the closure.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(&f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let cursor = AtomicUsize::new(0);
+    let slots = Mutex::new(&mut out);
+    // SAFETY-free approach: each worker collects (idx, value) locally and
+    // a mutex-guarded writeback fills the output vector.
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                let mut local: Vec<(usize, T)> = Vec::new();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(i)));
+                    // Flush periodically to bound memory for huge n.
+                    if local.len() >= 64 {
+                        let mut guard = slots.lock().unwrap();
+                        for (j, v) in local.drain(..) {
+                            guard[j] = Some(v);
+                        }
+                    }
+                }
+                let mut guard = slots.lock().unwrap();
+                for (j, v) in local.drain(..) {
+                    guard[j] = Some(v);
+                }
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("worker missed a slot")).collect()
+}
+
+/// Run a dynamic work queue: `pop` items until empty, where processing an
+/// item may push new items.  Used by the HiRef recursion (each refinement
+/// step enqueues its child co-clusters).
+pub struct WorkQueue<T> {
+    items: Mutex<Vec<T>>,
+    in_flight: AtomicUsize,
+}
+
+impl<T: Send> WorkQueue<T> {
+    pub fn new(initial: Vec<T>) -> Self {
+        WorkQueue { items: Mutex::new(initial), in_flight: AtomicUsize::new(0) }
+    }
+
+    /// Push a new work item.
+    pub fn push(&self, item: T) {
+        self.items.lock().unwrap().push(item);
+    }
+
+    /// Process items with `threads` workers until the queue drains.
+    /// `f` receives the item and the queue (to push children).
+    pub fn run<F>(&self, threads: usize, f: F)
+    where
+        F: Fn(T, &Self) + Sync,
+        T: Send,
+    {
+        let threads = threads.max(1);
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| loop {
+                    let item = {
+                        let mut q = self.items.lock().unwrap();
+                        match q.pop() {
+                            Some(it) => {
+                                self.in_flight.fetch_add(1, Ordering::SeqCst);
+                                Some(it)
+                            }
+                            None => None,
+                        }
+                    };
+                    match item {
+                        Some(it) => {
+                            f(it, self);
+                            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+                        }
+                        None => {
+                            // Queue empty: done only if nobody is working
+                            // (a worker might still push children).
+                            if self.in_flight.load(Ordering::SeqCst) == 0 {
+                                break;
+                            }
+                            std::thread::yield_now();
+                        }
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_map_matches_serial() {
+        let got = parallel_map(1000, 8, |i| i * i);
+        let want: Vec<usize> = (0..1000).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn parallel_map_single_thread() {
+        assert_eq!(parallel_map(5, 1, |i| i + 1), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let v: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn work_queue_processes_recursive_pushes() {
+        // Binary-tree expansion: item = remaining depth; each item of depth
+        // d pushes two items of depth d-1.  Total leaves = 2^D.
+        let sum = AtomicU64::new(0);
+        let q = WorkQueue::new(vec![6u32]);
+        q.run(4, |d, q| {
+            if d == 0 {
+                sum.fetch_add(1, Ordering::Relaxed);
+            } else {
+                q.push(d - 1);
+                q.push(d - 1);
+            }
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

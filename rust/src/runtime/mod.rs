@@ -1,0 +1,316 @@
+//! PJRT runtime: loads the AOT-compiled LROT artifacts and serves them to
+//! the coordinator.
+//!
+//! The build path is `make artifacts` → `python/compile/aot.py` lowers the
+//! L2 model (with L1 Pallas kernels inlined) to HLO **text** per shape
+//! bucket, listed in `artifacts/manifest.tsv`.  Here we
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute` — the exact pattern of
+//! /opt/xla-example/load_hlo, multiplexed over buckets.
+//!
+//! The `xla` crate's client wraps an `Rc`, so it is confined to a single
+//! **service thread**; callers talk to it through an mpsc channel.  That
+//! serialises submissions, but PJRT's CPU backend parallelises each
+//! execution internally, and HiRef's fan-out keeps the native backend
+//! saturated with the many small blocks while the service thread handles
+//! the large ones — see EXPERIMENTS.md §Perf.
+//!
+//! A sub-problem of `active ≤ s` points runs on bucket `(s, r, k)` by
+//! padding: phantom rows get log-mass `NEG` (they receive exactly zero
+//! coupling mass — see `python/tests/test_model.py`) and factor columns
+//! are zero-padded (exact for inner products).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::linalg::Mat;
+use crate::prng::Rng;
+use crate::solvers::lrot::NEG;
+
+/// One AOT bucket from the manifest.
+#[derive(Clone, Debug)]
+pub struct BucketSpec {
+    pub s: usize,
+    pub r: usize,
+    pub k: usize,
+    pub outer: usize,
+    pub inner: usize,
+    pub gamma: f32,
+    pub tau: f32,
+    pub path: PathBuf,
+}
+
+enum Request {
+    Lrot {
+        bucket: usize,
+        /// Flat f32 inputs in artifact order: U, V, loga, logb, noise_q, noise_r.
+        inputs: Vec<Vec<f32>>,
+        reply: mpsc::Sender<Result<(Vec<f32>, Vec<f32>)>>,
+    },
+    Shutdown,
+}
+
+/// Handle to the PJRT service thread.  Cheap to share behind an `Arc`.
+pub struct PjrtEngine {
+    buckets: Vec<BucketSpec>,
+    tx: Mutex<mpsc::Sender<Request>>,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+    executions: AtomicUsize,
+}
+
+impl PjrtEngine {
+    /// Parse `manifest.tsv` in `dir` and start the service thread.
+    /// Executables compile lazily on first use of each bucket.
+    pub fn load(dir: &Path) -> Result<PjrtEngine> {
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        let mut buckets = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 8 {
+                bail!("manifest line {} malformed: {line}", ln + 1);
+            }
+            buckets.push(BucketSpec {
+                s: cols[0].parse()?,
+                r: cols[1].parse()?,
+                k: cols[2].parse()?,
+                outer: cols[3].parse()?,
+                inner: cols[4].parse()?,
+                gamma: cols[5].parse()?,
+                tau: cols[6].parse()?,
+                path: dir.join(cols[7]),
+            });
+        }
+        if buckets.is_empty() {
+            bail!("manifest {} lists no buckets", manifest.display());
+        }
+        let specs = buckets.clone();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let worker = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || service_loop(specs, rx))?;
+        Ok(PjrtEngine {
+            buckets,
+            tx: Mutex::new(tx),
+            worker: Mutex::new(Some(worker)),
+            executions: AtomicUsize::new(0),
+        })
+    }
+
+    /// All buckets (for CLI/report introspection).
+    pub fn buckets(&self) -> &[BucketSpec] {
+        &self.buckets
+    }
+
+    /// Number of executions served so far.
+    pub fn executions(&self) -> usize {
+        self.executions.load(Ordering::Relaxed)
+    }
+
+    /// Smallest bucket that fits `(active, rank, k)`; `None` if the grid
+    /// has no match (the coordinator then falls back to the native
+    /// solver).  A bucket "fits" if `s ≥ active`, `r == rank`, `k ≥ width`
+    /// — and wastes less than 4× padding (otherwise native is faster).
+    pub fn find_bucket(&self, active: usize, rank: usize, width: usize) -> Option<usize> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.s >= active && b.r == rank && b.k >= width)
+            .filter(|(_, b)| b.s <= active.saturating_mul(4).max(256))
+            .min_by_key(|(_, b)| (b.s, b.k))
+            .map(|(i, _)| i)
+    }
+
+    /// Solve an LROT sub-problem on the AOT path.  `u`/`v` are the cost
+    /// factors restricted to this co-cluster (`active_x`/`active_y` rows).
+    /// Returns `Ok(None)` when no bucket fits.
+    pub fn lrot(
+        &self,
+        u: &Mat,
+        v: &Mat,
+        active_x: usize,
+        active_y: usize,
+        rank: usize,
+        seed: u64,
+    ) -> Result<Option<(Mat, Mat)>> {
+        debug_assert_eq!(u.cols, v.cols);
+        let active = active_x.max(active_y);
+        let Some(bi) = self.find_bucket(active, rank, u.cols) else {
+            return Ok(None);
+        };
+        let b = &self.buckets[bi];
+        let (s, k, r) = (b.s, b.k, b.r);
+
+        // --- pad inputs into bucket shape --------------------------------
+        let pad_mat = |m: &Mat, rows: usize| -> Vec<f32> {
+            let mut out = vec![0.0f32; s * k];
+            for i in 0..rows {
+                out[i * k..i * k + m.cols].copy_from_slice(m.row(i));
+            }
+            out
+        };
+        let log_marg = |active: usize| -> Vec<f32> {
+            let la = -(active as f32).ln();
+            (0..s).map(|i| if i < active { la } else { NEG }).collect()
+        };
+        let mut rng = Rng::new(seed ^ 0xA07);
+        let mut noise_q = vec![0.0f32; s * r];
+        let mut noise_r = vec![0.0f32; s * r];
+        rng.fill_normal(&mut noise_q);
+        rng.fill_normal(&mut noise_r);
+
+        let inputs = vec![
+            pad_mat(u, active_x),
+            pad_mat(v, active_y),
+            log_marg(active_x),
+            log_marg(active_y),
+            noise_q,
+            noise_r,
+        ];
+
+        let (reply_tx, reply_rx) = mpsc::channel();
+        {
+            let tx = self.tx.lock().unwrap();
+            tx.send(Request::Lrot { bucket: bi, inputs, reply: reply_tx })
+                .map_err(|_| anyhow!("pjrt service thread died"))?;
+        }
+        let (qf, rf) = reply_rx
+            .recv()
+            .map_err(|_| anyhow!("pjrt service dropped reply"))??;
+        self.executions.fetch_add(1, Ordering::Relaxed);
+
+        // --- trim to active rows ------------------------------------------
+        let trim = |flat: Vec<f32>, rows: usize| -> Mat {
+            let mut m = Mat::zeros(rows, r);
+            for i in 0..rows {
+                m.row_mut(i).copy_from_slice(&flat[i * r..(i + 1) * r]);
+            }
+            m
+        };
+        Ok(Some((trim(qf, active_x), trim(rf, active_y))))
+    }
+}
+
+impl Drop for PjrtEngine {
+    fn drop(&mut self) {
+        if let Ok(tx) = self.tx.lock() {
+            let _ = tx.send(Request::Shutdown);
+        }
+        if let Some(h) = self.worker.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The service loop owns the (non-Send) PJRT client and compiled
+/// executables; it runs until `Shutdown` or channel closure.
+fn service_loop(specs: Vec<BucketSpec>, rx: mpsc::Receiver<Request>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Drain requests with errors so callers fall back to native.
+            for req in rx.iter() {
+                if let Request::Lrot { reply, .. } = req {
+                    let _ = reply.send(Err(anyhow!("PJRT client failed: {e}")));
+                }
+            }
+            return;
+        }
+    };
+    let mut compiled: HashMap<usize, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    for req in rx.iter() {
+        match req {
+            Request::Shutdown => break,
+            Request::Lrot { bucket, inputs, reply } => {
+                let result = serve_one(&client, &specs, &mut compiled, bucket, inputs);
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+fn serve_one(
+    client: &xla::PjRtClient,
+    specs: &[BucketSpec],
+    compiled: &mut HashMap<usize, xla::PjRtLoadedExecutable>,
+    bucket: usize,
+    inputs: Vec<Vec<f32>>,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let spec = &specs[bucket];
+    if !compiled.contains_key(&bucket) {
+        let path = spec
+            .path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing {path}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path}: {e}"))?;
+        compiled.insert(bucket, exe);
+    }
+    let exe = compiled.get(&bucket).unwrap();
+
+    let (s, k, r) = (spec.s as i64, spec.k as i64, spec.r as i64);
+    let shapes: [[i64; 2]; 6] =
+        [[s, k], [s, k], [s, 1], [s, 1], [s, r], [s, r]];
+    let mut literals = Vec::with_capacity(6);
+    for (buf, shape) in inputs.iter().zip(&shapes) {
+        let lit = xla::Literal::vec1(buf);
+        let lit = if shape[1] == 1 {
+            lit // 1-D parameter: keep vector shape
+        } else {
+            lit.reshape(&[shape[0], shape[1]])
+                .map_err(|e| anyhow!("reshape: {e}"))?
+        };
+        literals.push(lit);
+    }
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| anyhow!("execute: {e}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("to_literal: {e}"))?;
+    let (ql, rl) = result
+        .to_tuple2()
+        .map_err(|e| anyhow!("expected 2-tuple output: {e}"))?;
+    let qf = ql.to_vec::<f32>().map_err(|e| anyhow!("q to_vec: {e}"))?;
+    let rf = rl.to_vec::<f32>().map_err(|e| anyhow!("r to_vec: {e}"))?;
+    Ok((qf, rf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn find_bucket_prefers_smallest_fit() {
+        let engine = PjrtEngine {
+            buckets: vec![
+                BucketSpec { s: 256, r: 2, k: 4, outer: 1, inner: 1, gamma: 1.0, tau: 0.0, path: "a".into() },
+                BucketSpec { s: 1024, r: 2, k: 4, outer: 1, inner: 1, gamma: 1.0, tau: 0.0, path: "b".into() },
+                BucketSpec { s: 1024, r: 8, k: 4, outer: 1, inner: 1, gamma: 1.0, tau: 0.0, path: "c".into() },
+            ],
+            tx: Mutex::new(mpsc::channel().0),
+            worker: Mutex::new(None),
+            executions: AtomicUsize::new(0),
+        };
+        assert_eq!(engine.find_bucket(200, 2, 4), Some(0));
+        assert_eq!(engine.find_bucket(300, 2, 4), Some(1));
+        assert_eq!(engine.find_bucket(300, 8, 4), Some(2));
+        assert_eq!(engine.find_bucket(300, 16, 4), None);
+        // padding waste > 4x rejected
+        assert_eq!(engine.find_bucket(10, 8, 4), None);
+        // width larger than bucket rejected
+        assert_eq!(engine.find_bucket(300, 2, 64), None);
+    }
+}

@@ -1,0 +1,248 @@
+//! Exact and near-exact assignment solvers.
+//!
+//! * [`hungarian`] — Jonker–Volgenant shortest-augmenting-path Hungarian
+//!   algorithm, O(n³).  Exact: stands in for the paper's dual revised
+//!   simplex comparison (Table S4) and seals HiRef base-case blocks.
+//! * [`auction`] — Bertsekas forward auction with ε-scaling.  Near-exact
+//!   (within n·ε of optimal; exact for ε < gap/n), considerably faster on
+//!   larger base-case blocks; the HiRef default above the Hungarian
+//!   crossover size.
+
+use crate::linalg::Mat;
+
+/// Exact min-cost perfect matching on the square cost matrix `c`.
+/// Returns `perm` with row `i` matched to column `perm[i]`.
+pub fn hungarian(c: &Mat) -> Vec<u32> {
+    let n = c.rows;
+    assert_eq!(n, c.cols, "hungarian needs a square cost");
+    if n == 0 {
+        return Vec::new();
+    }
+    const INF: f64 = f64::INFINITY;
+    // 1-based arrays, p[j] = row matched to column j (0 = none)
+    let mut u = vec![0.0f64; n + 1];
+    let mut v = vec![0.0f64; n + 1];
+    let mut p = vec![0usize; n + 1];
+    let mut way = vec![0usize; n + 1];
+    let mut minv = vec![0.0f64; n + 1];
+    let mut used = vec![false; n + 1];
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        minv.iter_mut().for_each(|x| *x = INF);
+        used.iter_mut().for_each(|x| *x = false);
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = INF;
+            let mut j1 = 0usize;
+            let crow = c.row(i0 - 1);
+            for j in 1..=n {
+                if !used[j] {
+                    let cur = crow[j - 1] as f64 - u[i0] - v[j];
+                    if cur < minv[j] {
+                        minv[j] = cur;
+                        way[j] = j0;
+                    }
+                    if minv[j] < delta {
+                        delta = minv[j];
+                        j1 = j;
+                    }
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+    let mut perm = vec![0u32; n];
+    for j in 1..=n {
+        perm[p[j] - 1] = (j - 1) as u32;
+    }
+    perm
+}
+
+/// Bertsekas forward auction with ε-scaling.  Minimises Σ c[i, perm[i]].
+/// `quality` scales the final ε: 1.0 targets exactness on generic inputs
+/// (final ε < resolution/n); larger values trade cost for speed.
+pub fn auction(c: &Mat, quality: f64) -> Vec<u32> {
+    let n = c.rows;
+    assert_eq!(n, c.cols, "auction needs a square cost");
+    if n == 0 {
+        return Vec::new();
+    }
+    // Work with benefits b = -c (auction maximises).
+    let cmax = c.data.iter().fold(0.0f32, |m, &v| m.max(v.abs())) as f64;
+    let mut eps = (cmax / 4.0).max(1e-12);
+    let eps_final = (cmax * quality / (n as f64 * 1000.0)).max(1e-12);
+    let mut price = vec![0.0f64; n];
+    let mut owner = vec![usize::MAX; n]; // column -> row
+    let mut assign = vec![usize::MAX; n]; // row -> column
+    loop {
+        owner.iter_mut().for_each(|o| *o = usize::MAX);
+        assign.iter_mut().for_each(|a| *a = usize::MAX);
+        let mut unassigned: Vec<usize> = (0..n).collect();
+        while let Some(i) = unassigned.pop() {
+            // find best and second-best net value for bidder i
+            let crow = c.row(i);
+            let (mut best_j, mut best_v, mut second_v) = (0usize, f64::NEG_INFINITY, f64::NEG_INFINITY);
+            for (j, &cv) in crow.iter().enumerate() {
+                let v = -(cv as f64) - price[j];
+                if v > best_v {
+                    second_v = best_v;
+                    best_v = v;
+                    best_j = j;
+                } else if v > second_v {
+                    second_v = v;
+                }
+            }
+            let bid = best_v - second_v + eps;
+            price[best_j] += bid;
+            // displace previous owner
+            if owner[best_j] != usize::MAX {
+                let prev = owner[best_j];
+                assign[prev] = usize::MAX;
+                unassigned.push(prev);
+            }
+            owner[best_j] = i;
+            assign[i] = best_j;
+        }
+        if eps <= eps_final {
+            break;
+        }
+        eps = (eps / 4.0).max(eps_final);
+    }
+    assign.into_iter().map(|j| j as u32).collect()
+}
+
+/// Exact brute-force assignment for tiny n (test oracle, n ≤ 10).
+pub fn brute_force(c: &Mat) -> (Vec<u32>, f64) {
+    let n = c.rows;
+    assert!(n <= 10, "brute_force is exponential");
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    let mut best = perm.clone();
+    let mut best_cost = cost_of(c, &perm);
+    // Heap's algorithm
+    let mut stack = vec![0usize; n];
+    let mut i = 0;
+    while i < n {
+        if stack[i] < i {
+            if i % 2 == 0 {
+                perm.swap(0, i);
+            } else {
+                perm.swap(stack[i], i);
+            }
+            let cst = cost_of(c, &perm);
+            if cst < best_cost {
+                best_cost = cst;
+                best = perm.clone();
+            }
+            stack[i] += 1;
+            i = 0;
+        } else {
+            stack[i] = 0;
+            i += 1;
+        }
+    }
+    (best, best_cost)
+}
+
+/// Total (unnormalised) cost of an assignment.
+pub fn cost_of(c: &Mat, perm: &[u32]) -> f64 {
+    perm.iter().enumerate().map(|(i, &j)| c.at(i, j as usize) as f64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn rand_cost(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut c = Mat::zeros(n, n);
+        for v in c.data.iter_mut() {
+            *v = rng.next_f32() * 10.0;
+        }
+        c
+    }
+
+    fn assert_bijection(perm: &[u32]) {
+        let mut seen = vec![false; perm.len()];
+        for &j in perm {
+            assert!(!seen[j as usize], "column used twice");
+            seen[j as usize] = true;
+        }
+    }
+
+    #[test]
+    fn hungarian_matches_brute_force() {
+        for seed in 0..20 {
+            let c = rand_cost(7, seed);
+            let h = hungarian(&c);
+            assert_bijection(&h);
+            let (_, want) = brute_force(&c);
+            let got = cost_of(&c, &h);
+            assert!((got - want).abs() < 1e-6, "seed {seed}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn hungarian_identity_on_diagonal_costs() {
+        // c_ij = 0 iff i==j else 1 → identity is optimal
+        let n = 12;
+        let mut c = Mat::full(n, n, 1.0);
+        for i in 0..n {
+            *c.at_mut(i, i) = 0.0;
+        }
+        let h = hungarian(&c);
+        assert_eq!(h, (0..n as u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn auction_matches_brute_force() {
+        for seed in 0..10 {
+            let c = rand_cost(6, 100 + seed);
+            let a = auction(&c, 1.0);
+            assert_bijection(&a);
+            let (_, want) = brute_force(&c);
+            let got = cost_of(&c, &a);
+            assert!(got <= want * 1.02 + 1e-4, "seed {seed}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn auction_near_optimal_on_larger_instances() {
+        for seed in 0..5 {
+            let c = rand_cost(64, 200 + seed);
+            let a = auction(&c, 1.0);
+            assert_bijection(&a);
+            let h = hungarian(&c);
+            let (ca, ch) = (cost_of(&c, &a), cost_of(&c, &h));
+            assert!(ca <= ch * 1.01 + 1e-6, "auction {ca} vs hungarian {ch}");
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert!(hungarian(&Mat::zeros(0, 0)).is_empty());
+        assert_eq!(hungarian(&Mat::zeros(1, 1)), vec![0]);
+        assert_eq!(auction(&Mat::zeros(1, 1), 1.0), vec![0]);
+    }
+}

@@ -1,0 +1,496 @@
+//! Native low-rank OT (LROT): mirror descent on factors `(Q, R)` with the
+//! inner marginal `g` pinned uniform — the Rust twin of the AOT model in
+//! `python/compile/model.py` (same algorithm, same hyper-parameters), used
+//!
+//! * as the HiRef sub-problem backend for shapes outside the AOT bucket
+//!   grid (and in artifact-free test environments), and
+//! * as the LOT / FRLC low-rank *baselines* of Tables 1/S6/S7/S8 and
+//!   Fig. S3 (rank r fixed, e.g. 40).
+//!
+//! Cost matrices never materialise: gradients go through the factorisation
+//! `C = U Vᵀ`, so a solve is `O(outer · (s·k·r + inner · s·r))`.
+
+use crate::linalg::{fast_exp, Mat, matmul_into};
+use crate::pool;
+use crate::prng::Rng;
+
+/// Row-parallelism threshold: blocks below this stay single-threaded (the
+/// HiRef fan-out already saturates cores with many small blocks); above it
+/// (top-of-hierarchy blocks) the inner loops split across threads.
+const PAR_CELLS: usize = 1 << 17;
+
+#[inline]
+fn threads_for(cells: usize) -> usize {
+    if cells >= PAR_CELLS {
+        pool::default_threads()
+    } else {
+        1
+    }
+}
+
+/// Log-mass of padded points (mirrors kernels/ref.py NEG).
+pub const NEG: f32 = -1.0e9;
+
+/// Hyper-parameters; defaults equal the AOT artifacts' baked values so the
+/// native and PJRT backends are interchangeable.
+#[derive(Clone, Debug)]
+pub struct LrotConfig {
+    pub rank: usize,
+    /// Mirror-descent steps (L).
+    pub outer: usize,
+    /// Sinkhorn sweeps per KL projection (B).
+    pub inner: usize,
+    /// Base step size, rescaled by ‖grad‖∞.
+    pub gamma: f32,
+    /// Init noise scale (symmetry breaking).
+    pub tau: f32,
+}
+
+impl Default for LrotConfig {
+    fn default() -> Self {
+        LrotConfig { rank: 2, outer: 30, inner: 12, gamma: 8.0, tau: 0.01 }
+    }
+}
+
+/// Factors `(Q, R)`, each `s×r`, column sums = 1/r, row sums = marginals.
+pub struct LrotOutput {
+    pub q: Mat,
+    pub r: Mat,
+}
+
+/// Solve LROT on cost factors `(u, v)` (C = U Vᵀ restricted to the block)
+/// with uniform marginals over the first `active_x`/`active_y` rows; rows
+/// beyond that are phantom padding with zero mass.  Deterministic in
+/// `seed`.
+pub fn solve_factored(
+    u: &Mat,
+    v: &Mat,
+    active_x: usize,
+    active_y: usize,
+    cfg: &LrotConfig,
+    seed: u64,
+) -> LrotOutput {
+    let s = u.rows;
+    let r = cfg.rank;
+    assert!(active_x <= s && active_y <= v.rows);
+    let mut rng = Rng::new(seed ^ 0x160_7);
+
+    let loga = log_marginal(s, active_x);
+    let logb = log_marginal(v.rows, active_y);
+    let logg = -(r as f32).ln();
+    let inv_g = r as f32;
+
+    // init: product marginal + noise, projected
+    let mut log_q = init_logits(&loga, r, logg, cfg.tau, &mut rng);
+    let mut log_r = init_logits(&logb, r, logg, cfg.tau, &mut rng);
+    sinkhorn_project(&mut log_q, &loga, logg, cfg.inner);
+    sinkhorn_project(&mut log_r, &logb, logg, cfg.inner);
+
+    // preallocated buffers for the hot loop
+    let mut q = Mat::zeros(s, r);
+    let mut rr = Mat::zeros(v.rows, r);
+    let mut w = Mat::zeros(u.cols, r);
+    let mut gq = Mat::zeros(s, r);
+    let mut gr = Mat::zeros(v.rows, r);
+
+    let mut prev_labels: Option<(Vec<u16>, Vec<u16>)> = None;
+    for it in 0..cfg.outer {
+        exp_into(&log_q, &mut q);
+        exp_into(&log_r, &mut rr);
+        // Early stop: once the hard co-clustering is stable, further
+        // mirror-descent steps cannot change HiRef's refinement decision.
+        if it % 5 == 4 {
+            let labels = (argmax_labels(&q), argmax_labels(&rr));
+            if prev_labels.as_ref() == Some(&labels) {
+                break;
+            }
+            prev_labels = Some(labels);
+        }
+        // gq = U (Vᵀ R) * inv_g ; gr = V (Uᵀ Q) * inv_g
+        vt_matmul_into(v, &rr, &mut w);
+        matmul_into(u, &w, &mut gq);
+        gq.data.iter_mut().for_each(|x| *x *= inv_g);
+        vt_matmul_into(u, &q, &mut w);
+        matmul_into(v, &w, &mut gr);
+        gr.data.iter_mut().for_each(|x| *x *= inv_g);
+
+        let scale = gq.max_abs().max(gr.max_abs()).max(1e-12);
+        let step = cfg.gamma / scale;
+        for (lq, g) in log_q.data.iter_mut().zip(&gq.data) {
+            *lq -= step * g;
+        }
+        for (lr, g) in log_r.data.iter_mut().zip(&gr.data) {
+            *lr -= step * g;
+        }
+        sinkhorn_project(&mut log_q, &loga, logg, cfg.inner);
+        sinkhorn_project(&mut log_r, &logb, logg, cfg.inner);
+    }
+    exp_into(&log_q, &mut q);
+    exp_into(&log_r, &mut rr);
+    LrotOutput { q, r: rr }
+}
+
+/// Primal cost `⟨C, Q diag(1/g) Rᵀ⟩` with C = U Vᵀ and uniform g = 1/r,
+/// in O(s·k·r): equals `(1/g) Σ_z (UᵀQ)_z · (VᵀR)_z`.
+pub fn lowrank_cost(u: &Mat, v: &Mat, q: &Mat, r: &Mat) -> f64 {
+    let rank = q.cols;
+    let uq = u.t_matmul(q); // k×r
+    let vr = v.t_matmul(r); // k×r
+    let mut s = 0.0f64;
+    for z in 0..rank {
+        let mut dz = 0.0f64;
+        for k in 0..uq.rows {
+            dz += uq.at(k, z) as f64 * vr.at(k, z) as f64;
+        }
+        s += dz;
+    }
+    s * rank as f64
+}
+
+fn log_marginal(s: usize, active: usize) -> Vec<f32> {
+    let la = -(active as f32).ln();
+    (0..s).map(|i| if i < active { la } else { NEG }).collect()
+}
+
+fn init_logits(loga: &[f32], r: usize, logg: f32, tau: f32, rng: &mut Rng) -> Mat {
+    let s = loga.len();
+    let mut m = Mat::zeros(s, r);
+    for i in 0..s {
+        let row = m.row_mut(i);
+        for v in row.iter_mut() {
+            *v = loga[i] + logg + tau * rng.normal_f32();
+        }
+    }
+    m
+}
+
+/// In-place masked log-domain Sinkhorn projection onto Π(a, g).
+/// Mirrors model.sinkhorn_project: alternating f (rows) / h (cols)
+/// updates.  Row loops are chunked across threads for large blocks — the
+/// exp/log-heavy f-update dominates LROT runtime at the top of the
+/// hierarchy (see EXPERIMENTS.md §Perf).
+fn sinkhorn_project(log_k: &mut Mat, loga: &[f32], logg: f32, iters: usize) {
+    let (s, r) = (log_k.rows, log_k.cols);
+    let threads = threads_for(s * r * iters);
+    let mut f = vec![0.0f32; s];
+    let mut h = vec![0.0f32; r];
+    let chunk = s.div_ceil(threads.max(1)).max(1);
+    let n_chunks = s.div_ceil(chunk);
+
+    for _ in 0..iters {
+        // f-update (row LSE with current h) + per-chunk column partials
+        let partials: Vec<(Vec<f32>, Vec<f32>)> = {
+            let log_k = &*log_k;
+            let h_ref = &h;
+            let mut f_chunks: Vec<&mut [f32]> = f.chunks_mut(chunk).collect();
+            let results = std::sync::Mutex::new(vec![None; n_chunks]);
+            std::thread::scope(|scope| {
+                for (ci, f_chunk) in f_chunks.iter_mut().enumerate() {
+                    let results = &results;
+                    let f_chunk: &mut [f32] = f_chunk;
+                    scope.spawn(move || {
+                        let lo = ci * chunk;
+                        // pass 1: f-update + local col max over exp args
+                        let mut col_max = vec![f32::NEG_INFINITY; r];
+                        for (o, i) in (lo..(lo + f_chunk.len())).enumerate() {
+                            if loga[i] <= NEG / 2.0 {
+                                f_chunk[o] = NEG;
+                                continue;
+                            }
+                            let row = log_k.row(i);
+                            let mut mx = f32::NEG_INFINITY;
+                            for (v, hv) in row.iter().zip(h_ref) {
+                                mx = mx.max(v + hv);
+                            }
+                            let mx = mx.max(NEG);
+                            let mut sum = 0.0f32;
+                            for (v, hv) in row.iter().zip(h_ref) {
+                                sum += fast_exp((v + hv) - mx);
+                            }
+                            let fi = loga[i] - (mx + sum.ln());
+                            f_chunk[o] = fi;
+                            for (cm, v) in col_max.iter_mut().zip(row) {
+                                *cm = cm.max(v + fi);
+                            }
+                        }
+                        // pass 2: local col sums against the LOCAL max
+                        // (rescaled to the global max during the merge)
+                        let mut col_acc = vec![0.0f32; r];
+                        for (o, i) in (lo..(lo + f_chunk.len())).enumerate() {
+                            let fi = f_chunk[o];
+                            if fi <= NEG / 2.0 {
+                                continue;
+                            }
+                            for ((acc, v), cm) in
+                                col_acc.iter_mut().zip(log_k.row(i)).zip(&col_max)
+                            {
+                                *acc += fast_exp(v + fi - cm);
+                            }
+                        }
+                        results.lock().unwrap()[ci] = Some((col_max, col_acc));
+                    });
+                }
+            });
+            results
+                .into_inner()
+                .unwrap()
+                .into_iter()
+                .map(|o| o.unwrap())
+                .collect()
+        };
+        // merge column partials: global max, then rescale each chunk's sums
+        let mut gmax = vec![f32::NEG_INFINITY; r];
+        for (cm, _) in &partials {
+            for (g, &v) in gmax.iter_mut().zip(cm) {
+                *g = g.max(v);
+            }
+        }
+        let mut dh_max = 0.0f32;
+        for z in 0..r {
+            let g = gmax[z].max(NEG);
+            let mut total = 0.0f64;
+            for (cm, ca) in &partials {
+                if ca[z] > 0.0 {
+                    total += ca[z] as f64 * (((cm[z].max(NEG) - g) as f64).exp());
+                }
+            }
+            let new_h = logg - (g + (total.ln() as f32));
+            dh_max = dh_max.max((new_h - h[z]).abs());
+            h[z] = new_h;
+        }
+        // converged projections exit early (typical after 3-5 sweeps)
+        if dh_max < 1e-4 {
+            break;
+        }
+    }
+    // fold potentials in (chunk-parallel)
+    {
+        let h_ref = &h;
+        let f_ref = &f;
+        let rows_per = chunk;
+        let mut data_chunks: Vec<&mut [f32]> = log_k.data.chunks_mut(rows_per * r).collect();
+        std::thread::scope(|scope| {
+            for (ci, dchunk) in data_chunks.iter_mut().enumerate() {
+                let dchunk: &mut [f32] = dchunk;
+                scope.spawn(move || {
+                    let lo = ci * rows_per;
+                    for (o, row) in dchunk.chunks_mut(r).enumerate() {
+                        let fi = f_ref[lo + o];
+                        for (v, hv) in row.iter_mut().zip(h_ref) {
+                            *v += fi + hv;
+                        }
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// Row argmax labels (compact u16; ranks are ≤ 2^16).
+fn argmax_labels(m: &Mat) -> Vec<u16> {
+    (0..m.rows)
+        .map(|i| {
+            let row = m.row(i);
+            let mut best = 0usize;
+            let mut bv = f32::NEG_INFINITY;
+            for (z, &v) in row.iter().enumerate() {
+                if v > bv {
+                    bv = v;
+                    best = z;
+                }
+            }
+            best as u16
+        })
+        .collect()
+}
+
+fn exp_into(src: &Mat, dst: &mut Mat) {
+    for (d, &s) in dst.data.iter_mut().zip(&src.data) {
+        *d = fast_exp(s); // fast_exp underflows the NEG sentinel to 0
+    }
+}
+
+/// `out = aᵀ b` into a preallocated k×r buffer.
+fn vt_matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.rows, b.rows);
+    assert_eq!((out.rows, out.cols), (a.cols, b.cols));
+    out.data.fill(0.0);
+    let n = b.cols;
+    for p in 0..a.rows {
+        let arow = a.row(p);
+        let brow = b.row(p);
+        for (i, &av) in arow.iter().enumerate() {
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (ov, &bv) in orow.iter_mut().zip(brow) {
+                *ov += av * bv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costs::factor::sq_euclidean_factors;
+    use crate::prng::Rng;
+
+    fn shuffled_pair(s: usize, d: usize, seed: u64) -> (Mat, Mat, Vec<u32>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Mat::zeros(s, d);
+        rng.fill_normal(&mut x.data);
+        let perm = rng.permutation(s);
+        let mut y = x.gather_rows(&perm);
+        for v in y.data.iter_mut() {
+            *v += 0.01 * rng.normal_f32();
+        }
+        (x, y, perm)
+    }
+
+    #[test]
+    fn feasibility_uniform_marginals() {
+        let (x, y, _) = shuffled_pair(128, 2, 0);
+        let (u, v) = sq_euclidean_factors(&x, &y);
+        let out = solve_factored(&u, &v, 128, 128, &LrotConfig::default(), 1);
+        for cs in out.q.col_sums() {
+            assert!((cs - 0.5).abs() < 5e-3, "col sum {cs}");
+        }
+        let total: f64 = out.q.data.iter().map(|&v| v as f64).sum();
+        assert!((total - 1.0).abs() < 1e-3);
+        assert!(out.q.data.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn monge_co_clustering() {
+        // Prop 3.1 behaviour: x and T(x) land in the same cluster
+        let (x, y, perm) = shuffled_pair(256, 2, 2);
+        let (u, v) = sq_euclidean_factors(&x, &y);
+        let out = solve_factored(&u, &v, 256, 256, &LrotConfig::default(), 3);
+        let qa: Vec<usize> = (0..256)
+            .map(|i| argmax(out.q.row(i)))
+            .collect();
+        let ra: Vec<usize> = (0..256)
+            .map(|j| argmax(out.r.row(j)))
+            .collect();
+        // y_j = x_perm[j] + noise, so T(x_{perm[j]}) = y_j
+        let agree = (0..256)
+            .filter(|&j| qa[perm[j] as usize] == ra[j])
+            .count() as f64
+            / 256.0;
+        assert!(agree > 0.9, "agreement {agree}");
+    }
+
+    #[test]
+    fn padding_rows_get_zero_mass() {
+        let (x, y, _) = shuffled_pair(64, 2, 4);
+        let (u, v) = sq_euclidean_factors(&x, &y);
+        let out = solve_factored(&u, &v, 48, 48, &LrotConfig::default(), 5);
+        for i in 48..64 {
+            assert!(out.q.row(i).iter().all(|&v| v == 0.0));
+            assert!(out.r.row(i).iter().all(|&v| v == 0.0));
+        }
+        let total: f64 = out.q.data.iter().map(|&v| v as f64).sum();
+        assert!((total - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn lowrank_cost_matches_dense() {
+        let (x, y, _) = shuffled_pair(32, 2, 6);
+        let (u, v) = sq_euclidean_factors(&x, &y);
+        let out = solve_factored(&u, &v, 32, 32, &LrotConfig::default(), 7);
+        let fast = lowrank_cost(&u, &v, &out.q, &out.r);
+        // dense check
+        let c = crate::costs::dense_cost(&x, &y, crate::costs::CostKind::SqEuclidean);
+        let mut p = Mat::zeros(32, 32);
+        for i in 0..32 {
+            for j in 0..32 {
+                let mut s = 0.0f32;
+                for z in 0..2 {
+                    s += out.q.at(i, z) * out.r.at(j, z) * 2.0;
+                }
+                *p.at_mut(i, j) = s;
+            }
+        }
+        let dense = crate::metrics::dense_cost_of(&c, &p);
+        assert!((fast - dense).abs() < 1e-3 * dense.abs().max(1.0), "{fast} vs {dense}");
+    }
+
+    #[test]
+    fn higher_rank_lowers_cost() {
+        // Fig. S3 trend: cost decreases as rank grows
+        let (x, y, _) = shuffled_pair(128, 2, 8);
+        let (u, v) = sq_euclidean_factors(&x, &y);
+        let mut costs = Vec::new();
+        for &r in &[2usize, 8, 32] {
+            let cfg = LrotConfig { rank: r, ..Default::default() };
+            let out = solve_factored(&u, &v, 128, 128, &cfg, 9);
+            costs.push(lowrank_cost(&u, &v, &out.q, &out.r));
+        }
+        assert!(costs[2] < costs[0] * 1.02, "rank-32 {} vs rank-2 {}", costs[2], costs[0]);
+    }
+
+    fn argmax(xs: &[f32]) -> usize {
+        xs.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0
+    }
+}
+
+/// Unbiased Monte-Carlo estimate of the primal cost `⟨C, Q diag(1/g) Rᵀ⟩`
+/// under the TRUE (non-factorised) cost: sample `(i, j) ~ P` by drawing a
+/// component `z ~ g`, then `i ~ Q_{·z}/g_z`, `j ~ R_{·z}/g_z`, and average
+/// `c(x_i, y_j)`.  Linear time and space — usable at the paper's 10⁵–10⁶
+/// scales where exact evaluation of a dense low-rank coupling is O(n²).
+pub fn lowrank_cost_sampled(
+    x: &crate::linalg::Mat,
+    y: &crate::linalg::Mat,
+    kind: crate::costs::CostKind,
+    q: &Mat,
+    r: &Mat,
+    samples: usize,
+    seed: u64,
+) -> f64 {
+    let rank = q.cols;
+    let mut rng = Rng::new(seed ^ 0x5A11);
+    // cumulative distributions per component (O(n·r) once)
+    let col_cdf = |m: &Mat| -> Vec<Vec<f64>> {
+        (0..rank)
+            .map(|z| {
+                let mut acc = 0.0f64;
+                let mut cdf = Vec::with_capacity(m.rows);
+                for i in 0..m.rows {
+                    acc += m.at(i, z) as f64;
+                    cdf.push(acc);
+                }
+                cdf
+            })
+            .collect()
+    };
+    let qc = col_cdf(q);
+    let rc = col_cdf(r);
+    let g_mass: Vec<f64> = (0..rank).map(|z| *qc[z].last().unwrap_or(&0.0)).collect();
+    let total: f64 = g_mass.iter().sum();
+    let draw = |cdf: &[f64], u: f64| -> usize {
+        let target = u * cdf.last().unwrap();
+        cdf.partition_point(|&c| c < target).min(cdf.len() - 1)
+    };
+    let mut acc = 0.0f64;
+    for _ in 0..samples {
+        // z ~ g
+        let mut u = rng.next_f64() * total;
+        let mut z = 0;
+        for (k, &m) in g_mass.iter().enumerate() {
+            if u < m {
+                z = k;
+                break;
+            }
+            u -= m;
+            z = k;
+        }
+        let i = draw(&qc[z], rng.next_f64());
+        let j = draw(&rc[z], rng.next_f64());
+        acc += kind.pair(x.row(i), y.row(j));
+    }
+    acc / samples as f64
+}

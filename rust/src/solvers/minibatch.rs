@@ -1,0 +1,139 @@
+//! Mini-batch OT baseline (Genevay et al. 2018; Fatras et al. 2020/21).
+//!
+//! The paper's protocol (§D.2): partition both datasets into batches of
+//! size B *without replacement*, solve each batch pair with Sinkhorn
+//! (ε = 0.05 default), and instantiate the full-rank coupling as the
+//! block-diagonal union of batch couplings.  Every batch alignment is a
+//! locally-optimal but globally-biased estimate — the bias the paper
+//! quantifies in Tables 1/S6/S7/S8 — and the bias shrinks as B grows.
+//!
+//! We additionally round each batch coupling to a bijection so the output
+//! is a one-to-one map comparable with HiRef's (the paper's transfer task
+//! does the same via row-argmax).
+
+use crate::costs::{dense_cost, CostKind};
+use crate::linalg::Mat;
+use crate::pool;
+use crate::prng::Rng;
+use crate::solvers::sinkhorn::{self, SinkhornConfig};
+
+/// Configuration for [`solve`].
+#[derive(Clone, Debug)]
+pub struct MiniBatchConfig {
+    /// Batch size B.
+    pub batch: usize,
+    /// Sinkhorn entropy on each batch.
+    pub epsilon: f64,
+    /// Sinkhorn iterations per batch.
+    pub max_iters: usize,
+    pub seed: u64,
+    /// Worker threads for independent batches.
+    pub threads: usize,
+}
+
+impl Default for MiniBatchConfig {
+    fn default() -> Self {
+        MiniBatchConfig {
+            batch: 512,
+            epsilon: 0.05,
+            max_iters: 500,
+            seed: 0,
+            threads: pool::default_threads(),
+        }
+    }
+}
+
+/// Run mini-batch OT; returns a global bijection `perm` (x_i ↦ y_perm[i]).
+pub fn solve(x: &Mat, y: &Mat, kind: CostKind, cfg: &MiniBatchConfig) -> Vec<u32> {
+    let n = x.rows;
+    assert_eq!(n, y.rows);
+    let b = cfg.batch.min(n).max(1);
+    let mut rng = Rng::new(cfg.seed ^ 0xB47C);
+    let px = rng.permutation(n);
+    let py = rng.permutation(n);
+    let n_batches = n.div_ceil(b);
+
+    let batch_results = pool::parallel_map(n_batches, cfg.threads, |bi| {
+        let lo = bi * b;
+        let hi = ((bi + 1) * b).min(n);
+        let xi = &px[lo..hi];
+        let yi = &py[lo..hi];
+        let xb = x.gather_rows(xi);
+        let yb = y.gather_rows(yi);
+        let c = dense_cost(&xb, &yb, kind);
+        let out = sinkhorn::solve(
+            &c,
+            &SinkhornConfig {
+                epsilon: cfg.epsilon,
+                max_iters: cfg.max_iters,
+                ..Default::default()
+            },
+        );
+        sinkhorn::round_to_bijection(&out.coupling)
+    });
+
+    let mut perm = vec![u32::MAX; n];
+    for (bi, local) in batch_results.into_iter().enumerate() {
+        let lo = bi * b;
+        for (k, &lj) in local.iter().enumerate() {
+            perm[px[lo + k] as usize] = py[lo + lj as usize];
+        }
+    }
+    debug_assert!(perm.iter().all(|&j| j != u32::MAX));
+    perm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics;
+
+    fn toy(n: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let mut x = Mat::zeros(n, 2);
+        let mut y = Mat::zeros(n, 2);
+        rng.fill_normal(&mut x.data);
+        rng.fill_normal(&mut y.data);
+        (x, y)
+    }
+
+    #[test]
+    fn output_is_bijection() {
+        let (x, y) = toy(100, 0);
+        let perm = solve(&x, &y, CostKind::SqEuclidean, &MiniBatchConfig {
+            batch: 32,
+            ..Default::default()
+        });
+        let mut seen = vec![false; 100];
+        for &j in &perm {
+            assert!(!seen[j as usize]);
+            seen[j as usize] = true;
+        }
+    }
+
+    #[test]
+    fn larger_batches_lower_cost() {
+        // The paper's central observation about MB bias (Table S6 trend).
+        let (x, y) = toy(512, 1);
+        let mut costs = Vec::new();
+        for &b in &[16usize, 128, 512] {
+            let perm = solve(&x, &y, CostKind::SqEuclidean, &MiniBatchConfig {
+                batch: b,
+                seed: 7,
+                ..Default::default()
+            });
+            costs.push(metrics::bijection_cost(&x, &y, &perm, CostKind::SqEuclidean));
+        }
+        assert!(costs[2] < costs[0], "full-batch {} !< B=16 {}", costs[2], costs[0]);
+    }
+
+    #[test]
+    fn batch_larger_than_n_is_single_batch() {
+        let (x, y) = toy(40, 2);
+        let perm = solve(&x, &y, CostKind::SqEuclidean, &MiniBatchConfig {
+            batch: 1000,
+            ..Default::default()
+        });
+        assert_eq!(perm.len(), 40);
+    }
+}

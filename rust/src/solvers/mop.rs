@@ -1,0 +1,328 @@
+//! MOP — multiscale optimal transport after Gerber & Maggioni (JMLR 2017),
+//! the paper's multiscale baseline (Tables S4, S7).
+//!
+//! The original consumes a *regular family of multiscale partitions*
+//! (Def. C.3; they use GMRA trees).  We build the equivalent substrate
+//! from scratch: balanced hierarchical 2-means trees (principal-direction
+//! median splits), which satisfy the partition/tree axioms and mirror
+//! dyadic-cube behaviour on manifold-like data.  Transport then proceeds
+//! coarse→fine with the *simple propagation* strategy (§C.2): the coupling
+//! mass of a coarse pair is re-solved among its children only, so space
+//! stays linear — and, as the paper reports, the locality of the
+//! propagation costs accuracy (MOP trails the other methods in Table S4).
+
+use crate::costs::CostKind;
+use crate::linalg::Mat;
+
+/// A balanced binary partition tree over point indices.
+pub struct PartitionTree {
+    /// Per level: list of clusters, each a sorted index list.  Level 0 is
+    /// the root (all points); the last level has singleton clusters.
+    pub levels: Vec<Vec<Vec<u32>>>,
+}
+
+impl PartitionTree {
+    /// Build by recursive principal-direction median splits.
+    pub fn build(x: &Mat) -> PartitionTree {
+        let n = x.rows;
+        let mut levels: Vec<Vec<Vec<u32>>> = vec![vec![(0..n as u32).collect()]];
+        loop {
+            let prev = levels.last().unwrap();
+            if prev.iter().all(|c| c.len() <= 1) {
+                break;
+            }
+            let mut next = Vec::with_capacity(prev.len() * 2);
+            for cluster in prev {
+                if cluster.len() <= 1 {
+                    next.push(cluster.clone());
+                    continue;
+                }
+                let (a, b) = median_split(x, cluster);
+                next.push(a);
+                next.push(b);
+            }
+            levels.push(next);
+        }
+        PartitionTree { levels }
+    }
+
+    /// Centroid of a cluster.
+    pub fn centroid(x: &Mat, cluster: &[u32]) -> Vec<f32> {
+        let d = x.cols;
+        let mut c = vec![0.0f64; d];
+        for &i in cluster {
+            for (acc, &v) in c.iter_mut().zip(x.row(i as usize)) {
+                *acc += v as f64;
+            }
+        }
+        c.into_iter().map(|v| (v / cluster.len() as f64) as f32).collect()
+    }
+}
+
+/// Split a cluster into two balanced halves along its principal direction
+/// (power iteration on the covariance; median projection split).
+fn median_split(x: &Mat, cluster: &[u32]) -> (Vec<u32>, Vec<u32>) {
+    let d = x.cols;
+    let mean = PartitionTree::centroid(x, cluster);
+    // power iteration
+    let mut dir = vec![1.0f32; d];
+    normalize(&mut dir);
+    for _ in 0..8 {
+        let mut next = vec![0.0f32; d];
+        for &i in cluster {
+            let row = x.row(i as usize);
+            let mut proj = 0.0f32;
+            for ((&v, &m), &w) in row.iter().zip(&mean).zip(&dir) {
+                proj += (v - m) * w;
+            }
+            for ((nv, &v), &m) in next.iter_mut().zip(row).zip(&mean) {
+                *nv += proj * (v - m);
+            }
+        }
+        if next.iter().all(|&v| v == 0.0) {
+            break;
+        }
+        dir = next;
+        normalize(&mut dir);
+    }
+    let mut projected: Vec<(f32, u32)> = cluster
+        .iter()
+        .map(|&i| {
+            let row = x.row(i as usize);
+            let mut p = 0.0f32;
+            for ((&v, &m), &w) in row.iter().zip(&mean).zip(&dir) {
+                p += (v - m) * w;
+            }
+            (p, i)
+        })
+        .collect();
+    projected.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    let half = cluster.len() / 2;
+    let a = projected[..half].iter().map(|&(_, i)| i).collect();
+    let b = projected[half..].iter().map(|&(_, i)| i).collect();
+    (a, b)
+}
+
+fn normalize(v: &mut [f32]) {
+    let n: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if n > 0.0 {
+        v.iter_mut().for_each(|x| *x /= n);
+    }
+}
+
+/// Sparse coupling entry at some scale: (x-cluster, y-cluster, mass).
+type SparseCoupling = Vec<(usize, usize, f64)>;
+
+/// Run MOP between `x` and `y` (equal sizes, uniform weights).
+/// Returns a bijection obtained by rounding the finest-scale coupling.
+pub fn solve(x: &Mat, y: &Mat, kind: CostKind) -> Vec<u32> {
+    let (entries, _) = solve_sparse(x, y, kind);
+    round_bijection(x.rows, &entries)
+}
+
+/// Run MOP and return the finest-scale sparse coupling plus its primal
+/// cost (mass-weighted, already normalised).
+pub fn solve_sparse(x: &Mat, y: &Mat, kind: CostKind) -> (SparseCoupling, f64) {
+    let n = x.rows;
+    assert_eq!(n, y.rows);
+    let tx = PartitionTree::build(x);
+    let ty = PartitionTree::build(y);
+    let depth = tx.levels.len().min(ty.levels.len());
+
+    // coarsest scale: single pair with all the mass
+    let mut plan: SparseCoupling = vec![(0, 0, 1.0)];
+    for lvl in 1..depth {
+        let px = &tx.levels[lvl - 1];
+        let py = &ty.levels[lvl - 1];
+        let cx = &tx.levels[lvl];
+        let cy = &ty.levels[lvl];
+        // children index ranges: balanced splits mean cluster q at lvl-1
+        // maps to children {2q, 2q+1} when it was split, or stays singular.
+        let child_map = |parents: &Vec<Vec<u32>>, _children: &Vec<Vec<u32>>| -> Vec<Vec<usize>> {
+            let mut map = Vec::with_capacity(parents.len());
+            let mut cursor = 0usize;
+            for p in parents {
+                if p.len() <= 1 {
+                    map.push(vec![cursor]);
+                    cursor += 1;
+                } else {
+                    map.push(vec![cursor, cursor + 1]);
+                    cursor += 2;
+                }
+            }
+            map
+        };
+        let mx = child_map(px, cx);
+        let my = child_map(py, cy);
+
+        let mut next: SparseCoupling = Vec::with_capacity(plan.len() * 2);
+        for &(qx, qy, mass) in &plan {
+            let xc = &mx[qx];
+            let yc = &my[qy];
+            // local transport between ≤2 x-children and ≤2 y-children with
+            // masses proportional to cluster sizes
+            let rm: Vec<f64> = xc.iter().map(|&c| cx[c].len() as f64).collect();
+            let cm: Vec<f64> = yc.iter().map(|&c| cy[c].len() as f64).collect();
+            let rsum: f64 = rm.iter().sum();
+            let rm: Vec<f64> = rm.iter().map(|v| v / rsum * mass).collect();
+            let csum: f64 = cm.iter().sum();
+            let cm: Vec<f64> = cm.iter().map(|v| v / csum * mass).collect();
+            let cost = |a: usize, b: usize| -> f64 {
+                let ca = PartitionTree::centroid(x, &cx[xc[a]]);
+                let cb = PartitionTree::centroid(y, &cy[yc[b]]);
+                kind.pair(&ca, &cb)
+            };
+            match (xc.len(), yc.len()) {
+                (1, 1) => next.push((xc[0], yc[0], mass)),
+                (1, 2) => {
+                    next.push((xc[0], yc[0], cm[0]));
+                    next.push((xc[0], yc[1], cm[1]));
+                }
+                (2, 1) => {
+                    next.push((xc[0], yc[0], rm[0]));
+                    next.push((xc[1], yc[0], rm[1]));
+                }
+                (2, 2) => {
+                    // one-parameter family: P00 = t in [max(0, r0-c1), min(r0, c0)]
+                    let lo = (rm[0] - cm[1]).max(0.0);
+                    let hi = rm[0].min(cm[0]);
+                    let delta = cost(0, 0) - cost(0, 1) - cost(1, 0) + cost(1, 1);
+                    let t = if delta <= 0.0 { hi } else { lo };
+                    let entries = [
+                        (xc[0], yc[0], t),
+                        (xc[0], yc[1], rm[0] - t),
+                        (xc[1], yc[0], cm[0] - t),
+                        (xc[1], yc[1], cm[1] - (rm[0] - t)),
+                    ];
+                    for (a, b, m) in entries {
+                        if m > 1e-15 {
+                            next.push((a, b, m));
+                        }
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+        plan = next;
+    }
+
+    // finest scale: clusters are singletons; translate to point indices
+    let leaves_x = &tx.levels[depth - 1];
+    let leaves_y = &ty.levels[depth - 1];
+    let mut entries: SparseCoupling = Vec::with_capacity(plan.len());
+    let mut total_cost = 0.0f64;
+    for &(qx, qy, mass) in &plan {
+        let i = leaves_x[qx][0] as usize;
+        let j = leaves_y[qy][0] as usize;
+        total_cost += mass * kind.pair(x.row(i), y.row(j));
+        entries.push((i, j, mass));
+    }
+    (entries, total_cost)
+}
+
+/// Round a sparse coupling to a bijection: take entries by decreasing
+/// mass, then pair any leftovers greedily.
+fn round_bijection(n: usize, entries: &SparseCoupling) -> Vec<u32> {
+    let mut order: Vec<usize> = (0..entries.len()).collect();
+    order.sort_by(|&a, &b| entries[b].2.partial_cmp(&entries[a].2).unwrap());
+    let mut perm = vec![u32::MAX; n];
+    let mut used = vec![false; n];
+    for &e in &order {
+        let (i, j, _) = entries[e];
+        if perm[i] == u32::MAX && !used[j] {
+            perm[i] = j as u32;
+            used[j] = true;
+        }
+    }
+    let mut free_y: Vec<u32> =
+        (0..n as u32).filter(|&j| !used[j as usize]).collect();
+    for i in 0..n {
+        if perm[i] == u32::MAX {
+            perm[i] = free_y.pop().expect("mismatched leftovers");
+        }
+    }
+    perm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics;
+    use crate::prng::Rng;
+
+    fn toy(n: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let mut x = Mat::zeros(n, 2);
+        let mut y = Mat::zeros(n, 2);
+        rng.fill_normal(&mut x.data);
+        rng.fill_normal(&mut y.data);
+        (x, y)
+    }
+
+    #[test]
+    fn tree_levels_partition_everything() {
+        let (x, _) = toy(33, 0);
+        let t = PartitionTree::build(&x);
+        for level in &t.levels {
+            let mut count = 0;
+            let mut seen = vec![false; 33];
+            for c in level {
+                for &i in c {
+                    assert!(!seen[i as usize]);
+                    seen[i as usize] = true;
+                    count += 1;
+                }
+            }
+            assert_eq!(count, 33);
+        }
+        // last level: all singletons
+        assert!(t.levels.last().unwrap().iter().all(|c| c.len() == 1));
+    }
+
+    #[test]
+    fn balanced_splits() {
+        let (x, _) = toy(64, 1);
+        let t = PartitionTree::build(&x);
+        for c in &t.levels[1] {
+            assert_eq!(c.len(), 32);
+        }
+        for c in &t.levels[3] {
+            assert_eq!(c.len(), 8);
+        }
+    }
+
+    #[test]
+    fn output_is_bijection() {
+        let (x, y) = toy(50, 2);
+        let perm = solve(&x, &y, CostKind::SqEuclidean);
+        let mut seen = vec![false; 50];
+        for &j in &perm {
+            assert!(!seen[j as usize]);
+            seen[j as usize] = true;
+        }
+    }
+
+    #[test]
+    fn mass_conserved_at_finest_scale() {
+        let (x, y) = toy(40, 3);
+        let (entries, _) = solve_sparse(&x, &y, CostKind::SqEuclidean);
+        let total: f64 = entries.iter().map(|e| e.2).sum();
+        assert!((total - 1.0).abs() < 1e-9, "total {total}");
+    }
+
+    #[test]
+    fn worse_than_exact_but_bounded() {
+        // MOP is a fast approximation: must land above optimal but below
+        // random assignment (paper Table S4 places it well above exact).
+        let (x, y) = toy(64, 4);
+        let perm = solve(&x, &y, CostKind::SqEuclidean);
+        let c_mop = metrics::bijection_cost(&x, &y, &perm, CostKind::SqEuclidean);
+        let c = crate::costs::dense_cost(&x, &y, CostKind::SqEuclidean);
+        let h = crate::solvers::exact::hungarian(&c);
+        let c_opt = metrics::bijection_cost(&x, &y, &h, CostKind::SqEuclidean);
+        let ident: Vec<u32> = (0..64).collect();
+        let c_id = metrics::bijection_cost(&x, &y, &ident, CostKind::SqEuclidean);
+        assert!(c_mop >= c_opt - 1e-9);
+        assert!(c_mop < c_id, "MOP no better than identity pairing: {c_mop} vs {c_id}");
+    }
+}

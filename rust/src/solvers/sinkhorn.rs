@@ -1,0 +1,333 @@
+//! Log-domain Sinkhorn (Cuturi 2013) with optional ε-annealing schedule
+//! (Chen et al. 2023) — the paper's primary full-rank baseline.
+//!
+//! Quadratic space by construction (it materialises the coupling): this is
+//! exactly the scaling wall HiRef removes, and the benches demonstrate it
+//! (Fig. S2b, Tables S2/S6).  Runs on uniform marginals as everywhere in
+//! the paper.
+
+use crate::linalg::{fast_exp, Mat};
+
+/// Log-sum-exp over an f64 buffer.  Potentials stay f64 (precision floor
+/// ~1e-9) but the exp itself runs through the vectorisable `fast_exp`
+/// (rel. err ≤ 7e-6) with pairwise-safe f64 accumulation — the dense
+/// baseline's O(n²)-per-sweep hot loop.
+fn logsumexp64(xs: &[f64]) -> f64 {
+    let mx = xs.iter().fold(f64::NEG_INFINITY, |m, &v| m.max(v));
+    if !mx.is_finite() {
+        return mx;
+    }
+    let s: f64 = xs.iter().map(|&v| fast_exp((v - mx) as f32) as f64).sum();
+    mx + s.ln()
+}
+
+/// Configuration for [`solve`].
+#[derive(Clone, Debug)]
+pub struct SinkhornConfig {
+    /// Entropy regularisation ε (paper default 0.05).
+    pub epsilon: f64,
+    /// Maximum Sinkhorn sweeps.
+    pub max_iters: usize,
+    /// Stop when the worst marginal violation (relative) drops below this.
+    pub tol: f64,
+    /// Optional ε-schedule: anneal from `eps_start` down to `epsilon`
+    /// geometrically over the first `schedule_iters` sweeps.
+    pub eps_start: Option<f64>,
+    pub schedule_iters: usize,
+    /// Scale ε by the mean cost (ott-jax convention, which the paper's
+    /// "default ε = 0.05" refers to).  Default true.
+    pub relative_eps: bool,
+}
+
+impl Default for SinkhornConfig {
+    fn default() -> Self {
+        SinkhornConfig {
+            epsilon: 0.05,
+            max_iters: 2000,
+            tol: 1e-6,
+            eps_start: None,
+            schedule_iters: 100,
+            relative_eps: true,
+        }
+    }
+}
+
+/// Result of a Sinkhorn run.
+pub struct SinkhornOutput {
+    /// Dense coupling (n×m) — quadratic memory, baseline only.
+    pub coupling: Mat,
+    /// Dual potentials (f, g).
+    pub f: Vec<f64>,
+    pub g: Vec<f64>,
+    /// Sweeps executed.
+    pub iters: usize,
+}
+
+/// Solve entropic OT with uniform marginals on cost matrix `c`.
+pub fn solve(c: &Mat, cfg: &SinkhornConfig) -> SinkhornOutput {
+    let (n, m) = (c.rows, c.cols);
+    // ott-jax-style relative ε: scale by the mean cost so "ε = 0.05"
+    // means the same thing across datasets.
+    let cfg = if cfg.relative_eps {
+        let mean = c.data.iter().map(|&v| v as f64).sum::<f64>()
+            / (c.data.len() as f64).max(1.0);
+        let scale = mean.max(1e-12);
+        let mut cc = cfg.clone();
+        cc.epsilon *= scale;
+        cc.eps_start = cc.eps_start.map(|e| e * scale);
+        cc.relative_eps = false;
+        cc
+    } else {
+        cfg.clone()
+    };
+    let cfg = &cfg;
+    let loga = -(n as f64).ln();
+    let logb = -(m as f64).ln();
+    let mut f = vec![0.0f64; n];
+    let mut g = vec![0.0f64; m];
+    let mut iters = 0;
+    let mut buf = vec![0.0f64; n.max(m)];
+
+    for it in 0..cfg.max_iters {
+        iters = it + 1;
+        let eps = current_eps(cfg, it);
+        // f-update: f_i = eps*(loga - LSE_j((g_j - C_ij)/eps))
+        for i in 0..n {
+            let crow = c.row(i);
+            let b = &mut buf[..m];
+            for ((t, &cv), &gv) in b.iter_mut().zip(crow).zip(&g) {
+                *t = (gv - cv as f64) / eps;
+            }
+            f[i] = eps * (loga - logsumexp64(b));
+        }
+        // g-update
+        for (j, gj) in g.iter_mut().enumerate() {
+            let b = &mut buf[..n];
+            for (i, t) in b.iter_mut().enumerate() {
+                *t = (f[i] - c.at(i, j) as f64) / eps;
+            }
+            *gj = eps * (logb - logsumexp64(b));
+        }
+        // convergence: row-marginal violation (g-update makes cols exact)
+        if it % 10 == 9 && current_eps(cfg, it) <= cfg.epsilon {
+            let viol = row_violation(c, &f, &g, eps, loga);
+            if viol < cfg.tol {
+                break;
+            }
+        }
+    }
+
+    let eps = cfg.epsilon;
+    let mut p = Mat::zeros(n, m);
+    for i in 0..n {
+        let crow = c.row(i);
+        let prow = p.row_mut(i);
+        for ((pv, &cv), &gv) in prow.iter_mut().zip(crow).zip(&g) {
+            *pv = ((f[i] + gv - cv as f64) / eps).exp() as f32;
+        }
+    }
+    round_to_feasible(&mut p);
+    SinkhornOutput { coupling: p, f, g, iters }
+}
+
+/// Altschuler–Niles-Weed–Rigollet rounding: project a near-feasible
+/// coupling onto Π(a, b) exactly (uniform marginals).  Scales rows/columns
+/// down where they overshoot, then spreads the missing mass as a rank-one
+/// correction — O(nm), preserves cost up to the marginal violation.
+pub fn round_to_feasible(p: &mut Mat) {
+    let (n, m) = (p.rows, p.cols);
+    let (ra, cb) = (1.0 / n as f64, 1.0 / m as f64);
+    // scale overshooting rows
+    for i in 0..n {
+        let s: f64 = p.row(i).iter().map(|&v| v as f64).sum();
+        if s > ra {
+            let f = (ra / s) as f32;
+            p.row_mut(i).iter_mut().for_each(|v| *v *= f);
+        }
+    }
+    // scale overshooting columns
+    let cs = p.col_sums();
+    let mut cf = vec![1.0f32; m];
+    for (j, &s) in cs.iter().enumerate() {
+        if (s as f64) > cb {
+            cf[j] = (cb / s as f64) as f32;
+        }
+    }
+    for i in 0..n {
+        for (v, &f) in p.row_mut(i).iter_mut().zip(&cf) {
+            *v *= f;
+        }
+    }
+    // rank-one correction with the residuals
+    let rs = p.row_sums();
+    let cs = p.col_sums();
+    let err_r: Vec<f64> = rs.iter().map(|&s| (ra - s as f64).max(0.0)).collect();
+    let err_c: Vec<f64> = cs.iter().map(|&s| (cb - s as f64).max(0.0)).collect();
+    let total: f64 = err_r.iter().sum();
+    if total > 1e-300 {
+        for i in 0..n {
+            let w = err_r[i] / total;
+            if w == 0.0 {
+                continue;
+            }
+            for (v, &ec) in p.row_mut(i).iter_mut().zip(&err_c) {
+                *v += (w * ec) as f32;
+            }
+        }
+    }
+}
+
+fn current_eps(cfg: &SinkhornConfig, it: usize) -> f64 {
+    match cfg.eps_start {
+        Some(e0) if it < cfg.schedule_iters => {
+            let t = it as f64 / cfg.schedule_iters as f64;
+            (e0.ln() * (1.0 - t) + cfg.epsilon.ln() * t).exp()
+        }
+        _ => cfg.epsilon,
+    }
+}
+
+fn row_violation(c: &Mat, f: &[f64], g: &[f64], eps: f64, loga: f64) -> f64 {
+    let mut worst = 0.0f64;
+    let n = c.rows;
+    for i in 0..n {
+        let crow = c.row(i);
+        let mut s = 0.0f64;
+        for (&cv, &gv) in crow.iter().zip(g) {
+            s += ((f[i] + gv - cv as f64) / eps).exp();
+        }
+        worst = worst.max((s - loga.exp()).abs() * n as f64);
+    }
+    worst
+}
+
+/// Barycentric projection map: x_i ↦ Σ_j P_ij y_j / Σ_j P_ij.
+/// Used for the Fig. 3 / S4 map visualisations.
+pub fn barycentric_map(p: &Mat, y: &Mat) -> Mat {
+    let mut out = Mat::zeros(p.rows, y.cols);
+    for i in 0..p.rows {
+        let prow = p.row(i);
+        let mass: f64 = prow.iter().map(|&v| v as f64).sum();
+        let orow = out.row_mut(i);
+        for (j, &pv) in prow.iter().enumerate() {
+            let w = (pv as f64 / mass.max(1e-300)) as f32;
+            for (o, &yv) in orow.iter_mut().zip(y.row(j)) {
+                *o += w * yv;
+            }
+        }
+    }
+    out
+}
+
+/// Round a dense coupling to a bijection by greedy row-argmax with column
+/// capacities (used when a baseline needs to emit a one-to-one map).
+pub fn round_to_bijection(p: &Mat) -> Vec<u32> {
+    let n = p.rows;
+    assert_eq!(n, p.cols);
+    // order rows by confidence (max entry), assign greedily
+    let mut order: Vec<usize> = (0..n).collect();
+    let conf: Vec<f32> = (0..n)
+        .map(|i| p.row(i).iter().fold(0.0f32, |m, &v| m.max(v)))
+        .collect();
+    order.sort_by(|&a, &b| conf[b].partial_cmp(&conf[a]).unwrap());
+    let mut taken = vec![false; n];
+    let mut perm = vec![u32::MAX; n];
+    for &i in &order {
+        let prow = p.row(i);
+        let mut best = usize::MAX;
+        let mut bestv = f32::NEG_INFINITY;
+        for (j, &v) in prow.iter().enumerate() {
+            if !taken[j] && v > bestv {
+                bestv = v;
+                best = j;
+            }
+        }
+        perm[i] = best as u32;
+        taken[best] = true;
+    }
+    perm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costs::{dense_cost, CostKind};
+    use crate::metrics;
+    use crate::prng::Rng;
+
+    fn toy(n: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let mut x = Mat::zeros(n, 2);
+        let mut y = Mat::zeros(n, 2);
+        rng.fill_normal(&mut x.data);
+        rng.fill_normal(&mut y.data);
+        (x, y)
+    }
+
+    #[test]
+    fn marginals_converge() {
+        let (x, y) = toy(32, 0);
+        let c = dense_cost(&x, &y, CostKind::SqEuclidean);
+        let out = solve(&c, &SinkhornConfig::default());
+        assert!(metrics::marginal_violation(&out.coupling) < 1e-4);
+    }
+
+    #[test]
+    fn small_epsilon_approaches_exact_cost() {
+        let (x, y) = toy(16, 1);
+        let c = dense_cost(&x, &y, CostKind::SqEuclidean);
+        let exact = crate::solvers::exact::hungarian(&c);
+        let exact_cost: f64 =
+            exact.iter().enumerate().map(|(i, &j)| c.at(i, j as usize) as f64).sum::<f64>()
+                / 16.0;
+        let cfg = SinkhornConfig {
+            epsilon: 0.003,
+            eps_start: Some(1.0),
+            schedule_iters: 200,
+            max_iters: 4000,
+            ..Default::default()
+        };
+        let out = solve(&c, &cfg);
+        let cost = metrics::dense_cost_of(&c, &out.coupling);
+        assert!(cost >= exact_cost - 1e-3, "sinkhorn below exact: {cost} < {exact_cost}");
+        assert!(cost <= exact_cost * 1.15 + 0.05, "{cost} vs exact {exact_cost}");
+    }
+
+    #[test]
+    fn schedule_reduces_iterations_to_tolerance() {
+        let (x, y) = toy(24, 2);
+        let c = dense_cost(&x, &y, CostKind::SqEuclidean);
+        let cold = solve(
+            &c,
+            &SinkhornConfig { epsilon: 0.01, max_iters: 3000, ..Default::default() },
+        );
+        assert!(metrics::marginal_violation(&cold.coupling) < 1e-3);
+    }
+
+    #[test]
+    fn barycentric_of_identity_recovers_targets() {
+        let n = 8;
+        let mut p = Mat::zeros(n, n);
+        for i in 0..n {
+            *p.at_mut(i, i) = 1.0 / n as f32;
+        }
+        let (_, y) = toy(n, 3);
+        let m = barycentric_map(&p, &y);
+        for i in 0..n {
+            assert!(crate::linalg::dist(m.row(i), y.row(i)) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rounding_gives_bijection() {
+        let (x, y) = toy(20, 4);
+        let c = dense_cost(&x, &y, CostKind::SqEuclidean);
+        let out = solve(&c, &SinkhornConfig::default());
+        let perm = round_to_bijection(&out.coupling);
+        let mut seen = vec![false; 20];
+        for &j in &perm {
+            assert!(!seen[j as usize]);
+            seen[j as usize] = true;
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! End-to-end integration tests over the public API: dataset generators →
+//! HiRef (native backend; PJRT covered in runtime_pjrt.rs) → metrics, plus
+//! CLI plumbing.
+
+use hiref::cli::Flags;
+use hiref::coordinator::hiref::{BackendKind, HiRef, HiRefConfig};
+use hiref::costs::CostKind;
+use hiref::data::embeddings;
+use hiref::data::synthetic::Synthetic;
+use hiref::data::transcriptomics;
+use hiref::metrics;
+
+fn native(base: usize) -> HiRefConfig {
+    HiRefConfig { backend: BackendKind::Native, base_size: base, ..Default::default() }
+}
+
+#[test]
+fn synthetic_suite_end_to_end_both_costs() {
+    for ds in Synthetic::ALL {
+        let (x, y) = ds.generate(512, 0);
+        for kind in [CostKind::SqEuclidean, CostKind::Euclidean] {
+            let cfg = HiRefConfig { cost: kind, ..native(64) };
+            let out = HiRef::new(cfg).align(&x, &y).unwrap();
+            assert!(out.is_bijection(), "{} {:?}", ds.label(), kind);
+            let cost = out.cost(&x, &y, kind);
+            assert!(cost.is_finite() && cost > 0.0);
+        }
+    }
+}
+
+#[test]
+fn embryo_stage_pair_alignment() {
+    // miniature Table S6 row: consecutive simulated MOSTA stages
+    let stages = transcriptomics::mosta_stages(60, 16, 0);
+    let (a, b) = (&stages[0], &stages[1]);
+    let n = a.features.rows.min(b.features.rows);
+    let xa = a.features.gather_rows(&(0..n as u32).collect::<Vec<_>>());
+    let xb = b.features.gather_rows(&(0..n as u32).collect::<Vec<_>>());
+    let out = HiRef::new(native(64)).align(&xa, &xb).unwrap();
+    assert!(out.is_bijection());
+    // aligned cost must beat a random pairing decisively
+    let aligned = out.cost(&xa, &xb, CostKind::Euclidean);
+    let mut rng = hiref::prng::Rng::new(1);
+    let rand_cost =
+        metrics::bijection_cost(&xa, &xb, &rng.permutation(n), CostKind::Euclidean);
+    assert!(aligned < rand_cost * 0.9, "aligned {aligned} vs random {rand_cost}");
+}
+
+#[test]
+fn imagenet_like_alignment_highdim() {
+    let (x, y) = embeddings::imagenet_like(800, 64, 20, 0);
+    let out = HiRef::new(native(128)).align(&x, &y).unwrap();
+    assert!(out.is_bijection());
+    let aligned = out.cost(&x, &y, CostKind::SqEuclidean);
+    let mut rng = hiref::prng::Rng::new(2);
+    let rand_cost =
+        metrics::bijection_cost(&x, &y, &rng.permutation(800), CostKind::SqEuclidean);
+    // clusters are far apart: aligning within clusters is a big win
+    assert!(aligned < rand_cost * 0.5, "aligned {aligned} vs random {rand_cost}");
+}
+
+#[test]
+fn schedule_reported_matches_config() {
+    let (x, y) = Synthetic::Checkerboard.generate(2000, 1);
+    let cfg = HiRefConfig { max_rank: 4, base_size: 32, ..native(32) };
+    let out = HiRef::new(cfg).align(&x, &y).unwrap();
+    let rho: usize = out.schedule.iter().product();
+    assert!(rho >= 2000usize.div_ceil(32));
+    assert!(out.schedule.iter().all(|&r| r <= 4));
+    assert!(out.stats.lrot_calls > 0);
+    assert!(out.stats.base_calls > 0);
+}
+
+#[test]
+fn linear_space_proxy_lrot_calls_scale_linearly() {
+    // the number of LROT calls ~ Σ ρ_t which is O(n/base); doubling n
+    // should roughly double calls, not quadruple them.
+    let count = |n: usize| {
+        let (x, y) = Synthetic::HalfMoonSCurve.generate(n, 2);
+        let cfg = HiRefConfig { max_rank: 2, ..native(32) };
+        HiRef::new(cfg).align(&x, &y).unwrap().stats.lrot_calls as f64
+    };
+    let (c1, c2) = (count(512), count(2048));
+    let ratio = c2 / c1;
+    assert!(ratio < 6.0, "LROT call growth superlinear: {c1} -> {c2}");
+}
+
+#[test]
+fn cli_flag_round_trip() {
+    let args: Vec<String> = ["--n", "256", "--dataset", "maf", "--cost", "euclid",
+        "--backend", "native"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let flags = Flags::parse(&args).unwrap();
+    let cfg = hiref::cli::config_from_flags(&flags).unwrap();
+    assert_eq!(cfg.cost, CostKind::Euclidean);
+    assert_eq!(cfg.backend, BackendKind::Native);
+    let (x, y) = hiref::cli::dataset_from_flags(&flags).unwrap();
+    assert_eq!((x.rows, y.rows), (256, 256));
+}
+
+#[test]
+fn million_points_schedule_is_shallow() {
+    // headline-scale sanity: the schedule for 2^20 points is small & legal
+    let sched = hiref::coordinator::annealing::optimal_rank_schedule(1 << 20, 1024, 16, None);
+    assert!(sched.len() <= 4, "{sched:?}");
+    let rho: usize = sched.iter().product();
+    assert!(rho >= (1usize << 20) / 1024);
+}

@@ -1,0 +1,239 @@
+//! Property-based invariant tests.
+//!
+//! The vendored universe has no proptest, so we ship a micro framework:
+//! seeded random-case sweeps with failure-seed reporting.  Each property
+//! runs against many randomized instances; a failure message includes the
+//! seed needed to reproduce it deterministically.
+
+use hiref::coordinator::annealing::{effective_ranks, optimal_rank_schedule, schedule_cost};
+use hiref::coordinator::assign::{balanced_assign, capacities, split_by_labels};
+use hiref::coordinator::hiref::{BackendKind, HiRef, HiRefConfig};
+use hiref::costs::{dense_cost, factor::sq_euclidean_factors, CostKind};
+use hiref::linalg::Mat;
+use hiref::metrics;
+use hiref::prng::Rng;
+use hiref::solvers::exact;
+
+/// Run `prop` over `cases` seeded instances.
+fn check(name: &str, cases: u64, prop: impl Fn(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xBADC0DE ^ seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn rand_mat(rng: &mut Rng, n: usize, d: usize) -> Mat {
+    let mut m = Mat::zeros(n, d);
+    rng.fill_normal(&mut m.data);
+    m
+}
+
+// ---------------------------------------------------------------------------
+// Rank-annealing schedule
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_schedule_covers_and_bounds() {
+    check("schedule covers", 200, |rng| {
+        let n = 2 + rng.next_below(1 << 20);
+        let base = 1 + rng.next_below(1024);
+        let max_rank = 2 + rng.next_below(63);
+        let sched = optimal_rank_schedule(n, base, max_rank, None);
+        let rho: usize = sched.iter().product();
+        assert!(rho >= n.div_ceil(base), "n={n} base={base} C={max_rank} {sched:?}");
+        assert!(sched.iter().all(|&r| (2..=max_rank).contains(&r)));
+    });
+}
+
+#[test]
+fn prop_schedule_effective_ranks_monotone() {
+    check("effective ranks monotone", 100, |rng| {
+        let n = 2 + rng.next_below(1 << 16);
+        let sched = optimal_rank_schedule(n, 64, 16, None);
+        let rho = effective_ranks(&sched);
+        for w in rho.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+        assert_eq!(schedule_cost(&sched), rho.iter().sum::<usize>());
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Balanced assignment
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_capacities_partition_exactly() {
+    check("capacities", 300, |rng| {
+        let n = 1 + rng.next_below(10_000);
+        let r = 1 + rng.next_below(64);
+        let caps = capacities(n, r);
+        assert_eq!(caps.iter().sum::<usize>(), n);
+        assert!(caps.iter().max().unwrap() - caps.iter().min().unwrap() <= 1);
+    });
+}
+
+#[test]
+fn prop_balanced_assign_respects_capacities() {
+    check("balanced assign", 100, |rng| {
+        let n = 3 + rng.next_below(500);
+        let r = 2 + rng.next_below((n - 1).min(15));
+        let mut m = Mat::zeros(n, r);
+        for v in m.data.iter_mut() {
+            *v = rng.next_f32();
+        }
+        let labels = balanced_assign(&m, n);
+        let mut counts = vec![0usize; r];
+        for &z in &labels {
+            counts[z as usize] += 1;
+        }
+        assert_eq!(counts, capacities(n, r));
+        // split round-trips all indices
+        let idx: Vec<u32> = (0..n as u32).collect();
+        let parts = split_by_labels(&idx, &labels, r);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, n);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Cost factorisation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_sqeuclid_factorisation_exact() {
+    check("sq-euclid factors", 60, |rng| {
+        let n = 2 + rng.next_below(60);
+        let d = 1 + rng.next_below(8);
+        let x = rand_mat(rng, n, d);
+        let y = rand_mat(rng, n, d);
+        let (u, v) = sq_euclidean_factors(&x, &y);
+        let c = dense_cost(&x, &y, CostKind::SqEuclidean);
+        let lr = u.matmul(&v.t());
+        for (a, b) in lr.data.iter().zip(&c.data) {
+            assert!((a - b).abs() < 2e-3 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Exact solvers agree
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_hungarian_optimal_vs_brute_force() {
+    check("hungarian = brute force", 60, |rng| {
+        let n = 2 + rng.next_below(6);
+        let mut c = Mat::zeros(n, n);
+        for v in c.data.iter_mut() {
+            *v = rng.next_f32() * 5.0;
+        }
+        let h = exact::hungarian(&c);
+        let (_, want) = exact::brute_force(&c);
+        assert!((exact::cost_of(&c, &h) - want).abs() < 1e-6);
+    });
+}
+
+#[test]
+fn prop_auction_within_epsilon_of_hungarian() {
+    check("auction ≈ hungarian", 25, |rng| {
+        let n = 8 + rng.next_below(56);
+        let mut c = Mat::zeros(n, n);
+        for v in c.data.iter_mut() {
+            *v = rng.next_f32() * 3.0;
+        }
+        let a = exact::auction(&c, 1.0);
+        let h = exact::hungarian(&c);
+        let (ca, ch) = (exact::cost_of(&c, &a), exact::cost_of(&c, &h));
+        assert!(ca <= ch * 1.02 + 1e-5, "{ca} vs {ch}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// HiRef end-to-end invariants (native backend: artifact-free)
+// ---------------------------------------------------------------------------
+
+fn native_cfg(rng: &mut Rng) -> HiRefConfig {
+    HiRefConfig {
+        backend: BackendKind::Native,
+        base_size: 8 << rng.next_below(4), // 8..64
+        max_rank: [2usize, 4, 8][rng.next_below(3)],
+        threads: 1 + rng.next_below(4),
+        seed: rng.next_u64(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn prop_hiref_always_bijection() {
+    check("hiref bijection", 25, |rng| {
+        let n = 10 + rng.next_below(400);
+        let x = rand_mat(rng, n, 2);
+        let y = rand_mat(rng, n, 2);
+        let out = HiRef::new(native_cfg(rng)).align(&x, &y).unwrap();
+        assert!(out.is_bijection(), "n={n}");
+    });
+}
+
+#[test]
+fn prop_hiref_beats_random_pairing() {
+    check("hiref < random pairing", 15, |rng| {
+        let n = 64 + rng.next_below(200);
+        let x = rand_mat(rng, n, 2);
+        let y = rand_mat(rng, n, 2);
+        let out = HiRef::new(native_cfg(rng)).align(&x, &y).unwrap();
+        let got = out.cost(&x, &y, CostKind::SqEuclidean);
+        let random_perm = rng.permutation(n);
+        let rand_cost = metrics::bijection_cost(&x, &y, &random_perm, CostKind::SqEuclidean);
+        assert!(got < rand_cost, "hiref {got} vs random {rand_cost}");
+    });
+}
+
+#[test]
+fn prop_hiref_cost_stable_under_point_relabeling() {
+    // relabeling the input points must not change solution quality
+    check("hiref relabeling", 8, |rng| {
+        let n = 128;
+        let x = rand_mat(rng, n, 2);
+        let y = rand_mat(rng, n, 2);
+        let mut cfg = native_cfg(rng);
+        cfg.seed = 1234;
+        let out1 = HiRef::new(cfg.clone()).align(&x, &y).unwrap();
+        let px = rng.permutation(n);
+        let xs = x.gather_rows(&px);
+        let out2 = HiRef::new(cfg).align(&xs, &y).unwrap();
+        let c1 = out1.cost(&x, &y, CostKind::SqEuclidean);
+        let c2 = out2.cost(&xs, &y, CostKind::SqEuclidean);
+        // same point multiset => both near-optimal (per-block seeding
+        // differs, so allow slack)
+        assert!((c1 - c2).abs() <= 0.5 * (c1 + c2).max(0.02), "{c1} vs {c2}");
+    });
+}
+
+#[test]
+fn prop_refinement_cost_decreases_across_scales() {
+    // Prop 3.4 lower bound: Δ_{t,t+1} ≥ 0 (allowing approx-solver slack)
+    check("scale costs decrease", 8, |rng| {
+        let n = 128 + rng.next_below(128);
+        let x = rand_mat(rng, n, 2);
+        let y = rand_mat(rng, n, 2);
+        let mut cfg = native_cfg(rng);
+        cfg.record_scales = true;
+        cfg.base_size = 8;
+        let out = HiRef::new(cfg).align(&x, &y).unwrap();
+        let scales = out.scales.as_ref().unwrap();
+        let mut prev = f64::INFINITY;
+        for lvl in scales {
+            let total: usize = lvl.iter().map(|(a, _)| a.len()).sum();
+            if total != n {
+                continue;
+            }
+            let cost = metrics::block_coupling_cost(&x, &y, lvl, CostKind::SqEuclidean);
+            assert!(cost <= prev * 1.10 + 1e-9, "cost went up: {cost} > {prev}");
+            prev = cost;
+        }
+    });
+}

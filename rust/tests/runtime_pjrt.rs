@@ -1,0 +1,173 @@
+//! Integration tests for the AOT → PJRT path: load HLO-text artifacts,
+//! execute LROT buckets, and run full HiRef alignments through them.
+//!
+//! These tests need `make artifacts` to have run; they are skipped (with a
+//! loud message) when `artifacts/manifest.tsv` is absent so `cargo test`
+//! stays usable in artifact-free checkouts.
+
+use std::path::{Path, PathBuf};
+
+use hiref::coordinator::hiref::{BackendKind, HiRef, HiRefConfig};
+use hiref::costs::{factor::sq_euclidean_factors, CostKind};
+use hiref::linalg::Mat;
+use hiref::metrics;
+use hiref::prng::Rng;
+use hiref::runtime::PjrtEngine;
+use hiref::solvers::lrot::{self, LrotConfig};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        None
+    }
+}
+
+fn shuffled_pair(n: usize, d: usize, seed: u64) -> (Mat, Mat, Vec<u32>) {
+    let mut rng = Rng::new(seed);
+    let mut x = Mat::zeros(n, d);
+    rng.fill_normal(&mut x.data);
+    let perm = rng.permutation(n);
+    let mut y = x.gather_rows(&perm);
+    for v in y.data.iter_mut() {
+        *v += 0.001 * rng.normal_f32();
+    }
+    (x, y, perm)
+}
+
+#[test]
+fn manifest_loads_and_lists_buckets() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = PjrtEngine::load(&dir).expect("load manifest");
+    assert!(!engine.buckets().is_empty());
+    for b in engine.buckets() {
+        assert!(b.path.exists(), "missing artifact {}", b.path.display());
+        assert!(b.s >= 2 * b.r);
+    }
+}
+
+#[test]
+fn pjrt_lrot_executes_and_is_feasible() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = PjrtEngine::load(&dir).expect("engine");
+    let (x, y, _) = shuffled_pair(200, 2, 0);
+    let (u, v) = sq_euclidean_factors(&x, &y);
+    let out = engine
+        .lrot(&u, &v, 200, 200, 2, 42)
+        .expect("pjrt lrot")
+        .expect("bucket for (200, 2, 4) must exist in the default grid");
+    let (q, r) = out;
+    assert_eq!((q.rows, q.cols), (200, 2));
+    assert_eq!((r.rows, r.cols), (200, 2));
+    // feasibility: column sums = 1/2 (mass conservation through padding)
+    for cs in q.col_sums() {
+        assert!((cs - 0.5).abs() < 5e-3, "col sum {cs}");
+    }
+    let total: f64 = q.data.iter().map(|&v| v as f64).sum();
+    assert!((total - 1.0).abs() < 1e-3);
+    assert!(q.data.iter().all(|&v| v >= 0.0 && v.is_finite()));
+}
+
+#[test]
+fn pjrt_matches_native_solver_assignment() {
+    // The AOT model and the native solver implement the same algorithm;
+    // noise streams differ (PJRT takes noise as input, native draws
+    // internally), so compare cluster *quality*, not bitwise equality.
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = PjrtEngine::load(&dir).expect("engine");
+    let (x, y, perm) = shuffled_pair(256, 2, 1);
+    let (u, v) = sq_euclidean_factors(&x, &y);
+
+    let (qp, rp) = engine.lrot(&u, &v, 256, 256, 2, 7).unwrap().unwrap();
+    let native = lrot::solve_factored(&u, &v, 256, 256, &LrotConfig::default(), 7);
+
+    let agree_pjrt = monge_agreement(&qp, &rp, &perm);
+    let agree_native = monge_agreement(&native.q, &native.r, &perm);
+    assert!(agree_pjrt > 0.9, "pjrt Monge agreement {agree_pjrt}");
+    assert!(agree_native > 0.9, "native Monge agreement {agree_native}");
+}
+
+fn monge_agreement(q: &Mat, r: &Mat, perm: &[u32]) -> f64 {
+    let n = perm.len();
+    let argmax = |m: &Mat, i: usize| -> usize {
+        m.row(i)
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0
+    };
+    (0..n)
+        .filter(|&j| argmax(q, perm[j] as usize) == argmax(r, j))
+        .count() as f64
+        / n as f64
+}
+
+#[test]
+fn hiref_pjrt_backend_full_alignment() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = HiRefConfig {
+        backend: BackendKind::Pjrt,
+        artifacts_dir: dir,
+        base_size: 64,
+        max_rank: 8,
+        ..Default::default()
+    };
+    let (x, y, _) = shuffled_pair(1000, 2, 2);
+    let solver = HiRef::new(cfg);
+    let out = solver.align(&x, &y).expect("align");
+    assert!(out.is_bijection());
+    assert!(out.stats.pjrt_calls > 0, "no PJRT executions recorded");
+    let cost = out.cost(&x, &y, CostKind::SqEuclidean);
+    assert!(cost < 0.05, "shuffled-copy cost {cost} too high via PJRT path");
+}
+
+#[test]
+fn auto_backend_mixes_pjrt_and_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = HiRefConfig {
+        backend: BackendKind::Auto,
+        artifacts_dir: dir,
+        base_size: 32,
+        max_rank: 4, // rank 4 has no bucket in the default grid → native
+        ..Default::default()
+    };
+    let (x, y, _) = shuffled_pair(700, 2, 3);
+    let out = HiRef::new(cfg).align(&x, &y).expect("align");
+    assert!(out.is_bijection());
+    assert_eq!(out.stats.lrot_calls, out.stats.pjrt_calls + out.stats.native_calls);
+    assert!(out.stats.native_calls > 0);
+}
+
+#[test]
+fn pjrt_euclidean_cost_via_indyk_factors() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = PjrtEngine::load(&dir).expect("engine");
+    let (x, y, _) = shuffled_pair(300, 8, 4);
+    let (u, v) = hiref::costs::factors_for(&x, &y, CostKind::Euclidean, 32, 0);
+    // width 32 pads into the k=64 buckets
+    let got = engine.lrot(&u, &v, 300, 300, 2, 11).expect("pjrt");
+    let (q, _r) = got.expect("k=64 bucket expected in default grid");
+    let total: f64 = q.data.iter().map(|&v| v as f64).sum();
+    assert!((total - 1.0).abs() < 1e-3);
+}
+
+#[test]
+fn alignment_quality_close_to_exact_small() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (x, y, _) = shuffled_pair(400, 2, 5);
+    let cfg = HiRefConfig {
+        backend: BackendKind::Pjrt,
+        artifacts_dir: dir,
+        base_size: 128,
+        ..Default::default()
+    };
+    let out = HiRef::new(cfg).align(&x, &y).unwrap();
+    let c = hiref::costs::dense_cost(&x, &y, CostKind::SqEuclidean);
+    let h = hiref::solvers::exact::hungarian(&c);
+    let opt = metrics::bijection_cost(&x, &y, &h, CostKind::SqEuclidean);
+    let got = out.cost(&x, &y, CostKind::SqEuclidean);
+    assert!(got <= (opt * 2.0).max(0.01), "pjrt-HiRef {got} vs optimal {opt}");
+}

@@ -1,0 +1,148 @@
+//! Cross-solver consistency checks: every solver pair that should agree
+//! (or should be ordered) on small instances, checked on real generators.
+
+use hiref::coordinator::hiref::{BackendKind, HiRef, HiRefConfig};
+use hiref::costs::{dense_cost, CostKind};
+use hiref::data::synthetic::Synthetic;
+use hiref::linalg::Mat;
+use hiref::metrics;
+use hiref::solvers::{exact, minibatch, mop, progot, sinkhorn};
+
+fn native() -> HiRefConfig {
+    HiRefConfig { backend: BackendKind::Native, base_size: 64, ..Default::default() }
+}
+
+/// Optimal assignment cost from the Hungarian oracle.
+fn exact_cost(x: &Mat, y: &Mat, kind: CostKind) -> f64 {
+    let c = dense_cost(x, y, kind);
+    let h = exact::hungarian(&c);
+    metrics::bijection_cost(x, y, &h, kind)
+}
+
+#[test]
+fn solver_ordering_on_all_synthetic_datasets() {
+    // On every synthetic suite: exact ≤ HiRef ≤ MOP (Table S4 ordering),
+    // and Sinkhorn's entropic cost sits at or above exact.
+    for ds in Synthetic::ALL {
+        let (x, y) = ds.generate(256, 11);
+        let kind = CostKind::SqEuclidean;
+        let opt = exact_cost(&x, &y, kind);
+
+        let hiref_out = HiRef::new(native()).align(&x, &y).unwrap();
+        let hiref_cost = hiref_out.cost(&x, &y, kind);
+
+        let mop_perm = mop::solve(&x, &y, kind);
+        let mop_cost = metrics::bijection_cost(&x, &y, &mop_perm, kind);
+
+        assert!(hiref_cost >= opt - 1e-9, "{}", ds.label());
+        assert!(
+            hiref_cost <= opt * 1.35 + 0.02,
+            "{}: hiref {hiref_cost} vs opt {opt}",
+            ds.label()
+        );
+        assert!(
+            mop_cost >= hiref_cost * 0.95,
+            "{}: MOP {mop_cost} beat HiRef {hiref_cost}",
+            ds.label()
+        );
+    }
+}
+
+#[test]
+fn sinkhorn_cost_at_least_exact() {
+    let (x, y) = Synthetic::Checkerboard.generate(128, 3);
+    let kind = CostKind::SqEuclidean;
+    let c = dense_cost(&x, &y, kind);
+    let sk = sinkhorn::solve(&c, &Default::default());
+    let sk_cost = metrics::dense_cost_of(&c, &sk.coupling);
+    let opt = exact_cost(&x, &y, kind);
+    assert!(sk_cost >= opt - 1e-6, "sinkhorn {sk_cost} below exact {opt}");
+}
+
+#[test]
+fn minibatch_bias_decreases_with_batch_size() {
+    let (x, y) = Synthetic::HalfMoonSCurve.generate(512, 5);
+    let kind = CostKind::SqEuclidean;
+    let mut last = f64::INFINITY;
+    let mut costs = Vec::new();
+    for b in [32usize, 128, 512] {
+        let perm = minibatch::solve(&x, &y, kind, &minibatch::MiniBatchConfig {
+            batch: b,
+            seed: 9,
+            ..Default::default()
+        });
+        let cost = metrics::bijection_cost(&x, &y, &perm, kind);
+        costs.push(cost);
+        last = cost;
+    }
+    assert!(
+        last <= costs[0] + 1e-9,
+        "full batch {last} not better than B=32 {}",
+        costs[0]
+    );
+}
+
+#[test]
+fn hiref_beats_minibatch_on_structured_data() {
+    // The paper's headline comparison (Tables 1, 2): HiRef ≤ small-batch MB.
+    let (x, y) = Synthetic::HalfMoonSCurve.generate(512, 6);
+    let kind = CostKind::SqEuclidean;
+    let hiref_cost = HiRef::new(native()).align(&x, &y).unwrap().cost(&x, &y, kind);
+    let mb_perm = minibatch::solve(&x, &y, kind, &minibatch::MiniBatchConfig {
+        batch: 32,
+        seed: 3,
+        ..Default::default()
+    });
+    let mb_cost = metrics::bijection_cost(&x, &y, &mb_perm, kind);
+    assert!(
+        hiref_cost <= mb_cost,
+        "hiref {hiref_cost} vs mini-batch(32) {mb_cost}"
+    );
+}
+
+#[test]
+fn progot_and_sinkhorn_close_on_synthetic() {
+    let (x, y) = Synthetic::MafMoonsRings.generate(128, 7);
+    let kind = CostKind::SqEuclidean;
+    let c = dense_cost(&x, &y, kind);
+    let sk = metrics::dense_cost_of(&c, &sinkhorn::solve(&c, &Default::default()).coupling);
+    let pg = metrics::dense_cost_of(&c, &progot::solve(&x, &y, kind, &Default::default()));
+    let rel = (sk - pg).abs() / sk.max(1e-9);
+    assert!(rel < 0.25, "sinkhorn {sk} vs progot {pg}");
+}
+
+#[test]
+fn hiref_nonzeros_are_n_sinkhorn_quadratic() {
+    // Table S3's structural claim.
+    let n = 128;
+    let (x, y) = Synthetic::Checkerboard.generate(n, 8);
+    let kind = CostKind::SqEuclidean;
+    let out = HiRef::new(native()).align(&x, &y).unwrap();
+    assert!(out.is_bijection()); // exactly n nonzeros by construction
+    let c = dense_cost(&x, &y, kind);
+    let sk = sinkhorn::solve(&c, &Default::default());
+    let nnz = metrics::nonzeros(&sk.coupling, 1e-8);
+    assert!(nnz > n * n / 4, "sinkhorn unexpectedly sparse: {nnz}");
+}
+
+#[test]
+fn expression_transfer_pipeline_end_to_end() {
+    // Miniature Table S7: HiRef transfer beats low-rank-style coarse
+    // transfer on the simulated MERFISH pair.
+    use hiref::data::transcriptomics::{bin_average, merfish_pair, GENE_LABELS};
+    let (src, tgt) = merfish_pair(600, 4);
+    let out = HiRef::new(native()).align(&src.spatial, &tgt.spatial).unwrap();
+    for gi in 0..GENE_LABELS.len() {
+        let v1: Vec<f32> = (0..600).map(|i| src.genes.at(i, gi)).collect();
+        let v2: Vec<f32> = (0..600).map(|i| tgt.genes.at(i, gi)).collect();
+        // transfer through the bijection
+        let mut vhat = vec![0.0f32; 600];
+        for (i, &j) in out.perm.iter().enumerate() {
+            vhat[j as usize] = v1[i];
+        }
+        let b_hat = bin_average(&tgt.spatial, &vhat, 10);
+        let b_tgt = bin_average(&tgt.spatial, &v2, 10);
+        let cos = metrics::cosine(&b_hat, &b_tgt);
+        assert!(cos > 0.5, "gene {gi} transfer cosine {cos}");
+    }
+}
