@@ -17,7 +17,7 @@ use hiref::metrics;
 use hiref::prng::Rng;
 use hiref::report::timed;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let log2n: u32 = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(20);
     let n = 1usize << log2n;
     let kind = CostKind::SqEuclidean;

@@ -22,7 +22,7 @@ fn targets_from_perm(y: &Mat, perm: &[u32]) -> Mat {
     y.gather_rows(perm)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let n = 1024; // global Hungarian reference is O(n³)
     let kind = CostKind::SqEuclidean;
     let (x, y) = synthetic::half_moon_s_curve(n, 0);

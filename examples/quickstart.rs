@@ -1,83 +1,86 @@
-//! Quickstart — the end-to-end driver proving all three layers compose.
+//! Quickstart — the end-to-end driver proving all three layers compose,
+//! written against the unified solver API.
 //!
 //! Generates the paper's Half-Moon & S-Curve dataset (Buzun et al. 2024)
-//! at n = 4096, aligns it with HiRef running LROT sub-problems through the
-//! **AOT artifacts via PJRT** (L1 Pallas kernels + L2 JAX model compiled
-//! by `make artifacts`), verifies the output is a bijection, and compares
-//! primal cost and coupling size against the full Sinkhorn baseline.
+//! at n = 4096, builds HiRef through the validated [`HiRefBuilder`], and
+//! compares it with the Sinkhorn baseline — both driven through the same
+//! [`TransportSolver`] interface and both returning a [`Coupling`], so the
+//! reporting loop below never special-cases a solver.
 //!
-//! Run with:  `make artifacts && cargo run --release --example quickstart`
-//! The measured numbers are recorded in EXPERIMENTS.md.
+//! Run with:  `cargo run --release --example quickstart`
+//! (`make artifacts` first to exercise the AOT/PJRT path; without it the
+//! Auto backend degrades to the native LROT solver.)
+//!
+//! Choosing a solver (see `hiref solvers` for the live registry):
+//!
+//! | name | paper baseline | coupling |
+//! |---|---|---|
+//! | hiref | Hierarchical Refinement (this paper) | bijection, n nonzeros |
+//! | sinkhorn | Cuturi 2013 | dense, n² entries |
+//! | progot | Kassraie et al. 2024 | dense |
+//! | minibatch | Fatras et al. 2020/21 | bijection, biased |
+//! | mop | Gerber & Maggioni 2017 | sparse |
+//! | lrot | Scetbon et al. 2021 / FRLC | low-rank factors |
+//! | exact | Hungarian / auction | optimal bijection |
 
-use hiref::coordinator::hiref::{BackendKind, HiRef, HiRefConfig};
-use hiref::costs::{dense_cost, CostKind};
+use hiref::api::{solver, HiRefBuilder, HiRefSolver, TransportProblem, TransportSolver};
+use hiref::costs::CostKind;
 use hiref::data::synthetic;
-use hiref::metrics;
-use hiref::report::{f4, timed, Table};
-use hiref::solvers::sinkhorn;
+use hiref::report::{f4, Table};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let n = 4096;
     let kind = CostKind::SqEuclidean;
     let (x, y) = synthetic::half_moon_s_curve(n, 0);
     println!("Half-Moon & S-Curve, n = {n}, cost = {}", kind.label());
 
-    // --- HiRef through the PJRT artifacts --------------------------------
-    let cfg = HiRefConfig {
-        backend: BackendKind::Auto,
-        base_size: 256,
-        max_rank: 16,
-        ..Default::default()
-    };
-    let solver = HiRef::new(cfg);
-    if solver.engine().is_none() {
-        eprintln!("WARNING: artifacts not found; falling back to the native backend.");
-        eprintln!("         Run `make artifacts` for the full three-layer path.");
+    // --- HiRef through the validated builder -----------------------------
+    let cfg = HiRefBuilder::new()
+        .max_rank(16)
+        .base_size(256)
+        .build_config()?;
+
+    // --- both solvers behind the one TransportSolver interface -----------
+    let solvers: Vec<Box<dyn TransportSolver>> = vec![
+        Box::new(HiRefSolver { cfg }),
+        solver("sinkhorn")?, // dense baseline: n² = 16.7M coupling entries
+    ];
+
+    let prob = TransportProblem::new(&x, &y, kind).with_seed(0);
+    let mut t = Table::new(vec!["Solver", "Coupling", "Primal cost", "Non-zeros", "Seconds"]);
+    let mut hiref_stats = None;
+    let mut costs = Vec::new();
+    for s in &solvers {
+        let solved = s.solve(&prob)?;
+        let cost = hiref::metrics::coupling_cost(&x, &y, &solved.coupling, kind);
+        costs.push(cost);
+        t.row(vec![
+            solved.stats.solver.to_string(),
+            solved.coupling.kind_label().to_string(),
+            f4(cost),
+            solved.coupling.nnz().to_string(),
+            format!("{:.2}", solved.stats.elapsed.as_secs_f64()),
+        ]);
+        if let Some(rs) = solved.stats.hiref {
+            hiref_stats = Some(rs);
+        }
     }
-    let (out, hiref_secs) = timed(|| solver.align(&x, &y));
-    let out = out?;
-    assert!(out.is_bijection(), "HiRef must output a bijection");
-    let hiref_cost = out.cost(&x, &y, kind);
-
-    // --- Sinkhorn baseline (quadratic memory: n² = 16.7M entries) --------
-    let (sk, sk_secs) = timed(|| {
-        let c = dense_cost(&x, &y, kind);
-        let out = sinkhorn::solve(&c, &Default::default());
-        let cost = metrics::dense_cost_of(&c, &out.coupling);
-        let nnz = metrics::nonzeros(&out.coupling, 1e-8);
-        (cost, nnz)
-    });
-    let (sk_cost, sk_nnz) = sk;
-
-    // --- report -----------------------------------------------------------
-    let mut t = Table::new(vec!["Method", "Primal cost", "Non-zeros", "Seconds"]);
-    t.row(vec![
-        "HiRef (3-layer AOT)".to_string(),
-        f4(hiref_cost),
-        n.to_string(),
-        format!("{hiref_secs:.2}"),
-    ]);
-    t.row(vec![
-        "Sinkhorn (dense)".to_string(),
-        f4(sk_cost),
-        sk_nnz.to_string(),
-        format!("{sk_secs:.2}"),
-    ]);
     t.print();
 
-    println!("\nschedule     = {:?}", out.schedule);
-    println!(
-        "LROT calls   = {} ({} via PJRT artifacts, {} native)",
-        out.stats.lrot_calls, out.stats.pjrt_calls, out.stats.native_calls
-    );
-    println!("base blocks  = {} (exact assignment)", out.stats.base_calls);
+    if let Some(rs) = hiref_stats {
+        println!(
+            "\nLROT calls   = {} ({} via PJRT artifacts, {} native)",
+            rs.lrot_calls, rs.pjrt_calls, rs.native_calls
+        );
+        println!("base blocks  = {} (exact assignment)", rs.base_calls);
+    }
     println!(
         "coupling size: HiRef stores {} pairs vs Sinkhorn's {} dense entries ({}x)",
         n,
         n * n,
         n
     );
-    let ratio = hiref_cost / sk_cost;
+    let ratio = costs[0] / costs[1];
     println!("cost ratio HiRef/Sinkhorn = {ratio:.4} (paper: ~1.01 on this dataset)");
     Ok(())
 }

@@ -37,7 +37,7 @@ fn transfer_scores(
         .collect()
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let n: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(8400);
     let (src, tgt) = merfish_pair(n, 44); // paper uses seed 44
     println!("simulated MERFISH pair, {n} spots per slice, spatial-only cost\n");

@@ -16,7 +16,7 @@ use hiref::data::synthetic::Synthetic;
 use hiref::linalg::Mat;
 use hiref::solvers::{exact, sinkhorn};
 
-fn write_map(path: &str, x: &Mat, t: &Mat) -> anyhow::Result<()> {
+fn write_map(path: &str, x: &Mat, t: &Mat) -> std::io::Result<()> {
     let mut f = fs::File::create(path)?;
     writeln!(f, "x0\tx1\ttx0\ttx1")?;
     for i in 0..x.rows {
@@ -37,7 +37,7 @@ fn perm_to_map(y: &Mat, perm: &[u32]) -> Mat {
     y.gather_rows(&idx)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     fs::create_dir_all("target/maps")?;
     let kind = CostKind::SqEuclidean;
     let n_big = 4096; // Fig. 3a uses 4096 points

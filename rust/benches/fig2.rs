@@ -2,12 +2,16 @@
 //! HiRef, Sinkhorn and ProgOT.  The dense solvers stop where their n²
 //! couplings become impractical (paper: 16384); HiRef continues alone —
 //! to 2^17 by default, 2^21 under HIREF_FULL=1 (the paper's 2M-point run).
+//!
+//! Every method is driven through the uniform `TransportSolver` interface
+//! and scored with `metrics::coupling_cost`.
 
-use hiref::coordinator::hiref::{BackendKind, HiRef, HiRefConfig};
+use hiref::api::{HiRefSolver, ProgOtSolver, SinkhornSolver, TransportProblem, TransportSolver};
+use hiref::coordinator::hiref::{BackendKind, HiRefConfig};
 use hiref::costs::{dense_cost, CostKind};
 use hiref::data::synthetic;
 use hiref::metrics;
-use hiref::report::{f4, full_scale, section, timed, Table};
+use hiref::report::{f4, full_scale, section, Table};
 use hiref::solvers::{progot, sinkhorn};
 
 fn main() {
@@ -17,30 +21,32 @@ fn main() {
     section("Figure 2 — primal cost vs sample size (Half-Moon & S-Curve, W2)");
     let mut table = Table::new(vec!["n", "HiRef", "Sinkhorn", "ProgOT"]);
 
+    let hiref = HiRefSolver {
+        cfg: HiRefConfig { backend: BackendKind::Auto, ..Default::default() },
+    };
+    let sk = SinkhornSolver {
+        cfg: sinkhorn::SinkhornConfig { max_iters: 250, ..Default::default() },
+    };
+    let pg = ProgOtSolver {
+        cfg: progot::ProgOtConfig { stages: 5, iters_per_stage: 150, ..Default::default() },
+    };
+
     let mut log2 = 6; // n = 64
     while log2 <= hiref_max_log2 {
         let n = 1usize << log2;
         let (x, y) = synthetic::half_moon_s_curve(n, 0);
+        let prob = TransportProblem::new(&x, &y, kind);
+        let cost_of = |s: &dyn TransportSolver, p: &TransportProblem<'_>| {
+            let solved = s.solve(p).expect(s.name());
+            f4(metrics::coupling_cost(&x, &y, &solved.coupling, kind))
+        };
 
-        let out = HiRef::new(HiRefConfig {
-            backend: BackendKind::Auto,
-            ..Default::default()
-        })
-        .align(&x, &y)
-        .expect("hiref");
-        let hiref_cost = f4(out.cost(&x, &y, kind));
-
+        let hiref_cost = cost_of(&hiref, &prob);
         let (sk_cost, pg_cost) = if n <= dense_cap {
+            // Sinkhorn reuses the precomputed cost matrix (ProgOT recomputes per stage by design)
             let c = dense_cost(&x, &y, kind);
-            let sk = sinkhorn::solve(
-                &c,
-                &sinkhorn::SinkhornConfig { max_iters: 250, ..Default::default() },
-            );
-            let pg = progot::solve(&x, &y, kind, &progot::ProgOtConfig { stages: 5, iters_per_stage: 150, ..Default::default() });
-            (
-                f4(metrics::dense_cost_of(&c, &sk.coupling)),
-                f4(metrics::dense_cost_of(&c, &pg)),
-            )
+            let prob_c = prob.with_cost(&c);
+            (cost_of(&sk, &prob_c), cost_of(&pg, &prob_c))
         } else {
             ("—".to_string(), "—".to_string()) // out of (memory) reach
         };
@@ -48,7 +54,6 @@ fn main() {
 
         // sparser sampling at the expensive tail
         log2 += if log2 < 12 { 2 } else { 1 };
-        let _ = timed(|| ()); // keep report helpers exercised
     }
     table.print();
     println!("\nshape check: columns agree to a few %% where all run; dense solvers stop");

@@ -10,8 +10,12 @@
 //! Expected shape: all methods within a few % of each other; HiRef wins
 //! most W2 columns.  Absolute values differ (our generators are seeded
 //! re-implementations), the ordering is the claim under test.
+//!
+//! All three solvers run through the uniform `TransportSolver` interface
+//! and are scored by the one `metrics::coupling_cost` entry point.
 
-use hiref::coordinator::hiref::{BackendKind, HiRef, HiRefConfig};
+use hiref::api::{HiRefSolver, ProgOtSolver, SinkhornSolver, TransportProblem, TransportSolver};
+use hiref::coordinator::hiref::{BackendKind, HiRefConfig};
 use hiref::costs::{dense_cost, CostKind};
 use hiref::data::synthetic::Synthetic;
 use hiref::metrics;
@@ -31,6 +35,23 @@ fn main() {
         "HalfMoon ‖·‖₂²",
     ]);
 
+    let solvers: Vec<Box<dyn TransportSolver>> = vec![
+        Box::new(SinkhornSolver {
+            cfg: sinkhorn::SinkhornConfig { max_iters: 250, ..Default::default() },
+        }),
+        Box::new(ProgOtSolver {
+            cfg: progot::ProgOtConfig { stages: 5, iters_per_stage: 150, ..Default::default() },
+        }),
+        Box::new(HiRefSolver {
+            cfg: HiRefConfig {
+                backend: BackendKind::Auto,
+                base_size: 128,
+                hungarian_cutoff: 128,
+                ..Default::default()
+            },
+        }),
+    ];
+
     let mut rows: Vec<Vec<String>> = vec![
         vec!["Sinkhorn".into()],
         vec!["ProgOT".into()],
@@ -40,26 +61,13 @@ fn main() {
     for ds in Synthetic::ALL {
         for kind in [CostKind::Euclidean, CostKind::SqEuclidean] {
             let (x, y) = ds.generate(n, 0);
+            // Sinkhorn reuses the precomputed cost matrix (ProgOT recomputes per stage by design)
             let c = dense_cost(&x, &y, kind);
-
-            let sk = sinkhorn::solve(
-                &c,
-                &sinkhorn::SinkhornConfig { max_iters: 250, ..Default::default() },
-            );
-            rows[0].push(f4(metrics::dense_cost_of(&c, &sk.coupling)));
-
-            let pg = progot::solve(&x, &y, kind, &progot::ProgOtConfig { stages: 5, iters_per_stage: 150, ..Default::default() });
-            rows[1].push(f4(metrics::dense_cost_of(&c, &pg)));
-
-            let cfg = HiRefConfig {
-                cost: kind,
-                backend: BackendKind::Auto,
-                base_size: 128,
-                ..Default::default()
-            };
-            let out = HiRef::new(cfg).align(&x, &y).expect("hiref");
-            assert!(out.is_bijection());
-            rows[2].push(f4(out.cost(&x, &y, kind)));
+            let prob = TransportProblem::new(&x, &y, kind).with_cost(&c);
+            for (row, solver) in rows.iter_mut().zip(&solvers) {
+                let solved = solver.solve(&prob).expect(solver.name());
+                row.push(f4(metrics::coupling_cost(&x, &y, &solved.coupling, kind)));
+            }
         }
     }
     for r in rows {

@@ -6,11 +6,14 @@
 //! ProgOT ~11.6–12.4 / 27–34×10⁴, HiRef exactly 6.9314 (= ln 1024) / 1024.
 //! The structural claim: HiRef's coupling is a bijection — n non-zeros and
 //! entropy exactly ln n — while the entropic solvers are dense.
+//!
+//! Entropy and nnz come straight off the uniform `Coupling` type; no
+//! per-representation code remains in this bench.
 
-use hiref::coordinator::hiref::{BackendKind, HiRef, HiRefConfig};
+use hiref::api::{HiRefSolver, ProgOtSolver, SinkhornSolver, TransportProblem, TransportSolver};
+use hiref::coordinator::hiref::{BackendKind, HiRefConfig};
 use hiref::costs::{dense_cost, CostKind};
 use hiref::data::synthetic::Synthetic;
-use hiref::metrics;
 use hiref::report::{f4, section, Table};
 use hiref::solvers::{progot, sinkhorn};
 
@@ -27,6 +30,24 @@ fn main() {
         "HalfMoon H",
         "HalfMoon nnz",
     ]);
+
+    let solvers: Vec<Box<dyn TransportSolver>> = vec![
+        Box::new(SinkhornSolver {
+            cfg: sinkhorn::SinkhornConfig { max_iters: 250, ..Default::default() },
+        }),
+        Box::new(ProgOtSolver {
+            cfg: progot::ProgOtConfig { stages: 5, iters_per_stage: 150, ..Default::default() },
+        }),
+        Box::new(HiRefSolver {
+            cfg: HiRefConfig {
+                backend: BackendKind::Auto,
+                base_size: 128,
+                hungarian_cutoff: 128,
+                ..Default::default()
+            },
+        }),
+    ];
+
     let mut rows: Vec<Vec<String>> = vec![
         vec!["Sinkhorn".into()],
         vec!["ProgOT".into()],
@@ -35,30 +56,14 @@ fn main() {
 
     for ds in Synthetic::ALL {
         let (x, y) = ds.generate(n, 0);
+        // Sinkhorn reuses the precomputed cost matrix (ProgOT recomputes per stage by design)
         let c = dense_cost(&x, &y, kind);
-
-        let sk = sinkhorn::solve(
-            &c,
-            &sinkhorn::SinkhornConfig { max_iters: 250, ..Default::default() },
-        );
-        rows[0].push(f4(metrics::coupling_entropy(&sk.coupling)));
-        rows[0].push(metrics::nonzeros(&sk.coupling, 1e-8).to_string());
-
-        let pg = progot::solve(&x, &y, kind, &progot::ProgOtConfig { stages: 5, iters_per_stage: 150, ..Default::default() });
-        rows[1].push(f4(metrics::coupling_entropy(&pg)));
-        rows[1].push(metrics::nonzeros(&pg, 1e-8).to_string());
-
-        let out = HiRef::new(HiRefConfig {
-            backend: BackendKind::Auto,
-            base_size: 128,
-            ..Default::default()
-        })
-        .align(&x, &y)
-        .expect("hiref");
-        assert!(out.is_bijection());
-        // bijection: entropy is exactly ln n, nnz exactly n
-        rows[2].push(f4(metrics::bijection_entropy(n)));
-        rows[2].push(n.to_string());
+        let prob = TransportProblem::new(&x, &y, kind).with_cost(&c);
+        for (row, solver) in rows.iter_mut().zip(&solvers) {
+            let solved = solver.solve(&prob).expect(solver.name());
+            row.push(f4(solved.coupling.entropy()));
+            row.push(solved.coupling.nnz().to_string());
+        }
     }
     for r in rows {
         table.row(r);

@@ -1,0 +1,281 @@
+//! [`TransportSolver`] implementations for HiRef and every baseline the
+//! paper benchmarks against.  Each adapter owns the legacy solver's
+//! configuration struct as a public field, so callers can tune any solver
+//! and still drive it through the uniform interface.
+
+use std::time::Instant;
+
+use crate::coordinator::hiref::{HiRef, HiRefConfig};
+use crate::costs;
+use crate::solvers::exact;
+use crate::solvers::lrot::{self, LrotConfig};
+use crate::solvers::minibatch::{self, MiniBatchConfig};
+use crate::solvers::mop;
+use crate::solvers::progot::{self, ProgOtConfig};
+use crate::solvers::sinkhorn::{self, SinkhornConfig};
+
+use super::coupling::Coupling;
+use super::error::SolveError;
+use super::problem::{Solved, SolveStats, TransportProblem, TransportSolver};
+
+/// Hierarchical Refinement (the paper's contribution).  The problem's
+/// `kind`/`seed` override the config's `cost`/`seed` fields so one adapter
+/// serves every instance uniformly.
+#[derive(Clone, Debug, Default)]
+pub struct HiRefSolver {
+    pub cfg: HiRefConfig,
+}
+
+impl TransportSolver for HiRefSolver {
+    fn name(&self) -> &'static str {
+        "hiref"
+    }
+
+    fn describe(&self) -> &'static str {
+        "Hierarchical Refinement (this paper): bijection, linear space, log-linear time"
+    }
+
+    fn solve(&self, prob: &TransportProblem<'_>) -> Result<Solved, SolveError> {
+        prob.validate()?;
+        prob.require_equal_sizes()?;
+        let mut cfg = self.cfg.clone();
+        cfg.cost = prob.kind;
+        cfg.seed = prob.seed;
+        let t0 = Instant::now();
+        let out = HiRef::new(cfg).align(prob.x, prob.y)?;
+        Ok(Solved {
+            stats: SolveStats {
+                solver: self.name(),
+                elapsed: t0.elapsed(),
+                iterations: out.schedule.len(),
+                hiref: Some(out.stats.clone()),
+            },
+            coupling: Coupling::Bijection(out.perm),
+        })
+    }
+}
+
+/// Log-domain Sinkhorn (Cuturi 2013) — the dense entropic baseline.
+#[derive(Clone, Debug, Default)]
+pub struct SinkhornSolver {
+    pub cfg: SinkhornConfig,
+}
+
+impl TransportSolver for SinkhornSolver {
+    fn name(&self) -> &'static str {
+        "sinkhorn"
+    }
+
+    fn describe(&self) -> &'static str {
+        "Sinkhorn (Cuturi 2013): dense entropic coupling, quadratic memory"
+    }
+
+    fn solve(&self, prob: &TransportProblem<'_>) -> Result<Solved, SolveError> {
+        prob.validate()?;
+        let t0 = Instant::now();
+        let c = prob.cost_matrix();
+        let out = sinkhorn::solve(&c, &self.cfg);
+        Ok(Solved {
+            coupling: Coupling::Dense(out.coupling),
+            stats: SolveStats {
+                solver: self.name(),
+                elapsed: t0.elapsed(),
+                iterations: out.iters,
+                hiref: None,
+            },
+        })
+    }
+}
+
+/// ProgOT (Kassraie et al. 2024) — progressive entropic baseline.
+///
+/// Ignores `TransportProblem::cost`: each stage displaces the source
+/// points along the barycentric map and re-derives the stage cost, so a
+/// fixed precomputed matrix cannot be reused.
+#[derive(Clone, Debug, Default)]
+pub struct ProgOtSolver {
+    pub cfg: ProgOtConfig,
+}
+
+impl TransportSolver for ProgOtSolver {
+    fn name(&self) -> &'static str {
+        "progot"
+    }
+
+    fn describe(&self) -> &'static str {
+        "ProgOT (Kassraie et al. 2024): progressive entropic coupling, dense"
+    }
+
+    fn solve(&self, prob: &TransportProblem<'_>) -> Result<Solved, SolveError> {
+        prob.validate()?;
+        let t0 = Instant::now();
+        let plan = progot::solve(prob.x, prob.y, prob.kind, &self.cfg);
+        Ok(Solved {
+            coupling: Coupling::Dense(plan),
+            stats: SolveStats {
+                solver: self.name(),
+                elapsed: t0.elapsed(),
+                iterations: self.cfg.stages,
+                hiref: None,
+            },
+        })
+    }
+}
+
+/// Mini-batch OT (Genevay et al. 2018; Fatras et al. 2020/21).
+#[derive(Clone, Debug, Default)]
+pub struct MiniBatchSolver {
+    pub cfg: MiniBatchConfig,
+}
+
+impl TransportSolver for MiniBatchSolver {
+    fn name(&self) -> &'static str {
+        "minibatch"
+    }
+
+    fn describe(&self) -> &'static str {
+        "Mini-batch OT (Fatras et al. 2020/21): biased block-diagonal bijection"
+    }
+
+    fn solve(&self, prob: &TransportProblem<'_>) -> Result<Solved, SolveError> {
+        prob.validate()?;
+        let n = prob.require_equal_sizes()?;
+        let mut cfg = self.cfg.clone();
+        cfg.seed = prob.seed;
+        let t0 = Instant::now();
+        let perm = minibatch::solve(prob.x, prob.y, prob.kind, &cfg);
+        Ok(Solved {
+            coupling: Coupling::Bijection(perm),
+            stats: SolveStats {
+                solver: self.name(),
+                elapsed: t0.elapsed(),
+                iterations: n.div_ceil(cfg.batch.clamp(1, n)),
+                hiref: None,
+            },
+        })
+    }
+}
+
+/// MOP multiscale OT (Gerber & Maggioni 2017).
+#[derive(Clone, Debug, Default)]
+pub struct MopSolver;
+
+impl TransportSolver for MopSolver {
+    fn name(&self) -> &'static str {
+        "mop"
+    }
+
+    fn describe(&self) -> &'static str {
+        "MOP (Gerber & Maggioni 2017): multiscale sparse coupling"
+    }
+
+    fn solve(&self, prob: &TransportProblem<'_>) -> Result<Solved, SolveError> {
+        prob.validate()?;
+        prob.require_equal_sizes()?;
+        let t0 = Instant::now();
+        let (sc, _cost) = mop::solve_sparse(prob.x, prob.y, prob.kind);
+        Ok(Solved {
+            coupling: Coupling::Sparse(sc),
+            stats: SolveStats {
+                solver: self.name(),
+                elapsed: t0.elapsed(),
+                iterations: 0,
+                hiref: None,
+            },
+        })
+    }
+}
+
+/// Low-rank OT (Scetbon et al. 2021 / FRLC) as a standalone baseline.
+#[derive(Clone, Debug)]
+pub struct LrotSolver {
+    pub cfg: LrotConfig,
+    /// Factor width for non-factorisable costs (Indyk et al. 2019).
+    pub indyk_width: usize,
+}
+
+impl Default for LrotSolver {
+    fn default() -> Self {
+        LrotSolver { cfg: LrotConfig { rank: 8, ..LrotConfig::default() }, indyk_width: 32 }
+    }
+}
+
+impl TransportSolver for LrotSolver {
+    fn name(&self) -> &'static str {
+        "lrot"
+    }
+
+    fn describe(&self) -> &'static str {
+        "Low-rank OT (Scetbon et al. 2021 / FRLC): factored coupling, linear space"
+    }
+
+    fn solve(&self, prob: &TransportProblem<'_>) -> Result<Solved, SolveError> {
+        prob.validate()?;
+        if self.cfg.rank < 1 {
+            return Err(SolveError::InvalidConfig("lrot rank must be >= 1".into()));
+        }
+        let t0 = Instant::now();
+        let (u, v) = costs::factors_for(prob.x, prob.y, prob.kind, self.indyk_width, prob.seed);
+        let rank = self.cfg.rank.min(prob.x.rows).min(prob.y.rows).max(1);
+        let cfg = LrotConfig { rank, ..self.cfg.clone() };
+        let out = lrot::solve_factored(&u, &v, prob.x.rows, prob.y.rows, &cfg, prob.seed);
+        Ok(Solved {
+            coupling: Coupling::LowRank {
+                q: out.q,
+                r: out.r,
+                diag: vec![1.0 / rank as f64; rank],
+            },
+            stats: SolveStats {
+                solver: self.name(),
+                elapsed: t0.elapsed(),
+                iterations: cfg.outer,
+                hiref: None,
+            },
+        })
+    }
+}
+
+/// Exact assignment (Hungarian below the cutoff, ε-scaling auction above)
+/// — the paper's dual-simplex stand-in.
+#[derive(Clone, Debug)]
+pub struct ExactSolver {
+    /// Instances up to this size use Hungarian; larger ones the auction.
+    pub hungarian_cutoff: usize,
+}
+
+impl Default for ExactSolver {
+    fn default() -> Self {
+        ExactSolver { hungarian_cutoff: 512 }
+    }
+}
+
+impl TransportSolver for ExactSolver {
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+
+    fn describe(&self) -> &'static str {
+        "Exact assignment (Hungarian / auction): optimal bijection, cubic time"
+    }
+
+    fn solve(&self, prob: &TransportProblem<'_>) -> Result<Solved, SolveError> {
+        prob.validate()?;
+        let n = prob.require_equal_sizes()?;
+        let t0 = Instant::now();
+        let c = prob.cost_matrix();
+        let perm = if n <= self.hungarian_cutoff {
+            exact::hungarian(&c)
+        } else {
+            exact::auction(&c, 1.0)
+        };
+        Ok(Solved {
+            coupling: Coupling::Bijection(perm),
+            stats: SolveStats {
+                solver: self.name(),
+                elapsed: t0.elapsed(),
+                iterations: 0,
+                hiref: None,
+            },
+        })
+    }
+}

@@ -1,0 +1,224 @@
+//! Validated construction of [`HiRef`]: the documented way to configure
+//! the engine.  Every setter is chainable; [`HiRefBuilder::build`] rejects
+//! inconsistent configurations (zero-sized base blocks, a Hungarian
+//! cutoff above the base size, a zero thread count, ...) before any work
+//! starts, with a typed [`SolveError::InvalidConfig`].
+
+use std::path::PathBuf;
+
+use crate::coordinator::hiref::{BackendKind, HiRef, HiRefConfig};
+use crate::costs::CostKind;
+use crate::solvers::lrot::LrotConfig;
+
+use super::error::SolveError;
+
+/// Builder for [`HiRef`] / [`HiRefConfig`].
+///
+/// ```
+/// use hiref::api::HiRefBuilder;
+/// use hiref::coordinator::hiref::BackendKind;
+///
+/// let solver = HiRefBuilder::new()
+///     .max_rank(8)
+///     .base_size(128)
+///     .backend(BackendKind::Native)
+///     .build()
+///     .unwrap();
+/// # let _ = solver;
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct HiRefBuilder {
+    cfg: HiRefConfig,
+}
+
+impl HiRefBuilder {
+    /// Start from [`HiRefConfig::default`].
+    pub fn new() -> HiRefBuilder {
+        HiRefBuilder { cfg: HiRefConfig::default() }
+    }
+
+    /// Ground cost (paper uses both `‖·‖₂` and `‖·‖₂²`).
+    pub fn cost(mut self, kind: CostKind) -> Self {
+        self.cfg.cost = kind;
+        self
+    }
+
+    /// Maximal intermediate rank C of the annealing schedule (≥ 2).
+    pub fn max_rank(mut self, c: usize) -> Self {
+        self.cfg.max_rank = c;
+        self
+    }
+
+    /// Maximal base-case block Q sealed by the exact solver (≥ 1).
+    pub fn base_size(mut self, q: usize) -> Self {
+        self.cfg.base_size = q;
+        self
+    }
+
+    /// Cap the hierarchy depth κ.
+    pub fn max_depth(mut self, depth: usize) -> Self {
+        self.cfg.max_depth = Some(depth);
+        self
+    }
+
+    /// Base blocks up to this size use Hungarian; larger ones the auction.
+    /// Must not exceed `base_size`.
+    pub fn hungarian_cutoff(mut self, cutoff: usize) -> Self {
+        self.cfg.hungarian_cutoff = cutoff;
+        self
+    }
+
+    /// LROT sub-solver hyper-parameters (rank is overridden per scale).
+    pub fn lrot(mut self, cfg: LrotConfig) -> Self {
+        self.cfg.lrot = cfg;
+        self
+    }
+
+    /// Factor width for non-factorisable costs (Indyk et al. 2019).
+    pub fn indyk_width(mut self, k: usize) -> Self {
+        self.cfg.indyk_width = k;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Worker threads for the co-cluster fan-out (≥ 1).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.threads = threads;
+        self
+    }
+
+    /// LROT backend: native mirror descent, PJRT artifacts, or auto.
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.cfg.backend = backend;
+        self
+    }
+
+    /// Where the AOT artifacts live (`manifest.tsv` + `*.hlo.txt`).
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cfg.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Record the co-clustering Γ_t at every scale (Fig. S3 diagnostics).
+    pub fn record_scales(mut self, record: bool) -> Self {
+        self.cfg.record_scales = record;
+        self
+    }
+
+    /// Validate and return the configuration.
+    pub fn build_config(self) -> Result<HiRefConfig, SolveError> {
+        let cfg = self.cfg;
+        if cfg.base_size == 0 {
+            return Err(SolveError::InvalidConfig(
+                "base_size must be >= 1 (got 0)".into(),
+            ));
+        }
+        if cfg.max_rank < 2 {
+            return Err(SolveError::InvalidConfig(format!(
+                "max_rank must be >= 2 (got {}): a refinement scale must split a block",
+                cfg.max_rank
+            )));
+        }
+        if cfg.hungarian_cutoff > cfg.base_size {
+            return Err(SolveError::InvalidConfig(format!(
+                "hungarian_cutoff ({}) exceeds base_size ({}): blocks that large never reach the base case",
+                cfg.hungarian_cutoff, cfg.base_size
+            )));
+        }
+        if cfg.threads == 0 {
+            return Err(SolveError::InvalidConfig("threads must be >= 1 (got 0)".into()));
+        }
+        if cfg.indyk_width == 0 {
+            return Err(SolveError::InvalidConfig("indyk_width must be >= 1 (got 0)".into()));
+        }
+        if cfg.max_depth == Some(0) {
+            return Err(SolveError::InvalidConfig(
+                "max_depth = 0 forbids any refinement; omit the cap instead".into(),
+            ));
+        }
+        if cfg.lrot.outer == 0 || cfg.lrot.inner == 0 {
+            return Err(SolveError::InvalidConfig(
+                "lrot outer/inner iteration counts must be >= 1".into(),
+            ));
+        }
+        if !(cfg.lrot.gamma > 0.0) {
+            return Err(SolveError::InvalidConfig(format!(
+                "lrot gamma must be positive (got {})",
+                cfg.lrot.gamma
+            )));
+        }
+        Ok(cfg)
+    }
+
+    /// Validate and construct the solver.
+    pub fn build(self) -> Result<HiRef, SolveError> {
+        Ok(HiRef::new(self.build_config()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        assert!(HiRefBuilder::new().build_config().is_ok());
+    }
+
+    #[test]
+    fn rejects_zero_base_size() {
+        let err = HiRefBuilder::new().base_size(0).build_config().unwrap_err();
+        assert!(matches!(err, SolveError::InvalidConfig(_)), "{err}");
+    }
+
+    #[test]
+    fn rejects_cutoff_above_base_size() {
+        let err = HiRefBuilder::new()
+            .base_size(64)
+            .hungarian_cutoff(128)
+            .build_config()
+            .unwrap_err();
+        assert!(err.to_string().contains("hungarian_cutoff"), "{err}");
+        // consistent pair passes
+        assert!(HiRefBuilder::new()
+            .base_size(64)
+            .hungarian_cutoff(64)
+            .build_config()
+            .is_ok());
+    }
+
+    #[test]
+    fn rejects_degenerate_rank_threads_depth() {
+        assert!(HiRefBuilder::new().max_rank(1).build_config().is_err());
+        assert!(HiRefBuilder::new().threads(0).build_config().is_err());
+        assert!(HiRefBuilder::new().max_depth(0).build_config().is_err());
+        assert!(HiRefBuilder::new().indyk_width(0).build_config().is_err());
+    }
+
+    #[test]
+    fn setters_reach_the_config() {
+        let cfg = HiRefBuilder::new()
+            .max_rank(4)
+            .base_size(32)
+            .hungarian_cutoff(16)
+            .seed(9)
+            .threads(2)
+            .max_depth(3)
+            .record_scales(true)
+            .artifacts_dir("some/dir")
+            .build_config()
+            .unwrap();
+        assert_eq!(cfg.max_rank, 4);
+        assert_eq!(cfg.base_size, 32);
+        assert_eq!(cfg.hungarian_cutoff, 16);
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.threads, 2);
+        assert_eq!(cfg.max_depth, Some(3));
+        assert!(cfg.record_scales);
+        assert_eq!(cfg.artifacts_dir, std::path::PathBuf::from("some/dir"));
+    }
+}

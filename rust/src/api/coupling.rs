@@ -1,0 +1,427 @@
+//! One output type for every solver: the [`Coupling`] enum.
+//!
+//! The paper's central comparison runs six solvers whose raw outputs are
+//! four different objects — a bijection (HiRef, mini-batch, exact), a
+//! dense matrix (Sinkhorn, ProgOT), low-rank factors (LROT/FRLC), and a
+//! sparse entry list (MOP).  All of them *represent* a coupling
+//! `P ∈ Π(1/n, 1/m)`; this module gives them a shared type with uniform
+//! accessors (`cost`, `marginal_error`, `entropy`, `nnz`, `to_bijection`)
+//! so benches, tests and the CLI never special-case a representation.
+
+use crate::costs::{self, CostKind};
+use crate::linalg::Mat;
+use crate::metrics;
+use crate::solvers::{mop, sinkhorn};
+
+use super::error::SolveError;
+
+/// Threshold under which a coupling entry counts as zero (the paper's
+/// Table S3 convention).
+pub const NNZ_THRESH: f64 = 1e-8;
+
+/// A coupling stored as an explicit sparse entry list `(i, j, mass)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseCoupling {
+    /// Source size (rows of the implied dense plan).
+    pub n: usize,
+    /// Target size (columns of the implied dense plan).
+    pub m: usize,
+    /// `(source index, target index, mass)` triples; masses sum to 1.
+    pub entries: Vec<(u32, u32, f64)>,
+}
+
+impl SparseCoupling {
+    /// Total transported mass (1 for a feasible coupling).
+    pub fn total_mass(&self) -> f64 {
+        self.entries.iter().map(|e| e.2).sum()
+    }
+}
+
+/// Every coupling representation produced by a registered solver.
+///
+/// | Variant | Producers | Storage |
+/// |---|---|---|
+/// | `Bijection` | HiRef, mini-batch, exact | `O(n)` |
+/// | `Dense` | Sinkhorn, ProgOT | `O(n·m)` |
+/// | `LowRank` | LROT / FRLC baselines | `O((n+m)·r)` |
+/// | `Sparse` | MOP multiscale | `O(nnz)` |
+#[derive(Clone, Debug)]
+pub enum Coupling {
+    /// `perm[i] = j` pairs `x_i ↔ y_j` with mass `1/n` each — the HiRef
+    /// output invariant (paper §3.4): exactly `n` nonzeros.
+    Bijection(Vec<u32>),
+    /// Dense `n×m` plan (quadratic memory; baselines only).
+    Dense(Mat),
+    /// Factored plan `P = Q diag(1/g) Rᵀ` with inner marginal `g = diag`.
+    LowRank { q: Mat, r: Mat, diag: Vec<f64> },
+    /// Explicit sparse entry list.
+    Sparse(SparseCoupling),
+}
+
+impl Coupling {
+    /// `(n, m)` — the shape of the implied dense plan.
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            Coupling::Bijection(p) => (p.len(), p.len()),
+            Coupling::Dense(p) => (p.rows, p.cols),
+            Coupling::LowRank { q, r, .. } => (q.rows, r.rows),
+            Coupling::Sparse(sc) => (sc.n, sc.m),
+        }
+    }
+
+    /// Short label for reports ("bijection", "dense", ...).
+    pub fn kind_label(&self) -> &'static str {
+        match self {
+            Coupling::Bijection(_) => "bijection",
+            Coupling::Dense(_) => "dense",
+            Coupling::LowRank { .. } => "low-rank",
+            Coupling::Sparse(_) => "sparse",
+        }
+    }
+
+    /// Primal transport cost `⟨C, P⟩` under the ground cost `kind`.
+    ///
+    /// Linear time/space for bijections and sparse plans; `O(n·m)` for
+    /// dense plans (streamed, the cost matrix is never materialised);
+    /// low-rank plans use the exact `d+2` factorisation for squared
+    /// Euclidean (linear) and fall back to an `O(n·m·r)` stream otherwise.
+    pub fn cost(&self, x: &Mat, y: &Mat, kind: CostKind) -> f64 {
+        match self {
+            Coupling::Bijection(p) => metrics::bijection_cost(x, y, p, kind),
+            Coupling::Dense(p) => {
+                debug_assert_eq!((p.rows, p.cols), (x.rows, y.rows));
+                let mut s = 0.0f64;
+                for i in 0..p.rows {
+                    let xi = x.row(i);
+                    for (j, &pv) in p.row(i).iter().enumerate() {
+                        if pv != 0.0 {
+                            s += pv as f64 * kind.pair(xi, y.row(j));
+                        }
+                    }
+                }
+                s
+            }
+            Coupling::LowRank { q, r, diag } => match kind {
+                CostKind::SqEuclidean => {
+                    let (u, v) = costs::factor::sq_euclidean_factors(x, y);
+                    lowrank_factored_cost(&u, &v, q, r, diag)
+                }
+                CostKind::Euclidean => {
+                    let rank = q.cols;
+                    let mut s = 0.0f64;
+                    for i in 0..q.rows {
+                        let qi = q.row(i);
+                        let xi = x.row(i);
+                        for j in 0..r.rows {
+                            let rj = r.row(j);
+                            let mut p = 0.0f64;
+                            for z in 0..rank {
+                                p += qi[z] as f64 * rj[z] as f64 / diag[z];
+                            }
+                            if p != 0.0 {
+                                s += p * kind.pair(xi, y.row(j));
+                            }
+                        }
+                    }
+                    s
+                }
+            },
+            Coupling::Sparse(sc) => sc
+                .entries
+                .iter()
+                .map(|&(i, j, mass)| mass * kind.pair(x.row(i as usize), y.row(j as usize)))
+                .sum(),
+        }
+    }
+
+    /// Worst relative violation of the uniform marginal constraints.
+    ///
+    /// For a bijection this *verifies* the invariant rather than assuming
+    /// it: a permutation with duplicate or out-of-range targets reports a
+    /// violation ≥ 1 (each row always carries mass `1/n`, so only the
+    /// column marginals can break).
+    pub fn marginal_error(&self) -> f64 {
+        match self {
+            Coupling::Bijection(p) => {
+                let n = p.len();
+                let mut hits = vec![0u32; n];
+                let mut worst = 0.0f64;
+                for &j in p {
+                    if (j as usize) < n {
+                        hits[j as usize] += 1;
+                    } else {
+                        worst = 1.0;
+                    }
+                }
+                for c in hits {
+                    worst = worst.max((c as f64 - 1.0).abs());
+                }
+                worst
+            }
+            Coupling::Dense(p) => metrics::marginal_violation(p),
+            Coupling::LowRank { q, r, diag } => {
+                let (n, m) = (q.rows as f64, r.rows as f64);
+                let mut worst = 0.0f64;
+                for s in q.row_sums() {
+                    worst = worst.max((s as f64 * n - 1.0).abs());
+                }
+                for s in r.row_sums() {
+                    worst = worst.max((s as f64 * m - 1.0).abs());
+                }
+                for (z, &s) in q.col_sums().iter().enumerate() {
+                    worst = worst.max((s as f64 / diag[z] - 1.0).abs());
+                }
+                for (z, &s) in r.col_sums().iter().enumerate() {
+                    worst = worst.max((s as f64 / diag[z] - 1.0).abs());
+                }
+                worst
+            }
+            Coupling::Sparse(sc) => {
+                let mut row = vec![0.0f64; sc.n];
+                let mut col = vec![0.0f64; sc.m];
+                for &(i, j, mass) in &sc.entries {
+                    row[i as usize] += mass;
+                    col[j as usize] += mass;
+                }
+                let mut worst = 0.0f64;
+                for s in row {
+                    worst = worst.max((s * sc.n as f64 - 1.0).abs());
+                }
+                for s in col {
+                    worst = worst.max((s * sc.m as f64 - 1.0).abs());
+                }
+                worst
+            }
+        }
+    }
+
+    /// Shannon entropy `−Σ p log p` of the plan (Table S3 convention:
+    /// exactly `ln n` for a bijection).  Like [`Coupling::nnz`], this
+    /// streams the implied dense plan for low-rank couplings (`O(n·m·r)`).
+    pub fn entropy(&self) -> f64 {
+        match self {
+            Coupling::Bijection(p) => metrics::bijection_entropy(p.len()),
+            Coupling::Dense(p) => metrics::coupling_entropy(p),
+            Coupling::LowRank { q, r, diag } => {
+                let rank = q.cols;
+                let mut h = 0.0f64;
+                for i in 0..q.rows {
+                    let qi = q.row(i);
+                    for j in 0..r.rows {
+                        let rj = r.row(j);
+                        let mut p = 0.0f64;
+                        for z in 0..rank {
+                            p += qi[z] as f64 * rj[z] as f64 / diag[z];
+                        }
+                        if p > 0.0 {
+                            h -= p * p.ln();
+                        }
+                    }
+                }
+                h
+            }
+            Coupling::Sparse(sc) => {
+                let mut h = 0.0f64;
+                for &(_, _, mass) in &sc.entries {
+                    if mass > 0.0 {
+                        h -= mass * mass.ln();
+                    }
+                }
+                h
+            }
+        }
+    }
+
+    /// Number of entries above [`NNZ_THRESH`] — the paper's structural
+    /// linear-vs-quadratic storage comparison (Table S3).
+    ///
+    /// `O(n)` for bijections/sparse plans, `O(n·m)` for dense plans, and
+    /// `O(n·m·r)` for low-rank plans (the implied dense plan is streamed,
+    /// not stored) — evaluation scales only for the latter two.
+    pub fn nnz(&self) -> usize {
+        match self {
+            Coupling::Bijection(p) => p.len(),
+            Coupling::Dense(p) => metrics::nonzeros(p, NNZ_THRESH as f32),
+            Coupling::LowRank { q, r, diag } => {
+                let rank = q.cols;
+                let mut count = 0usize;
+                for i in 0..q.rows {
+                    let qi = q.row(i);
+                    for j in 0..r.rows {
+                        let rj = r.row(j);
+                        let mut p = 0.0f64;
+                        for z in 0..rank {
+                            p += qi[z] as f64 * rj[z] as f64 / diag[z];
+                        }
+                        if p > NNZ_THRESH {
+                            count += 1;
+                        }
+                    }
+                }
+                count
+            }
+            Coupling::Sparse(sc) => sc.entries.iter().filter(|e| e.2 > NNZ_THRESH).count(),
+        }
+    }
+
+    /// Round to a one-to-one map (errors on non-square couplings).
+    ///
+    /// Bijections pass through; dense and low-rank plans round by the
+    /// confidence-ordered greedy of [`sinkhorn::round_to_bijection`]
+    /// (low-rank plans materialise the dense plan first — `O(n²)`, use at
+    /// evaluation scales only); sparse plans round by decreasing mass.
+    pub fn to_bijection(&self) -> Result<Vec<u32>, SolveError> {
+        let (n, m) = self.shape();
+        if n != m {
+            return Err(SolveError::NotSquare { n, m });
+        }
+        match self {
+            Coupling::Bijection(p) => Ok(p.clone()),
+            Coupling::Dense(p) => Ok(sinkhorn::round_to_bijection(p)),
+            Coupling::LowRank { q, r, diag } => {
+                let rank = q.cols;
+                let mut p = Mat::zeros(q.rows, r.rows);
+                for i in 0..q.rows {
+                    let qi = q.row(i);
+                    let prow = p.row_mut(i);
+                    for (j, pv) in prow.iter_mut().enumerate() {
+                        let rj = r.row(j);
+                        let mut acc = 0.0f64;
+                        for z in 0..rank {
+                            acc += qi[z] as f64 * rj[z] as f64 / diag[z];
+                        }
+                        *pv = acc as f32;
+                    }
+                }
+                Ok(sinkhorn::round_to_bijection(&p))
+            }
+            Coupling::Sparse(sc) => Ok(mop::round_sparse_to_bijection(sc)),
+        }
+    }
+}
+
+/// `⟨C, Q diag(1/g) Rᵀ⟩` through cost factors `C = U Vᵀ`, in
+/// `O((n+m)·k·r)` — the same contraction as `lrot::lowrank_cost`
+/// generalised to a non-uniform inner marginal `g`.
+fn lowrank_factored_cost(u: &Mat, v: &Mat, q: &Mat, r: &Mat, diag: &[f64]) -> f64 {
+    let uq = u.t_matmul(q); // k×r
+    let vr = v.t_matmul(r); // k×r
+    let mut s = 0.0f64;
+    for z in 0..q.cols {
+        let mut dz = 0.0f64;
+        for k in 0..uq.rows {
+            dz += uq.at(k, z) as f64 * vr.at(k, z) as f64;
+        }
+        s += dz / diag[z];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costs::dense_cost;
+    use crate::prng::Rng;
+    use crate::solvers::lrot;
+
+    fn toy(n: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let mut x = Mat::zeros(n, 2);
+        let mut y = Mat::zeros(n, 2);
+        rng.fill_normal(&mut x.data);
+        rng.fill_normal(&mut y.data);
+        (x, y)
+    }
+
+    #[test]
+    fn bijection_identity_cost_zero() {
+        let (x, _) = toy(16, 0);
+        let c = Coupling::Bijection((0..16).collect());
+        assert_eq!(c.cost(&x, &x, CostKind::SqEuclidean), 0.0);
+        assert_eq!(c.marginal_error(), 0.0);
+        assert_eq!(c.nnz(), 16);
+        assert_eq!(c.to_bijection().unwrap().len(), 16);
+    }
+
+    #[test]
+    fn dense_cost_matches_legacy_path() {
+        let (x, y) = toy(24, 1);
+        let kind = CostKind::SqEuclidean;
+        let c = dense_cost(&x, &y, kind);
+        let mut p = Mat::full(24, 24, 1.0 / (24.0 * 24.0));
+        *p.at_mut(0, 0) += 0.001;
+        let want = metrics::dense_cost_of(&c, &p);
+        let got = Coupling::Dense(p).cost(&x, &y, kind);
+        let rel = (got - want).abs() / want.abs().max(1e-12);
+        assert!(rel < 1e-6, "{got} vs {want}");
+    }
+
+    #[test]
+    fn lowrank_cost_matches_legacy_path() {
+        let (x, y) = toy(32, 2);
+        let (u, v) = costs::factor::sq_euclidean_factors(&x, &y);
+        let out = lrot::solve_factored(&u, &v, 32, 32, &lrot::LrotConfig::default(), 3);
+        let want = lrot::lowrank_cost(&u, &v, &out.q, &out.r);
+        let rank = out.q.cols;
+        let cpl = Coupling::LowRank {
+            q: out.q,
+            r: out.r,
+            diag: vec![1.0 / rank as f64; rank],
+        };
+        let got = cpl.cost(&x, &y, CostKind::SqEuclidean);
+        let rel = (got - want).abs() / want.abs().max(1e-12);
+        assert!(rel < 1e-9, "{got} vs {want}");
+        assert!(cpl.marginal_error() < 0.05);
+        let perm = cpl.to_bijection().unwrap();
+        let mut seen = vec![false; 32];
+        for &j in &perm {
+            assert!(!std::mem::replace(&mut seen[j as usize], true));
+        }
+    }
+
+    #[test]
+    fn broken_bijection_is_detected() {
+        // duplicate target (0 twice, 1 missing) must not report feasible
+        let bad = Coupling::Bijection(vec![0, 0, 2]);
+        assert!(bad.marginal_error() >= 1.0);
+        // out-of-range target likewise
+        let oob = Coupling::Bijection(vec![0, 1, 9]);
+        assert!(oob.marginal_error() >= 1.0);
+        let ok = Coupling::Bijection(vec![2, 0, 1]);
+        assert_eq!(ok.marginal_error(), 0.0);
+    }
+
+    #[test]
+    fn sparse_mass_and_rounding() {
+        let sc = SparseCoupling {
+            n: 3,
+            m: 3,
+            entries: vec![(0, 1, 1.0 / 3.0), (1, 0, 1.0 / 3.0), (2, 2, 1.0 / 3.0)],
+        };
+        assert!((sc.total_mass() - 1.0).abs() < 1e-12);
+        let cpl = Coupling::Sparse(sc);
+        assert!(cpl.marginal_error() < 1e-12);
+        assert_eq!(cpl.nnz(), 3);
+        assert_eq!(cpl.to_bijection().unwrap(), vec![1, 0, 2]);
+        assert!((cpl.entropy() - 3.0f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_square_rounding_errors() {
+        let cpl = Coupling::Dense(Mat::full(2, 3, 1.0 / 6.0));
+        assert_eq!(cpl.to_bijection(), Err(SolveError::NotSquare { n: 2, m: 3 }));
+        assert_eq!(cpl.shape(), (2, 3));
+    }
+
+    #[test]
+    fn dense_entropy_and_nnz_match_metrics() {
+        let (x, y) = toy(16, 4);
+        let c = dense_cost(&x, &y, CostKind::SqEuclidean);
+        let sk = sinkhorn::solve(&c, &Default::default());
+        let want_h = metrics::coupling_entropy(&sk.coupling);
+        let want_nnz = metrics::nonzeros(&sk.coupling, NNZ_THRESH as f32);
+        let cpl = Coupling::Dense(sk.coupling);
+        assert_eq!(cpl.entropy(), want_h);
+        assert_eq!(cpl.nnz(), want_nnz);
+    }
+}

@@ -1,0 +1,73 @@
+//! Typed errors for the unified solver API.
+//!
+//! Every fallible path in the solver stack returns [`SolveError`] — the
+//! crate carries no `anyhow`-style dynamic errors, so callers (the CLI,
+//! services routing workloads to backends) can match on the failure mode.
+
+use std::fmt;
+
+/// Everything that can go wrong constructing or running a transport solve.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SolveError {
+    /// The two datasets have different sizes where a one-to-one alignment
+    /// requires equal ones.
+    ShapeMismatch { n: usize, m: usize },
+    /// The two datasets live in different ambient dimensions.
+    DimMismatch { dx: usize, dy: usize },
+    /// One of the datasets is empty.
+    EmptyInput,
+    /// A bijection was requested from a non-square coupling.
+    NotSquare { n: usize, m: usize },
+    /// A configuration value was rejected at build time.
+    InvalidConfig(String),
+    /// No solver registered under this name.
+    UnknownSolver { name: String, known: Vec<String> },
+    /// A backend (e.g. the PJRT runtime) is unavailable or failed.
+    Backend(String),
+}
+
+impl fmt::Display for SolveError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SolveError::ShapeMismatch { n, m } => {
+                write!(f, "datasets must be equal-sized and nonempty (got {n} vs {m} points)")
+            }
+            SolveError::DimMismatch { dx, dy } => {
+                write!(f, "dimension mismatch: {dx} vs {dy}")
+            }
+            SolveError::EmptyInput => write!(f, "empty input dataset"),
+            SolveError::NotSquare { n, m } => {
+                write!(f, "cannot round a {n}x{m} coupling to a bijection (needs n = m)")
+            }
+            SolveError::InvalidConfig(msg) => write!(f, "invalid configuration: {msg}"),
+            SolveError::UnknownSolver { name, known } => {
+                write!(f, "unknown solver '{name}' (valid solvers: {})", known.join(", "))
+            }
+            SolveError::Backend(msg) => write!(f, "backend error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SolveError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_lists_known_solvers() {
+        let e = SolveError::UnknownSolver {
+            name: "simplex".into(),
+            known: vec!["hiref".into(), "sinkhorn".into()],
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("simplex"));
+        assert!(msg.contains("hiref, sinkhorn"));
+    }
+
+    #[test]
+    fn display_shape_mismatch() {
+        let e = SolveError::ShapeMismatch { n: 3, m: 5 };
+        assert!(e.to_string().contains("3 vs 5"));
+    }
+}

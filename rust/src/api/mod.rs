@@ -1,0 +1,58 @@
+//! The unified solver API: **one interface for HiRef and every baseline**.
+//!
+//! The paper's comparison (HiRef vs. Sinkhorn, ProgOT, mini-batch, MOP and
+//! low-rank OT) is expressed through two abstractions:
+//!
+//! * [`Coupling`] — the one output type.  Following the factored-coupling
+//!   view of Scetbon et al. 2021 and the HiRef output invariant (a
+//!   bijection with `n` nonzeros, paper §3.4), a bijection, a dense plan,
+//!   low-rank factors and a sparse entry list are all representations of
+//!   the same object, with uniform `cost` / `marginal_error` / `entropy` /
+//!   `nnz` / `to_bijection` accessors.
+//! * [`TransportSolver`] — the one solver interface:
+//!   `solve(&TransportProblem) -> Result<Solved, SolveError>`, implemented
+//!   by [`HiRefSolver`] and all six solvers in `rust/src/solvers/`,
+//!   reachable by name through [`SolverRegistry`] / [`solver`].
+//!
+//! # Choosing a solver
+//!
+//! | Registry name | Paper baseline | Output | Scaling |
+//! |---|---|---|---|
+//! | `hiref` | Hierarchical Refinement (this paper) | bijection | linear space, `O(n log n)` |
+//! | `sinkhorn` | Cuturi 2013 (+ ε-schedule) | dense | `O(n²)` memory |
+//! | `progot` | Kassraie et al. 2024 | dense | `O(n²)` memory |
+//! | `minibatch` | Genevay 2018 / Fatras 2020-21 | bijection | linear, biased |
+//! | `mop` | Gerber & Maggioni 2017 | sparse | linear, least accurate |
+//! | `lrot` | Scetbon 2021 / FRLC | low-rank | linear space |
+//! | `exact` | Kuhn 1955 / Bertsekas auction | bijection | `O(n³)`, optimal |
+//!
+//! # Example
+//!
+//! ```
+//! use hiref::api::{solver, TransportProblem, TransportSolver};
+//! use hiref::costs::CostKind;
+//! use hiref::data::synthetic;
+//!
+//! let (x, y) = synthetic::half_moon_s_curve(96, 0);
+//! let prob = TransportProblem::new(&x, &y, CostKind::SqEuclidean).with_seed(7);
+//! let solved = solver("minibatch").unwrap().solve(&prob).unwrap();
+//! let cost = solved.coupling.cost(&x, &y, CostKind::SqEuclidean);
+//! assert!(cost.is_finite() && solved.coupling.nnz() == 96);
+//! ```
+
+pub mod adapters;
+pub mod builder;
+pub mod coupling;
+pub mod error;
+pub mod problem;
+pub mod registry;
+
+pub use adapters::{
+    ExactSolver, HiRefSolver, LrotSolver, MiniBatchSolver, MopSolver, ProgOtSolver,
+    SinkhornSolver,
+};
+pub use builder::HiRefBuilder;
+pub use coupling::{Coupling, SparseCoupling, NNZ_THRESH};
+pub use error::SolveError;
+pub use problem::{Solved, SolveStats, TransportProblem, TransportSolver};
+pub use registry::{canonical_name, solver, SolverRegistry, SOLVER_NAMES};

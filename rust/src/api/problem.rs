@@ -1,0 +1,170 @@
+//! The [`TransportProblem`] → [`TransportSolver`] → [`Solved`] contract.
+//!
+//! A problem bundles everything a solver needs — the two point clouds, the
+//! ground cost, a seed, and optionally a precomputed dense cost matrix so
+//! several dense baselines can share one `O(n·m)` build.  A solver turns
+//! it into a [`Coupling`] plus uniform diagnostics.
+
+use std::borrow::Cow;
+use std::time::Duration;
+
+use crate::coordinator::hiref::RunStats;
+use crate::costs::{self, CostKind};
+use crate::linalg::Mat;
+
+use super::coupling::Coupling;
+use super::error::SolveError;
+
+/// One transport instance: `x` (n×d) to `y` (m×d) under `kind`.
+#[derive(Clone, Copy)]
+pub struct TransportProblem<'a> {
+    pub x: &'a Mat,
+    pub y: &'a Mat,
+    pub kind: CostKind,
+    /// Seed threaded into every stochastic solver (LROT noise, mini-batch
+    /// partitions, HiRef per-block streams).
+    pub seed: u64,
+    /// Optional precomputed dense cost matrix (n×m).  Solvers whose input
+    /// *is* a fixed cost matrix (Sinkhorn, exact assignment) use it
+    /// instead of re-deriving `C`; solvers that iterate on transformed
+    /// points (ProgOT displaces the source each stage) or never
+    /// materialise `C` at all (HiRef, LROT, MOP, mini-batch) ignore it.
+    pub cost: Option<&'a Mat>,
+}
+
+impl<'a> TransportProblem<'a> {
+    /// A problem with seed 0 and no precomputed cost.
+    pub fn new(x: &'a Mat, y: &'a Mat, kind: CostKind) -> Self {
+        TransportProblem { x, y, kind, seed: 0, cost: None }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_cost(mut self, cost: &'a Mat) -> Self {
+        self.cost = Some(cost);
+        self
+    }
+
+    /// Structural validation shared by every solver.
+    pub fn validate(&self) -> Result<(), SolveError> {
+        if self.x.rows == 0 || self.y.rows == 0 {
+            return Err(SolveError::EmptyInput);
+        }
+        if self.x.cols != self.y.cols {
+            return Err(SolveError::DimMismatch { dx: self.x.cols, dy: self.y.cols });
+        }
+        if let Some(c) = self.cost {
+            if (c.rows, c.cols) != (self.x.rows, self.y.rows) {
+                return Err(SolveError::InvalidConfig(format!(
+                    "precomputed cost is {}x{} but the problem is {}x{}",
+                    c.rows, c.cols, self.x.rows, self.y.rows
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// `n` when the instance is square (bijective solvers), else an error.
+    pub fn require_equal_sizes(&self) -> Result<usize, SolveError> {
+        if self.x.rows != self.y.rows {
+            return Err(SolveError::ShapeMismatch { n: self.x.rows, m: self.y.rows });
+        }
+        Ok(self.x.rows)
+    }
+
+    /// The dense cost matrix: the precomputed one when supplied, otherwise
+    /// freshly built (`O(n·m)` — dense baselines only).
+    pub fn cost_matrix(&self) -> Cow<'a, Mat> {
+        match self.cost {
+            Some(c) => Cow::Borrowed(c),
+            None => Cow::Owned(costs::dense_cost(self.x, self.y, self.kind)),
+        }
+    }
+}
+
+/// Uniform per-solve diagnostics.
+#[derive(Clone, Debug)]
+pub struct SolveStats {
+    /// Registry name of the solver that produced the result.
+    pub solver: &'static str,
+    pub elapsed: Duration,
+    /// Solver-specific iteration count (Sinkhorn sweeps, ProgOT stages,
+    /// HiRef hierarchy depth, mini-batch count); 0 when not meaningful.
+    pub iterations: usize,
+    /// HiRef's detailed counters when the solver was HiRef.
+    pub hiref: Option<RunStats>,
+}
+
+/// A coupling plus how it was obtained.
+#[derive(Clone, Debug)]
+pub struct Solved {
+    pub coupling: Coupling,
+    pub stats: SolveStats,
+}
+
+/// The one interface every solver implements — HiRef and all five paper
+/// baselines.  Obtain implementations from
+/// [`super::registry::SolverRegistry`] or [`super::registry::solver`].
+pub trait TransportSolver: Send + Sync {
+    /// Registry name ("hiref", "sinkhorn", ...).
+    fn name(&self) -> &'static str;
+
+    /// One-line description mapping the solver to its paper baseline.
+    fn describe(&self) -> &'static str;
+
+    /// Solve the instance, returning a [`Coupling`] plus diagnostics.
+    fn solve(&self, prob: &TransportProblem<'_>) -> Result<Solved, SolveError>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn rand_mat(rng: &mut Rng, n: usize, d: usize) -> Mat {
+        let mut m = Mat::zeros(n, d);
+        rng.fill_normal(&mut m.data);
+        m
+    }
+
+    #[test]
+    fn validation_catches_structural_errors() {
+        let mut rng = Rng::new(0);
+        let x = rand_mat(&mut rng, 8, 2);
+        let y3 = rand_mat(&mut rng, 8, 3);
+        let y10 = rand_mat(&mut rng, 10, 2);
+        let empty = Mat::zeros(0, 2);
+
+        assert!(TransportProblem::new(&x, &x, CostKind::SqEuclidean).validate().is_ok());
+        assert_eq!(
+            TransportProblem::new(&x, &y3, CostKind::SqEuclidean).validate(),
+            Err(SolveError::DimMismatch { dx: 2, dy: 3 })
+        );
+        assert_eq!(
+            TransportProblem::new(&x, &empty, CostKind::SqEuclidean).validate(),
+            Err(SolveError::EmptyInput)
+        );
+        let p = TransportProblem::new(&x, &y10, CostKind::SqEuclidean);
+        assert!(p.validate().is_ok());
+        assert_eq!(p.require_equal_sizes(), Err(SolveError::ShapeMismatch { n: 8, m: 10 }));
+    }
+
+    #[test]
+    fn cost_matrix_prefers_precomputed() {
+        let mut rng = Rng::new(1);
+        let x = rand_mat(&mut rng, 4, 2);
+        let y = rand_mat(&mut rng, 5, 2);
+        let c = costs::dense_cost(&x, &y, CostKind::Euclidean);
+        let p = TransportProblem::new(&x, &y, CostKind::Euclidean).with_cost(&c);
+        assert!(p.validate().is_ok());
+        let got = p.cost_matrix();
+        assert_eq!(got.as_ref(), &c);
+        // shape-mismatched precomputed cost is rejected
+        let bad = Mat::zeros(4, 4);
+        let p = TransportProblem::new(&x, &y, CostKind::Euclidean).with_cost(&bad);
+        assert!(matches!(p.validate(), Err(SolveError::InvalidConfig(_))));
+    }
+}

@@ -1,0 +1,154 @@
+//! Name-keyed registry over every [`TransportSolver`], so the CLI, the
+//! benches and the tests dispatch workloads with one string —
+//! `hiref::api::solver("sinkhorn")` — instead of hand-wiring six
+//! incompatible call sites.
+
+use super::adapters::{
+    ExactSolver, HiRefSolver, LrotSolver, MiniBatchSolver, MopSolver, ProgOtSolver,
+    SinkhornSolver,
+};
+use super::error::SolveError;
+use super::problem::TransportSolver;
+
+/// Canonical registry names: HiRef plus every baseline in
+/// `rust/src/solvers/`.
+pub const SOLVER_NAMES: [&str; 7] =
+    ["hiref", "sinkhorn", "progot", "minibatch", "mop", "lrot", "exact"];
+
+/// Resolve user-facing aliases and case to the canonical registry name
+/// (returns the lowercased input unchanged when it is not an alias).
+pub fn canonical_name(name: &str) -> String {
+    canonical(name)
+}
+
+fn canonical(name: &str) -> String {
+    let lower = name.trim().to_ascii_lowercase();
+    match lower.as_str() {
+        "mb" | "mini-batch" => "minibatch".into(),
+        "lot" | "frlc" | "low-rank" | "lowrank" => "lrot".into(),
+        "hungarian" | "auction" | "assignment" => "exact".into(),
+        "entropic" => "sinkhorn".into(),
+        _ => lower,
+    }
+}
+
+/// Construct a default-configured boxed solver by (possibly aliased) name.
+pub fn solver(name: &str) -> Result<Box<dyn TransportSolver>, SolveError> {
+    match canonical(name).as_str() {
+        "hiref" => Ok(Box::new(HiRefSolver::default())),
+        "sinkhorn" => Ok(Box::new(SinkhornSolver::default())),
+        "progot" => Ok(Box::new(ProgOtSolver::default())),
+        "minibatch" => Ok(Box::new(MiniBatchSolver::default())),
+        "mop" => Ok(Box::new(MopSolver)),
+        "lrot" => Ok(Box::new(LrotSolver::default())),
+        "exact" => Ok(Box::new(ExactSolver::default())),
+        _ => Err(SolveError::UnknownSolver {
+            name: name.to_string(),
+            known: SOLVER_NAMES.iter().map(|s| s.to_string()).collect(),
+        }),
+    }
+}
+
+/// An ordered collection of named solvers.
+pub struct SolverRegistry {
+    entries: Vec<Box<dyn TransportSolver>>,
+}
+
+impl SolverRegistry {
+    /// An empty registry (register custom solvers manually).
+    pub fn empty() -> SolverRegistry {
+        SolverRegistry { entries: Vec::new() }
+    }
+
+    /// The full default registry: HiRef plus all five baselines plus the
+    /// exact reference solver, each with its default configuration.
+    pub fn with_defaults() -> SolverRegistry {
+        let mut reg = SolverRegistry::empty();
+        for name in SOLVER_NAMES {
+            reg.register(solver(name).expect("default solver"));
+        }
+        reg
+    }
+
+    /// Add (or replace, on name collision) a solver.
+    pub fn register(&mut self, s: Box<dyn TransportSolver>) {
+        if let Some(slot) = self.entries.iter_mut().find(|e| e.name() == s.name()) {
+            *slot = s;
+        } else {
+            self.entries.push(s);
+        }
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.name()).collect()
+    }
+
+    /// Look up a solver by (possibly aliased) name.
+    pub fn get(&self, name: &str) -> Result<&dyn TransportSolver, SolveError> {
+        let canon = canonical(name);
+        self.entries
+            .iter()
+            .find(|e| e.name() == canon)
+            .map(|e| e.as_ref())
+            .ok_or_else(|| SolveError::UnknownSolver {
+                name: name.to_string(),
+                known: self.entries.iter().map(|e| e.name().to_string()).collect(),
+            })
+    }
+
+    /// Iterate over the registered solvers.
+    pub fn iter(&self) -> impl Iterator<Item = &dyn TransportSolver> {
+        self.entries.iter().map(|e| e.as_ref())
+    }
+}
+
+impl Default for SolverRegistry {
+    fn default() -> Self {
+        SolverRegistry::with_defaults()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_cover_every_solver_module() {
+        let reg = SolverRegistry::with_defaults();
+        let names = reg.names();
+        for want in SOLVER_NAMES {
+            assert!(names.contains(&want), "missing {want}");
+        }
+        assert_eq!(names.len(), SOLVER_NAMES.len());
+    }
+
+    #[test]
+    fn aliases_resolve() {
+        let reg = SolverRegistry::with_defaults();
+        assert_eq!(reg.get("MB").unwrap().name(), "minibatch");
+        assert_eq!(reg.get("frlc").unwrap().name(), "lrot");
+        assert_eq!(reg.get("hungarian").unwrap().name(), "exact");
+        assert_eq!(solver("Sinkhorn").unwrap().name(), "sinkhorn");
+    }
+
+    #[test]
+    fn unknown_name_lists_known_solvers() {
+        let err = solver("simplex").unwrap_err();
+        match err {
+            SolveError::UnknownSolver { name, known } => {
+                assert_eq!(name, "simplex");
+                assert_eq!(known.len(), 7);
+            }
+            other => panic!("wrong error: {other}"),
+        }
+    }
+
+    #[test]
+    fn register_replaces_on_name_collision() {
+        let mut reg = SolverRegistry::with_defaults();
+        let n = reg.names().len();
+        reg.register(solver("hiref").unwrap());
+        assert_eq!(reg.names().len(), n);
+    }
+}

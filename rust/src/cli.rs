@@ -2,21 +2,46 @@
 //!
 //! `hiref <subcommand> [--flag value ...]`; see [`print_usage`] or run
 //! `hiref help`.  The benches (`cargo bench`) regenerate the paper tables;
-//! this binary is the interactive entry point for one-off runs.
+//! this binary is the interactive entry point for one-off runs.  Every
+//! subcommand that solves dispatches through the unified
+//! [`crate::api::SolverRegistry`], so `--solver <name>` selects any
+//! registered backend uniformly.
 
 use std::collections::HashMap;
+use std::fmt;
 use std::path::PathBuf;
 
-use anyhow::{anyhow, bail, Result};
-
+use crate::api::{self, HiRefBuilder, HiRefSolver, TransportProblem, TransportSolver};
 use crate::coordinator::annealing;
-use crate::coordinator::hiref::{BackendKind, HiRef, HiRefConfig};
+use crate::coordinator::hiref::{BackendKind, HiRefConfig};
 use crate::costs::CostKind;
 use crate::data::synthetic::Synthetic;
 use crate::metrics;
 use crate::report::{f4, Table};
-use crate::runtime::PjrtEngine;
-use crate::solvers::minibatch::{self, MiniBatchConfig};
+
+/// CLI-level error: a message for the terminal.
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl From<api::SolveError> for CliError {
+    fn from(e: api::SolveError) -> Self {
+        CliError(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, CliError>;
+
+fn err(msg: impl Into<String>) -> CliError {
+    CliError(msg.into())
+}
 
 /// Parsed `--key value` flags plus positional arguments.
 pub struct Flags {
@@ -38,7 +63,7 @@ impl Flags {
                 } else {
                     let v = args
                         .get(i + 1)
-                        .ok_or_else(|| anyhow!("flag --{key} missing a value"))?;
+                        .ok_or_else(|| err(format!("flag --{key} missing a value")))?;
                     named.insert(key.to_string(), v.clone());
                     i += 1;
                 }
@@ -55,38 +80,86 @@ impl Flags {
             None => Ok(default),
             Some(v) => v
                 .parse::<T>()
-                .map_err(|_| anyhow!("could not parse --{key} {v}")),
+                .map_err(|_| err(format!("could not parse --{key} {v}"))),
         }
     }
 
     pub fn get_str(&self, key: &str, default: &str) -> String {
         self.named.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
+
+    /// Read an enum-like flag, reporting the list of valid values when the
+    /// given one is not among `choices` (case-insensitive).
+    pub fn get_choice(&self, key: &str, default: &str, choices: &[&str]) -> Result<String> {
+        let v = self.get_str(key, default).to_ascii_lowercase();
+        if choices.iter().any(|c| c.eq_ignore_ascii_case(&v)) {
+            Ok(v)
+        } else {
+            Err(err(format!(
+                "unknown --{key} {v} (valid values: {})",
+                choices.join("|")
+            )))
+        }
+    }
 }
 
-/// Build a [`HiRefConfig`] from common flags.
-pub fn config_from_flags(flags: &Flags) -> Result<HiRefConfig> {
-    let mut cfg = HiRefConfig::default();
-    cfg.max_rank = flags.get("max-rank", cfg.max_rank)?;
-    cfg.base_size = flags.get("base-size", cfg.base_size)?;
-    cfg.seed = flags.get("seed", cfg.seed)?;
-    cfg.threads = flags.get("threads", cfg.threads)?;
-    if let Some(d) = flags.named.get("depth") {
-        cfg.max_depth = Some(d.parse()?);
+/// Valid `--cost` spellings (first of each group is canonical).
+const COST_CHOICES: [&str; 6] = ["sq", "sqeuclidean", "w2", "euclid", "euclidean", "w1"];
+/// Valid `--backend` values.
+const BACKEND_CHOICES: [&str; 3] = ["auto", "native", "pjrt"];
+/// Valid `--dataset` values.
+const DATASET_CHOICES: [&str; 8] = [
+    "halfmoon",
+    "halfmoon-scurve",
+    "checkerboard",
+    "checker",
+    "maf",
+    "moons-rings",
+    "imagenet-sim",
+    "merfish-sim",
+];
+
+/// Parse a `--cost` value into a [`CostKind`] (case-insensitive); the
+/// error lists the valid spellings.
+pub fn parse_cost(v: &str) -> Result<CostKind> {
+    match v.to_ascii_lowercase().as_str() {
+        "sq" | "w2" | "sqeuclidean" => Ok(CostKind::SqEuclidean),
+        "euclid" | "w1" | "euclidean" => Ok(CostKind::Euclidean),
+        other => Err(err(format!(
+            "unknown --cost {other} (valid values: {})",
+            COST_CHOICES.join("|")
+        ))),
     }
-    cfg.artifacts_dir = PathBuf::from(flags.get_str("artifacts", "artifacts"));
-    cfg.cost = match flags.get_str("cost", "sq").as_str() {
-        "sq" | "w2" | "sqeuclidean" => CostKind::SqEuclidean,
-        "euclid" | "w1" | "euclidean" => CostKind::Euclidean,
-        other => bail!("unknown --cost {other} (use sq|euclid)"),
-    };
-    cfg.backend = match flags.get_str("backend", "auto").as_str() {
-        "auto" => BackendKind::Auto,
+}
+
+/// Build a validated [`HiRefConfig`] from common flags (via
+/// [`HiRefBuilder`], so inconsistent combinations are rejected up front).
+pub fn config_from_flags(flags: &Flags) -> Result<HiRefConfig> {
+    let d = HiRefConfig::default();
+    let base_size = flags.get("base-size", d.base_size)?;
+    // default cutoff tracks a shrunken base size; an explicit flag above
+    // the base size is rejected by the builder
+    let cutoff = flags.get("hungarian-cutoff", d.hungarian_cutoff.min(base_size))?;
+    let mut b = HiRefBuilder::new()
+        .max_rank(flags.get("max-rank", d.max_rank)?)
+        .base_size(base_size)
+        .hungarian_cutoff(cutoff)
+        .seed(flags.get("seed", d.seed)?)
+        .threads(flags.get("threads", d.threads)?)
+        .artifacts_dir(PathBuf::from(flags.get_str("artifacts", "artifacts")))
+        .cost(parse_cost(&flags.get_str("cost", "sq"))?);
+    if let Some(depth) = flags.named.get("depth") {
+        let depth: usize = depth
+            .parse()
+            .map_err(|_| err(format!("could not parse --depth {depth}")))?;
+        b = b.max_depth(depth);
+    }
+    b = b.backend(match flags.get_choice("backend", "auto", &BACKEND_CHOICES)?.as_str() {
         "native" => BackendKind::Native,
         "pjrt" => BackendKind::Pjrt,
-        other => bail!("unknown --backend {other} (use auto|native|pjrt)"),
-    };
-    Ok(cfg)
+        _ => BackendKind::Auto,
+    });
+    Ok(b.build_config()?)
 }
 
 /// Generate the dataset named by `--dataset` at size `--n`.
@@ -106,8 +179,27 @@ pub fn dataset_from_flags(flags: &Flags) -> Result<(crate::linalg::Mat, crate::l
             let (s, t) = crate::data::transcriptomics::merfish_pair(n, seed);
             Ok((s.spatial, t.spatial))
         }
-        other => bail!("unknown --dataset {other}"),
+        other => Err(err(format!(
+            "unknown --dataset {other} (valid values: {})",
+            DATASET_CHOICES.join("|")
+        ))),
     }
+}
+
+/// Resolve one solver name (alias- and case-insensitive): HiRef picks up
+/// the HiRef flags; every other registered solver runs with its default
+/// configuration.  Unknown names error with the list of valid solvers.
+fn named_solver(name: &str, cfg: &HiRefConfig) -> Result<Box<dyn TransportSolver>> {
+    if api::canonical_name(name) == "hiref" {
+        Ok(Box::new(HiRefSolver { cfg: cfg.clone() }))
+    } else {
+        Ok(api::solver(name)?)
+    }
+}
+
+/// Resolve `--solver <name>`.
+fn solver_from_flags(flags: &Flags, cfg: &HiRefConfig) -> Result<Box<dyn TransportSolver>> {
+    named_solver(&flags.get_str("solver", "hiref"), cfg)
 }
 
 /// Entry point for the binary.
@@ -120,6 +212,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
     match cmd.as_str() {
         "align" => cmd_align(&flags),
         "compare" => cmd_compare(&flags),
+        "solvers" => cmd_solvers(),
         "schedule" => cmd_schedule(&flags),
         "buckets" => cmd_buckets(&flags),
         "help" | "--help" | "-h" => {
@@ -128,7 +221,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
         }
         other => {
             print_usage();
-            bail!("unknown subcommand: {other}")
+            Err(err(format!("unknown subcommand: {other}")))
         }
     }
 }
@@ -137,17 +230,32 @@ fn cmd_align(flags: &Flags) -> Result<()> {
     let cfg = config_from_flags(flags)?;
     let (x, y) = dataset_from_flags(flags)?;
     let kind = cfg.cost;
-    let solver = HiRef::new(cfg);
-    let out = solver.align(&x, &y)?;
-    assert!(out.is_bijection(), "internal error: output not a bijection");
-    println!("n            = {}", x.rows);
-    println!("schedule     = {:?}", out.schedule);
-    println!("primal cost  = {}", f4(out.cost(&x, &y, kind)));
-    println!("nonzeros     = {} (vs n² = {})", x.rows, x.rows * x.rows);
-    println!("lrot calls   = {} ({} pjrt, {} native)", out.stats.lrot_calls,
-             out.stats.pjrt_calls, out.stats.native_calls);
-    println!("base blocks  = {}", out.stats.base_calls);
-    println!("elapsed      = {:.3}s", out.stats.elapsed.as_secs_f64());
+    let seed = cfg.seed;
+    let solver = solver_from_flags(flags, &cfg)?;
+    let prob = TransportProblem::new(&x, &y, kind).with_seed(seed);
+    let solved = solver.solve(&prob)?;
+    println!("solver        = {} ({})", solved.stats.solver, solver.describe());
+    println!("n             = {}", x.rows);
+    println!("coupling      = {}", solved.coupling.kind_label());
+    println!("primal cost   = {}", f4(metrics::coupling_cost(&x, &y, &solved.coupling, kind)));
+    // counting a low-rank plan's nonzeros streams the implied n×m matrix;
+    // skip it beyond evaluation scales so `align` stays linear-time
+    let (rows, cols) = solved.coupling.shape();
+    match &solved.coupling {
+        api::Coupling::LowRank { .. } if rows.saturating_mul(cols) > 50_000_000 => {
+            println!("nonzeros      = (skipped: implied {rows}×{cols} plan too large to stream)");
+        }
+        _ => println!("nonzeros      = {} (vs n² = {})", solved.coupling.nnz(), rows * rows),
+    }
+    println!("marginal err  = {:.2e}", solved.coupling.marginal_error());
+    if let Some(rs) = &solved.stats.hiref {
+        println!(
+            "lrot calls    = {} ({} pjrt, {} native)",
+            rs.lrot_calls, rs.pjrt_calls, rs.native_calls
+        );
+        println!("base blocks   = {}", rs.base_calls);
+    }
+    println!("elapsed       = {:.3}s", solved.stats.elapsed.as_secs_f64());
     Ok(())
 }
 
@@ -155,26 +263,34 @@ fn cmd_compare(flags: &Flags) -> Result<()> {
     let cfg = config_from_flags(flags)?;
     let (x, y) = dataset_from_flags(flags)?;
     let kind = cfg.cost;
-    let mut table = Table::new(vec!["Method", "Primal cost", "Seconds"]);
+    let names = flags.get_str("solvers", "hiref,minibatch,mop");
+    let prob = TransportProblem::new(&x, &y, kind).with_seed(cfg.seed);
 
-    let solver = HiRef::new(cfg.clone());
-    let (out, secs) = crate::report::timed(|| solver.align(&x, &y));
-    let out = out?;
-    table.row(vec!["HiRef".to_string(), f4(out.cost(&x, &y, kind)), format!("{secs:.2}")]);
-
-    for b in [128usize, 1024] {
-        if b < x.rows {
-            let (perm, secs) = crate::report::timed(|| {
-                minibatch::solve(&x, &y, kind, &MiniBatchConfig { batch: b, seed: cfg.seed, ..Default::default() })
-            });
-            table.row(vec![
-                format!("MB {b}"),
-                f4(metrics::bijection_cost(&x, &y, &perm, kind)),
-                format!("{secs:.2}"),
-            ]);
-        }
+    let mut table = Table::new(vec!["Solver", "Coupling", "Primal cost", "nnz", "Seconds"]);
+    for name in names.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let solver = named_solver(name, &cfg)?;
+        let solved = solver.solve(&prob)?;
+        table.row(vec![
+            solved.stats.solver.to_string(),
+            solved.coupling.kind_label().to_string(),
+            f4(metrics::coupling_cost(&x, &y, &solved.coupling, kind)),
+            solved.coupling.nnz().to_string(),
+            format!("{:.2}", solved.stats.elapsed.as_secs_f64()),
+        ]);
     }
     table.print();
+    Ok(())
+}
+
+fn cmd_solvers() -> Result<()> {
+    let reg = api::SolverRegistry::with_defaults();
+    let mut table = Table::new(vec!["Name", "Description"]);
+    for s in reg.iter() {
+        table.row(vec![s.name().to_string(), s.describe().to_string()]);
+    }
+    table.print();
+    println!("\nUse any name with `hiref align --solver <name>` or");
+    println!("`hiref compare --solvers a,b,c`.");
     Ok(())
 }
 
@@ -182,7 +298,13 @@ fn cmd_schedule(flags: &Flags) -> Result<()> {
     let n: usize = flags.get("n", 1 << 20)?;
     let base: usize = flags.get("base-size", 256)?;
     let max_rank: usize = flags.get("max-rank", 16)?;
-    let depth = flags.named.get("depth").map(|d| d.parse()).transpose()?;
+    let depth = match flags.named.get("depth") {
+        None => None,
+        Some(d) => Some(
+            d.parse::<usize>()
+                .map_err(|_| err(format!("could not parse --depth {d}")))?,
+        ),
+    };
     let sched = annealing::optimal_rank_schedule(n, base, max_rank, depth);
     println!("n = {n}, base = {base}, max_rank = {max_rank}");
     println!("schedule         = {sched:?}");
@@ -193,9 +315,11 @@ fn cmd_schedule(flags: &Flags) -> Result<()> {
 
 fn cmd_buckets(flags: &Flags) -> Result<()> {
     let dir = PathBuf::from(flags.get_str("artifacts", "artifacts"));
-    let engine = PjrtEngine::load(&dir)?;
+    // manifest introspection works in stub builds too; only execution
+    // needs the `pjrt` feature
+    let buckets = crate::runtime::load_manifest(&dir)?;
     let mut table = Table::new(vec!["s", "r", "k", "outer", "inner", "path"]);
-    for b in engine.buckets() {
+    for b in &buckets {
         table.row(vec![
             b.s.to_string(),
             b.r.to_string(),
@@ -216,19 +340,23 @@ fn print_usage() {
 USAGE: hiref <command> [flags]
 
 COMMANDS
-  align     run HiRef on a dataset and report cost/stats
-  compare   HiRef vs mini-batch baselines on a dataset
+  align     run one solver on a dataset and report cost/stats
+  compare   run several solvers on a dataset through the uniform API
+  solvers   list the registered solvers (HiRef + all paper baselines)
   schedule  print the optimal rank-annealing schedule for given n
   buckets   list AOT artifact buckets (artifacts/manifest.tsv)
   help      this message
 
 COMMON FLAGS
+  --solver hiref|sinkhorn|progot|minibatch|mop|lrot|exact   [hiref]
+  --solvers a,b,c       solver list for `compare`  [hiref,minibatch,mop]
   --dataset checkerboard|maf|halfmoon|imagenet-sim|merfish-sim
   --n <int>             dataset size                 [1024]
   --cost sq|euclid      ground cost                  [sq]
   --backend auto|native|pjrt                         [auto]
   --max-rank <int>      annealing max rank C         [16]
   --base-size <int>     exact base-case block Q      [256]
+  --hungarian-cutoff <int>  Hungarian/auction crossover (≤ base-size)
   --depth <int>         cap hierarchy depth
   --seed <int>                                       [0]
   --threads <int>                                    [all cores]
@@ -267,9 +395,68 @@ mod tests {
     }
 
     #[test]
-    fn config_rejects_bad_cost() {
+    fn config_rejects_bad_cost_listing_choices() {
         let f = flags(&["--cost", "manhattan"]);
+        let e = config_from_flags(&f).unwrap_err();
+        assert!(e.0.contains("valid values"), "{e}");
+        assert!(e.0.contains("euclid"), "{e}");
+    }
+
+    #[test]
+    fn bad_backend_lists_choices() {
+        let f = flags(&["--backend", "cuda"]);
+        let e = config_from_flags(&f).unwrap_err();
+        assert!(e.0.contains("auto|native|pjrt"), "{e}");
+    }
+
+    #[test]
+    fn bad_solver_lists_choices() {
+        let f = flags(&["--solver", "simplex"]);
+        let cfg = HiRefConfig::default();
+        let e = solver_from_flags(&f, &cfg).unwrap_err();
+        assert!(e.0.contains("hiref"), "{e}");
+        assert!(e.0.contains("sinkhorn"), "{e}");
+    }
+
+    #[test]
+    fn solver_flag_selects_registry_entry() {
+        let cfg = HiRefConfig::default();
+        let f = flags(&["--solver", "minibatch"]);
+        assert_eq!(solver_from_flags(&f, &cfg).unwrap().name(), "minibatch");
+        let f = flags(&[]);
+        assert_eq!(solver_from_flags(&f, &cfg).unwrap().name(), "hiref");
+    }
+
+    #[test]
+    fn solver_aliases_and_case_resolve_uniformly() {
+        // `align --solver` and `compare --solvers` share named_solver, so
+        // aliases and case variants behave identically in both
+        let mut cfg = HiRefConfig::default();
+        cfg.base_size = 32;
+        cfg.hungarian_cutoff = 32;
+        assert_eq!(named_solver("mb", &cfg).unwrap().name(), "minibatch");
+        assert_eq!(named_solver("frlc", &cfg).unwrap().name(), "lrot");
+        // a case-variant HiRef still picks up the HiRef flags
+        let s = named_solver("HiRef", &cfg).unwrap();
+        assert_eq!(s.name(), "hiref");
+    }
+
+    #[test]
+    fn small_base_size_clamps_default_cutoff() {
+        let f = flags(&["--base-size", "64"]);
+        let cfg = config_from_flags(&f).unwrap();
+        assert_eq!(cfg.base_size, 64);
+        assert!(cfg.hungarian_cutoff <= 64);
+        // but an explicit oversized cutoff is rejected
+        let f = flags(&["--base-size", "64", "--hungarian-cutoff", "128"]);
         assert!(config_from_flags(&f).is_err());
+    }
+
+    #[test]
+    fn unknown_dataset_lists_choices() {
+        let f = flags(&["--dataset", "mnist"]);
+        let e = dataset_from_flags(&f).unwrap_err();
+        assert!(e.0.contains("merfish-sim"), "{e}");
     }
 
     #[test]
@@ -278,5 +465,24 @@ mod tests {
         let (x, y) = dataset_from_flags(&f).unwrap();
         assert_eq!(x.rows, 64);
         assert_eq!(y.rows, 64);
+    }
+
+    #[test]
+    fn advertised_choices_all_parse() {
+        // drift guard: every spelling listed in an error message must be
+        // accepted by the corresponding parser
+        for c in COST_CHOICES {
+            assert!(parse_cost(c).is_ok(), "listed --cost {c} rejected");
+        }
+        for d in DATASET_CHOICES {
+            let f = flags(&["--dataset", d, "--n", "16"]);
+            assert!(dataset_from_flags(&f).is_ok(), "listed --dataset {d} rejected");
+        }
+        for s in crate::api::SOLVER_NAMES {
+            assert!(
+                named_solver(s, &HiRefConfig::default()).is_ok(),
+                "listed --solver {s} rejected"
+            );
+        }
     }
 }

@@ -19,8 +19,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
-
+use crate::api::SolveError;
 use crate::coordinator::annealing;
 use crate::coordinator::assign;
 use crate::costs::{self, CostKind};
@@ -162,19 +161,22 @@ impl HiRef {
     }
 
     /// Compute a bijective alignment between equal-sized `x` and `y`.
-    pub fn align(&self, x: &Mat, y: &Mat) -> Result<Alignment> {
+    pub fn align(&self, x: &Mat, y: &Mat) -> Result<Alignment, SolveError> {
         let n = x.rows;
-        if n == 0 || n != y.rows {
-            bail!("HiRef needs equal-sized nonempty datasets (got {} vs {})", n, y.rows);
+        if n == 0 || y.rows == 0 {
+            return Err(SolveError::EmptyInput);
+        }
+        if n != y.rows {
+            return Err(SolveError::ShapeMismatch { n, m: y.rows });
         }
         if x.cols != y.cols {
-            bail!("dimension mismatch: {} vs {}", x.cols, y.cols);
+            return Err(SolveError::DimMismatch { dx: x.cols, dy: y.cols });
         }
         if self.cfg.backend == BackendKind::Pjrt && self.engine.is_none() {
-            bail!(
+            return Err(SolveError::Backend(format!(
                 "backend = Pjrt but artifacts not loadable from {} (run `make artifacts`)",
                 self.cfg.artifacts_dir.display()
-            );
+            )));
         }
         let t0 = Instant::now();
 

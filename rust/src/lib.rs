@@ -18,21 +18,66 @@
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the fused
 //!   low-rank gradient and masked log-sum-exp, lowered into the same HLO.
 //!
-//! [`runtime`] loads the AOT artifacts through the PJRT C API (`xla`
-//! crate) and serves LROT calls from compiled executables; a pure-Rust
-//! fallback ([`solvers::lrot`]) covers shapes outside the bucket grid.
+//! [`runtime`] loads the AOT artifacts through the PJRT C API (behind the
+//! `pjrt` cargo feature) and serves LROT calls from compiled executables;
+//! a pure-Rust fallback ([`solvers::lrot`]) covers shapes outside the
+//! bucket grid and stub builds.
 //!
 //! ## Quick start
 //!
+//! Construct HiRef through [`api::HiRefBuilder`] — the validated,
+//! documented configuration path:
+//!
 //! ```no_run
-//! use hiref::coordinator::hiref::{HiRef, HiRefConfig};
+//! use hiref::api::HiRefBuilder;
+//! use hiref::costs::CostKind;
 //! use hiref::data::synthetic;
 //!
 //! let (x, y) = synthetic::half_moon_s_curve(4096, 0);
-//! let out = HiRef::new(HiRefConfig::default()).align(&x, &y).unwrap();
-//! println!("primal W2^2 cost = {}", out.cost(&x, &y, hiref::costs::CostKind::SqEuclidean));
+//! let solver = HiRefBuilder::new().max_rank(16).base_size(256).build().unwrap();
+//! let out = solver.align(&x, &y).unwrap();
+//! assert!(out.is_bijection());
+//! println!("primal W2² cost = {}", out.cost(&x, &y, CostKind::SqEuclidean));
 //! ```
+//!
+//! Every baseline the paper compares against is reachable through the
+//! same uniform interface — a [`api::TransportSolver`] that maps a
+//! [`api::TransportProblem`] to a [`api::Coupling`]:
+//!
+//! ```no_run
+//! use hiref::api::{solver, TransportProblem, TransportSolver};
+//! use hiref::costs::CostKind;
+//! use hiref::data::synthetic;
+//!
+//! let (x, y) = synthetic::half_moon_s_curve(1024, 0);
+//! let prob = TransportProblem::new(&x, &y, CostKind::SqEuclidean).with_seed(7);
+//! for name in ["hiref", "sinkhorn", "minibatch"] {
+//!     let solved = solver(name).unwrap().solve(&prob).unwrap();
+//!     println!(
+//!         "{name:9} cost={:.4} nnz={} ({})",
+//!         solved.coupling.cost(&x, &y, CostKind::SqEuclidean),
+//!         solved.coupling.nnz(),
+//!         solved.coupling.kind_label(),
+//!     );
+//! }
+//! ```
+//!
+//! ## Choosing a solver
+//!
+//! | Registry name | Paper baseline | Output representation |
+//! |---|---|---|
+//! | `hiref` | Hierarchical Refinement (this paper) | [`api::Coupling::Bijection`] |
+//! | `sinkhorn` | Cuturi 2013 (+ ε-schedule, Chen et al. 2023) | [`api::Coupling::Dense`] |
+//! | `progot` | Kassraie et al. 2024 | [`api::Coupling::Dense`] |
+//! | `minibatch` | Genevay et al. 2018; Fatras et al. 2020/21 | [`api::Coupling::Bijection`] |
+//! | `mop` | Gerber & Maggioni 2017 | [`api::Coupling::Sparse`] |
+//! | `lrot` | Scetbon et al. 2021 / FRLC | [`api::Coupling::LowRank`] |
+//! | `exact` | Kuhn 1955 (Hungarian) / Bertsekas auction | [`api::Coupling::Bijection`] |
+//!
+//! See the [`api`] module docs for the full decision table and the
+//! `solvers` CLI subcommand for the same information at the shell.
 
+pub mod api;
 pub mod cli;
 pub mod coordinator;
 pub mod costs;

@@ -5,7 +5,7 @@
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = hiref::cli::run(args) {
-        eprintln!("error: {e:#}");
+        eprintln!("error: {e}");
         std::process::exit(1);
     }
 }

@@ -30,6 +30,13 @@ pub fn dense_cost_of(c: &Mat, p: &Mat) -> f64 {
     c.dot(p)
 }
 
+/// Primal cost of *any* coupling representation — the uniform entry point
+/// the benches and the CLI use instead of duplicating per-representation
+/// cost code.  Delegates to [`crate::api::Coupling::cost`].
+pub fn coupling_cost(x: &Mat, y: &Mat, coupling: &crate::api::Coupling, kind: CostKind) -> f64 {
+    coupling.cost(x, y, kind)
+}
+
 /// Shannon entropy `H(P) = −Σ P_ij (log P_ij − 1)` minus-one convention of
 /// the paper's Eq. 4; reported in Table S3 without the `−1` (the paper's
 /// table uses plain −Σ p log p; we match that).
@@ -169,6 +176,19 @@ mod tests {
         assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-12);
         assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-12);
         assert_eq!(cosine(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn coupling_cost_is_a_uniform_entry_point() {
+        let mut rng = Rng::new(3);
+        let mut x = Mat::zeros(12, 2);
+        let mut y = Mat::zeros(12, 2);
+        rng.fill_normal(&mut x.data);
+        rng.fill_normal(&mut y.data);
+        let perm = rng.permutation(12);
+        let want = bijection_cost(&x, &y, &perm, CostKind::SqEuclidean);
+        let cpl = crate::api::Coupling::Bijection(perm);
+        assert_eq!(coupling_cost(&x, &y, &cpl, CostKind::SqEuclidean), want);
     }
 
     #[test]

@@ -19,17 +19,28 @@
 //! padding: phantom rows get log-mass `NEG` (they receive exactly zero
 //! coupling mass — see `python/tests/test_model.py`) and factor columns
 //! are zero-padded (exact for inner products).
+//!
+//! **Feature gating:** the `xla` crate only exists in artifact-enabled
+//! environments, so all execution paths live behind the `pjrt` cargo
+//! feature.  The default build compiles a stub whose [`PjrtEngine::load`]
+//! fails with a descriptive [`SolveError::Backend`]; `BackendKind::Auto`
+//! then degrades to the native LROT solver, and `BackendKind::Pjrt`
+//! surfaces a typed error at align time.
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Mutex};
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::api::SolveError;
 use crate::linalg::Mat;
-use crate::prng::Rng;
-use crate::solvers::lrot::NEG;
+
+/// Runtime failures are [`SolveError::Backend`] — one typed error enum
+/// across the whole solver stack.
+pub type Result<T> = std::result::Result<T, SolveError>;
+
+fn rerr(msg: impl Into<String>) -> SolveError {
+    SolveError::Backend(msg.into())
+}
 
 /// One AOT bucket from the manifest.
 #[derive(Clone, Debug)]
@@ -44,6 +55,7 @@ pub struct BucketSpec {
     pub path: PathBuf,
 }
 
+#[allow(dead_code)] // Lrot is only constructed by the pjrt-gated submit path
 enum Request {
     Lrot {
         bucket: usize,
@@ -62,47 +74,81 @@ pub struct PjrtEngine {
     executions: AtomicUsize,
 }
 
+/// Parse `manifest.tsv` in `dir` into bucket specs without starting any
+/// execution backend — works in stub builds too (CLI `buckets`, reports).
+pub fn load_manifest(dir: &Path) -> Result<Vec<BucketSpec>> {
+    parse_manifest(dir)
+}
+
+/// Parse `manifest.tsv` in `dir` into bucket specs.
+fn parse_manifest(dir: &Path) -> Result<Vec<BucketSpec>> {
+    let manifest = dir.join("manifest.tsv");
+    let text = std::fs::read_to_string(&manifest)
+        .map_err(|e| rerr(format!("reading {}: {e}", manifest.display())))?;
+    fn field<T: std::str::FromStr>(cols: &[&str], idx: usize, ln: usize) -> Result<T> {
+        cols[idx]
+            .parse::<T>()
+            .map_err(|_| rerr(format!("manifest line {ln}: bad field {:?}", cols[idx])))
+    }
+    let mut buckets = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let cols: Vec<&str> = line.split('\t').collect();
+        if cols.len() != 8 {
+            return Err(rerr(format!("manifest line {} malformed: {line}", ln + 1)));
+        }
+        buckets.push(BucketSpec {
+            s: field(&cols, 0, ln + 1)?,
+            r: field(&cols, 1, ln + 1)?,
+            k: field(&cols, 2, ln + 1)?,
+            outer: field(&cols, 3, ln + 1)?,
+            inner: field(&cols, 4, ln + 1)?,
+            gamma: field(&cols, 5, ln + 1)?,
+            tau: field(&cols, 6, ln + 1)?,
+            path: dir.join(cols[7]),
+        });
+    }
+    if buckets.is_empty() {
+        return Err(rerr(format!("manifest {} lists no buckets", manifest.display())));
+    }
+    Ok(buckets)
+}
+
 impl PjrtEngine {
     /// Parse `manifest.tsv` in `dir` and start the service thread.
     /// Executables compile lazily on first use of each bucket.
+    ///
+    /// Without the `pjrt` feature this always fails (the stub runtime has
+    /// nothing to execute artifacts with); `BackendKind::Auto` callers
+    /// degrade to the native solver.
     pub fn load(dir: &Path) -> Result<PjrtEngine> {
-        let manifest = dir.join("manifest.tsv");
-        let text = std::fs::read_to_string(&manifest)
-            .with_context(|| format!("reading {}", manifest.display()))?;
-        let mut buckets = Vec::new();
-        for (ln, line) in text.lines().enumerate() {
-            if line.trim().is_empty() {
-                continue;
-            }
-            let cols: Vec<&str> = line.split('\t').collect();
-            if cols.len() != 8 {
-                bail!("manifest line {} malformed: {line}", ln + 1);
-            }
-            buckets.push(BucketSpec {
-                s: cols[0].parse()?,
-                r: cols[1].parse()?,
-                k: cols[2].parse()?,
-                outer: cols[3].parse()?,
-                inner: cols[4].parse()?,
-                gamma: cols[5].parse()?,
-                tau: cols[6].parse()?,
-                path: dir.join(cols[7]),
-            });
+        let buckets = parse_manifest(dir)?;
+        #[cfg(not(feature = "pjrt"))]
+        {
+            return Err(rerr(format!(
+                "built without the `pjrt` feature: cannot execute the {} artifact bucket(s) in {} \
+                 (rebuild with `--features pjrt` and the `xla` dependency)",
+                buckets.len(),
+                dir.display()
+            )));
         }
-        if buckets.is_empty() {
-            bail!("manifest {} lists no buckets", manifest.display());
+        #[cfg(feature = "pjrt")]
+        {
+            let specs = buckets.clone();
+            let (tx, rx) = mpsc::channel::<Request>();
+            let worker = std::thread::Builder::new()
+                .name("pjrt-service".into())
+                .spawn(move || service_loop(specs, rx))
+                .map_err(|e| rerr(format!("spawning pjrt service thread: {e}")))?;
+            Ok(PjrtEngine {
+                buckets,
+                tx: Mutex::new(tx),
+                worker: Mutex::new(Some(worker)),
+                executions: AtomicUsize::new(0),
+            })
         }
-        let specs = buckets.clone();
-        let (tx, rx) = mpsc::channel::<Request>();
-        let worker = std::thread::Builder::new()
-            .name("pjrt-service".into())
-            .spawn(move || service_loop(specs, rx))?;
-        Ok(PjrtEngine {
-            buckets,
-            tx: Mutex::new(tx),
-            worker: Mutex::new(Some(worker)),
-            executions: AtomicUsize::new(0),
-        })
     }
 
     /// All buckets (for CLI/report introspection).
@@ -131,7 +177,8 @@ impl PjrtEngine {
 
     /// Solve an LROT sub-problem on the AOT path.  `u`/`v` are the cost
     /// factors restricted to this co-cluster (`active_x`/`active_y` rows).
-    /// Returns `Ok(None)` when no bucket fits.
+    /// Returns `Ok(None)` when no bucket fits (always, in stub builds).
+    #[cfg_attr(not(feature = "pjrt"), allow(unused_variables))]
     pub fn lrot(
         &self,
         u: &Mat,
@@ -142,60 +189,68 @@ impl PjrtEngine {
         seed: u64,
     ) -> Result<Option<(Mat, Mat)>> {
         debug_assert_eq!(u.cols, v.cols);
-        let active = active_x.max(active_y);
-        let Some(bi) = self.find_bucket(active, rank, u.cols) else {
-            return Ok(None);
-        };
-        let b = &self.buckets[bi];
-        let (s, k, r) = (b.s, b.k, b.r);
-
-        // --- pad inputs into bucket shape --------------------------------
-        let pad_mat = |m: &Mat, rows: usize| -> Vec<f32> {
-            let mut out = vec![0.0f32; s * k];
-            for i in 0..rows {
-                out[i * k..i * k + m.cols].copy_from_slice(m.row(i));
-            }
-            out
-        };
-        let log_marg = |active: usize| -> Vec<f32> {
-            let la = -(active as f32).ln();
-            (0..s).map(|i| if i < active { la } else { NEG }).collect()
-        };
-        let mut rng = Rng::new(seed ^ 0xA07);
-        let mut noise_q = vec![0.0f32; s * r];
-        let mut noise_r = vec![0.0f32; s * r];
-        rng.fill_normal(&mut noise_q);
-        rng.fill_normal(&mut noise_r);
-
-        let inputs = vec![
-            pad_mat(u, active_x),
-            pad_mat(v, active_y),
-            log_marg(active_x),
-            log_marg(active_y),
-            noise_q,
-            noise_r,
-        ];
-
-        let (reply_tx, reply_rx) = mpsc::channel();
+        #[cfg(not(feature = "pjrt"))]
         {
-            let tx = self.tx.lock().unwrap();
-            tx.send(Request::Lrot { bucket: bi, inputs, reply: reply_tx })
-                .map_err(|_| anyhow!("pjrt service thread died"))?;
+            return Ok(None);
         }
-        let (qf, rf) = reply_rx
-            .recv()
-            .map_err(|_| anyhow!("pjrt service dropped reply"))??;
-        self.executions.fetch_add(1, Ordering::Relaxed);
+        #[cfg(feature = "pjrt")]
+        {
+            let active = active_x.max(active_y);
+            let Some(bi) = self.find_bucket(active, rank, u.cols) else {
+                return Ok(None);
+            };
+            let b = &self.buckets[bi];
+            let (s, k, r) = (b.s, b.k, b.r);
 
-        // --- trim to active rows ------------------------------------------
-        let trim = |flat: Vec<f32>, rows: usize| -> Mat {
-            let mut m = Mat::zeros(rows, r);
-            for i in 0..rows {
-                m.row_mut(i).copy_from_slice(&flat[i * r..(i + 1) * r]);
+            // --- pad inputs into bucket shape --------------------------------
+            let pad_mat = |m: &Mat, rows: usize| -> Vec<f32> {
+                let mut out = vec![0.0f32; s * k];
+                for i in 0..rows {
+                    out[i * k..i * k + m.cols].copy_from_slice(m.row(i));
+                }
+                out
+            };
+            let neg = crate::solvers::lrot::NEG;
+            let log_marg = |active: usize| -> Vec<f32> {
+                let la = -(active as f32).ln();
+                (0..s).map(|i| if i < active { la } else { neg }).collect()
+            };
+            let mut rng = crate::prng::Rng::new(seed ^ 0xA07);
+            let mut noise_q = vec![0.0f32; s * r];
+            let mut noise_r = vec![0.0f32; s * r];
+            rng.fill_normal(&mut noise_q);
+            rng.fill_normal(&mut noise_r);
+
+            let inputs = vec![
+                pad_mat(u, active_x),
+                pad_mat(v, active_y),
+                log_marg(active_x),
+                log_marg(active_y),
+                noise_q,
+                noise_r,
+            ];
+
+            let (reply_tx, reply_rx) = mpsc::channel();
+            {
+                let tx = self.tx.lock().unwrap();
+                tx.send(Request::Lrot { bucket: bi, inputs, reply: reply_tx })
+                    .map_err(|_| rerr("pjrt service thread died"))?;
             }
-            m
-        };
-        Ok(Some((trim(qf, active_x), trim(rf, active_y))))
+            let (qf, rf) = reply_rx
+                .recv()
+                .map_err(|_| rerr("pjrt service dropped reply"))??;
+            self.executions.fetch_add(1, Ordering::Relaxed);
+
+            // --- trim to active rows ------------------------------------------
+            let trim = |flat: Vec<f32>, rows: usize| -> Mat {
+                let mut m = Mat::zeros(rows, r);
+                for i in 0..rows {
+                    m.row_mut(i).copy_from_slice(&flat[i * r..(i + 1) * r]);
+                }
+                m
+            };
+            Ok(Some((trim(qf, active_x), trim(rf, active_y))))
+        }
     }
 }
 
@@ -212,6 +267,7 @@ impl Drop for PjrtEngine {
 
 /// The service loop owns the (non-Send) PJRT client and compiled
 /// executables; it runs until `Shutdown` or channel closure.
+#[cfg(feature = "pjrt")]
 fn service_loop(specs: Vec<BucketSpec>, rx: mpsc::Receiver<Request>) {
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => c,
@@ -219,13 +275,14 @@ fn service_loop(specs: Vec<BucketSpec>, rx: mpsc::Receiver<Request>) {
             // Drain requests with errors so callers fall back to native.
             for req in rx.iter() {
                 if let Request::Lrot { reply, .. } = req {
-                    let _ = reply.send(Err(anyhow!("PJRT client failed: {e}")));
+                    let _ = reply.send(Err(rerr(format!("PJRT client failed: {e}"))));
                 }
             }
             return;
         }
     };
-    let mut compiled: HashMap<usize, xla::PjRtLoadedExecutable> = HashMap::new();
+    let mut compiled: std::collections::HashMap<usize, xla::PjRtLoadedExecutable> =
+        std::collections::HashMap::new();
 
     for req in rx.iter() {
         match req {
@@ -238,10 +295,11 @@ fn service_loop(specs: Vec<BucketSpec>, rx: mpsc::Receiver<Request>) {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn serve_one(
     client: &xla::PjRtClient,
     specs: &[BucketSpec],
-    compiled: &mut HashMap<usize, xla::PjRtLoadedExecutable>,
+    compiled: &mut std::collections::HashMap<usize, xla::PjRtLoadedExecutable>,
     bucket: usize,
     inputs: Vec<Vec<f32>>,
 ) -> Result<(Vec<f32>, Vec<f32>)> {
@@ -250,13 +308,13 @@ fn serve_one(
         let path = spec
             .path
             .to_str()
-            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+            .ok_or_else(|| rerr("non-utf8 artifact path"))?;
         let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow!("parsing {path}: {e}"))?;
+            .map_err(|e| rerr(format!("parsing {path}: {e}")))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = client
             .compile(&comp)
-            .map_err(|e| anyhow!("compiling {path}: {e}"))?;
+            .map_err(|e| rerr(format!("compiling {path}: {e}")))?;
         compiled.insert(bucket, exe);
     }
     let exe = compiled.get(&bucket).unwrap();
@@ -271,20 +329,20 @@ fn serve_one(
             lit // 1-D parameter: keep vector shape
         } else {
             lit.reshape(&[shape[0], shape[1]])
-                .map_err(|e| anyhow!("reshape: {e}"))?
+                .map_err(|e| rerr(format!("reshape: {e}")))?
         };
         literals.push(lit);
     }
     let result = exe
         .execute::<xla::Literal>(&literals)
-        .map_err(|e| anyhow!("execute: {e}"))?[0][0]
+        .map_err(|e| rerr(format!("execute: {e}")))?[0][0]
         .to_literal_sync()
-        .map_err(|e| anyhow!("to_literal: {e}"))?;
+        .map_err(|e| rerr(format!("to_literal: {e}")))?;
     let (ql, rl) = result
         .to_tuple2()
-        .map_err(|e| anyhow!("expected 2-tuple output: {e}"))?;
-    let qf = ql.to_vec::<f32>().map_err(|e| anyhow!("q to_vec: {e}"))?;
-    let rf = rl.to_vec::<f32>().map_err(|e| anyhow!("r to_vec: {e}"))?;
+        .map_err(|e| rerr(format!("expected 2-tuple output: {e}")))?;
+    let qf = ql.to_vec::<f32>().map_err(|e| rerr(format!("q to_vec: {e}")))?;
+    let rf = rl.to_vec::<f32>().map_err(|e| rerr(format!("r to_vec: {e}")))?;
     Ok((qf, rf))
 }
 
@@ -312,5 +370,11 @@ mod tests {
         assert_eq!(engine.find_bucket(10, 8, 4), None);
         // width larger than bucket rejected
         assert_eq!(engine.find_bucket(300, 2, 64), None);
+    }
+
+    #[test]
+    fn missing_manifest_is_a_typed_error() {
+        let err = PjrtEngine::load(Path::new("definitely/not/a/dir")).unwrap_err();
+        assert!(err.to_string().contains("manifest.tsv"), "{err}");
     }
 }

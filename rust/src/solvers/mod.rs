@@ -1,14 +1,19 @@
 //! Optimal-transport solvers: the native LROT sub-solver HiRef uses as a
 //! fallback backend, plus every baseline the paper benchmarks against.
 //!
-//! | Solver | Paper reference | Role |
-//! |---|---|---|
-//! | [`lrot`] | Scetbon et al. 2021 / Halmos et al. 2024 (FRLC) | HiRef sub-problem + LOT/FRLC baselines |
-//! | [`sinkhorn`] | Cuturi 2013 (+ ε-schedule, Chen et al. 2023) | full-rank baseline |
-//! | [`progot`] | Kassraie et al. 2024 | progressive entropic baseline |
-//! | [`minibatch`] | Genevay et al. 2018; Fatras et al. 2020/21 | mini-batch baseline |
-//! | [`exact`] | Kuhn 1955 (Hungarian) / Bertsekas (auction) | optimal assignment; base case + "dual simplex" stand-in |
-//! | [`mop`] | Gerber & Maggioni 2017 | multiscale OT baseline (MOP) |
+//! Every module here is also reachable through the unified
+//! [`crate::api::TransportSolver`] interface under its registry name
+//! (middle column) — prefer that for new code; the raw functions remain
+//! the low-level entry points.
+//!
+//! | Solver | Registry name | Paper reference | Role |
+//! |---|---|---|---|
+//! | [`lrot`] | `lrot` | Scetbon et al. 2021 / Halmos et al. 2024 (FRLC) | HiRef sub-problem + LOT/FRLC baselines |
+//! | [`sinkhorn`] | `sinkhorn` | Cuturi 2013 (+ ε-schedule, Chen et al. 2023) | full-rank baseline |
+//! | [`progot`] | `progot` | Kassraie et al. 2024 | progressive entropic baseline |
+//! | [`minibatch`] | `minibatch` | Genevay et al. 2018; Fatras et al. 2020/21 | mini-batch baseline |
+//! | [`exact`] | `exact` | Kuhn 1955 (Hungarian) / Bertsekas (auction) | optimal assignment; base case + "dual simplex" stand-in |
+//! | [`mop`] | `mop` | Gerber & Maggioni 2017 | multiscale OT baseline (MOP) |
 
 pub mod exact;
 pub mod lrot;

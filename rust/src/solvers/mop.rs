@@ -11,6 +11,7 @@
 //! stays linear — and, as the paper reports, the locality of the
 //! propagation costs accuracy (MOP trails the other methods in Table S4).
 
+use crate::api::coupling::SparseCoupling;
 use crate::costs::CostKind;
 use crate::linalg::Mat;
 
@@ -110,14 +111,14 @@ fn normalize(v: &mut [f32]) {
     }
 }
 
-/// Sparse coupling entry at some scale: (x-cluster, y-cluster, mass).
-type SparseCoupling = Vec<(usize, usize, f64)>;
+/// Intermediate plan at some scale: (x-cluster, y-cluster, mass).
+type ClusterPlan = Vec<(usize, usize, f64)>;
 
 /// Run MOP between `x` and `y` (equal sizes, uniform weights).
 /// Returns a bijection obtained by rounding the finest-scale coupling.
 pub fn solve(x: &Mat, y: &Mat, kind: CostKind) -> Vec<u32> {
-    let (entries, _) = solve_sparse(x, y, kind);
-    round_bijection(x.rows, &entries)
+    let (sc, _) = solve_sparse(x, y, kind);
+    round_sparse_to_bijection(&sc)
 }
 
 /// Run MOP and return the finest-scale sparse coupling plus its primal
@@ -130,7 +131,7 @@ pub fn solve_sparse(x: &Mat, y: &Mat, kind: CostKind) -> (SparseCoupling, f64) {
     let depth = tx.levels.len().min(ty.levels.len());
 
     // coarsest scale: single pair with all the mass
-    let mut plan: SparseCoupling = vec![(0, 0, 1.0)];
+    let mut plan: ClusterPlan = vec![(0, 0, 1.0)];
     for lvl in 1..depth {
         let px = &tx.levels[lvl - 1];
         let py = &ty.levels[lvl - 1];
@@ -155,7 +156,7 @@ pub fn solve_sparse(x: &Mat, y: &Mat, kind: CostKind) -> (SparseCoupling, f64) {
         let mx = child_map(px, cx);
         let my = child_map(py, cy);
 
-        let mut next: SparseCoupling = Vec::with_capacity(plan.len() * 2);
+        let mut next: ClusterPlan = Vec::with_capacity(plan.len() * 2);
         for &(qx, qy, mass) in &plan {
             let xc = &mx[qx];
             let yc = &my[qy];
@@ -209,26 +210,30 @@ pub fn solve_sparse(x: &Mat, y: &Mat, kind: CostKind) -> (SparseCoupling, f64) {
     // finest scale: clusters are singletons; translate to point indices
     let leaves_x = &tx.levels[depth - 1];
     let leaves_y = &ty.levels[depth - 1];
-    let mut entries: SparseCoupling = Vec::with_capacity(plan.len());
+    let mut entries: Vec<(u32, u32, f64)> = Vec::with_capacity(plan.len());
     let mut total_cost = 0.0f64;
     for &(qx, qy, mass) in &plan {
-        let i = leaves_x[qx][0] as usize;
-        let j = leaves_y[qy][0] as usize;
-        total_cost += mass * kind.pair(x.row(i), y.row(j));
+        let i = leaves_x[qx][0];
+        let j = leaves_y[qy][0];
+        total_cost += mass * kind.pair(x.row(i as usize), y.row(j as usize));
         entries.push((i, j, mass));
     }
-    (entries, total_cost)
+    (SparseCoupling { n, m: n, entries }, total_cost)
 }
 
 /// Round a sparse coupling to a bijection: take entries by decreasing
 /// mass, then pair any leftovers greedily.
-fn round_bijection(n: usize, entries: &SparseCoupling) -> Vec<u32> {
+pub fn round_sparse_to_bijection(sc: &SparseCoupling) -> Vec<u32> {
+    assert_eq!(sc.n, sc.m, "bijection rounding needs a square coupling");
+    let n = sc.n;
+    let entries = &sc.entries;
     let mut order: Vec<usize> = (0..entries.len()).collect();
     order.sort_by(|&a, &b| entries[b].2.partial_cmp(&entries[a].2).unwrap());
     let mut perm = vec![u32::MAX; n];
     let mut used = vec![false; n];
     for &e in &order {
         let (i, j, _) = entries[e];
+        let (i, j) = (i as usize, j as usize);
         if perm[i] == u32::MAX && !used[j] {
             perm[i] = j as u32;
             used[j] = true;
@@ -305,9 +310,9 @@ mod tests {
     #[test]
     fn mass_conserved_at_finest_scale() {
         let (x, y) = toy(40, 3);
-        let (entries, _) = solve_sparse(&x, &y, CostKind::SqEuclidean);
-        let total: f64 = entries.iter().map(|e| e.2).sum();
-        assert!((total - 1.0).abs() < 1e-9, "total {total}");
+        let (sc, _) = solve_sparse(&x, &y, CostKind::SqEuclidean);
+        assert_eq!((sc.n, sc.m), (40, 40));
+        assert!((sc.total_mass() - 1.0).abs() < 1e-9, "total {}", sc.total_mass());
     }
 
     #[test]

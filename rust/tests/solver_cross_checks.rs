@@ -1,12 +1,16 @@
 //! Cross-solver consistency checks: every solver pair that should agree
-//! (or should be ordered) on small instances, checked on real generators.
+//! (or should be ordered) on small instances, checked on real generators —
+//! plus the registry cross-check: every solver reachable by name through
+//! the uniform `TransportSolver` interface, with `Coupling::cost` agreeing
+//! with the legacy per-representation cost paths.
 
+use hiref::api::{Coupling, SolverRegistry, TransportProblem, TransportSolver, SOLVER_NAMES};
 use hiref::coordinator::hiref::{BackendKind, HiRef, HiRefConfig};
-use hiref::costs::{dense_cost, CostKind};
-use hiref::data::synthetic::Synthetic;
+use hiref::costs::{self, dense_cost, CostKind};
+use hiref::data::synthetic::{self, Synthetic};
 use hiref::linalg::Mat;
 use hiref::metrics;
-use hiref::solvers::{exact, minibatch, mop, progot, sinkhorn};
+use hiref::solvers::{exact, lrot, minibatch, mop, progot, sinkhorn};
 
 fn native() -> HiRefConfig {
     HiRefConfig { backend: BackendKind::Native, base_size: 64, ..Default::default() }
@@ -45,6 +49,89 @@ fn solver_ordering_on_all_synthetic_datasets() {
             "{}: MOP {mop_cost} beat HiRef {hiref_cost}",
             ds.label()
         );
+    }
+}
+
+/// The acceptance check for the unified API: every registered solver runs
+/// on a small `half_moon_s_curve` instance through the uniform interface,
+/// and the uniform `Coupling::cost` agrees with the legacy cost path of
+/// that solver's native representation to ≤ 1e-6 relative error.
+#[test]
+fn solver_registry_uniform_interface_cross_check() {
+    let n = 128;
+    let (x, y) = synthetic::half_moon_s_curve(n, 17);
+    let kind = CostKind::SqEuclidean;
+    let prob = TransportProblem::new(&x, &y, kind).with_seed(5);
+    let reg = SolverRegistry::with_defaults();
+
+    // the registry covers HiRef plus every module in rust/src/solvers/
+    let names = reg.names();
+    for want in SOLVER_NAMES {
+        assert!(names.contains(&want), "registry missing {want}");
+    }
+
+    for name in &names {
+        let solver = reg.get(name).unwrap();
+        let solved = solver.solve(&prob).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(solved.stats.solver, *name);
+
+        let got = metrics::coupling_cost(&x, &y, &solved.coupling, kind);
+        let want = match &solved.coupling {
+            Coupling::Bijection(perm) => metrics::bijection_cost(&x, &y, perm, kind),
+            Coupling::Dense(p) => metrics::dense_cost_of(&dense_cost(&x, &y, kind), p),
+            Coupling::LowRank { q, r, .. } => {
+                // legacy path: factored cost with the uniform inner marginal
+                let (u, v) = costs::factors_for(&x, &y, kind, 32, prob.seed);
+                lrot::lowrank_cost(&u, &v, q, r)
+            }
+            Coupling::Sparse(sc) => {
+                // legacy path: mop::solve_sparse's own cost accumulator
+                let (sc2, legacy_cost) = mop::solve_sparse(&x, &y, kind);
+                assert_eq!(sc, &sc2, "{name}: sparse plan not reproducible");
+                legacy_cost
+            }
+        };
+        let rel = (got - want).abs() / want.abs().max(1e-12);
+        assert!(rel <= 1e-6, "{name}: uniform cost {got} vs legacy {want} (rel {rel:.2e})");
+
+        // uniform structural invariants
+        assert!(got.is_finite() && got >= 0.0, "{name}: cost {got}");
+        assert!(
+            solved.coupling.marginal_error() < 0.05,
+            "{name}: marginal error {}",
+            solved.coupling.marginal_error()
+        );
+        assert_eq!(solved.coupling.shape(), (n, n), "{name}");
+        let perm = solved.coupling.to_bijection().unwrap_or_else(|e| panic!("{name}: {e}"));
+        let mut seen = vec![false; n];
+        for &j in &perm {
+            assert!(
+                !std::mem::replace(&mut seen[j as usize], true),
+                "{name}: rounded map is not a bijection"
+            );
+        }
+    }
+}
+
+#[test]
+fn registry_solvers_respect_precomputed_cost() {
+    // dense solvers accept a shared precomputed cost matrix and agree with
+    // the from-points path bitwise (same matrix, same sweep sequence)
+    let (x, y) = synthetic::half_moon_s_curve(64, 3);
+    let kind = CostKind::SqEuclidean;
+    let c = dense_cost(&x, &y, kind);
+    let reg = SolverRegistry::with_defaults();
+    for name in ["sinkhorn", "exact"] {
+        let solver = reg.get(name).unwrap();
+        let from_points = solver
+            .solve(&TransportProblem::new(&x, &y, kind))
+            .unwrap();
+        let from_cost = solver
+            .solve(&TransportProblem::new(&x, &y, kind).with_cost(&c))
+            .unwrap();
+        let a = metrics::coupling_cost(&x, &y, &from_points.coupling, kind);
+        let b = metrics::coupling_cost(&x, &y, &from_cost.coupling, kind);
+        assert_eq!(a, b, "{name}: precomputed cost changed the result");
     }
 }
 
