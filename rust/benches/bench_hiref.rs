@@ -1,0 +1,94 @@
+//! Perf-trajectory profile: run HiRef end-to-end and emit
+//! `BENCH_hiref.json` so the repo's performance history is recorded run
+//! over run (wall time, LROT/base call counts, peak scratch-arena bytes,
+//! arena hit rate).  CI runs this at small `n` as an advisory step; set
+//! `HIREF_BENCH_N` (and optionally `HIREF_THREADS`) to profile bigger
+//! instances locally, e.g.
+//!
+//! ```sh
+//! HIREF_BENCH_N=262144 cargo bench --bench bench_hiref
+//! ```
+
+use hiref::coordinator::annealing;
+use hiref::coordinator::hiref::{BackendKind, HiRef, HiRefConfig};
+use hiref::costs::CostKind;
+use hiref::data::synthetic;
+use hiref::metrics::human_bytes;
+use hiref::pool;
+use hiref::report::{section, timed};
+
+fn main() {
+    let n: usize = std::env::var("HIREF_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(16384);
+    let threads = pool::default_threads();
+    section(&format!("bench_hiref — n = {n}, threads = {threads}"));
+
+    let (x, y) = synthetic::half_moon_s_curve(n, 0);
+    let cfg = HiRefConfig { backend: BackendKind::Auto, threads, ..Default::default() };
+    let solver = HiRef::new(cfg);
+
+    // one warm-up solve (page-faults, lazy artifact compilation), then the
+    // measured run
+    let _ = solver.align(&x, &y).expect("warm-up align");
+    let (out, secs) = timed(|| solver.align(&x, &y));
+    let out = out.expect("align");
+    assert!(out.is_bijection(), "bench output must be a bijection");
+    let cost = out.cost(&x, &y, CostKind::SqEuclidean);
+    let rs = &out.stats;
+    let leaf = annealing::level_block_size(n, &out.schedule, out.schedule.len());
+    let elapsed_ms = secs * 1e3;
+
+    println!("elapsed         = {elapsed_ms:.1} ms");
+    println!("primal W2² cost = {cost:.4}");
+    println!("schedule        = {:?} (max leaf block {leaf})", out.schedule);
+    println!(
+        "lrot calls      = {} ({} pjrt, {} native), base blocks = {}",
+        rs.lrot_calls, rs.pjrt_calls, rs.native_calls, rs.base_calls
+    );
+    println!(
+        "scratch peak    = {} (hit rate {:.1}%)",
+        human_bytes(rs.peak_scratch_bytes),
+        rs.arena_hit_rate() * 100.0
+    );
+
+    // hand-rolled JSON (the vendored universe has no serde)
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"hiref\",\n",
+            "  \"n\": {},\n",
+            "  \"threads\": {},\n",
+            "  \"elapsed_ms\": {:.3},\n",
+            "  \"primal_cost_w2sq\": {:.6},\n",
+            "  \"schedule\": {:?},\n",
+            "  \"max_leaf_block\": {},\n",
+            "  \"lrot_calls\": {},\n",
+            "  \"pjrt_calls\": {},\n",
+            "  \"native_calls\": {},\n",
+            "  \"base_calls\": {},\n",
+            "  \"peak_arena_bytes\": {},\n",
+            "  \"arena_hits\": {},\n",
+            "  \"arena_misses\": {},\n",
+            "  \"arena_hit_rate\": {:.4}\n",
+            "}}\n"
+        ),
+        n,
+        threads,
+        elapsed_ms,
+        cost,
+        out.schedule,
+        leaf,
+        rs.lrot_calls,
+        rs.pjrt_calls,
+        rs.native_calls,
+        rs.base_calls,
+        rs.peak_scratch_bytes,
+        rs.arena_hits,
+        rs.arena_misses,
+        rs.arena_hit_rate(),
+    );
+    std::fs::write("BENCH_hiref.json", &json).expect("writing BENCH_hiref.json");
+    println!("\nwrote BENCH_hiref.json");
+}

@@ -24,6 +24,11 @@ pub enum SolveError {
     UnknownSolver { name: String, known: Vec<String> },
     /// A backend (e.g. the PJRT runtime) is unavailable or failed.
     Backend(String),
+    /// The refinement recursion finished without pairing every point — a
+    /// solver-internal invariant violation (balanced splits must partition
+    /// both sides), surfaced as a typed error instead of a silent
+    /// `u32::MAX` entry in the output permutation.
+    IncompleteAssignment { n: usize, unassigned: usize },
 }
 
 impl fmt::Display for SolveError {
@@ -44,6 +49,13 @@ impl fmt::Display for SolveError {
                 write!(f, "unknown solver '{name}' (valid solvers: {})", known.join(", "))
             }
             SolveError::Backend(msg) => write!(f, "backend error: {msg}"),
+            SolveError::IncompleteAssignment { n, unassigned } => {
+                write!(
+                    f,
+                    "refinement left {unassigned} of {n} points unassigned \
+                     (internal invariant violation — please report)"
+                )
+            }
         }
     }
 }
@@ -69,5 +81,12 @@ mod tests {
     fn display_shape_mismatch() {
         let e = SolveError::ShapeMismatch { n: 3, m: 5 };
         assert!(e.to_string().contains("3 vs 5"));
+    }
+
+    #[test]
+    fn display_incomplete_assignment() {
+        let e = SolveError::IncompleteAssignment { n: 100, unassigned: 3 };
+        let msg = e.to_string();
+        assert!(msg.contains("3 of 100"), "{msg}");
     }
 }

@@ -98,6 +98,16 @@ pub struct SolveStats {
     pub hiref: Option<RunStats>,
 }
 
+impl SolveStats {
+    /// Peak scratch-arena bytes of a HiRef solve — the transient term of
+    /// its memory model (linear in `n` at the top of the hierarchy,
+    /// `O(threads · base_size²)` at the leaves); 0 for solvers without an
+    /// arena.
+    pub fn peak_scratch_bytes(&self) -> usize {
+        self.hiref.as_ref().map_or(0, |rs| rs.peak_scratch_bytes)
+    }
+}
+
 /// A coupling plus how it was obtained.
 #[derive(Clone, Debug)]
 pub struct Solved {

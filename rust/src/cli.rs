@@ -254,6 +254,11 @@ fn cmd_align(flags: &Flags) -> Result<()> {
             rs.lrot_calls, rs.pjrt_calls, rs.native_calls
         );
         println!("base blocks   = {}", rs.base_calls);
+        println!(
+            "scratch peak  = {} (arena hit rate {:.1}%)",
+            metrics::human_bytes(rs.peak_scratch_bytes),
+            rs.arena_hit_rate() * 100.0
+        );
     }
     println!("elapsed       = {:.3}s", solved.stats.elapsed.as_secs_f64());
     Ok(())

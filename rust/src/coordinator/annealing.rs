@@ -121,6 +121,20 @@ pub fn schedule_cost(schedule: &[usize]) -> usize {
     effective_ranks(schedule).iter().sum()
 }
 
+/// Upper bound on the size of any single co-cluster *entering* scale
+/// `level` (level 0 = the root block of n points).  Splits are ±1-balanced
+/// (`assign::capacities`), so the ceil-division chain over the schedule
+/// prefix bounds every block.  Used to size scratch-arena expectations and
+/// report the base-case block size in perf profiles: the deepest level's
+/// value is the largest block the exact solver ever sees.
+pub fn level_block_size(n: usize, schedule: &[usize], level: usize) -> usize {
+    let mut size = n;
+    for &r in schedule.iter().take(level) {
+        size = size.div_ceil(r);
+    }
+    size
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -217,5 +231,16 @@ mod tests {
     fn effective_ranks_partial_products() {
         assert_eq!(effective_ranks(&[2, 8, 16]), vec![2, 16, 256]);
         assert_eq!(schedule_cost(&[2, 8, 16]), 274);
+    }
+
+    #[test]
+    fn level_block_size_is_ceil_chain() {
+        assert_eq!(level_block_size(1000, &[4, 4], 0), 1000);
+        assert_eq!(level_block_size(1000, &[4, 4], 1), 250);
+        assert_eq!(level_block_size(1000, &[4, 4], 2), 63);
+        // deepest level is bounded by the base capacity the DP targeted
+        let n = 113_350;
+        let sched = optimal_rank_schedule(n, 1024, 16, None);
+        assert!(level_block_size(n, &sched, sched.len()) <= 1024);
     }
 }

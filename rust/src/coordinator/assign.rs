@@ -15,7 +15,7 @@
 //! room — the standard greedy that is exact when the factor is already a
 //! balanced partition.
 
-use crate::linalg::Mat;
+use crate::linalg::MatView;
 
 /// Exact child capacities for splitting `active` points into `r` parts:
 /// sizes differ by ≤ 1 and are deterministic (first `active % r` clusters
@@ -26,9 +26,25 @@ pub fn capacities(active: usize, r: usize) -> Vec<usize> {
     (0..r).map(|z| base + usize::from(z < rem)).collect()
 }
 
+/// Exclusive prefix sums of `caps`: `offsets[z]` is where cluster `z`'s
+/// contiguous range starts after the in-place reorder (the range-based
+/// layout of `coordinator::hiref` — child `z` occupies
+/// `offsets[z]..offsets[z] + caps[z]` within its parent's range).
+pub fn cluster_offsets(caps: &[usize]) -> Vec<usize> {
+    let mut out = Vec::with_capacity(caps.len());
+    let mut acc = 0usize;
+    for &c in caps {
+        out.push(acc);
+        acc += c;
+    }
+    out
+}
+
 /// Assign each of the first `active` rows of factor `m` (s×r) to one of
-/// `r` clusters under [`capacities`].  Returns per-point labels.
-pub fn balanced_assign(m: &Mat, active: usize) -> Vec<u32> {
+/// `r` clusters under [`capacities`].  Returns per-point labels.  Accepts
+/// `&Mat` or a borrowed [`MatView`] (the factors are read, never copied).
+pub fn balanced_assign<'a>(m: impl Into<MatView<'a>>, active: usize) -> Vec<u32> {
+    let m = m.into();
     let r = m.cols;
     let caps = capacities(active, r);
     let mut remaining = caps;
@@ -69,7 +85,9 @@ pub fn balanced_assign(m: &Mat, active: usize) -> Vec<u32> {
 }
 
 /// Split an index set by labels into `r` child index sets (preserving the
-/// original global indices).
+/// original global indices).  Retained for callers that materialise index
+/// sets (diagnostics, tests); the refinement engine itself reorders its
+/// contiguous ranges in place instead (see `coordinator::hiref`).
 pub fn split_by_labels(indices: &[u32], labels: &[u32], r: usize) -> Vec<Vec<u32>> {
     debug_assert_eq!(indices.len(), labels.len());
     let mut out: Vec<Vec<u32>> = (0..r).map(|_| Vec::new()).collect();
@@ -82,7 +100,29 @@ pub fn split_by_labels(indices: &[u32], labels: &[u32], r: usize) -> Vec<Vec<u32
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Mat;
     use crate::prng::Rng;
+
+    #[test]
+    fn offsets_are_exclusive_prefix_sums() {
+        assert_eq!(cluster_offsets(&[3, 2, 4]), vec![0, 3, 5]);
+        assert_eq!(cluster_offsets(&[]), Vec::<usize>::new());
+        let caps = capacities(101, 4);
+        let offs = cluster_offsets(&caps);
+        assert_eq!(offs.last().unwrap() + caps.last().unwrap(), 101);
+    }
+
+    #[test]
+    fn balanced_assign_on_view_matches_owned() {
+        let mut rng = Rng::new(3);
+        let mut m = Mat::zeros(40, 4);
+        for v in m.data.iter_mut() {
+            *v = rng.next_f32();
+        }
+        let owned = balanced_assign(&m, 40);
+        let viewed = balanced_assign(m.row_range(0, 40), 40);
+        assert_eq!(owned, viewed);
+    }
 
     #[test]
     fn capacities_sum_and_balance() {

@@ -1,4 +1,5 @@
-//! The Hierarchical Refinement engine — paper Algorithm 1/2.
+//! The Hierarchical Refinement engine — paper Algorithm 1/2 — built on a
+//! **zero-copy, contiguous-range data layout**.
 //!
 //! Starting from the trivial co-clustering `Γ_0 = {(X, Y)}`, each scale
 //! splits every co-cluster `(X_q, Y_q)` with a rank-`r_{t+1}` LROT solve
@@ -6,14 +7,53 @@
 //! ([`super::assign`]) turns the factors into `r_{t+1}` equal-sized child
 //! pairs.  Blocks that reach the base size are sealed with an *exact*
 //! assignment solver.  The output is a bijection — `n` nonzeros, never an
-//! `n×n` matrix: linear space, and `O(n log n)` time for bounded ranks
-//! (paper §3.4).
+//! `n×n` matrix (paper §3.4).
+//!
+//! # Range-based layout (in-place recursive re-indexing)
+//!
+//! The engine owns one global **permutation array per side**
+//! (`position → original point id`) and one working copy of the cost
+//! factors per side, gathered exactly once at the start.  After each
+//! level's balanced assignment, the worker **physically reorders** the
+//! factor rows and permutation entries *within its block's range* so that
+//! every child co-cluster becomes a contiguous `start..end` window.  A
+//! [`Block`] therefore carries only two `Range<u32>`s and a level — no
+//! per-block index vectors, no per-block factor-row copies:
+//!
+//! * LROT consumes `MatView` slices of the working factor buffers;
+//! * balanced assignment reads the LROT factors in place;
+//! * the base case writes the dense block cost into a scratch-arena
+//!   buffer straight from the original points (`dense_cost_indexed_into`)
+//!   and solves it as a `MatView`;
+//! * `record_scales` snapshots are O(1) range pairs, materialised to
+//!   index sets only once at the end of the run.
+//!
+//! Ranges at one scale exactly partition the parent range, so concurrent
+//! workers always own pairwise-disjoint windows of the shared buffers
+//! ([`RangeShared`]) — the same `(start, end)` idiom as hierarchical
+//! community-detection codes, and exactly the layout a future batched /
+//! sharded backend wants (same-size blocks at a level are one strided
+//! batch).
+//!
+//! # Memory model
+//!
+//! `O(n·d)` for the factor working copies + `O(n)` for the permutations
+//! and output + transient scratch served by a [`ScratchArena`].  Scratch
+//! tracks the blocks currently in flight: the root LROT solve checks out
+//! `O(n·(d + r))` (its logits/gradients), decaying geometrically down the
+//! hierarchy to `O(threads · base_size²)` for the leaf dense costs — so
+//! peak scratch is itself linear in `n` with a small constant.  Peak
+//! bytes and freelist hit-rate are reported in [`RunStats`].  Nothing
+//! anywhere scales quadratically with `n` — the paper's linear-space
+//! claim, now enforced by construction.
 //!
 //! Co-clusters at the same scale are independent, so the engine fans them
-//! out over a work-queue thread pool; LROT solves are served either by the
-//! PJRT runtime (AOT artifacts from the JAX/Pallas layers) or by the
-//! native Rust solver, per block, whichever fits (`BackendKind::Auto`).
+//! out over a condvar-parked work-queue thread pool; LROT solves are
+//! served either by the PJRT runtime (AOT artifacts from the JAX/Pallas
+//! layers) or by the native Rust solver, per block, whichever fits
+//! (`BackendKind::Auto`).
 
+use std::ops::Range;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -23,9 +63,9 @@ use crate::api::SolveError;
 use crate::coordinator::annealing;
 use crate::coordinator::assign;
 use crate::costs::{self, CostKind};
-use crate::linalg::Mat;
+use crate::linalg::{Mat, MatView};
 use crate::metrics;
-use crate::pool::{self, WorkQueue};
+use crate::pool::{self, RangeShared, ScratchArena, WorkQueue};
 use crate::runtime::PjrtEngine;
 use crate::solvers::exact;
 use crate::solvers::lrot::{self, LrotConfig};
@@ -65,8 +105,9 @@ pub struct HiRefConfig {
     pub backend: BackendKind,
     /// Where the AOT artifacts live (manifest.tsv + *.hlo.txt).
     pub artifacts_dir: PathBuf,
-    /// Record the co-clustering Γ_t at every scale (Fig. S3 diagnostics;
-    /// costs O(n) extra memory per scale).
+    /// Record the co-clustering Γ_t at every scale (Fig. S3 diagnostics).
+    /// With the range layout this costs O(1) per block during the run;
+    /// index sets are materialised once at the end.
     pub record_scales: bool,
 }
 
@@ -96,7 +137,28 @@ pub struct RunStats {
     pub pjrt_calls: usize,
     pub native_calls: usize,
     pub base_calls: usize,
+    /// High-water mark of simultaneously checked-out scratch capacity —
+    /// the transient term of the memory model: `O(n·(d + r))` while the
+    /// top-of-hierarchy LROT solves run, `O(threads · base_size²)` once
+    /// the recursion reaches the leaves.
+    pub peak_scratch_bytes: usize,
+    /// Scratch checkouts served from a freelist without allocating.
+    pub arena_hits: usize,
+    /// Scratch checkouts that allocated a fresh buffer.
+    pub arena_misses: usize,
     pub elapsed: Duration,
+}
+
+impl RunStats {
+    /// Fraction of scratch checkouts that reused a pooled buffer.
+    pub fn arena_hit_rate(&self) -> f64 {
+        let total = self.arena_hits + self.arena_misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.arena_hits as f64 / total as f64
+        }
+    }
 }
 
 /// Result of [`HiRef::align`]: a bijection plus diagnostics.
@@ -107,6 +169,12 @@ pub struct Alignment {
     /// The rank-annealing schedule used.
     pub schedule: Vec<usize>,
     pub stats: RunStats,
+    /// Final hierarchy order of the X side: `x_order[p]` is the original
+    /// point id at contiguous position `p` (points of one leaf block are
+    /// adjacent; shallower blocks are nested unions of leaf runs).
+    pub x_order: Vec<u32>,
+    /// Same for the Y side.
+    pub y_order: Vec<u32>,
     /// Γ_t per scale when `record_scales` was set: the co-cluster index
     /// pairs entering each scale.
     pub scales: Option<Vec<Vec<(Vec<u32>, Vec<u32>)>>>,
@@ -135,10 +203,34 @@ pub struct HiRef {
     engine: Option<Arc<PjrtEngine>>,
 }
 
+/// One co-cluster: contiguous position ranges into the per-side working
+/// buffers (`x_order`/`y_order` and the factor rows).  No index vectors —
+/// children re-index their parent's range in place and inherit windows.
 struct Block {
-    xs: Vec<u32>,
-    ys: Vec<u32>,
+    x: Range<u32>,
+    y: Range<u32>,
     level: usize,
+}
+
+/// Shared per-run solve state: the re-indexable working buffers plus
+/// output and diagnostics sinks.  Workers only touch the window their
+/// current block owns, which is what makes the `RangeShared` accesses
+/// sound (children partition the parent's range; sibling ranges are
+/// disjoint; a range is processed by exactly one worker).
+struct SolveState<'a> {
+    /// Factor width (columns of the working factor buffers).
+    k: usize,
+    /// Working factor rows, X side (row p belongs to original point
+    /// `x_order[p]`), re-ordered in place at every split.
+    fu: RangeShared<f32>,
+    fv: RangeShared<f32>,
+    /// position → original id maps, re-ordered in tandem with fu/fv.
+    x_order: RangeShared<u32>,
+    y_order: RangeShared<u32>,
+    arena: &'a ScratchArena,
+    perm: Mutex<Vec<u32>>,
+    scales: Option<Vec<Mutex<Vec<(Range<u32>, Range<u32>)>>>>,
+    stats: StatsAtomics,
 }
 
 impl HiRef {
@@ -180,10 +272,14 @@ impl HiRef {
         }
         let t0 = Instant::now();
 
-        // Global cost factors; sub-blocks gather rows (both factorisations
-        // are row-separable, so gathering is exact).
+        // Global cost factors, gathered exactly once (both factorisations
+        // are row-separable, so row slices of these are exact sub-block
+        // factors).  They become the recursion's working buffers and are
+        // re-ordered in place from here on.
         let (fu, fv) =
             costs::factors_for(x, y, self.cfg.cost, self.cfg.indyk_width, self.cfg.seed);
+        let k = fu.cols;
+        debug_assert_eq!(k, fv.cols);
 
         let schedule = annealing::optimal_rank_schedule(
             n,
@@ -192,99 +288,157 @@ impl HiRef {
             self.cfg.max_depth,
         );
 
-        let perm = Mutex::new(vec![u32::MAX; n]);
-        let scales: Option<Vec<Mutex<Vec<(Vec<u32>, Vec<u32>)>>>> = if self.cfg.record_scales {
-            Some((0..=schedule.len()).map(|_| Mutex::new(Vec::new())).collect())
-        } else {
-            None
+        let arena = ScratchArena::new(self.cfg.threads);
+        let st = SolveState {
+            k,
+            fu: RangeShared::new(fu.data),
+            fv: RangeShared::new(fv.data),
+            x_order: RangeShared::new((0..n as u32).collect()),
+            y_order: RangeShared::new((0..n as u32).collect()),
+            arena: &arena,
+            perm: Mutex::new(vec![u32::MAX; n]),
+            scales: if self.cfg.record_scales {
+                Some((0..=schedule.len()).map(|_| Mutex::new(Vec::new())).collect())
+            } else {
+                None
+            },
+            stats: StatsAtomics::default(),
         };
-        let stats = StatsAtomics::default();
 
-        let root = Block { xs: (0..n as u32).collect(), ys: (0..n as u32).collect(), level: 0 };
+        let root = Block { x: 0..n as u32, y: 0..n as u32, level: 0 };
         let queue = WorkQueue::new(vec![root]);
         queue.run(self.cfg.threads, |block, queue| {
-            if let Some(sc) = &scales {
+            if let Some(sc) = &st.scales {
                 if block.level < sc.len() {
-                    sc[block.level]
-                        .lock()
-                        .unwrap()
-                        .push((block.xs.clone(), block.ys.clone()));
+                    // O(1) snapshot: just the range pair, no index clones
+                    sc[block.level].lock().unwrap().push((block.x.clone(), block.y.clone()));
                 }
             }
-            if block.xs.len() <= self.cfg.base_size || block.level >= schedule.len() {
-                self.solve_base(x, y, &block, &perm, &stats);
+            let len = (block.x.end - block.x.start) as usize;
+            if len <= self.cfg.base_size || block.level >= schedule.len() {
+                self.solve_base(x, y, &block, &st);
             } else {
-                self.refine(&fu, &fv, &schedule, block, queue, &stats);
+                self.refine(&schedule, block, queue, &st);
             }
         });
 
-        let perm = perm.into_inner().unwrap();
-        debug_assert!(perm.iter().all(|&j| j != u32::MAX), "unassigned points");
+        let perm = st.perm.into_inner().unwrap();
+        let unassigned = perm.iter().filter(|&&j| j == u32::MAX).count();
+        if unassigned > 0 {
+            return Err(SolveError::IncompleteAssignment { n, unassigned });
+        }
+        let x_order = st.x_order.into_inner();
+        let y_order = st.y_order.into_inner();
+        // Materialise recorded scales from the final orders: deeper splits
+        // only permute *within* a recorded range, so the id set of every
+        // snapshot is intact (content identical to eager recording).
+        let scales = st.scales.map(|sc| {
+            sc.into_iter()
+                .map(|m| {
+                    m.into_inner()
+                        .unwrap()
+                        .into_iter()
+                        .map(|(rx, ry)| {
+                            (
+                                x_order[rx.start as usize..rx.end as usize].to_vec(),
+                                y_order[ry.start as usize..ry.end as usize].to_vec(),
+                            )
+                        })
+                        .collect()
+                })
+                .collect()
+        });
         Ok(Alignment {
             perm,
             schedule,
-            stats: stats.snapshot(t0.elapsed()),
-            scales: scales
-                .map(|sc| sc.into_iter().map(|m| m.into_inner().unwrap()).collect()),
+            stats: st.stats.snapshot(t0.elapsed(), &arena),
+            x_order,
+            y_order,
+            scales,
         })
     }
 
-    /// One refinement step: LROT on the co-cluster, balanced assignment,
-    /// enqueue the children (Algorithm 1, lines 8–17).
+    /// One refinement step: LROT on the co-cluster's factor-row windows,
+    /// balanced assignment, in-place re-indexing of the windows so each
+    /// child is contiguous, then enqueue the child ranges (Algorithm 1,
+    /// lines 8–17 — with `Assign`'s split realised as a stable counting
+    /// reorder instead of index-set materialisation).
     fn refine(
         &self,
-        fu: &Mat,
-        fv: &Mat,
         schedule: &[usize],
         block: Block,
         queue: &WorkQueue<Block>,
-        stats: &StatsAtomics,
+        st: &SolveState<'_>,
     ) {
         let level = block.level;
+        let (xs, xe) = (block.x.start as usize, block.x.end as usize);
+        let (ys, ye) = (block.y.start as usize, block.y.end as usize);
+        let len = xe - xs;
+        debug_assert_eq!(len, ye - ys, "unbalanced co-cluster");
+        let k = st.k;
         // Rank at this scale: schedule entry, clamped so a block is never
         // split into more parts than it has points.
-        let rank = schedule[level].min(block.xs.len()).max(2);
-        let active = block.xs.len();
-        let u_blk = fu.gather_rows(&block.xs);
-        let v_blk = fv.gather_rows(&block.ys);
-        // per-block deterministic seed
+        let rank = schedule[level].min(len).max(2);
+
+        // per-block deterministic seed, anchored on the first original id
+        // in the block (invariant under the physical layout).
+        // SAFETY: this block exclusively owns positions [xs, xe) / [ys, ye)
+        // — sibling ranges are disjoint and the parent finished re-indexing
+        // before enqueueing us.
+        let anchor = unsafe { st.x_order.slice(xs, xs + 1)[0] };
         let seed = self
             .cfg
             .seed
             .wrapping_mul(0x9E37_79B9_7F4A_7C15)
             .wrapping_add((level as u64) << 32)
-            .wrapping_add(block.xs[0] as u64);
+            .wrapping_add(anchor as u64);
 
-        stats.lrot.fetch_add(1, Ordering::Relaxed);
-        let (q, rmat) = self.solve_lrot(&u_blk, &v_blk, active, rank, seed, stats);
+        st.stats.lrot.fetch_add(1, Ordering::Relaxed);
+        let (q, rmat) = {
+            // SAFETY: as above — shared reads of our own window, dropped
+            // before the exclusive re-indexing borrows below.
+            let u = MatView::from_slice(len, k, unsafe { st.fu.slice(xs * k, xe * k) });
+            let v = MatView::from_slice(len, k, unsafe { st.fv.slice(ys * k, ye * k) });
+            self.solve_lrot(u, v, len, rank, seed, st)
+        };
 
-        let labels_x = assign::balanced_assign(&q, active);
-        let labels_y = assign::balanced_assign(&rmat, active);
-        let children_x = assign::split_by_labels(&block.xs, &labels_x, rank);
-        let children_y = assign::split_by_labels(&block.ys, &labels_y, rank);
-        for (cx, cy) in children_x.into_iter().zip(children_y) {
-            debug_assert_eq!(cx.len(), cy.len(), "unbalanced children");
-            if !cx.is_empty() {
-                queue.push(Block { xs: cx, ys: cy, level: level + 1 });
+        let labels_x = assign::balanced_assign(&q, len);
+        let labels_y = assign::balanced_assign(&rmat, len);
+        let caps = assign::capacities(len, rank);
+
+        reorder_window(&st.fu, &st.x_order, xs, len, k, &labels_x, &caps, st.arena);
+        reorder_window(&st.fv, &st.y_order, ys, len, k, &labels_y, &caps, st.arena);
+
+        let mut off = 0usize;
+        for &cap in &caps {
+            if cap > 0 {
+                queue.push(Block {
+                    x: (xs + off) as u32..(xs + off + cap) as u32,
+                    y: (ys + off) as u32..(ys + off + cap) as u32,
+                    level: level + 1,
+                });
             }
+            off += cap;
         }
+        debug_assert_eq!(off, len, "children must partition the parent range");
     }
 
-    /// LROT dispatch: PJRT bucket when available, else native.
+    /// LROT dispatch: PJRT bucket when available, else native.  Both paths
+    /// consume the borrowed factor windows directly.
     fn solve_lrot(
         &self,
-        u_blk: &Mat,
-        v_blk: &Mat,
+        u: MatView<'_>,
+        v: MatView<'_>,
         active: usize,
         rank: usize,
         seed: u64,
-        stats: &StatsAtomics,
+        st: &SolveState<'_>,
     ) -> (Mat, Mat) {
         if self.cfg.backend != BackendKind::Native {
             if let Some(engine) = &self.engine {
-                match engine.lrot(u_blk, v_blk, active, active, rank, seed) {
+                match engine.lrot(u, v, active, active, rank, seed) {
                     Ok(Some(qr)) => {
-                        stats.pjrt.fetch_add(1, Ordering::Relaxed);
+                        st.stats.pjrt.fetch_add(1, Ordering::Relaxed);
                         return qr;
                     }
                     Ok(None) => {} // no bucket: fall through to native
@@ -295,43 +449,79 @@ impl HiRef {
                 }
             }
         }
-        stats.native.fetch_add(1, Ordering::Relaxed);
+        st.stats.native.fetch_add(1, Ordering::Relaxed);
         let cfg = LrotConfig { rank, ..self.cfg.lrot.clone() };
-        let out = lrot::solve_factored(u_blk, v_blk, active, active, &cfg, seed);
+        let out = lrot::solve_factored_in(u, v, active, active, &cfg, seed, st.arena);
         (out.q, out.r)
     }
 
     /// Base case: exact assignment inside the block (Hungarian below the
-    /// cutoff, ε-scaling auction above), sealing `perm`.
-    fn solve_base(
-        &self,
-        x: &Mat,
-        y: &Mat,
-        block: &Block,
-        perm: &Mutex<Vec<u32>>,
-        stats: &StatsAtomics,
-    ) {
-        stats.base.fetch_add(1, Ordering::Relaxed);
-        let xs = &block.xs;
-        let ys = &block.ys;
-        let local = if xs.len() == 1 {
+    /// cutoff, ε-scaling auction above), sealing `perm`.  The dense block
+    /// cost is written into a scratch-arena buffer straight from the
+    /// original points — no gathered rows, no owned cost matrix.
+    fn solve_base(&self, x: &Mat, y: &Mat, block: &Block, st: &SolveState<'_>) {
+        st.stats.base.fetch_add(1, Ordering::Relaxed);
+        let (xs, xe) = (block.x.start as usize, block.x.end as usize);
+        let (ys, ye) = (block.y.start as usize, block.y.end as usize);
+        let len = xe - xs;
+        debug_assert_eq!(len, ye - ys);
+        // SAFETY: base blocks are leaves — this worker exclusively owns the
+        // window and nothing re-indexes it afterwards.
+        let xids = unsafe { st.x_order.slice(xs, xe) };
+        let yids = unsafe { st.y_order.slice(ys, ye) };
+        let local = if len == 1 {
             vec![0u32]
         } else {
-            let xb = x.gather_rows(xs);
-            let yb = y.gather_rows(ys);
-            let c = costs::dense_cost(&xb, &yb, self.cfg.cost);
-            if xs.len() <= self.cfg.hungarian_cutoff {
-                exact::hungarian(&c)
+            let mut cbuf = st.arena.take_f32(len * len);
+            costs::dense_cost_indexed_into(x, y, xids, yids, self.cfg.cost, &mut cbuf);
+            let c = MatView::from_slice(len, len, &cbuf);
+            if len <= self.cfg.hungarian_cutoff {
+                exact::hungarian(c)
             } else {
-                exact::auction(&c, 1.0)
+                exact::auction(c, 1.0)
             }
         };
-        let mut guard = perm.lock().unwrap();
+        let mut guard = st.perm.lock().unwrap();
         for (i, &j) in local.iter().enumerate() {
-            guard[xs[i] as usize] = ys[j as usize];
+            guard[xids[i] as usize] = yids[j as usize];
         }
     }
+}
 
+/// Stable counting-sort reorder of one side's window: factor rows and the
+/// position→id map move together so that cluster `z`'s members become the
+/// contiguous sub-range `offsets[z]..offsets[z]+caps[z]` (order within a
+/// cluster preserves the parent's order — the same sequence
+/// `assign::split_by_labels` would have produced, without materialising
+/// index sets).  Scratch comes from the arena; the two `copy_from_slice`
+/// writebacks are the only data movement per split.
+#[allow(clippy::too_many_arguments)]
+fn reorder_window(
+    rows: &RangeShared<f32>,
+    order: &RangeShared<u32>,
+    start: usize,
+    len: usize,
+    k: usize,
+    labels: &[u32],
+    caps: &[usize],
+    arena: &ScratchArena,
+) {
+    debug_assert_eq!(labels.len(), len);
+    let mut cursor = assign::cluster_offsets(caps);
+    let mut srows = arena.take_f32(len * k);
+    let mut sorder = arena.take_u32(len);
+    // SAFETY: the caller's block exclusively owns [start, start+len); no
+    // other worker can touch it until the children are enqueued.
+    let dst_rows = unsafe { rows.slice_mut(start * k, (start + len) * k) };
+    let dst_order = unsafe { order.slice_mut(start, start + len) };
+    for (i, &z) in labels.iter().enumerate() {
+        let d = cursor[z as usize];
+        cursor[z as usize] += 1;
+        srows[d * k..(d + 1) * k].copy_from_slice(&dst_rows[i * k..(i + 1) * k]);
+        sorder[d] = dst_order[i];
+    }
+    dst_rows.copy_from_slice(&srows);
+    dst_order.copy_from_slice(&sorder);
 }
 
 /// Internal atomics for [`RunStats`].
@@ -344,12 +534,15 @@ struct StatsAtomics {
 }
 
 impl StatsAtomics {
-    fn snapshot(&self, elapsed: Duration) -> RunStats {
+    fn snapshot(&self, elapsed: Duration, arena: &ScratchArena) -> RunStats {
         RunStats {
             lrot_calls: self.lrot.load(Ordering::Relaxed),
             pjrt_calls: self.pjrt.load(Ordering::Relaxed),
             native_calls: self.native.load(Ordering::Relaxed),
             base_calls: self.base.load(Ordering::Relaxed),
+            peak_scratch_bytes: arena.peak_bytes(),
+            arena_hits: arena.hits(),
+            arena_misses: arena.misses(),
             elapsed,
         }
     }
@@ -428,6 +621,8 @@ mod tests {
         let a = HiRef::new(native_cfg()).align(&x, &y).unwrap();
         let b = HiRef::new(native_cfg()).align(&x, &y).unwrap();
         assert_eq!(a.perm, b.perm);
+        assert_eq!(a.x_order, b.x_order);
+        assert_eq!(a.y_order, b.y_order);
     }
 
     #[test]
@@ -435,6 +630,31 @@ mod tests {
         let (x, _, _) = shuffled_pair(16, 2, 6);
         let (y, _, _) = shuffled_pair(17, 2, 7);
         assert!(HiRef::new(native_cfg()).align(&x, &y).is_err());
+    }
+
+    #[test]
+    fn final_orders_are_permutations() {
+        let (x, y, _) = shuffled_pair(150, 2, 11);
+        let cfg = HiRefConfig { base_size: 16, ..native_cfg() };
+        let out = HiRef::new(cfg).align(&x, &y).unwrap();
+        for order in [&out.x_order, &out.y_order] {
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..150u32).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn arena_stats_reported() {
+        let (x, y, _) = shuffled_pair(256, 2, 12);
+        let out = HiRef::new(native_cfg()).align(&x, &y).unwrap();
+        assert!(out.stats.peak_scratch_bytes > 0);
+        assert!(out.stats.arena_hits + out.stats.arena_misses > 0);
+        // many blocks reuse the same capacity classes: the freelists must
+        // serve the bulk of checkouts after warm-up
+        assert!(out.stats.arena_hit_rate() > 0.5, "{}", out.stats.arena_hit_rate());
+        let rate = out.stats.arena_hit_rate();
+        assert!((0.0..=1.0).contains(&rate));
     }
 
     #[test]

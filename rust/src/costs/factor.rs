@@ -6,11 +6,16 @@
 //! — both sides must produce identical factors because the Rust coordinator
 //! feeds them to AOT executables lowered from the Python model.
 
-use crate::linalg::Mat;
+use crate::linalg::{Mat, MatView};
 
 /// Return `(U, V)`, each `n×(d+2)`, with `U Vᵀ` the exact squared-Euclidean
-/// cost matrix between the rows of `x` and `y`.
-pub fn sq_euclidean_factors(x: &Mat, y: &Mat) -> (Mat, Mat) {
+/// cost matrix between the rows of `x` and `y`.  Accepts [`MatView`]s so
+/// factors can be built from borrowed row ranges without gathering.
+pub fn sq_euclidean_factors<'a, 'b>(
+    x: impl Into<MatView<'a>>,
+    y: impl Into<MatView<'b>>,
+) -> (Mat, Mat) {
+    let (x, y) = (x.into(), y.into());
     assert_eq!(x.cols, y.cols, "dimension mismatch");
     let d = x.cols;
     let mut u = Mat::zeros(x.rows, d + 2);
@@ -39,10 +44,11 @@ pub fn sq_euclidean_factors(x: &Mat, y: &Mat) -> (Mat, Mat) {
 /// Zero-pad factor width from `k` to `k_target` columns (exact: padded
 /// columns contribute 0 to every inner product).  Used to fit a factor
 /// pair into a wider AOT bucket.
-pub fn pad_factor_width(m: &Mat, k_target: usize) -> Mat {
+pub fn pad_factor_width<'a>(m: impl Into<MatView<'a>>, k_target: usize) -> Mat {
+    let m = m.into();
     assert!(k_target >= m.cols);
     if k_target == m.cols {
-        return m.clone();
+        return m.to_mat();
     }
     let mut out = Mat::zeros(m.rows, k_target);
     for i in 0..m.rows {

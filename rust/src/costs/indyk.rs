@@ -13,12 +13,20 @@
 //! (paper §3.4, Appendix E.1).
 
 use crate::costs::CostKind;
-use crate::linalg::{invert_spd, Mat};
+use crate::linalg::{invert_spd, Mat, MatView};
 use crate::prng::Rng;
 
 /// Factorise the `kind` distance matrix between rows of `x` and `y` as
 /// `C ≈ U Vᵀ` with width `t = target_k`.  Deterministic given `seed`.
-pub fn factorize(x: &Mat, y: &Mat, kind: CostKind, target_k: usize, seed: u64) -> (Mat, Mat) {
+/// Accepts [`MatView`]s, so callers can factorise borrowed row ranges.
+pub fn factorize<'a, 'b>(
+    x: impl Into<MatView<'a>>,
+    y: impl Into<MatView<'b>>,
+    kind: CostKind,
+    target_k: usize,
+    seed: u64,
+) -> (Mat, Mat) {
+    let (x, y) = (x.into(), y.into());
     let n = x.rows;
     let m = y.rows;
     let t = target_k.min(n).min(m).max(1);

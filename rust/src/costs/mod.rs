@@ -14,7 +14,7 @@
 pub mod factor;
 pub mod indyk;
 
-use crate::linalg::{dist, sq_dist, Mat};
+use crate::linalg::{dist, sq_dist, Mat, MatView};
 
 /// Ground cost selector. Matches the paper's two evaluation costs:
 /// `‖·‖₂` (Wasserstein-1 ground cost) and `‖·‖₂²` (Wasserstein-2).
@@ -43,8 +43,15 @@ impl CostKind {
     }
 }
 
-/// Dense `n×m` cost matrix (baselines and small blocks only).
-pub fn dense_cost(x: &Mat, y: &Mat, kind: CostKind) -> Mat {
+/// Dense `n×m` cost matrix (baselines and test oracles only; the
+/// refinement base case uses [`dense_cost_indexed_into`]).  Accepts
+/// borrowed [`MatView`]s, so sub-blocks are sliced, never gathered.
+pub fn dense_cost<'a, 'b>(
+    x: impl Into<MatView<'a>>,
+    y: impl Into<MatView<'b>>,
+    kind: CostKind,
+) -> Mat {
+    let (x, y) = (x.into(), y.into());
     let mut c = Mat::zeros(x.rows, y.rows);
     for i in 0..x.rows {
         let xi = x.row(i);
@@ -56,17 +63,42 @@ pub fn dense_cost(x: &Mat, y: &Mat, kind: CostKind) -> Mat {
     c
 }
 
+/// Write the dense `xs.len()×ys.len()` cost matrix between the selected
+/// original rows of `x`/`y` straight into a row-major `out` buffer
+/// (typically a [`crate::pool::ScratchArena`] checkout).  This is the
+/// base-case path of the refinement engine: no gathered point rows, no
+/// freshly allocated `Mat` per block.
+pub fn dense_cost_indexed_into<'a, 'b>(
+    x: impl Into<MatView<'a>>,
+    y: impl Into<MatView<'b>>,
+    xs: &[u32],
+    ys: &[u32],
+    kind: CostKind,
+    out: &mut [f32],
+) {
+    let (x, y) = (x.into(), y.into());
+    assert_eq!(out.len(), xs.len() * ys.len(), "cost buffer shape mismatch");
+    for (i, &xi) in xs.iter().enumerate() {
+        let xrow = x.row(xi as usize);
+        let crow = &mut out[i * ys.len()..(i + 1) * ys.len()];
+        for (cv, &yj) in crow.iter_mut().zip(ys) {
+            *cv = kind.pair(xrow, y.row(yj as usize)) as f32;
+        }
+    }
+}
+
 /// Low-rank factors `(U, V)` with `C ≈ U Vᵀ`, choosing the best strategy
 /// for `kind`: exact `d+2` for squared Euclidean, Indyk-style sampling
 /// otherwise.  `target_k` bounds the factor width for the sampled path
 /// (ignored by the exact path, whose width is `d+2`).
-pub fn factors_for(
-    x: &Mat,
-    y: &Mat,
+pub fn factors_for<'a, 'b>(
+    x: impl Into<MatView<'a>>,
+    y: impl Into<MatView<'b>>,
     kind: CostKind,
     target_k: usize,
     seed: u64,
 ) -> (Mat, Mat) {
+    let (x, y) = (x.into(), y.into());
     match kind {
         CostKind::SqEuclidean => factor::sq_euclidean_factors(x, y),
         CostKind::Euclidean => indyk::factorize(x, y, kind, target_k, seed),
@@ -104,6 +136,30 @@ mod tests {
                 assert!((c.at(i, j) - want).abs() < 1e-5);
             }
         }
+    }
+
+    #[test]
+    fn indexed_cost_matches_gathered_dense_cost() {
+        let mut rng = Rng::new(7);
+        let x = rand_mat(&mut rng, 9, 3);
+        let y = rand_mat(&mut rng, 9, 3);
+        let xs = [4u32, 1, 7];
+        let ys = [0u32, 8, 3];
+        let want = dense_cost(&x.gather_rows(&xs), &y.gather_rows(&ys), CostKind::Euclidean);
+        let mut got = vec![0.0f32; 9];
+        dense_cost_indexed_into(&x, &y, &xs, &ys, CostKind::Euclidean, &mut got);
+        assert_eq!(got, want.data);
+    }
+
+    #[test]
+    fn dense_cost_on_views_matches_gather() {
+        let mut rng = Rng::new(8);
+        let x = rand_mat(&mut rng, 10, 2);
+        let y = rand_mat(&mut rng, 10, 2);
+        let idx: Vec<u32> = (2..6).collect();
+        let want = dense_cost(&x.gather_rows(&idx), &y.gather_rows(&idx), CostKind::SqEuclidean);
+        let got = dense_cost(x.row_range(2, 6), y.row_range(2, 6), CostKind::SqEuclidean);
+        assert_eq!(got.data, want.data);
     }
 
     #[test]

@@ -23,6 +23,39 @@
 //! a pure-Rust fallback ([`solvers::lrot`]) covers shapes outside the
 //! bucket grid and stub builds.
 //!
+//! ## Zero-copy refinement core
+//!
+//! The hot path is built around three memory primitives so that the
+//! paper's *linear space* claim holds by construction, not by accident:
+//!
+//! * **Contiguous block ranges** — the refinement hierarchy never
+//!   materialises per-block index sets.  Each side keeps one working copy
+//!   of the cost factors plus one `position → original id` permutation;
+//!   after every balanced split the engine re-orders the parent's window
+//!   in place so each child co-cluster is a contiguous `start..end`
+//!   range.  A block is two `Range<u32>`s and a level — see
+//!   [`coordinator::hiref`].
+//! * **[`linalg::MatView`]** — a borrowed row-range view over a row-major
+//!   buffer.  Cost construction ([`costs::dense_cost`]), LROT
+//!   ([`solvers::lrot::solve_factored_in`]), the exact base-case solvers
+//!   ([`solvers::exact`]) and balanced assignment
+//!   ([`coordinator::assign`]) all accept views, so sub-blocks are
+//!   sliced, never gathered (`Mat::gather_rows` survives only for dataset
+//!   plumbing and test oracles).
+//! * **[`pool::ScratchArena`]** — sharded, reusable `f32`/`u32` buffers
+//!   checked out by capacity class.  LROT intermediates, the re-indexing
+//!   scratch and base-case dense costs draw from it; peak bytes and
+//!   freelist hit-rate are reported per run in
+//!   [`coordinator::hiref::RunStats`].
+//!
+//! **Memory model:** `O(n·d)` factor working copies + `O(n)` permutations
+//! and output + transient scratch that tracks the blocks in flight
+//! (`O(n·(d + r))` during the root LROT solve, geometrically less at each
+//! deeper scale, `O(threads · base_size²)` at the leaves) — everything is
+//! linear in `n`; nothing is ever quadratic.  The contiguous layout is
+//! also what a batched/sharded backend needs: same-size blocks at a level
+//! form one strided batch.
+//!
 //! ## Quick start
 //!
 //! Construct HiRef through [`api::HiRefBuilder`] — the validated,

@@ -1,6 +1,11 @@
-//! Minimal dense linear algebra: a row-major `Mat` plus the handful of
-//! BLAS-1/3 operations the solvers need.  No external dependencies; the
-//! matmul is blocked and written so LLVM auto-vectorises the inner loop.
+//! Minimal dense linear algebra: a row-major `Mat`, a borrowed [`MatView`]
+//! over a row range, plus the handful of BLAS-1/3 operations the solvers
+//! need.  No external dependencies; the matmul is blocked and written so
+//! LLVM auto-vectorises the inner loop.
+//!
+//! The solve path is **view-based**: once the global cost factors exist,
+//! every sub-block is a [`MatView`] slice of them — `gather_rows` survives
+//! only for dataset plumbing and tests, never for per-block refinement.
 
 /// Row-major single-precision matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -8,6 +13,55 @@ pub struct Mat {
     pub rows: usize,
     pub cols: usize,
     pub data: Vec<f32>,
+}
+
+/// Borrowed row-major matrix: a zero-copy window over a `Mat` (or any
+/// row-major `f32` buffer, e.g. a scratch-arena checkout).  `Copy`, so it
+/// passes by value; every solver entry point accepts `impl Into<MatView>`
+/// and therefore both `&Mat` and explicit views.
+#[derive(Clone, Copy, Debug)]
+pub struct MatView<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: &'a [f32],
+}
+
+impl<'a> MatView<'a> {
+    /// View over a raw row-major buffer.
+    #[inline]
+    pub fn from_slice(rows: usize, cols: usize, data: &'a [f32]) -> MatView<'a> {
+        assert_eq!(rows * cols, data.len(), "view shape mismatch");
+        MatView { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    /// Row i as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Sub-view of rows `start..end` (zero-copy).
+    #[inline]
+    pub fn rows_range(&self, start: usize, end: usize) -> MatView<'a> {
+        MatView::from_slice(end - start, self.cols, &self.data[start * self.cols..end * self.cols])
+    }
+
+    /// Materialise an owned copy (boundary with owning APIs only).
+    pub fn to_mat(&self) -> Mat {
+        Mat { rows: self.rows, cols: self.cols, data: self.data.to_vec() }
+    }
+}
+
+impl<'a> From<&'a Mat> for MatView<'a> {
+    #[inline]
+    fn from(m: &'a Mat) -> MatView<'a> {
+        MatView { rows: m.rows, cols: m.cols, data: &m.data }
+    }
 }
 
 impl Mat {
@@ -48,7 +102,21 @@ impl Mat {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
-    /// Gather the given rows into a new matrix (used to slice co-clusters).
+    /// Borrow the whole matrix as a [`MatView`].
+    #[inline]
+    pub fn view(&self) -> MatView<'_> {
+        MatView::from(self)
+    }
+
+    /// Zero-copy view of rows `start..end`.
+    #[inline]
+    pub fn row_range(&self, start: usize, end: usize) -> MatView<'_> {
+        MatView::from_slice(end - start, self.cols, &self.data[start * self.cols..end * self.cols])
+    }
+
+    /// Gather the given rows into a new matrix.  Dataset plumbing and test
+    /// oracles only — the refinement path slices [`MatView`]s instead of
+    /// copying rows (see `coordinator::hiref`).
     pub fn gather_rows(&self, idx: &[u32]) -> Mat {
         let mut out = Mat::zeros(idx.len(), self.cols);
         for (o, &i) in idx.iter().enumerate() {
@@ -128,16 +196,24 @@ impl Mat {
     }
 }
 
-/// C += contribution of A @ B, writing into a preallocated C (hot path —
-/// lets the LROT inner loop reuse gradient buffers without allocating).
-pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
-    assert_eq!(a.cols, b.rows);
+/// C = A @ B written into a preallocated `Mat` (hot path — lets callers
+/// reuse gradient buffers without allocating).
+pub fn matmul_into<'a, 'b>(a: impl Into<MatView<'a>>, b: impl Into<MatView<'b>>, c: &mut Mat) {
+    let (a, b) = (a.into(), b.into());
     assert_eq!((c.rows, c.cols), (a.rows, b.cols));
-    c.data.fill(0.0);
+    matmul_into_slice(a, b, &mut c.data);
+}
+
+/// C = A @ B written straight into a row-major slice (e.g. a scratch-arena
+/// checkout): the allocation-free core of [`matmul_into`].
+pub fn matmul_into_slice(a: MatView<'_>, b: MatView<'_>, c: &mut [f32]) {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    assert_eq!(c.len(), a.rows * b.cols);
+    c.fill(0.0);
     let n = b.cols;
     for i in 0..a.rows {
         let arow = a.row(i);
-        let crow = &mut c.data[i * n..(i + 1) * n];
+        let crow = &mut c[i * n..(i + 1) * n];
         for (p, &av) in arow.iter().enumerate() {
             let brow = &b.data[p * n..(p + 1) * n];
             for (cv, &bv) in crow.iter_mut().zip(brow) {
@@ -145,6 +221,31 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
             }
         }
     }
+}
+
+/// `out = Aᵀ B` into a row-major slice without materialising the
+/// transpose (`A` is s×k, `B` is s×r, `out` is k×r).
+pub fn vt_matmul_into_slice(a: MatView<'_>, b: MatView<'_>, out: &mut [f32]) {
+    assert_eq!(a.rows, b.rows, "t_matmul shape mismatch");
+    assert_eq!(out.len(), a.cols * b.cols);
+    out.fill(0.0);
+    let n = b.cols;
+    for p in 0..a.rows {
+        let arow = a.row(p);
+        let brow = b.row(p);
+        for (i, &av) in arow.iter().enumerate() {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (ov, &bv) in orow.iter_mut().zip(brow) {
+                *ov += av * bv;
+            }
+        }
+    }
+}
+
+/// Max absolute entry of a slice (step-size normalisation).
+#[inline]
+pub fn slice_max_abs(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
 }
 
 /// Squared Euclidean distance between two vectors.
@@ -201,6 +302,35 @@ mod tests {
         let a = Mat::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
         let g = a.gather_rows(&[2, 0]);
         assert_eq!(g.data, vec![5., 6., 1., 2.]);
+    }
+
+    #[test]
+    fn row_range_view_is_zero_copy_window() {
+        let a = Mat::from_vec(4, 2, vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        let v = a.row_range(1, 3);
+        assert_eq!((v.rows, v.cols), (2, 2));
+        assert_eq!(v.row(0), &[3., 4.]);
+        assert_eq!(v.at(1, 1), 6.0);
+        assert_eq!(v.to_mat().data, a.gather_rows(&[1, 2]).data);
+        let sub = v.rows_range(1, 2);
+        assert_eq!(sub.row(0), &[5., 6.]);
+    }
+
+    #[test]
+    fn slice_matmuls_match_mat_matmuls() {
+        let a = Mat::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(2, 3, vec![1., 0., 2., 0., 1., 3.]);
+        let want = a.matmul(&b);
+        let mut c = vec![0.0f32; 9];
+        matmul_into_slice(a.view(), b.view(), &mut c);
+        assert_eq!(c, want.data);
+        // Aᵀ B through the slice kernel
+        let bt = Mat::from_vec(3, 2, vec![1., 1., 1., 0., 0., 1.]);
+        let want_t = a.t().matmul(&bt);
+        let mut ct = vec![0.0f32; 4];
+        vt_matmul_into_slice(a.view(), bt.view(), &mut ct);
+        assert_eq!(ct, want_t.data);
+        assert_eq!(slice_max_abs(&[-3.0, 2.0, 0.5]), 3.0);
     }
 
     #[test]

@@ -79,11 +79,13 @@ pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
 /// Cost of the block-diagonal coupling `P^(t)` induced by a co-clustering
 /// (paper Eq. 12), computed streaming per block — used for the Fig. S3
 /// refinement-cost curve without instantiating `P`.
-/// `blocks` pairs index sets `(X_q, Y_q)`.
-pub fn block_coupling_cost(
+/// `blocks` pairs index sets `(X_q, Y_q)`; any borrowed or owned `[u32]`
+/// container works (`Vec<u32>` pairs, `&[u32]` slices of a recorded
+/// hierarchy order, ...), so callers never clone index sets to get here.
+pub fn block_coupling_cost<B: AsRef<[u32]> + Sync>(
     x: &Mat,
     y: &Mat,
-    blocks: &[(Vec<u32>, Vec<u32>)],
+    blocks: &[(B, B)],
     kind: CostKind,
 ) -> f64 {
     let n = x.rows as f64;
@@ -92,15 +94,32 @@ pub fn block_coupling_cost(
     let contrib = pool::parallel_map(blocks.len(), threads, |q| {
         let (bx, by) = &blocks[q];
         let mut s = 0.0f64;
-        for &i in bx {
+        for &i in bx.as_ref() {
             let xi = x.row(i as usize);
-            for &j in by {
+            for &j in by.as_ref() {
                 s += kind.pair(xi, y.row(j as usize));
             }
         }
         s
     });
     contrib.into_iter().sum::<f64>() * rho / (n * n)
+}
+
+/// Human-readable byte count (`1.5 MiB`-style) for scratch/peak-memory
+/// reporting in the CLI and perf profiles.
+pub fn human_bytes(bytes: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit < UNITS.len() - 1 {
+        v /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.1} {}", UNITS[unit])
+    }
 }
 
 /// Relative marginal violation of a dense coupling against uniform
@@ -189,6 +208,32 @@ mod tests {
         let want = bijection_cost(&x, &y, &perm, CostKind::SqEuclidean);
         let cpl = crate::api::Coupling::Bijection(perm);
         assert_eq!(coupling_cost(&x, &y, &cpl, CostKind::SqEuclidean), want);
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.0 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.0 MiB");
+    }
+
+    #[test]
+    fn block_cost_accepts_borrowed_slices() {
+        let mut rng = Rng::new(5);
+        let mut x = Mat::zeros(8, 2);
+        let mut y = Mat::zeros(8, 2);
+        rng.fill_normal(&mut x.data);
+        rng.fill_normal(&mut y.data);
+        let order: Vec<u32> = (0..8).collect();
+        let owned = vec![
+            ((0..4).collect::<Vec<u32>>(), (0..4).collect::<Vec<u32>>()),
+            ((4..8).collect::<Vec<u32>>(), (4..8).collect::<Vec<u32>>()),
+        ];
+        let borrowed: Vec<(&[u32], &[u32])> =
+            vec![(&order[0..4], &order[0..4]), (&order[4..8], &order[4..8])];
+        let a = block_coupling_cost(&x, &y, &owned, CostKind::SqEuclidean);
+        let b = block_coupling_cost(&x, &y, &borrowed, CostKind::SqEuclidean);
+        assert!((a - b).abs() < 1e-12);
     }
 
     #[test]

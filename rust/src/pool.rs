@@ -1,13 +1,28 @@
-//! Scoped thread-pool primitives.
+//! Scoped thread-pool primitives and the scratch memory arena.
 //!
 //! The vendored universe has no rayon/tokio, so HiRef's fan-out over
 //! independent co-cluster sub-problems uses `std::thread::scope` with a
 //! shared atomic work cursor.  Tasks are compute-bound and coarse-grained
 //! (one LROT solve each), so a simple self-scheduling loop is within noise
 //! of a work-stealing deque.
+//!
+//! Three memory primitives keep the solve path allocation-free after
+//! setup:
+//!
+//! * [`ScratchArena`] — sharded freelists of `f32`/`u32` buffers checked
+//!   out by power-of-two capacity class.  LROT inner iterations, balanced
+//!   assignment reordering and base-case dense-cost construction draw from
+//!   it instead of `Vec::with_capacity`, and it reports peak bytes and
+//!   hit-rate for [`crate::coordinator::hiref::RunStats`].
+//! * [`RangeShared`] — a buffer whose **disjoint** ranges are mutated
+//!   concurrently by workers (the in-place recursive re-indexing of the
+//!   refinement hierarchy: each co-cluster owns exactly its `start..end`).
+//! * [`WorkQueue`] — a condvar-parked dynamic queue (no spin): idle
+//!   workers sleep until a push or global completion wakes them.
 
+use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 /// Number of worker threads to use: `HIREF_THREADS` env var, else the
 /// machine's available parallelism, else 1.
@@ -20,9 +35,292 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+// ---------------------------------------------------------------------------
+// RangeShared: disjoint-range shared mutation
+// ---------------------------------------------------------------------------
+
+/// A `Vec<T>` shared across worker threads that hand-partition it into
+/// pairwise-disjoint index ranges.
+///
+/// The refinement hierarchy guarantees disjointness structurally: every
+/// queued block owns a `start..end` range, children exactly partition the
+/// parent's range, and a range is only touched by the single worker
+/// processing its block.
+///
+/// All accessors are `unsafe`: the **caller** promises that no two
+/// concurrently live borrows overlap and that no shared borrow is used
+/// while an overlapping exclusive borrow exists.
+pub struct RangeShared<T> {
+    data: UnsafeCell<Vec<T>>,
+    ptr: *mut T,
+    len: usize,
+}
+
+// SAFETY: exclusive access is coordinated by the caller-supplied
+// disjointness contract on `slice`/`slice_mut` (T: Send covers handing
+// ranges to workers); `slice` additionally allows *concurrent shared*
+// borrows of the same range from several threads, which is only sound
+// when `&T` itself is thread-safe — hence T: Sync as well.
+unsafe impl<T: Send + Sync> Sync for RangeShared<T> {}
+unsafe impl<T: Send> Send for RangeShared<T> {}
+
+impl<T> RangeShared<T> {
+    pub fn new(mut data: Vec<T>) -> RangeShared<T> {
+        let ptr = data.as_mut_ptr();
+        let len = data.len();
+        RangeShared { data: UnsafeCell::new(data), ptr, len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Shared view of `start..end`.  Bounds are checked in release builds
+    /// too — an out-of-range window would be silent heap corruption, and
+    /// the check is O(1) per block, not per element.
+    ///
+    /// # Safety
+    /// No concurrently live *exclusive* borrow may overlap `start..end`.
+    #[inline]
+    pub unsafe fn slice(&self, start: usize, end: usize) -> &[T] {
+        assert!(start <= end && end <= self.len, "range {start}..{end} out of 0..{}", self.len);
+        std::slice::from_raw_parts(self.ptr.add(start), end - start)
+    }
+
+    /// Exclusive view of `start..end`.  Bounds checked in release builds
+    /// (see [`RangeShared::slice`]).
+    ///
+    /// # Safety
+    /// No concurrently live borrow of any kind may overlap `start..end`.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, start: usize, end: usize) -> &mut [T] {
+        assert!(start <= end && end <= self.len, "range {start}..{end} out of 0..{}", self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), end - start)
+    }
+
+    /// Reclaim the underlying vector (all borrows must have ended).
+    pub fn into_inner(self) -> Vec<T> {
+        self.data.into_inner()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ScratchArena: reusable per-worker buffers by capacity class
+// ---------------------------------------------------------------------------
+
+/// Smallest buffer capacity handed out (avoids churning tiny classes).
+const MIN_SCRATCH: usize = 64;
+/// Capacity classes are powers of two up to 2^47 elements.
+const NUM_CLASSES: usize = 48;
+/// Per-shard, per-class freelist depth cap; beyond it buffers are freed.
+const MAX_POOLED: usize = 64;
+
+fn class_of(len: usize) -> usize {
+    len.max(MIN_SCRATCH).next_power_of_two().trailing_zeros() as usize
+}
+
+struct Shard {
+    f32s: Vec<Vec<Vec<f32>>>,
+    u32s: Vec<Vec<Vec<u32>>>,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            f32s: (0..NUM_CLASSES).map(|_| Vec::new()).collect(),
+            u32s: (0..NUM_CLASSES).map(|_| Vec::new()).collect(),
+        }
+    }
+}
+
+/// Reusable scratch buffers checked out by capacity class.
+///
+/// Freelists are sharded by worker thread (thread-id hash), so steady-state
+/// checkouts hit a shard no other worker touches — effectively a
+/// per-worker pool with shared accounting.  `peak_bytes` is the high-water
+/// mark of simultaneously checked-out capacity; it tracks the blocks in
+/// flight, peaking at the top of the HiRef hierarchy (root LROT buffers,
+/// linear in the block size) and settling to `O(threads · base_size²)`
+/// once the recursion reaches the leaves — see the memory model in
+/// [`crate`]'s crate docs.
+pub struct ScratchArena {
+    shards: Vec<Mutex<Shard>>,
+    live_bytes: AtomicUsize,
+    peak_bytes: AtomicUsize,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl ScratchArena {
+    /// An arena sized for `workers` concurrent threads.
+    pub fn new(workers: usize) -> ScratchArena {
+        let shards = workers.max(1).next_power_of_two();
+        ScratchArena {
+            shards: (0..shards).map(|_| Mutex::new(Shard::new())).collect(),
+            live_bytes: AtomicUsize::new(0),
+            peak_bytes: AtomicUsize::new(0),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
+    }
+
+    fn shard_idx(&self) -> usize {
+        // Checkouts are frequent (every LROT intermediate), so the
+        // thread-dependent part is hashed once per thread and cached.
+        thread_local! {
+            static THREAD_HASH: u64 = {
+                use std::hash::{Hash, Hasher};
+                let mut h = std::collections::hash_map::DefaultHasher::new();
+                std::thread::current().id().hash(&mut h);
+                h.finish()
+            };
+        }
+        (THREAD_HASH.with(|h| *h) as usize) & (self.shards.len() - 1)
+    }
+
+    fn account_take(&self, bytes: usize) {
+        let live = self.live_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak_bytes.fetch_max(live, Ordering::Relaxed);
+    }
+
+    /// High-water mark of simultaneously checked-out scratch capacity.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Checkouts served from a freelist (no allocation).
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Checkouts that had to allocate a fresh buffer.
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of checkouts served without allocating (1.0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = (self.hits(), self.misses());
+        if h + m == 0 {
+            1.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+}
+
+macro_rules! scratch_impl {
+    ($guard:ident, $take:ident, $elem:ty, $pool:ident, $zero:expr) => {
+        /// A checked-out scratch buffer; derefs to `[T]` of the requested
+        /// length (zero-filled) and returns to its shard's freelist on drop.
+        pub struct $guard<'a> {
+            arena: &'a ScratchArena,
+            shard: usize,
+            class: usize,
+            buf: Option<Vec<$elem>>,
+        }
+
+        impl ScratchArena {
+            /// Check out a zeroed buffer of `len` elements.
+            pub fn $take(&self, len: usize) -> $guard<'_> {
+                let class = class_of(len);
+                let cap = 1usize << class;
+                let shard = self.shard_idx();
+                let pooled = self.shards[shard].lock().unwrap().$pool[class].pop();
+                let mut buf = match pooled {
+                    Some(b) => {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        b
+                    }
+                    None => {
+                        self.misses.fetch_add(1, Ordering::Relaxed);
+                        Vec::with_capacity(cap)
+                    }
+                };
+                buf.clear();
+                buf.resize(len, $zero);
+                self.account_take(cap * std::mem::size_of::<$elem>());
+                $guard { arena: self, shard, class, buf: Some(buf) }
+            }
+        }
+
+        impl $guard<'_> {
+            /// Take ownership of the buffer (it leaves the arena for good;
+            /// used to hand solver outputs out without a copy).
+            pub fn detach(mut self) -> Vec<$elem> {
+                let buf = self.buf.take().expect("scratch buffer already taken");
+                self.arena
+                    .live_bytes
+                    .fetch_sub((1usize << self.class) * std::mem::size_of::<$elem>(), Ordering::Relaxed);
+                buf
+            }
+        }
+
+        impl std::ops::Deref for $guard<'_> {
+            type Target = [$elem];
+            #[inline]
+            fn deref(&self) -> &[$elem] {
+                self.buf.as_deref().expect("scratch buffer already taken")
+            }
+        }
+
+        impl std::ops::DerefMut for $guard<'_> {
+            #[inline]
+            fn deref_mut(&mut self) -> &mut [$elem] {
+                self.buf.as_deref_mut().expect("scratch buffer already taken")
+            }
+        }
+
+        impl Drop for $guard<'_> {
+            fn drop(&mut self) {
+                if let Some(buf) = self.buf.take() {
+                    self.arena
+                        .live_bytes
+                        .fetch_sub((1usize << self.class) * std::mem::size_of::<$elem>(), Ordering::Relaxed);
+                    let mut shard = self.arena.shards[self.shard].lock().unwrap();
+                    if shard.$pool[self.class].len() < MAX_POOLED {
+                        shard.$pool[self.class].push(buf);
+                    }
+                }
+            }
+        }
+    };
+}
+
+scratch_impl!(ScratchF32, take_f32, f32, f32s, 0.0f32);
+scratch_impl!(ScratchU32, take_u32, u32, u32s, 0u32);
+
+// ---------------------------------------------------------------------------
+// parallel_map
+// ---------------------------------------------------------------------------
+
+/// Write-only disjoint-slot sink for [`parallel_map`]: every index is
+/// claimed by exactly one worker via an atomic cursor, so all access is
+/// exclusive and `T: Send` suffices (no shared reads ever happen, unlike
+/// [`RangeShared`], whose `Sync` therefore also demands `T: Sync`).
+struct SlotWriter<T>(*mut Option<T>);
+
+// SAFETY: workers only `write` to indices they exclusively claimed.
+unsafe impl<T: Send> Sync for SlotWriter<T> {}
+
+impl<T> SlotWriter<T> {
+    /// # Safety
+    /// `i` must be in bounds and claimed by exactly one worker.
+    unsafe fn write(&self, i: usize, v: T) {
+        *self.0.add(i) = Some(v);
+    }
+}
+
 /// Apply `f` to every index `0..n` across `threads` workers, collecting
 /// results in index order.  `f` must be `Sync`; per-item state should be
-/// created inside the closure.
+/// created inside the closure.  Workers write results straight into their
+/// claimed slot — the atomic cursor hands each index to exactly one
+/// worker, so the writeback needs no lock at all.
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -33,54 +331,56 @@ where
         return (0..n).map(&f).collect();
     }
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots = SlotWriter(out.as_mut_ptr());
     let cursor = AtomicUsize::new(0);
-    let slots = Mutex::new(&mut out);
-    // SAFETY-free approach: each worker collects (idx, value) locally and
-    // a mutex-guarded writeback fills the output vector.
     std::thread::scope(|s| {
         for _ in 0..threads {
-            s.spawn(|| {
-                let mut local: Vec<(usize, T)> = Vec::new();
-                loop {
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    local.push((i, f(i)));
-                    // Flush periodically to bound memory for huge n.
-                    if local.len() >= 64 {
-                        let mut guard = slots.lock().unwrap();
-                        for (j, v) in local.drain(..) {
-                            guard[j] = Some(v);
-                        }
-                    }
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
                 }
-                let mut guard = slots.lock().unwrap();
-                for (j, v) in local.drain(..) {
-                    guard[j] = Some(v);
-                }
+                let v = f(i);
+                // SAFETY: the cursor hands index i to exactly one worker,
+                // and i < n is in bounds.
+                unsafe { slots.write(i, v) };
             });
         }
     });
     out.into_iter().map(|v| v.expect("worker missed a slot")).collect()
 }
 
+// ---------------------------------------------------------------------------
+// WorkQueue
+// ---------------------------------------------------------------------------
+
 /// Run a dynamic work queue: `pop` items until empty, where processing an
 /// item may push new items.  Used by the HiRef recursion (each refinement
 /// step enqueues its child co-clusters).
+///
+/// Idle workers **park on a condvar** instead of spinning: a momentarily
+/// empty queue (all items in flight with children still to come) costs no
+/// CPU; `push` wakes one sleeper, and the worker that retires the final
+/// item wakes everyone so the pool can exit.
 pub struct WorkQueue<T> {
-    items: Mutex<Vec<T>>,
-    in_flight: AtomicUsize,
+    state: Mutex<QueueState<T>>,
+    cv: Condvar,
+}
+
+struct QueueState<T> {
+    items: Vec<T>,
+    in_flight: usize,
 }
 
 impl<T: Send> WorkQueue<T> {
     pub fn new(initial: Vec<T>) -> Self {
-        WorkQueue { items: Mutex::new(initial), in_flight: AtomicUsize::new(0) }
+        WorkQueue { state: Mutex::new(QueueState { items: initial, in_flight: 0 }), cv: Condvar::new() }
     }
 
-    /// Push a new work item.
+    /// Push a new work item, waking one parked worker.
     pub fn push(&self, item: T) {
-        self.items.lock().unwrap().push(item);
+        self.state.lock().unwrap().items.push(item);
+        self.cv.notify_one();
     }
 
     /// Process items with `threads` workers until the queue drains.
@@ -95,28 +395,32 @@ impl<T: Send> WorkQueue<T> {
             for _ in 0..threads {
                 s.spawn(|| loop {
                     let item = {
-                        let mut q = self.items.lock().unwrap();
-                        match q.pop() {
-                            Some(it) => {
-                                self.in_flight.fetch_add(1, Ordering::SeqCst);
-                                Some(it)
+                        let mut st = self.state.lock().unwrap();
+                        loop {
+                            if let Some(it) = st.items.pop() {
+                                st.in_flight += 1;
+                                break Some(it);
                             }
-                            None => None,
+                            if st.in_flight == 0 {
+                                break None; // globally done
+                            }
+                            // Queue momentarily empty but items in flight
+                            // may still push children: park, don't spin.
+                            st = self.cv.wait(st).unwrap();
                         }
                     };
-                    match item {
-                        Some(it) => {
-                            f(it, self);
-                            self.in_flight.fetch_sub(1, Ordering::SeqCst);
-                        }
-                        None => {
-                            // Queue empty: done only if nobody is working
-                            // (a worker might still push children).
-                            if self.in_flight.load(Ordering::SeqCst) == 0 {
-                                break;
-                            }
-                            std::thread::yield_now();
-                        }
+                    let Some(it) = item else {
+                        // Wake any sibling still parked so it observes
+                        // completion and exits too.
+                        self.cv.notify_all();
+                        break;
+                    };
+                    f(it, self);
+                    let mut st = self.state.lock().unwrap();
+                    st.in_flight -= 1;
+                    if st.in_flight == 0 && st.items.is_empty() {
+                        drop(st);
+                        self.cv.notify_all();
                     }
                 });
             }
@@ -148,6 +452,14 @@ mod tests {
     }
 
     #[test]
+    fn parallel_map_non_copy_results() {
+        let got = parallel_map(64, 4, |i| vec![i as u32; 3]);
+        for (i, v) in got.iter().enumerate() {
+            assert_eq!(v, &vec![i as u32; 3]);
+        }
+    }
+
+    #[test]
     fn work_queue_processes_recursive_pushes() {
         // Binary-tree expansion: item = remaining depth; each item of depth
         // d pushes two items of depth d-1.  Total leaves = 2^D.
@@ -165,7 +477,98 @@ mod tests {
     }
 
     #[test]
+    fn work_queue_many_workers_few_items_terminates() {
+        // Far more workers than work: idle workers must park (not spin)
+        // while the single chain of slow items trickles through, and the
+        // pool must still shut down cleanly when the last item retires.
+        let hits = AtomicU64::new(0);
+        let q = WorkQueue::new(vec![3u32]);
+        q.run(32, |d, q| {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            hits.fetch_add(1, Ordering::Relaxed);
+            if d > 0 {
+                q.push(d - 1); // one child: queue is empty most of the time
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn work_queue_empty_initial_exits_immediately() {
+        let q: WorkQueue<u32> = WorkQueue::new(Vec::new());
+        q.run(8, |_, _| unreachable!("no items to process"));
+    }
+
+    #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn range_shared_disjoint_writes() {
+        let shared = RangeShared::new(vec![0u32; 100]);
+        std::thread::scope(|s| {
+            for w in 0..4 {
+                let shared = &shared;
+                s.spawn(move || {
+                    // worker w owns range [w*25, (w+1)*25)
+                    let part = unsafe { shared.slice_mut(w * 25, (w + 1) * 25) };
+                    for (o, v) in part.iter_mut().enumerate() {
+                        *v = (w * 25 + o) as u32;
+                    }
+                });
+            }
+        });
+        let out = shared.into_inner();
+        let want: Vec<u32> = (0..100).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn arena_reuses_buffers_and_tracks_peak() {
+        let arena = ScratchArena::new(1);
+        {
+            let a = arena.take_f32(100); // class 128 -> 512 bytes
+            assert_eq!(a.len(), 100);
+            assert!(a.iter().all(|&v| v == 0.0));
+            assert_eq!(arena.peak_bytes(), 128 * 4);
+            assert_eq!(arena.misses(), 1);
+        }
+        {
+            let mut b = arena.take_f32(90); // same class: freelist hit
+            b[0] = 7.0;
+            assert_eq!(arena.hits(), 1);
+            let c = arena.take_u32(10); // u32 pool is separate
+            assert_eq!(c.len(), 10);
+            assert_eq!(arena.misses(), 2);
+            assert_eq!(arena.peak_bytes(), 128 * 4 + MIN_SCRATCH * 4);
+        }
+        // peak survives after everything is returned
+        assert_eq!(arena.peak_bytes(), 128 * 4 + MIN_SCRATCH * 4);
+        assert!(arena.hit_rate() > 0.3);
+    }
+
+    #[test]
+    fn arena_detach_hands_buffer_out() {
+        let arena = ScratchArena::new(2);
+        let mut g = arena.take_f32(10);
+        g[3] = 5.0;
+        let v = g.detach();
+        assert_eq!(v[3], 5.0);
+        assert_eq!(v.len(), 10);
+        // detached buffers never come back: next take is a miss again
+        let _ = arena.take_f32(10);
+        assert_eq!(arena.misses(), 2);
+    }
+
+    #[test]
+    fn arena_zeroes_reused_buffers() {
+        let arena = ScratchArena::new(1);
+        {
+            let mut a = arena.take_f32(64);
+            a.iter_mut().for_each(|v| *v = 9.0);
+        }
+        let b = arena.take_f32(64);
+        assert!(b.iter().all(|&v| v == 0.0));
     }
 }

@@ -32,7 +32,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Mutex};
 
 use crate::api::SolveError;
-use crate::linalg::Mat;
+use crate::linalg::{Mat, MatView};
 
 /// Runtime failures are [`SolveError::Backend`] — one typed error enum
 /// across the whole solver stack.
@@ -176,18 +176,22 @@ impl PjrtEngine {
     }
 
     /// Solve an LROT sub-problem on the AOT path.  `u`/`v` are the cost
-    /// factors restricted to this co-cluster (`active_x`/`active_y` rows).
+    /// factors restricted to this co-cluster (`active_x`/`active_y` rows),
+    /// passed as borrowed [`MatView`]s — the coordinator slices its
+    /// contiguous working buffers, so no factor rows are copied to get
+    /// here (padding into the bucket shape below is the first copy).
     /// Returns `Ok(None)` when no bucket fits (always, in stub builds).
     #[cfg_attr(not(feature = "pjrt"), allow(unused_variables))]
-    pub fn lrot(
+    pub fn lrot<'a, 'b>(
         &self,
-        u: &Mat,
-        v: &Mat,
+        u: impl Into<MatView<'a>>,
+        v: impl Into<MatView<'b>>,
         active_x: usize,
         active_y: usize,
         rank: usize,
         seed: u64,
     ) -> Result<Option<(Mat, Mat)>> {
+        let (u, v) = (u.into(), v.into());
         debug_assert_eq!(u.cols, v.cols);
         #[cfg(not(feature = "pjrt"))]
         {
@@ -203,7 +207,7 @@ impl PjrtEngine {
             let (s, k, r) = (b.s, b.k, b.r);
 
             // --- pad inputs into bucket shape --------------------------------
-            let pad_mat = |m: &Mat, rows: usize| -> Vec<f32> {
+            let pad_mat = |m: MatView<'_>, rows: usize| -> Vec<f32> {
                 let mut out = vec![0.0f32; s * k];
                 for i in 0..rows {
                     out[i * k..i * k + m.cols].copy_from_slice(m.row(i));

@@ -8,11 +8,16 @@
 //!   larger base-case blocks; the HiRef default above the Hungarian
 //!   crossover size.
 
+use crate::linalg::MatView;
+#[cfg(test)]
 use crate::linalg::Mat;
 
 /// Exact min-cost perfect matching on the square cost matrix `c`.
 /// Returns `perm` with row `i` matched to column `perm[i]`.
-pub fn hungarian(c: &Mat) -> Vec<u32> {
+/// Accepts `&Mat` or any [`MatView`] (e.g. a scratch-arena cost buffer),
+/// so HiRef base blocks solve in place without an owned copy.
+pub fn hungarian<'a>(c: impl Into<MatView<'a>>) -> Vec<u32> {
+    let c = c.into();
     let n = c.rows;
     assert_eq!(n, c.cols, "hungarian needs a square cost");
     if n == 0 {
@@ -82,7 +87,8 @@ pub fn hungarian(c: &Mat) -> Vec<u32> {
 /// Bertsekas forward auction with ε-scaling.  Minimises Σ c[i, perm[i]].
 /// `quality` scales the final ε: 1.0 targets exactness on generic inputs
 /// (final ε < resolution/n); larger values trade cost for speed.
-pub fn auction(c: &Mat, quality: f64) -> Vec<u32> {
+pub fn auction<'a>(c: impl Into<MatView<'a>>, quality: f64) -> Vec<u32> {
+    let c = c.into();
     let n = c.rows;
     assert_eq!(n, c.cols, "auction needs a square cost");
     if n == 0 {
@@ -133,7 +139,8 @@ pub fn auction(c: &Mat, quality: f64) -> Vec<u32> {
 }
 
 /// Exact brute-force assignment for tiny n (test oracle, n ≤ 10).
-pub fn brute_force(c: &Mat) -> (Vec<u32>, f64) {
+pub fn brute_force<'a>(c: impl Into<MatView<'a>>) -> (Vec<u32>, f64) {
+    let c = c.into();
     let n = c.rows;
     assert!(n <= 10, "brute_force is exponential");
     let mut perm: Vec<u32> = (0..n as u32).collect();
@@ -165,7 +172,8 @@ pub fn brute_force(c: &Mat) -> (Vec<u32>, f64) {
 }
 
 /// Total (unnormalised) cost of an assignment.
-pub fn cost_of(c: &Mat, perm: &[u32]) -> f64 {
+pub fn cost_of<'a>(c: impl Into<MatView<'a>>, perm: &[u32]) -> f64 {
+    let c = c.into();
     perm.iter().enumerate().map(|(i, &j)| c.at(i, j as usize) as f64).sum()
 }
 

@@ -9,9 +9,16 @@
 //!
 //! Cost matrices never materialise: gradients go through the factorisation
 //! `C = U Vᵀ`, so a solve is `O(outer · (s·k·r + inner · s·r))`.
+//!
+//! The solver is **zero-copy and allocation-free on the hot path**: cost
+//! factors arrive as borrowed [`MatView`]s (HiRef slices its contiguous
+//! working buffers, never gathers), and every intermediate — logits,
+//! factor exponentials, gradients, Sinkhorn potentials — is checked out of
+//! a [`ScratchArena`] ([`solve_factored_in`]).  Only the output factors
+//! are owned, and those leave the arena without a copy via `detach`.
 
-use crate::linalg::{fast_exp, Mat, matmul_into};
-use crate::pool;
+use crate::linalg::{fast_exp, matmul_into_slice, slice_max_abs, vt_matmul_into_slice, Mat, MatView};
+use crate::pool::{self, ScratchArena};
 use crate::prng::Rng;
 
 /// Row-parallelism threshold: blocks below this stay single-threaded (the
@@ -61,37 +68,63 @@ pub struct LrotOutput {
 /// Solve LROT on cost factors `(u, v)` (C = U Vᵀ restricted to the block)
 /// with uniform marginals over the first `active_x`/`active_y` rows; rows
 /// beyond that are phantom padding with zero mass.  Deterministic in
-/// `seed`.
-pub fn solve_factored(
-    u: &Mat,
-    v: &Mat,
+/// `seed`.  Standalone entry point (baselines, tests): allocates a private
+/// single-shard arena — callers in a solve loop should use
+/// [`solve_factored_in`] with a shared arena instead.
+pub fn solve_factored<'a, 'b>(
+    u: impl Into<MatView<'a>>,
+    v: impl Into<MatView<'b>>,
     active_x: usize,
     active_y: usize,
     cfg: &LrotConfig,
     seed: u64,
 ) -> LrotOutput {
+    let arena = ScratchArena::new(1);
+    solve_factored_in(u.into(), v.into(), active_x, active_y, cfg, seed, &arena)
+}
+
+/// [`solve_factored`] with every intermediate drawn from `arena`.
+pub fn solve_factored_in(
+    u: MatView<'_>,
+    v: MatView<'_>,
+    active_x: usize,
+    active_y: usize,
+    cfg: &LrotConfig,
+    seed: u64,
+    arena: &ScratchArena,
+) -> LrotOutput {
     let s = u.rows;
+    let sv = v.rows;
     let r = cfg.rank;
-    assert!(active_x <= s && active_y <= v.rows);
+    assert!(active_x <= s && active_y <= sv);
     let mut rng = Rng::new(seed ^ 0x160_7);
 
-    let loga = log_marginal(s, active_x);
-    let logb = log_marginal(v.rows, active_y);
+    let mut loga = arena.take_f32(s);
+    let mut logb = arena.take_f32(sv);
+    fill_log_marginal(&mut loga, active_x);
+    fill_log_marginal(&mut logb, active_y);
     let logg = -(r as f32).ln();
     let inv_g = r as f32;
 
-    // init: product marginal + noise, projected
-    let mut log_q = init_logits(&loga, r, logg, cfg.tau, &mut rng);
-    let mut log_r = init_logits(&logb, r, logg, cfg.tau, &mut rng);
-    sinkhorn_project(&mut log_q, &loga, logg, cfg.inner);
-    sinkhorn_project(&mut log_r, &logb, logg, cfg.inner);
+    // Sinkhorn potential buffers, checked out once per solve and reused by
+    // every projection (f is sliced per side; h is zeroed per call).
+    let mut fpot = arena.take_f32(s.max(sv));
+    let mut hpot = arena.take_f32(r);
 
-    // preallocated buffers for the hot loop
-    let mut q = Mat::zeros(s, r);
-    let mut rr = Mat::zeros(v.rows, r);
-    let mut w = Mat::zeros(u.cols, r);
-    let mut gq = Mat::zeros(s, r);
-    let mut gr = Mat::zeros(v.rows, r);
+    // init: product marginal + noise, projected
+    let mut log_q = arena.take_f32(s * r);
+    let mut log_r = arena.take_f32(sv * r);
+    init_logits(&mut log_q, &loga, r, logg, cfg.tau, &mut rng);
+    init_logits(&mut log_r, &logb, r, logg, cfg.tau, &mut rng);
+    sinkhorn_project(&mut log_q, s, r, &loga, logg, cfg.inner, &mut fpot[..s], &mut hpot);
+    sinkhorn_project(&mut log_r, sv, r, &logb, logg, cfg.inner, &mut fpot[..sv], &mut hpot);
+
+    // scratch buffers for the hot loop (freelist checkouts, not allocs)
+    let mut q = arena.take_f32(s * r);
+    let mut rr = arena.take_f32(sv * r);
+    let mut w = arena.take_f32(u.cols * r);
+    let mut gq = arena.take_f32(s * r);
+    let mut gr = arena.take_f32(sv * r);
 
     let mut prev_labels: Option<(Vec<u16>, Vec<u16>)> = None;
     for it in 0..cfg.outer {
@@ -100,34 +133,35 @@ pub fn solve_factored(
         // Early stop: once the hard co-clustering is stable, further
         // mirror-descent steps cannot change HiRef's refinement decision.
         if it % 5 == 4 {
-            let labels = (argmax_labels(&q), argmax_labels(&rr));
+            let labels = (argmax_labels(&q, r), argmax_labels(&rr, r));
             if prev_labels.as_ref() == Some(&labels) {
                 break;
             }
             prev_labels = Some(labels);
         }
         // gq = U (Vᵀ R) * inv_g ; gr = V (Uᵀ Q) * inv_g
-        vt_matmul_into(v, &rr, &mut w);
-        matmul_into(u, &w, &mut gq);
-        gq.data.iter_mut().for_each(|x| *x *= inv_g);
-        vt_matmul_into(u, &q, &mut w);
-        matmul_into(v, &w, &mut gr);
-        gr.data.iter_mut().for_each(|x| *x *= inv_g);
+        vt_matmul_into_slice(v, MatView::from_slice(sv, r, &rr), &mut w);
+        matmul_into_slice(u, MatView::from_slice(u.cols, r, &w), &mut gq);
+        gq.iter_mut().for_each(|x| *x *= inv_g);
+        vt_matmul_into_slice(u, MatView::from_slice(s, r, &q), &mut w);
+        matmul_into_slice(v, MatView::from_slice(v.cols, r, &w), &mut gr);
+        gr.iter_mut().for_each(|x| *x *= inv_g);
 
-        let scale = gq.max_abs().max(gr.max_abs()).max(1e-12);
+        let scale = slice_max_abs(&gq).max(slice_max_abs(&gr)).max(1e-12);
         let step = cfg.gamma / scale;
-        for (lq, g) in log_q.data.iter_mut().zip(&gq.data) {
+        for (lq, g) in log_q.iter_mut().zip(gq.iter()) {
             *lq -= step * g;
         }
-        for (lr, g) in log_r.data.iter_mut().zip(&gr.data) {
+        for (lr, g) in log_r.iter_mut().zip(gr.iter()) {
             *lr -= step * g;
         }
-        sinkhorn_project(&mut log_q, &loga, logg, cfg.inner);
-        sinkhorn_project(&mut log_r, &logb, logg, cfg.inner);
+        sinkhorn_project(&mut log_q, s, r, &loga, logg, cfg.inner, &mut fpot[..s], &mut hpot);
+        sinkhorn_project(&mut log_r, sv, r, &logb, logg, cfg.inner, &mut fpot[..sv], &mut hpot);
     }
     exp_into(&log_q, &mut q);
     exp_into(&log_r, &mut rr);
-    LrotOutput { q, r: rr }
+    // detach(): the output factors leave the arena without a copy
+    LrotOutput { q: Mat::from_vec(s, r, q.detach()), r: Mat::from_vec(sv, r, rr.detach()) }
 }
 
 /// Primal cost `⟨C, Q diag(1/g) Rᵀ⟩` with C = U Vᵀ and uniform g = 1/r,
@@ -147,41 +181,54 @@ pub fn lowrank_cost(u: &Mat, v: &Mat, q: &Mat, r: &Mat) -> f64 {
     s * rank as f64
 }
 
-fn log_marginal(s: usize, active: usize) -> Vec<f32> {
+fn fill_log_marginal(out: &mut [f32], active: usize) {
     let la = -(active as f32).ln();
-    (0..s).map(|i| if i < active { la } else { NEG }).collect()
+    for (i, v) in out.iter_mut().enumerate() {
+        *v = if i < active { la } else { NEG };
+    }
 }
 
-fn init_logits(loga: &[f32], r: usize, logg: f32, tau: f32, rng: &mut Rng) -> Mat {
-    let s = loga.len();
-    let mut m = Mat::zeros(s, r);
-    for i in 0..s {
-        let row = m.row_mut(i);
+fn init_logits(m: &mut [f32], loga: &[f32], r: usize, logg: f32, tau: f32, rng: &mut Rng) {
+    for (i, row) in m.chunks_mut(r).enumerate() {
         for v in row.iter_mut() {
             *v = loga[i] + logg + tau * rng.normal_f32();
         }
     }
-    m
 }
 
-/// In-place masked log-domain Sinkhorn projection onto Π(a, g).
-/// Mirrors model.sinkhorn_project: alternating f (rows) / h (cols)
-/// updates.  Row loops are chunked across threads for large blocks — the
-/// exp/log-heavy f-update dominates LROT runtime at the top of the
-/// hierarchy (see EXPERIMENTS.md §Perf).
-fn sinkhorn_project(log_k: &mut Mat, loga: &[f32], logg: f32, iters: usize) {
-    let (s, r) = (log_k.rows, log_k.cols);
+/// In-place masked log-domain Sinkhorn projection onto Π(a, g) over a
+/// row-major `s×r` logit buffer.  Mirrors model.sinkhorn_project:
+/// alternating f (rows) / h (cols) updates.  Row loops are chunked across
+/// threads for large blocks — the exp/log-heavy f-update dominates LROT
+/// runtime at the top of the hierarchy (see EXPERIMENTS.md §Perf).  The
+/// caller supplies the potential buffers (`f` len `s`, `h` len `r`) so a
+/// solve checks them out of the arena exactly once; `h` is reset here
+/// (the projection always starts from zero column potentials), `f` is
+/// fully overwritten before use.
+#[allow(clippy::too_many_arguments)]
+fn sinkhorn_project(
+    log_k: &mut [f32],
+    s: usize,
+    r: usize,
+    loga: &[f32],
+    logg: f32,
+    iters: usize,
+    f: &mut [f32],
+    h: &mut [f32],
+) {
+    debug_assert_eq!(log_k.len(), s * r);
+    debug_assert_eq!(f.len(), s);
+    debug_assert_eq!(h.len(), r);
+    h.fill(0.0);
     let threads = threads_for(s * r * iters);
-    let mut f = vec![0.0f32; s];
-    let mut h = vec![0.0f32; r];
     let chunk = s.div_ceil(threads.max(1)).max(1);
     let n_chunks = s.div_ceil(chunk);
 
     for _ in 0..iters {
         // f-update (row LSE with current h) + per-chunk column partials
         let partials: Vec<(Vec<f32>, Vec<f32>)> = {
-            let log_k = &*log_k;
-            let h_ref = &h;
+            let lk: &[f32] = log_k;
+            let h_ref: &[f32] = &h;
             let mut f_chunks: Vec<&mut [f32]> = f.chunks_mut(chunk).collect();
             let results = std::sync::Mutex::new(vec![None; n_chunks]);
             std::thread::scope(|scope| {
@@ -197,7 +244,7 @@ fn sinkhorn_project(log_k: &mut Mat, loga: &[f32], logg: f32, iters: usize) {
                                 f_chunk[o] = NEG;
                                 continue;
                             }
-                            let row = log_k.row(i);
+                            let row = &lk[i * r..(i + 1) * r];
                             let mut mx = f32::NEG_INFINITY;
                             for (v, hv) in row.iter().zip(h_ref) {
                                 mx = mx.max(v + hv);
@@ -222,7 +269,7 @@ fn sinkhorn_project(log_k: &mut Mat, loga: &[f32], logg: f32, iters: usize) {
                                 continue;
                             }
                             for ((acc, v), cm) in
-                                col_acc.iter_mut().zip(log_k.row(i)).zip(&col_max)
+                                col_acc.iter_mut().zip(&lk[i * r..(i + 1) * r]).zip(&col_max)
                             {
                                 *acc += fast_exp(v + fi - cm);
                             }
@@ -265,10 +312,10 @@ fn sinkhorn_project(log_k: &mut Mat, loga: &[f32], logg: f32, iters: usize) {
     }
     // fold potentials in (chunk-parallel)
     {
-        let h_ref = &h;
-        let f_ref = &f;
+        let h_ref: &[f32] = &h;
+        let f_ref: &[f32] = &f;
         let rows_per = chunk;
-        let mut data_chunks: Vec<&mut [f32]> = log_k.data.chunks_mut(rows_per * r).collect();
+        let mut data_chunks: Vec<&mut [f32]> = log_k.chunks_mut(rows_per * r).collect();
         std::thread::scope(|scope| {
             for (ci, dchunk) in data_chunks.iter_mut().enumerate() {
                 let dchunk: &mut [f32] = dchunk;
@@ -287,10 +334,9 @@ fn sinkhorn_project(log_k: &mut Mat, loga: &[f32], logg: f32, iters: usize) {
 }
 
 /// Row argmax labels (compact u16; ranks are ≤ 2^16).
-fn argmax_labels(m: &Mat) -> Vec<u16> {
-    (0..m.rows)
-        .map(|i| {
-            let row = m.row(i);
+fn argmax_labels(m: &[f32], r: usize) -> Vec<u16> {
+    m.chunks(r)
+        .map(|row| {
             let mut best = 0usize;
             let mut bv = f32::NEG_INFINITY;
             for (z, &v) in row.iter().enumerate() {
@@ -304,27 +350,9 @@ fn argmax_labels(m: &Mat) -> Vec<u16> {
         .collect()
 }
 
-fn exp_into(src: &Mat, dst: &mut Mat) {
-    for (d, &s) in dst.data.iter_mut().zip(&src.data) {
+fn exp_into(src: &[f32], dst: &mut [f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
         *d = fast_exp(s); // fast_exp underflows the NEG sentinel to 0
-    }
-}
-
-/// `out = aᵀ b` into a preallocated k×r buffer.
-fn vt_matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
-    assert_eq!(a.rows, b.rows);
-    assert_eq!((out.rows, out.cols), (a.cols, b.cols));
-    out.data.fill(0.0);
-    let n = b.cols;
-    for p in 0..a.rows {
-        let arow = a.row(p);
-        let brow = b.row(p);
-        for (i, &av) in arow.iter().enumerate() {
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for (ov, &bv) in orow.iter_mut().zip(brow) {
-                *ov += av * bv;
-            }
-        }
     }
 }
 
@@ -426,6 +454,23 @@ mod tests {
             costs.push(lowrank_cost(&u, &v, &out.q, &out.r));
         }
         assert!(costs[2] < costs[0] * 1.02, "rank-32 {} vs rank-2 {}", costs[2], costs[0]);
+    }
+
+    #[test]
+    fn shared_arena_run_matches_private_arena_run() {
+        // solve_factored_in with a reused arena must be bit-identical to
+        // the standalone entry point (buffers are zeroed on checkout).
+        let (x, y, _) = shuffled_pair(96, 2, 10);
+        let (u, v) = sq_euclidean_factors(&x, &y);
+        let cfg = LrotConfig { rank: 4, ..Default::default() };
+        let a = solve_factored(&u, &v, 96, 96, &cfg, 11);
+        let arena = ScratchArena::new(2);
+        // run twice so the second solve hits warm freelists
+        let _ = solve_factored_in(u.view(), v.view(), 96, 96, &cfg, 11, &arena);
+        let b = solve_factored_in(u.view(), v.view(), 96, 96, &cfg, 11, &arena);
+        assert_eq!(a.q.data, b.q.data);
+        assert_eq!(a.r.data, b.r.data);
+        assert!(arena.hits() > 0, "second solve should reuse buffers");
     }
 
     fn argmax(xs: &[f32]) -> usize {

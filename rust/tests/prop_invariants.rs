@@ -13,6 +13,7 @@ use hiref::linalg::Mat;
 use hiref::metrics;
 use hiref::prng::Rng;
 use hiref::solvers::exact;
+use hiref::solvers::lrot::{self, LrotConfig};
 
 /// Run `prop` over `cases` seeded instances.
 fn check(name: &str, cases: u64, prop: impl Fn(&mut Rng)) {
@@ -210,6 +211,99 @@ fn prop_hiref_cost_stable_under_point_relabeling() {
         // same point multiset => both near-optimal (per-block seeding
         // differs, so allow slack)
         assert!((c1 - c2).abs() <= 0.5 * (c1 + c2).max(0.02), "{c1} vs {c2}");
+    });
+}
+
+fn assert_is_permutation_of_0_to_n(ids: &mut Vec<u32>, n: usize, what: &str) {
+    ids.sort_unstable();
+    let want: Vec<u32> = (0..n as u32).collect();
+    assert_eq!(*ids, want, "{what} is not a permutation of 0..{n}");
+}
+
+#[test]
+fn prop_ranges_partition_and_reindexing_stays_bijective() {
+    // The zero-copy layout invariants: after every *complete* level the
+    // per-side co-cluster ranges exactly partition 0..n (each id exactly
+    // once, both sides), every recorded level is duplicate-free, and the
+    // final in-place re-indexing permutations are bijections of 0..n.
+    check("ranges partition / reindex bijective", 10, |rng| {
+        let n = 24 + rng.next_below(300);
+        let x = rand_mat(rng, n, 2);
+        let y = rand_mat(rng, n, 2);
+        let mut cfg = native_cfg(rng);
+        cfg.record_scales = true;
+        cfg.base_size = 8;
+        let out = HiRef::new(cfg).align(&x, &y).unwrap();
+
+        let mut xo = out.x_order.clone();
+        let mut yo = out.y_order.clone();
+        assert_is_permutation_of_0_to_n(&mut xo, n, "x_order");
+        assert_is_permutation_of_0_to_n(&mut yo, n, "y_order");
+
+        for (lvl_idx, lvl) in out.scales.as_ref().unwrap().iter().enumerate() {
+            if lvl.is_empty() {
+                continue;
+            }
+            // per-side sizes agree block-wise (bijective correspondence)
+            for (bx, by) in lvl {
+                assert_eq!(bx.len(), by.len(), "level {lvl_idx}: unbalanced block");
+            }
+            let mut xs: Vec<u32> = lvl.iter().flat_map(|(a, _)| a.iter().copied()).collect();
+            let mut ys: Vec<u32> = lvl.iter().flat_map(|(_, b)| b.iter().copied()).collect();
+            // no id appears twice at any level (ranges are disjoint)
+            xs.sort_unstable();
+            ys.sort_unstable();
+            assert!(xs.windows(2).all(|w| w[0] != w[1]), "level {lvl_idx}: duplicate x id");
+            assert!(ys.windows(2).all(|w| w[0] != w[1]), "level {lvl_idx}: duplicate y id");
+            // complete levels cover every point exactly once on both sides
+            if xs.len() == n {
+                let mut xs = xs.clone();
+                let mut ys = ys.clone();
+                assert_is_permutation_of_0_to_n(&mut xs, n, "level x ids");
+                assert_is_permutation_of_0_to_n(&mut ys, n, "level y ids");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_matview_solves_equal_gather_rows_solves() {
+    // MatView-vs-gather_rows equivalence: running LROT on a contiguous
+    // row-range *view* of the factor buffers must be bit-identical to
+    // running it on an owned gathered copy of the same rows, and the
+    // Hungarian solver must return the same assignment on a row-range
+    // view of a stacked cost buffer as on the owned sub-matrix.
+    check("view = gather", 12, |rng| {
+        let n = 40 + rng.next_below(80);
+        let x = rand_mat(rng, n, 3);
+        let y = rand_mat(rng, n, 3);
+        let (u, v) = sq_euclidean_factors(&x, &y);
+        let a = rng.next_below(n / 2);
+        let b = a + 8 + rng.next_below(n - a - 8);
+        let idx: Vec<u32> = (a as u32..b as u32).collect();
+        let m = idx.len();
+
+        let (ug, vg) = (u.gather_rows(&idx), v.gather_rows(&idx));
+        let cfg = LrotConfig { rank: 2 + rng.next_below(3), ..Default::default() };
+        let gathered = lrot::solve_factored(&ug, &vg, m, m, &cfg, 1234);
+        let viewed = lrot::solve_factored(u.row_range(a, b), v.row_range(a, b), m, m, &cfg, 1234);
+        assert_eq!(gathered.q.data, viewed.q.data, "LROT Q factors diverge");
+        assert_eq!(gathered.r.data, viewed.r.data, "LROT R factors diverge");
+
+        // Hungarian: owned sub-cost vs a row-range view into a larger
+        // stacked buffer (decoy rows above and below).
+        let sub_c = dense_cost(x.row_range(a, b), y.row_range(a, b), CostKind::SqEuclidean);
+        let mut stacked = Mat::zeros(3 * m, m);
+        for v in stacked.data.iter_mut() {
+            *v = rng.next_f32(); // decoy noise
+        }
+        stacked.data[m * m..2 * m * m].copy_from_slice(&sub_c.data);
+        let h_owned = exact::hungarian(&sub_c);
+        let h_view = exact::hungarian(stacked.row_range(m, 2 * m));
+        assert_eq!(h_owned, h_view, "hungarian diverges on view");
+        let a_owned = exact::auction(&sub_c, 1.0);
+        let a_view = exact::auction(stacked.row_range(m, 2 * m), 1.0);
+        assert_eq!(a_owned, a_view, "auction diverges on view");
     });
 }
 
