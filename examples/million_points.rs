@@ -1,59 +1,84 @@
 //! Million-point alignment — the paper's headline scaling claim (§4.1,
-//! §4.4): full-rank OT two orders of magnitude beyond Sinkhorn's reach.
+//! §4.4): full-rank OT two orders of magnitude beyond Sinkhorn's reach —
+//! now **bounded-memory by construction** end to end.
 //!
-//! Aligns `n = 2^20 = 1,048,576` Half-Moon & S-Curve points (the largest
-//! instance of Fig. 2 / Fig. S2a) with linear memory: at no point does any
-//! data structure exceed `O(n · max_rank)`.  Sinkhorn at this size would
-//! need a 2^40-entry coupling (≈ 4 TiB in f32) — materially impossible —
-//! which is the paper's point.
+//! Aligns `n = 2^20 = 1,048,576` Half-Moon & S-Curve points through the
+//! streaming ingestion path: both clouds are
+//! [`hiref::data::stream::GeneratorSource`]s producing points on demand
+//! per row, so the full `n×d` matrices never exist.  Every full-dataset
+//! sweep (chunked cost factorisation, the final cost evaluation) runs in
+//! `chunk_rows`-sized tiles; base-case blocks gather their ≤ `base_size`
+//! rows into arena scratch on demand.  The whole solve holds:
 //!
-//! Run: `cargo run --release --example million_points [log2_n]`
-//! (default 20; pass 18 for a ~30s smoke run)
+//! * `O(n·(d+2))` cost-factor working copies (reported as `factor bytes`),
+//! * `O(n)` permutations and output,
+//! * `O(chunk_rows·d)` ingestion tiles + in-flight-block solver scratch
+//!   (reported as `scratch peak`).
+//!
+//! Sinkhorn at this size would need a 2^40-entry coupling (≈ 4 TiB in
+//! f32) — materially impossible — which is the paper's point; and the
+//! pre-streaming version of this example additionally needed both full
+//! point clouds resident, which is the ceiling this path removes.
+//!
+//! Run: `cargo run --release --example million_points [log2_n] [chunk_rows]`
+//! (defaults 20 and 65536; pass 18 for a ~30s smoke run)
 
 use hiref::coordinator::hiref::{BackendKind, HiRef, HiRefConfig};
 use hiref::costs::CostKind;
 use hiref::data::synthetic;
-use hiref::metrics;
+use hiref::metrics::{self, human_bytes};
 use hiref::prng::Rng;
 use hiref::report::timed;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let log2n: u32 = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(20);
+    let chunk_rows: usize =
+        std::env::args().nth(2).and_then(|a| a.parse().ok()).unwrap_or(1 << 16);
     let n = 1usize << log2n;
     let kind = CostKind::SqEuclidean;
-    println!("generating Half-Moon & S-Curve at n = 2^{log2n} = {n} ...");
-    let ((x, y), gen_secs) = timed(|| synthetic::half_moon_s_curve(n, 0));
-    println!("  generated in {gen_secs:.1}s");
+    println!("streaming Half-Moon & S-Curve at n = 2^{log2n} = {n} (chunk_rows = {chunk_rows})");
+    // Generator-backed sources: the clouds never exist in memory — rows
+    // are produced on demand, independently seeded per row.
+    let (xs, ys) = synthetic::half_moon_s_curve_sources(n, 0);
 
     let cfg = HiRefConfig {
         backend: BackendKind::Auto,
         base_size: 1024,
         max_rank: 16,
         hungarian_cutoff: 128, // auction everywhere in the base case
+        chunk_rows,
         ..Default::default()
     };
     let solver = HiRef::new(cfg);
     println!(
-        "aligning with HiRef ({} backend) ...",
+        "aligning with HiRef ({} backend) through the streaming path ...",
         if solver.engine().is_some() { "AOT/PJRT + native" } else { "native" }
     );
-    let (out, secs) = timed(|| solver.align(&x, &y));
+    let (out, secs) = timed(|| solver.align_source(&xs, &ys));
     let out = out?;
     assert!(out.is_bijection(), "must be a bijection at n = {n}");
 
-    let (cost, cost_secs) = timed(|| out.cost(&x, &y, kind));
+    // Cost evaluation streams too: x in tiles, matched y rows on demand.
+    let (cost, cost_secs) =
+        timed(|| metrics::bijection_cost_source(&xs, &ys, &out.perm, kind, chunk_rows));
     let mut rng = Rng::new(7);
-    let rand_cost = metrics::bijection_cost(&x, &y, &rng.permutation(n), kind);
+    let rand_cost =
+        metrics::bijection_cost_source(&xs, &ys, &rng.permutation(n), kind, chunk_rows);
 
+    let rs = &out.stats;
     println!("\nRESULTS");
     println!("  n                   = {n}");
     println!("  wall time           = {secs:.1}s (+{cost_secs:.1}s cost eval)");
     println!("  schedule            = {:?}", out.schedule);
     println!("  LROT calls          = {} ({} pjrt / {} native)",
-             out.stats.lrot_calls, out.stats.pjrt_calls, out.stats.native_calls);
-    println!("  base blocks (exact) = {}", out.stats.base_calls);
+             rs.lrot_calls, rs.pjrt_calls, rs.native_calls);
+    println!("  base blocks (exact) = {}", rs.base_calls);
     println!("  primal cost         = {cost:.4}");
     println!("  random-pairing cost = {rand_cost:.4}  ({:.1}x worse)", rand_cost / cost);
+    println!("  factor bytes        = {} (O(n·(d+2)) working copies)",
+             human_bytes(rs.factor_bytes));
+    println!("  scratch peak        = {} (tiles + in-flight blocks, hit rate {:.1}%)",
+             human_bytes(rs.peak_scratch_bytes), rs.arena_hit_rate() * 100.0);
     println!("  coupling storage    = {} pairs ({} MiB) vs dense {} TiB",
              n,
              n * 8 / (1 << 20),

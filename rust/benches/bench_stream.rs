@@ -1,0 +1,109 @@
+//! Streaming-ingestion perf profile: run HiRef end-to-end through the
+//! chunked [`hiref::data::stream::DatasetSource`] path and emit
+//! `BENCH_stream.json`, recording the memory-model terms the streaming
+//! subsystem promises to bound — peak scratch-arena bytes (ingestion
+//! tiles + in-flight solver blocks, `O(chunk_rows·d + n·r_transient)`)
+//! and cost-factor bytes (`O(n·(d+2))`).  CI runs this at small `n` as an
+//! advisory step; profile bigger instances locally with
+//!
+//! ```sh
+//! HIREF_STREAM_N=1048576 HIREF_STREAM_CHUNK=65536 \
+//!     cargo bench --bench bench_stream
+//! ```
+
+use hiref::coordinator::hiref::{BackendKind, HiRef, HiRefConfig};
+use hiref::costs::CostKind;
+use hiref::data::synthetic;
+use hiref::metrics::{self, human_bytes};
+use hiref::pool;
+use hiref::report::{section, timed};
+
+fn main() {
+    let n: usize = std::env::var("HIREF_STREAM_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(65536);
+    let chunk_rows: usize = std::env::var("HIREF_STREAM_CHUNK")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8192);
+    let threads = pool::default_threads();
+    section(&format!(
+        "bench_stream — n = {n}, chunk_rows = {chunk_rows}, threads = {threads}"
+    ));
+
+    // Generator-backed sources: neither cloud is ever materialised.
+    let (xs, ys) = synthetic::half_moon_s_curve_sources(n, 0);
+    let cfg = HiRefConfig {
+        backend: BackendKind::Auto,
+        threads,
+        chunk_rows,
+        ..Default::default()
+    };
+    let solver = HiRef::new(cfg);
+
+    // one warm-up solve (page-faults, lazy artifact compilation), then the
+    // measured run
+    let _ = solver.align_source(&xs, &ys).expect("warm-up align_source");
+    let (out, secs) = timed(|| solver.align_source(&xs, &ys));
+    let out = out.expect("align_source");
+    assert!(out.is_bijection(), "bench output must be a bijection");
+    let cost = metrics::bijection_cost_source(&xs, &ys, &out.perm, CostKind::SqEuclidean, chunk_rows);
+    let rs = &out.stats;
+    let elapsed_ms = secs * 1e3;
+    // the bound the acceptance criterion names: one ingestion tile plus
+    // the factor working copies (d = 2, factor width d + 2)
+    let bound_bytes = (chunk_rows * 2 + 2 * n * 4) * std::mem::size_of::<f32>();
+
+    println!("elapsed         = {elapsed_ms:.1} ms");
+    println!("primal W2² cost = {cost:.4}");
+    println!("schedule        = {:?}", out.schedule);
+    println!(
+        "lrot calls      = {} ({} pjrt, {} native), base blocks = {}",
+        rs.lrot_calls, rs.pjrt_calls, rs.native_calls, rs.base_calls
+    );
+    println!("factor bytes    = {}", human_bytes(rs.factor_bytes));
+    println!(
+        "scratch peak    = {} (hit rate {:.1}%)",
+        human_bytes(rs.peak_scratch_bytes),
+        rs.arena_hit_rate() * 100.0
+    );
+    println!("O(chunk·d + n·r) reference = {}", human_bytes(bound_bytes));
+
+    // hand-rolled JSON (the vendored universe has no serde)
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"stream\",\n",
+            "  \"n\": {},\n",
+            "  \"chunk_rows\": {},\n",
+            "  \"threads\": {},\n",
+            "  \"elapsed_ms\": {:.3},\n",
+            "  \"primal_cost_w2sq\": {:.6},\n",
+            "  \"schedule\": {:?},\n",
+            "  \"lrot_calls\": {},\n",
+            "  \"base_calls\": {},\n",
+            "  \"factor_bytes\": {},\n",
+            "  \"peak_arena_bytes\": {},\n",
+            "  \"factor_plus_arena_bytes\": {},\n",
+            "  \"chunk_d_plus_n_r_bytes\": {},\n",
+            "  \"arena_hit_rate\": {:.4}\n",
+            "}}\n"
+        ),
+        n,
+        chunk_rows,
+        threads,
+        elapsed_ms,
+        cost,
+        out.schedule,
+        rs.lrot_calls,
+        rs.base_calls,
+        rs.factor_bytes,
+        rs.peak_scratch_bytes,
+        rs.factor_bytes + rs.peak_scratch_bytes,
+        bound_bytes,
+        rs.arena_hit_rate(),
+    );
+    std::fs::write("BENCH_stream.json", &json).expect("writing BENCH_stream.json");
+    println!("\nwrote BENCH_stream.json");
+}

@@ -6,7 +6,8 @@
 use std::time::Instant;
 
 use crate::coordinator::hiref::{HiRef, HiRefConfig};
-use crate::costs;
+use crate::costs::{self, CostKind};
+use crate::data::stream::DatasetSource;
 use crate::solvers::exact;
 use crate::solvers::lrot::{self, LrotConfig};
 use crate::solvers::minibatch::{self, MiniBatchConfig};
@@ -26,6 +27,36 @@ pub struct HiRefSolver {
     pub cfg: HiRefConfig,
 }
 
+impl HiRefSolver {
+    /// Streaming solve: both point clouds arrive as chunked
+    /// [`DatasetSource`]s and are never materialised in full
+    /// ([`HiRef::align_source`]).  Not part of [`TransportSolver`] —
+    /// [`TransportProblem`] carries borrowed matrices — but returns the
+    /// same uniform [`Solved`] so downstream reporting is shared.
+    pub fn solve_source(
+        &self,
+        x: &dyn DatasetSource,
+        y: &dyn DatasetSource,
+        kind: CostKind,
+        seed: u64,
+    ) -> Result<Solved, SolveError> {
+        let mut cfg = self.cfg.clone();
+        cfg.cost = kind;
+        cfg.seed = seed;
+        let t0 = Instant::now();
+        let out = HiRef::new(cfg).align_source(x, y)?;
+        Ok(Solved {
+            stats: SolveStats {
+                solver: self.name(),
+                elapsed: t0.elapsed(),
+                iterations: out.schedule.len(),
+                hiref: Some(out.stats.clone()),
+            },
+            coupling: Coupling::Bijection(out.perm),
+        })
+    }
+}
+
 impl TransportSolver for HiRefSolver {
     fn name(&self) -> &'static str {
         "hiref"
@@ -42,7 +73,12 @@ impl TransportSolver for HiRefSolver {
         cfg.cost = prob.kind;
         cfg.seed = prob.seed;
         let t0 = Instant::now();
-        let out = HiRef::new(cfg).align(prob.x, prob.y)?;
+        let solver = HiRef::new(cfg);
+        let out = match prob.factors {
+            // caller-supplied factors skip the factorisation pass
+            Some((u, v)) => solver.align_prefactored(u.clone(), v.clone(), prob.x, prob.y)?,
+            None => solver.align(prob.x, prob.y)?,
+        };
         Ok(Solved {
             stats: SolveStats {
                 solver: self.name(),
@@ -215,10 +251,20 @@ impl TransportSolver for LrotSolver {
             return Err(SolveError::InvalidConfig("lrot rank must be >= 1".into()));
         }
         let t0 = Instant::now();
-        let (u, v) = costs::factors_for(prob.x, prob.y, prob.kind, self.indyk_width, prob.seed);
+        // caller-supplied factors skip the factorisation pass — and are
+        // only borrowed (solve_factored reads views), never cloned
+        let computed;
+        let (u, v) = match prob.factors {
+            Some((u, v)) => (u, v),
+            None => {
+                computed =
+                    costs::factors_for(prob.x, prob.y, prob.kind, self.indyk_width, prob.seed);
+                (&computed.0, &computed.1)
+            }
+        };
         let rank = self.cfg.rank.min(prob.x.rows).min(prob.y.rows).max(1);
         let cfg = LrotConfig { rank, ..self.cfg.clone() };
-        let out = lrot::solve_factored(&u, &v, prob.x.rows, prob.y.rows, &cfg, prob.seed);
+        let out = lrot::solve_factored(u, v, prob.x.rows, prob.y.rows, &cfg, prob.seed);
         Ok(Solved {
             coupling: Coupling::LowRank {
                 q: out.q,

@@ -109,6 +109,14 @@ impl HiRefBuilder {
         self
     }
 
+    /// Tile size (rows) for the streaming ingestion path
+    /// ([`HiRef::align_source`]): chunked factorisation holds one
+    /// `chunk_rows×d` tile at a time (≥ 1).
+    pub fn chunk_rows(mut self, rows: usize) -> Self {
+        self.cfg.chunk_rows = rows;
+        self
+    }
+
     /// Validate and return the configuration.
     pub fn build_config(self) -> Result<HiRefConfig, SolveError> {
         let cfg = self.cfg;
@@ -143,6 +151,11 @@ impl HiRefBuilder {
         if cfg.lrot.outer == 0 || cfg.lrot.inner == 0 {
             return Err(SolveError::InvalidConfig(
                 "lrot outer/inner iteration counts must be >= 1".into(),
+            ));
+        }
+        if cfg.chunk_rows == 0 {
+            return Err(SolveError::InvalidConfig(
+                "chunk_rows must be >= 1 (got 0)".into(),
             ));
         }
         if !(cfg.lrot.gamma > 0.0) {
@@ -197,6 +210,11 @@ mod tests {
         assert!(HiRefBuilder::new().threads(0).build_config().is_err());
         assert!(HiRefBuilder::new().max_depth(0).build_config().is_err());
         assert!(HiRefBuilder::new().indyk_width(0).build_config().is_err());
+        assert!(HiRefBuilder::new().chunk_rows(0).build_config().is_err());
+        assert_eq!(
+            HiRefBuilder::new().chunk_rows(4096).build_config().unwrap().chunk_rows,
+            4096
+        );
     }
 
     #[test]

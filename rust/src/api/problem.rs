@@ -30,12 +30,18 @@ pub struct TransportProblem<'a> {
     /// points (ProgOT displaces the source each stage) or never
     /// materialise `C` at all (HiRef, LROT, MOP, mini-batch) ignore it.
     pub cost: Option<&'a Mat>,
+    /// Optional precomputed low-rank cost factors `C ≈ U Vᵀ` (n×k and
+    /// m×k).  Factor-consuming solvers (HiRef, LROT) use them instead of
+    /// re-factorising — e.g. built once by the chunked streaming builders
+    /// ([`costs::factors_for_source`]) and shared across several solves;
+    /// dense-cost solvers ignore them.
+    pub factors: Option<(&'a Mat, &'a Mat)>,
 }
 
 impl<'a> TransportProblem<'a> {
     /// A problem with seed 0 and no precomputed cost.
     pub fn new(x: &'a Mat, y: &'a Mat, kind: CostKind) -> Self {
-        TransportProblem { x, y, kind, seed: 0, cost: None }
+        TransportProblem { x, y, kind, seed: 0, cost: None, factors: None }
     }
 
     pub fn with_seed(mut self, seed: u64) -> Self {
@@ -45,6 +51,13 @@ impl<'a> TransportProblem<'a> {
 
     pub fn with_cost(mut self, cost: &'a Mat) -> Self {
         self.cost = Some(cost);
+        self
+    }
+
+    /// Attach precomputed low-rank cost factors `C ≈ u · vᵀ` (shapes
+    /// validated by [`TransportProblem::validate`]).
+    pub fn with_factors(mut self, u: &'a Mat, v: &'a Mat) -> Self {
+        self.factors = Some((u, v));
         self
     }
 
@@ -61,6 +74,14 @@ impl<'a> TransportProblem<'a> {
                 return Err(SolveError::InvalidConfig(format!(
                     "precomputed cost is {}x{} but the problem is {}x{}",
                     c.rows, c.cols, self.x.rows, self.y.rows
+                )));
+            }
+        }
+        if let Some((u, v)) = self.factors {
+            if u.rows != self.x.rows || v.rows != self.y.rows || u.cols != v.cols {
+                return Err(SolveError::InvalidConfig(format!(
+                    "precomputed factors are {}x{} / {}x{} but the problem is {} x {} points",
+                    u.rows, u.cols, v.rows, v.cols, self.x.rows, self.y.rows
                 )));
             }
         }
@@ -160,6 +181,19 @@ mod tests {
         let p = TransportProblem::new(&x, &y10, CostKind::SqEuclidean);
         assert!(p.validate().is_ok());
         assert_eq!(p.require_equal_sizes(), Err(SolveError::ShapeMismatch { n: 8, m: 10 }));
+    }
+
+    #[test]
+    fn factor_shape_validation() {
+        let mut rng = Rng::new(2);
+        let x = rand_mat(&mut rng, 8, 2);
+        let y = rand_mat(&mut rng, 8, 2);
+        let (u, v) = costs::factors_for(&x, &y, CostKind::SqEuclidean, 8, 0);
+        let p = TransportProblem::new(&x, &y, CostKind::SqEuclidean).with_factors(&u, &v);
+        assert!(p.validate().is_ok());
+        let bad = Mat::zeros(7, u.cols);
+        let p = TransportProblem::new(&x, &y, CostKind::SqEuclidean).with_factors(&bad, &v);
+        assert!(matches!(p.validate(), Err(SolveError::InvalidConfig(_))));
     }
 
     #[test]

@@ -15,6 +15,7 @@ use crate::api::{self, HiRefBuilder, HiRefSolver, TransportProblem, TransportSol
 use crate::coordinator::annealing;
 use crate::coordinator::hiref::{BackendKind, HiRefConfig};
 use crate::costs::CostKind;
+use crate::data::stream::InMemorySource;
 use crate::data::synthetic::Synthetic;
 use crate::metrics;
 use crate::report::{f4, Table};
@@ -146,6 +147,7 @@ pub fn config_from_flags(flags: &Flags) -> Result<HiRefConfig> {
         .hungarian_cutoff(cutoff)
         .seed(flags.get("seed", d.seed)?)
         .threads(flags.get("threads", d.threads)?)
+        .chunk_rows(flags.get("chunk-rows", d.chunk_rows)?)
         .artifacts_dir(PathBuf::from(flags.get_str("artifacts", "artifacts")))
         .cost(parse_cost(&flags.get_str("cost", "sq"))?);
     if let Some(depth) = flags.named.get("depth") {
@@ -231,10 +233,33 @@ fn cmd_align(flags: &Flags) -> Result<()> {
     let (x, y) = dataset_from_flags(flags)?;
     let kind = cfg.cost;
     let seed = cfg.seed;
-    let solver = solver_from_flags(flags, &cfg)?;
-    let prob = TransportProblem::new(&x, &y, kind).with_seed(seed);
-    let solved = solver.solve(&prob)?;
-    println!("solver        = {} ({})", solved.stats.solver, solver.describe());
+    let solver_name = api::canonical_name(&flags.get_str("solver", "hiref"));
+    let streaming = flags.named.contains_key("chunk-rows");
+    if streaming && solver_name != "hiref" {
+        return Err(err(format!(
+            "--chunk-rows selects the HiRef streaming ingestion path and is not \
+             supported by --solver {solver_name} (valid with: hiref)"
+        )));
+    }
+    let (solved, describe) = if streaming {
+        // `--chunk-rows` routes HiRef through the streaming ingestion
+        // path: chunked factorisation + on-demand base-case gathers.
+        let solver = HiRefSolver { cfg: cfg.clone() };
+        let (xs, ys) = (InMemorySource::new(&x), InMemorySource::new(&y));
+        (
+            solver.solve_source(&xs, &ys, kind, seed)?,
+            format!(
+                "streaming ingestion, chunk_rows = {} — {}",
+                cfg.chunk_rows,
+                solver.describe()
+            ),
+        )
+    } else {
+        let solver = solver_from_flags(flags, &cfg)?;
+        let prob = TransportProblem::new(&x, &y, kind).with_seed(seed);
+        (solver.solve(&prob)?, solver.describe().to_string())
+    };
+    println!("solver        = {} ({})", solved.stats.solver, describe);
     println!("n             = {}", x.rows);
     println!("coupling      = {}", solved.coupling.kind_label());
     println!("primal cost   = {}", f4(metrics::coupling_cost(&x, &y, &solved.coupling, kind)));
@@ -259,6 +284,7 @@ fn cmd_align(flags: &Flags) -> Result<()> {
             metrics::human_bytes(rs.peak_scratch_bytes),
             rs.arena_hit_rate() * 100.0
         );
+        println!("factor bytes  = {}", metrics::human_bytes(rs.factor_bytes));
     }
     println!("elapsed       = {:.3}s", solved.stats.elapsed.as_secs_f64());
     Ok(())
@@ -362,6 +388,8 @@ COMMON FLAGS
   --max-rank <int>      annealing max rank C         [16]
   --base-size <int>     exact base-case block Q      [256]
   --hungarian-cutoff <int>  Hungarian/auction crossover (≤ base-size)
+  --chunk-rows <int>    on `align`: route HiRef through the streaming
+                        ingestion path with this tile size     [65536]
   --depth <int>         cap hierarchy depth
   --seed <int>                                       [0]
   --threads <int>                                    [all cores]
@@ -455,6 +483,29 @@ mod tests {
         // but an explicit oversized cutoff is rejected
         let f = flags(&["--base-size", "64", "--hungarian-cutoff", "128"]);
         assert!(config_from_flags(&f).is_err());
+    }
+
+    #[test]
+    fn chunk_rows_rejected_for_non_hiref_solvers() {
+        // silently ignoring the flag would let users believe they
+        // benchmarked the streaming path — reject the combination
+        let f = flags(&["--solver", "sinkhorn", "--chunk-rows", "64", "--n", "16"]);
+        let e = cmd_align(&f).unwrap_err();
+        assert!(e.0.contains("chunk-rows"), "{e}");
+        assert!(e.0.contains("sinkhorn"), "{e}");
+    }
+
+    #[test]
+    fn chunk_rows_flag_reaches_config() {
+        let f = flags(&["--chunk-rows", "4096"]);
+        let cfg = config_from_flags(&f).unwrap();
+        assert_eq!(cfg.chunk_rows, 4096);
+        // zero is rejected by the builder
+        let f = flags(&["--chunk-rows", "0"]);
+        assert!(config_from_flags(&f).is_err());
+        // default when absent
+        let cfg = config_from_flags(&flags(&[])).unwrap();
+        assert_eq!(cfg.chunk_rows, HiRefConfig::default().chunk_rows);
     }
 
     #[test]

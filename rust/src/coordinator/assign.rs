@@ -48,23 +48,42 @@ pub fn balanced_assign<'a>(m: impl Into<MatView<'a>>, active: usize) -> Vec<u32>
     let r = m.cols;
     let caps = capacities(active, r);
     let mut remaining = caps;
-    // (margin, point) sorted by decreasing confidence
+    // (margin, point) sorted by decreasing confidence.  For r = 1 there is
+    // no second-best column: every point goes to the only cluster, so the
+    // margin is defined as the point's sole weight (any constant would do
+    // — the capacity is `active`) instead of leaning on `second.max(0.0)`
+    // turning −∞ into 0.  Behaviour-identical to the general expression
+    // (which already reduced to `row[0] − 0`); the branch exists to make
+    // the degenerate case's definition explicit rather than emergent.
     let mut order: Vec<(f32, u32)> = (0..active)
         .map(|i| {
             let row = m.row(i);
-            let (mut best, mut second) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
-            for &v in row {
-                if v > best {
-                    second = best;
-                    best = v;
-                } else if v > second {
-                    second = v;
+            let margin = if r == 1 {
+                row[0]
+            } else {
+                let (mut best, mut second) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
+                for &v in row {
+                    if v > best {
+                        second = best;
+                        best = v;
+                    } else if v > second {
+                        second = v;
+                    }
                 }
-            }
-            (best - second.max(0.0), i as u32)
+                best - second.max(0.0)
+            };
+            (margin, i as u32)
         })
         .collect();
-    order.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    // total_cmp: a NaN factor weight on a degenerate block (LROT over a
+    // pathological window) must produce a deterministic order, not a
+    // `partial_cmp().unwrap()` panic.  In IEEE total order +NaN sits
+    // above +inf, so a NaN margin is processed first under this
+    // descending sort — which spot it gets is policy-free (its weights
+    // are garbage either way); what matters is that the order is
+    // deterministic and capacities still partition.  Ties break by point
+    // index so the split stays stable.
+    order.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
 
     let mut labels = vec![u32::MAX; active];
     for &(_, i) in &order {
@@ -77,7 +96,11 @@ pub fn balanced_assign<'a>(m: impl Into<MatView<'a>>, active: usize) -> Vec<u32>
                 best_z = z;
             }
         }
-        debug_assert!(best_z != usize::MAX, "capacities exhausted early");
+        if best_z == usize::MAX {
+            // every open cluster's weight compared false (NaN row): take
+            // the first cluster with room — capacities still partition.
+            best_z = remaining.iter().position(|&c| c > 0).expect("capacities exhausted early");
+        }
         labels[i as usize] = best_z as u32;
         remaining[best_z] -= 1;
     }
@@ -186,6 +209,54 @@ mod tests {
         let parts = split_by_labels(&indices, &labels, 2);
         assert_eq!(parts[0], vec![20, 40]);
         assert_eq!(parts[1], vec![10, 30]);
+    }
+
+    #[test]
+    fn nan_weights_do_not_panic_and_capacities_still_hold() {
+        // regression: partial_cmp().unwrap() panicked on NaN margins
+        let mut m = Mat::zeros(12, 3);
+        let mut rng = Rng::new(4);
+        for v in m.data.iter_mut() {
+            *v = rng.next_f32();
+        }
+        *m.at_mut(3, 0) = f32::NAN; // NaN margin for point 3
+        for v in m.row_mut(7) {
+            *v = f32::NAN; // fully degenerate row: argmax finds nothing
+        }
+        let labels = balanced_assign(&m, 12);
+        let mut counts = vec![0usize; 3];
+        for &z in &labels {
+            assert!(z < 3, "unassigned label");
+            counts[z as usize] += 1;
+        }
+        assert_eq!(counts, capacities(12, 3));
+    }
+
+    #[test]
+    fn single_cluster_assigns_everything_to_it() {
+        // r = 1: the margin is the sole weight; every point lands in
+        // cluster 0 and the capacity is exactly `active`
+        let mut m = Mat::zeros(9, 1);
+        for (i, v) in m.data.iter_mut().enumerate() {
+            *v = -(i as f32); // includes negative weights
+        }
+        let labels = balanced_assign(&m, 9);
+        assert_eq!(labels, vec![0u32; 9]);
+    }
+
+    #[test]
+    fn duplicate_rows_get_deterministic_stable_split() {
+        // exact ties (duplicate points => duplicate factor rows) must
+        // split deterministically by index, not arbitrarily
+        let m = Mat::full(8, 2, 0.125);
+        let a = balanced_assign(&m, 8);
+        let b = balanced_assign(&m, 8);
+        assert_eq!(a, b);
+        let mut counts = [0usize; 2];
+        for &z in &a {
+            counts[z as usize] += 1;
+        }
+        assert_eq!(counts, [4, 4]);
     }
 
     #[test]

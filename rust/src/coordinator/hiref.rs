@@ -52,6 +52,19 @@
 //! served either by the PJRT runtime (AOT artifacts from the JAX/Pallas
 //! layers) or by the native Rust solver, per block, whichever fits
 //! (`BackendKind::Auto`).
+//!
+//! # Streaming ingestion
+//!
+//! Nothing above needs the raw point clouds except cost factorisation and
+//! the ≤ `base_size` rows of each leaf block, so [`HiRef::align_source`]
+//! runs the identical recursion against chunked
+//! [`DatasetSource`]s: factors come from the chunked builders
+//! ([`costs::factors_for_source`], one `chunk_rows×d` tile at a time) and
+//! base blocks gather their rows into arena scratch on demand.  Peak
+//! memory is then bounded by construction — factors + permutations +
+//! tiles — regardless of where (or whether) the points are stored.
+//! [`HiRef::align_prefactored`] additionally accepts caller-built
+//! factors, so one factorisation can serve many solves.
 
 use std::ops::Range;
 use std::path::PathBuf;
@@ -63,6 +76,7 @@ use crate::api::SolveError;
 use crate::coordinator::annealing;
 use crate::coordinator::assign;
 use crate::costs::{self, CostKind};
+use crate::data::stream::{self, DatasetSource};
 use crate::linalg::{Mat, MatView};
 use crate::metrics;
 use crate::pool::{self, RangeShared, ScratchArena, WorkQueue};
@@ -109,6 +123,10 @@ pub struct HiRefConfig {
     /// With the range layout this costs O(1) per block during the run;
     /// index sets are materialised once at the end.
     pub record_scales: bool,
+    /// Tile size (rows) for the streaming ingestion path
+    /// ([`HiRef::align_source`]): chunked cost factorisation never holds
+    /// more than one `chunk_rows×d` tile of points.
+    pub chunk_rows: usize,
 }
 
 impl Default for HiRefConfig {
@@ -126,6 +144,7 @@ impl Default for HiRefConfig {
             backend: BackendKind::Auto,
             artifacts_dir: PathBuf::from("artifacts"),
             record_scales: false,
+            chunk_rows: 1 << 16,
         }
     }
 }
@@ -146,6 +165,11 @@ pub struct RunStats {
     pub arena_hits: usize,
     /// Scratch checkouts that allocated a fresh buffer.
     pub arena_misses: usize,
+    /// Bytes held by the cost-factor working copies (`2·n·k·4`) — the
+    /// persistent term of the memory model; together with
+    /// `peak_scratch_bytes` this is the whole solve-path footprint of a
+    /// streaming run (`O(n·r)` factors + `O(chunk_rows·d)`-bounded tiles).
+    pub factor_bytes: usize,
     pub elapsed: Duration,
 }
 
@@ -212,6 +236,15 @@ struct Block {
     level: usize,
 }
 
+/// How the base case reaches original point rows: borrowed matrices (the
+/// classic path) or chunked [`DatasetSource`]s (the streaming path, which
+/// gathers each leaf block's ≤ `base_size` rows into arena scratch).
+#[derive(Clone, Copy)]
+enum Points<'a> {
+    Mats(&'a Mat, &'a Mat),
+    Sources(&'a dyn DatasetSource, &'a dyn DatasetSource),
+}
+
 /// Shared per-run solve state: the re-indexable working buffers plus
 /// output and diagnostics sinks.  Workers only touch the window their
 /// current block owns, which is what makes the `RangeShared` accesses
@@ -252,17 +285,16 @@ impl HiRef {
         self.engine.as_ref()
     }
 
-    /// Compute a bijective alignment between equal-sized `x` and `y`.
-    pub fn align(&self, x: &Mat, y: &Mat) -> Result<Alignment, SolveError> {
-        let n = x.rows;
-        if n == 0 || y.rows == 0 {
+    /// Shared structural validation for every alignment entry point.
+    fn validate_sizes(&self, n: usize, m: usize, dx: usize, dy: usize) -> Result<(), SolveError> {
+        if n == 0 || m == 0 {
             return Err(SolveError::EmptyInput);
         }
-        if n != y.rows {
-            return Err(SolveError::ShapeMismatch { n, m: y.rows });
+        if n != m {
+            return Err(SolveError::ShapeMismatch { n, m });
         }
-        if x.cols != y.cols {
-            return Err(SolveError::DimMismatch { dx: x.cols, dy: y.cols });
+        if dx != dy {
+            return Err(SolveError::DimMismatch { dx, dy });
         }
         if self.cfg.backend == BackendKind::Pjrt && self.engine.is_none() {
             return Err(SolveError::Backend(format!(
@@ -270,16 +302,90 @@ impl HiRef {
                 self.cfg.artifacts_dir.display()
             )));
         }
-        let t0 = Instant::now();
+        Ok(())
+    }
 
+    /// Compute a bijective alignment between equal-sized `x` and `y`.
+    pub fn align(&self, x: &Mat, y: &Mat) -> Result<Alignment, SolveError> {
+        self.validate_sizes(x.rows, y.rows, x.cols, y.cols)?;
+        let t0 = Instant::now();
         // Global cost factors, gathered exactly once (both factorisations
         // are row-separable, so row slices of these are exact sub-block
         // factors).  They become the recursion's working buffers and are
         // re-ordered in place from here on.
         let (fu, fv) =
             costs::factors_for(x, y, self.cfg.cost, self.cfg.indyk_width, self.cfg.seed);
+        let arena = ScratchArena::new(self.cfg.threads);
+        self.align_inner(fu, fv, Points::Mats(x, y), arena, t0)
+    }
+
+    /// [`HiRef::align`] with caller-supplied cost factors `C ≈ fu · fvᵀ`
+    /// (e.g. shared across several solves, or loaded from disk).  The
+    /// factors are consumed as the recursion's working buffers; shapes are
+    /// validated against the point clouds.
+    pub fn align_prefactored(
+        &self,
+        fu: Mat,
+        fv: Mat,
+        x: &Mat,
+        y: &Mat,
+    ) -> Result<Alignment, SolveError> {
+        self.validate_sizes(x.rows, y.rows, x.cols, y.cols)?;
+        if fu.rows != x.rows || fv.rows != y.rows || fu.cols != fv.cols {
+            return Err(SolveError::InvalidConfig(format!(
+                "prefactored shapes {}x{} / {}x{} do not match an {}-point problem",
+                fu.rows, fu.cols, fv.rows, fv.cols, x.rows
+            )));
+        }
+        let t0 = Instant::now();
+        let arena = ScratchArena::new(self.cfg.threads);
+        self.align_inner(fu, fv, Points::Mats(x, y), arena, t0)
+    }
+
+    /// Streaming alignment: both point clouds arrive as chunked
+    /// [`DatasetSource`]s.  Cost factors are built by the chunked
+    /// builders ([`costs::factors_for_source`]) in `cfg.chunk_rows`-sized
+    /// tiles, and base-case blocks gather their ≤ `base_size` rows into
+    /// arena scratch on demand — at no point does either full point cloud
+    /// exist in memory.  Peak footprint: `O(n·r)` factors + permutations
+    /// + `O(chunk_rows·d)` ingestion tiles + in-flight-block scratch (all
+    /// reported in [`RunStats`]).  For equal data, the result is
+    /// identical to [`HiRef::align`] regardless of chunk size.
+    pub fn align_source(
+        &self,
+        x: &dyn DatasetSource,
+        y: &dyn DatasetSource,
+    ) -> Result<Alignment, SolveError> {
+        self.validate_sizes(x.rows(), y.rows(), x.dim(), y.dim())?;
+        let t0 = Instant::now();
+        let arena = ScratchArena::new(self.cfg.threads);
+        let (fu, fv) = costs::factors_for_source(
+            x,
+            y,
+            self.cfg.cost,
+            self.cfg.indyk_width,
+            self.cfg.seed,
+            self.cfg.chunk_rows,
+            &arena,
+        );
+        self.align_inner(fu, fv, Points::Sources(x, y), arena, t0)
+    }
+
+    /// The recursion shared by every entry point: consumes the factor
+    /// working copies, fans the co-cluster hierarchy out over the worker
+    /// pool, and seals base blocks against `points`.
+    fn align_inner(
+        &self,
+        fu: Mat,
+        fv: Mat,
+        points: Points<'_>,
+        arena: ScratchArena,
+        t0: Instant,
+    ) -> Result<Alignment, SolveError> {
+        let n = fu.rows;
         let k = fu.cols;
         debug_assert_eq!(k, fv.cols);
+        let factor_bytes = (fu.data.len() + fv.data.len()) * std::mem::size_of::<f32>();
 
         let schedule = annealing::optimal_rank_schedule(
             n,
@@ -288,7 +394,6 @@ impl HiRef {
             self.cfg.max_depth,
         );
 
-        let arena = ScratchArena::new(self.cfg.threads);
         let st = SolveState {
             k,
             fu: RangeShared::new(fu.data),
@@ -316,7 +421,7 @@ impl HiRef {
             }
             let len = (block.x.end - block.x.start) as usize;
             if len <= self.cfg.base_size || block.level >= schedule.len() {
-                self.solve_base(x, y, &block, &st);
+                self.solve_base(points, &block, &st);
             } else {
                 self.refine(&schedule, block, queue, &st);
             }
@@ -348,14 +453,9 @@ impl HiRef {
                 })
                 .collect()
         });
-        Ok(Alignment {
-            perm,
-            schedule,
-            stats: st.stats.snapshot(t0.elapsed(), &arena),
-            x_order,
-            y_order,
-            scales,
-        })
+        let mut stats = st.stats.snapshot(t0.elapsed(), &arena);
+        stats.factor_bytes = factor_bytes;
+        Ok(Alignment { perm, schedule, stats, x_order, y_order, scales })
     }
 
     /// One refinement step: LROT on the co-cluster's factor-row windows,
@@ -458,8 +558,11 @@ impl HiRef {
     /// Base case: exact assignment inside the block (Hungarian below the
     /// cutoff, ε-scaling auction above), sealing `perm`.  The dense block
     /// cost is written into a scratch-arena buffer straight from the
-    /// original points — no gathered rows, no owned cost matrix.
-    fn solve_base(&self, x: &Mat, y: &Mat, block: &Block, st: &SolveState<'_>) {
+    /// original points — no owned cost matrix.  On the streaming path the
+    /// block's ≤ `base_size` point rows are first gathered from the
+    /// sources into arena scratch (the only point rows a streaming solve
+    /// ever materialises).
+    fn solve_base(&self, points: Points<'_>, block: &Block, st: &SolveState<'_>) {
         st.stats.base.fetch_add(1, Ordering::Relaxed);
         let (xs, xe) = (block.x.start as usize, block.x.end as usize);
         let (ys, ye) = (block.y.start as usize, block.y.end as usize);
@@ -473,7 +576,24 @@ impl HiRef {
             vec![0u32]
         } else {
             let mut cbuf = st.arena.take_f32(len * len);
-            costs::dense_cost_indexed_into(x, y, xids, yids, self.cfg.cost, &mut cbuf);
+            match points {
+                Points::Mats(x, y) => {
+                    costs::dense_cost_indexed_into(x, y, xids, yids, self.cfg.cost, &mut cbuf);
+                }
+                Points::Sources(x, y) => {
+                    let d = x.dim();
+                    let mut xtile = st.arena.take_f32(len * d);
+                    let mut ytile = st.arena.take_f32(len * d);
+                    stream::gather_rows_into(x, xids, &mut xtile);
+                    stream::gather_rows_into(y, yids, &mut ytile);
+                    costs::dense_cost_into(
+                        MatView::from_slice(len, d, &xtile),
+                        MatView::from_slice(len, d, &ytile),
+                        self.cfg.cost,
+                        &mut cbuf,
+                    );
+                }
+            }
             let c = MatView::from_slice(len, len, &cbuf);
             if len <= self.cfg.hungarian_cutoff {
                 exact::hungarian(c)
@@ -543,6 +663,7 @@ impl StatsAtomics {
             peak_scratch_bytes: arena.peak_bytes(),
             arena_hits: arena.hits(),
             arena_misses: arena.misses(),
+            factor_bytes: 0, // filled in by align_inner
             elapsed,
         }
     }
@@ -623,6 +744,67 @@ mod tests {
         assert_eq!(a.perm, b.perm);
         assert_eq!(a.x_order, b.x_order);
         assert_eq!(a.y_order, b.y_order);
+    }
+
+    #[test]
+    fn align_source_identical_to_align_for_any_chunk_size() {
+        use crate::data::stream::InMemorySource;
+        let (x, y, _) = shuffled_pair(300, 2, 21);
+        let want = HiRef::new(native_cfg()).align(&x, &y).unwrap();
+        for chunk in [1usize, 17, 300, 1 << 16] {
+            let cfg = HiRefConfig { chunk_rows: chunk, ..native_cfg() };
+            let out = HiRef::new(cfg)
+                .align_source(&InMemorySource::new(&x), &InMemorySource::new(&y))
+                .unwrap();
+            assert_eq!(out.perm, want.perm, "chunk {chunk}");
+            assert_eq!(out.x_order, want.x_order, "chunk {chunk}");
+            assert!(out.stats.factor_bytes > 0);
+        }
+    }
+
+    #[test]
+    fn align_source_euclidean_cost_matches_in_memory() {
+        use crate::data::stream::InMemorySource;
+        let (x, y, _) = shuffled_pair(200, 3, 22);
+        let cfg = HiRefConfig { cost: CostKind::Euclidean, indyk_width: 8, ..native_cfg() };
+        let want = HiRef::new(cfg.clone()).align(&x, &y).unwrap();
+        let cfg = HiRefConfig { chunk_rows: 23, ..cfg };
+        let out = HiRef::new(cfg)
+            .align_source(&InMemorySource::new(&x), &InMemorySource::new(&y))
+            .unwrap();
+        // chunked Indyk factors are identical, so so is the bijection
+        assert_eq!(out.perm, want.perm);
+    }
+
+    #[test]
+    fn align_source_from_generator_is_bijective_and_deterministic() {
+        use crate::data::stream::GeneratorSource;
+        let gen = |side: u64| {
+            GeneratorSource::new(257, 2, move |i, out| {
+                let mut rng = crate::prng::Rng::new(
+                    side ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                );
+                rng.fill_normal(out);
+            })
+        };
+        let solver = HiRef::new(HiRefConfig { chunk_rows: 31, ..native_cfg() });
+        let a = solver.align_source(&gen(1), &gen(2)).unwrap();
+        let b = solver.align_source(&gen(1), &gen(2)).unwrap();
+        assert!(a.is_bijection());
+        assert_eq!(a.perm, b.perm);
+    }
+
+    #[test]
+    fn align_prefactored_matches_align() {
+        let (x, y, _) = shuffled_pair(150, 2, 23);
+        let want = HiRef::new(native_cfg()).align(&x, &y).unwrap();
+        let (fu, fv) = costs::factors_for(&x, &y, CostKind::SqEuclidean, 32, 0);
+        let out = HiRef::new(native_cfg()).align_prefactored(fu, fv, &x, &y).unwrap();
+        assert_eq!(out.perm, want.perm);
+        // shape-mismatched factors are rejected
+        let (fu, fv) = costs::factors_for(&x, &y, CostKind::SqEuclidean, 32, 0);
+        let (bad, _, _) = shuffled_pair(151, 2, 24);
+        assert!(HiRef::new(native_cfg()).align_prefactored(fu, fv, &bad, &bad).is_err());
     }
 
     #[test]

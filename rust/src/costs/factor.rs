@@ -6,7 +6,29 @@
 //! — both sides must produce identical factors because the Rust coordinator
 //! feeds them to AOT executables lowered from the Python model.
 
+use crate::data::stream::{for_each_chunk, DatasetSource};
 use crate::linalg::{Mat, MatView};
+use crate::pool::ScratchArena;
+
+/// Write the U-side factor row (`[|x|², 1, −2x]`) for point `xi`.
+#[inline]
+fn u_row(xi: &[f32], urow: &mut [f32]) {
+    let n2: f64 = xi.iter().map(|&a| (a as f64) * (a as f64)).sum();
+    urow[0] = n2 as f32;
+    urow[1] = 1.0;
+    for (o, &a) in urow[2..].iter_mut().zip(xi) {
+        *o = -2.0 * a;
+    }
+}
+
+/// Write the V-side factor row (`[1, |y|², y]`) for point `yj`.
+#[inline]
+fn v_row(yj: &[f32], vrow: &mut [f32]) {
+    let n2: f64 = yj.iter().map(|&a| (a as f64) * (a as f64)).sum();
+    vrow[0] = 1.0;
+    vrow[1] = n2 as f32;
+    vrow[2..].copy_from_slice(yj);
+}
 
 /// Return `(U, V)`, each `n×(d+2)`, with `U Vᵀ` the exact squared-Euclidean
 /// cost matrix between the rows of `x` and `y`.  Accepts [`MatView`]s so
@@ -21,23 +43,40 @@ pub fn sq_euclidean_factors<'a, 'b>(
     let mut u = Mat::zeros(x.rows, d + 2);
     let mut v = Mat::zeros(y.rows, d + 2);
     for i in 0..x.rows {
-        let xi = x.row(i);
-        let n2: f64 = xi.iter().map(|&a| (a as f64) * (a as f64)).sum();
-        let urow = u.row_mut(i);
-        urow[0] = n2 as f32;
-        urow[1] = 1.0;
-        for (k, &a) in xi.iter().enumerate() {
-            urow[2 + k] = -2.0 * a;
-        }
+        u_row(x.row(i), u.row_mut(i));
     }
     for j in 0..y.rows {
-        let yj = y.row(j);
-        let n2: f64 = yj.iter().map(|&a| (a as f64) * (a as f64)).sum();
-        let vrow = v.row_mut(j);
-        vrow[0] = 1.0;
-        vrow[1] = n2 as f32;
-        vrow[2..2 + d].copy_from_slice(yj);
+        v_row(y.row(j), v.row_mut(j));
     }
+    (u, v)
+}
+
+/// Chunked twin of [`sq_euclidean_factors`]: build the exact `d+2` factors
+/// from [`DatasetSource`]s in `chunk_rows`-sized tiles.  The factorisation
+/// is row-separable, so peak memory is one `chunk_rows×d` tile (arena
+/// scratch; zero for memory-resident sources) plus the `O(n·(d+2))`
+/// output — the factors are identical to the in-memory path for any chunk
+/// size.
+pub fn sq_euclidean_factors_chunked(
+    x: &dyn DatasetSource,
+    y: &dyn DatasetSource,
+    chunk_rows: usize,
+    arena: &ScratchArena,
+) -> (Mat, Mat) {
+    let d = x.dim();
+    assert_eq!(d, y.dim(), "dimension mismatch");
+    let mut u = Mat::zeros(x.rows(), d + 2);
+    let mut v = Mat::zeros(y.rows(), d + 2);
+    for_each_chunk(x, chunk_rows, arena, |start, tile| {
+        for i in 0..tile.rows {
+            u_row(tile.row(i), u.row_mut(start + i));
+        }
+    });
+    for_each_chunk(y, chunk_rows, arena, |start, tile| {
+        for j in 0..tile.rows {
+            v_row(tile.row(j), v.row_mut(start + j));
+        }
+    });
     (u, v)
 }
 
@@ -78,6 +117,24 @@ mod tests {
             for (a, b) in lr.data.iter().zip(&c.data) {
                 assert!((a - b).abs() < 1e-3, "{a} vs {b}");
             }
+        }
+    }
+
+    #[test]
+    fn chunked_factors_identical_to_in_memory_for_any_chunk_size() {
+        use crate::data::stream::InMemorySource;
+        let mut rng = Rng::new(5);
+        let mut x = Mat::zeros(53, 3);
+        let mut y = Mat::zeros(53, 3);
+        rng.fill_normal(&mut x.data);
+        rng.fill_normal(&mut y.data);
+        let (u, v) = sq_euclidean_factors(&x, &y);
+        let arena = ScratchArena::new(1);
+        let (xs, ys) = (InMemorySource::new(&x), InMemorySource::new(&y));
+        for chunk in [1usize, 7, 53, 4096] {
+            let (uc, vc) = sq_euclidean_factors_chunked(&xs, &ys, chunk, &arena);
+            assert_eq!(u.data, uc.data, "U diverges at chunk {chunk}");
+            assert_eq!(v.data, vc.data, "V diverges at chunk {chunk}");
         }
     }
 

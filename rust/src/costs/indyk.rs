@@ -13,12 +13,18 @@
 //! (paper §3.4, Appendix E.1).
 
 use crate::costs::CostKind;
+use crate::data::stream::{for_each_chunk, DatasetSource, InMemorySource};
 use crate::linalg::{invert_spd, Mat, MatView};
+use crate::pool::ScratchArena;
 use crate::prng::Rng;
 
 /// Factorise the `kind` distance matrix between rows of `x` and `y` as
 /// `C ≈ U Vᵀ` with width `t = target_k`.  Deterministic given `seed`.
 /// Accepts [`MatView`]s, so callers can factorise borrowed row ranges.
+///
+/// This is the memory-resident front-end of [`factorize_chunked`]: the
+/// in-memory path streams zero-copy full-size windows through the same
+/// chunked core, so the two can never drift numerically.
 pub fn factorize<'a, 'b>(
     x: impl Into<MatView<'a>>,
     y: impl Into<MatView<'b>>,
@@ -27,64 +33,112 @@ pub fn factorize<'a, 'b>(
     seed: u64,
 ) -> (Mat, Mat) {
     let (x, y) = (x.into(), y.into());
-    let n = x.rows;
-    let m = y.rows;
+    let arena = ScratchArena::new(1);
+    let chunk = x.rows.max(y.rows).max(1);
+    factorize_chunked(
+        &InMemorySource::from_view(x),
+        &InMemorySource::from_view(y),
+        kind,
+        target_k,
+        seed,
+        chunk,
+        &arena,
+    )
+}
+
+/// [`factorize`] over chunked [`DatasetSource`]s: every full-dataset sweep
+/// (anchor means, sampling probabilities, the `U = C[:, S]` landmark
+/// distances, the regression right-hand sides for `V`) is streamed in
+/// `chunk_rows`-sized tiles drawn from `arena`.  Peak memory is one tile
+/// (`chunk_rows·d`) plus the `O((n+m)·t)` factor output plus the `O(s·d)`
+/// sampled-row block (`s = 4t`) — never both full point clouds.  Sweeps
+/// accumulate in dataset order, so the result is **identical to the
+/// in-memory path for any chunk size**.
+#[allow(clippy::too_many_arguments)]
+pub fn factorize_chunked(
+    x: &dyn DatasetSource,
+    y: &dyn DatasetSource,
+    kind: CostKind,
+    target_k: usize,
+    seed: u64,
+    chunk_rows: usize,
+    arena: &ScratchArena,
+) -> (Mat, Mat) {
+    let n = x.rows();
+    let m = y.rows();
+    let d = x.dim();
+    assert_eq!(d, y.dim(), "dimension mismatch");
     let t = target_k.min(n).min(m).max(1);
     let mut rng = Rng::new(seed ^ 0x1D1_9EB);
 
     // --- IVWW sampling probabilities -----------------------------------
     let i_star = rng.next_below(n);
     let j_star = rng.next_below(m);
-    let xi_star = x.row(i_star);
-    let yj_star = y.row(j_star);
-    let mean_to_y: f64 = (0..m)
-        .map(|j| {
-            let d = kind.pair(xi_star, y.row(j));
-            d * d
-        })
-        .sum::<f64>()
-        / m as f64;
+    let mut xi_star = vec![0.0f32; d];
+    let mut yj_star = vec![0.0f32; d];
+    x.fetch_row(i_star, &mut xi_star);
+    y.fetch_row(j_star, &mut yj_star);
+    let mut sum_to_y = 0.0f64;
+    for_each_chunk(y, chunk_rows, arena, |_, tile| {
+        for j in 0..tile.rows {
+            let dd = kind.pair(&xi_star, tile.row(j));
+            sum_to_y += dd * dd;
+        }
+    });
+    let mean_to_y = sum_to_y / m as f64;
     let d_anchor = {
-        let d = kind.pair(xi_star, yj_star);
-        d * d
+        let dd = kind.pair(&xi_star, &yj_star);
+        dd * dd
     };
-    let probs: Vec<f64> = (0..n)
-        .map(|i| {
-            let d = kind.pair(x.row(i), yj_star);
-            d * d + d_anchor + mean_to_y
-        })
-        .collect();
+    let mut probs = Vec::with_capacity(n);
+    for_each_chunk(x, chunk_rows, arena, |_, tile| {
+        for i in 0..tile.rows {
+            let dd = kind.pair(tile.row(i), &yj_star);
+            probs.push(dd * dd + d_anchor + mean_to_y);
+        }
+    });
 
     // --- draw t landmark columns (rows of Y) by the induced column
     // distribution (sample rows of X first, then their nearest structure is
     // captured by sampling Y uniformly among the paired draws; IVWW sample
     // columns with the symmetric distribution — we mirror it).
-    let col_probs: Vec<f64> = (0..m)
-        .map(|j| {
-            let d = kind.pair(xi_star, y.row(j));
-            d * d + d_anchor + mean_to_y
-        })
-        .collect();
+    let mut col_probs = Vec::with_capacity(m);
+    for_each_chunk(y, chunk_rows, arena, |_, tile| {
+        for j in 0..tile.rows {
+            let dd = kind.pair(&xi_star, tile.row(j));
+            col_probs.push(dd * dd + d_anchor + mean_to_y);
+        }
+    });
     let cols = sample_weighted_distinct(&mut rng, &col_probs, t);
 
-    // --- U = C[:, S]  (n×t) ---------------------------------------------
-    let mut u = Mat::zeros(n, t);
-    for i in 0..n {
-        let xi = x.row(i);
-        let urow = u.row_mut(i);
-        for (c, &j) in cols.iter().enumerate() {
-            urow[c] = kind.pair(xi, y.row(j as usize)) as f32;
-        }
+    // --- U = C[:, S]  (n×t): landmarks gathered once (t·d floats), then
+    // one streamed sweep over X.
+    let mut landmarks = Mat::zeros(t, d);
+    for (c, &j) in cols.iter().enumerate() {
+        y.fetch_row(j as usize, landmarks.row_mut(c));
     }
+    let mut u = Mat::zeros(n, t);
+    for_each_chunk(x, chunk_rows, arena, |start, tile| {
+        for i in 0..tile.rows {
+            let xi = tile.row(i);
+            let urow = u.row_mut(start + i);
+            for (uv, c) in urow.iter_mut().zip(0..t) {
+                *uv = kind.pair(xi, landmarks.row(c)) as f32;
+            }
+        }
+    });
 
     // --- row sample for the regression fit ------------------------------
     let s = (4 * t).min(n);
     let rows = sample_weighted_distinct(&mut rng, &probs, s);
 
-    // A = U[rows, :]  (s×t),  B = C[rows, :]  (s×m)
+    // A = U[rows, :]  (s×t),  B = C[rows, :]  (s×m); the sampled X rows
+    // are gathered once (s·d floats).
     let mut a = Mat::zeros(s, t);
+    let mut xsamp = Mat::zeros(s, d);
     for (r, &i) in rows.iter().enumerate() {
         a.row_mut(r).copy_from_slice(u.row(i as usize));
+        x.fetch_row(i as usize, xsamp.row_mut(r));
     }
     // Solve (AᵀA + λI) W = Aᵀ B  for W (t×m);  V = Wᵀ (m×t).
     let ata = a.t_matmul(&a);
@@ -95,30 +149,33 @@ pub fn factorize<'a, 'b>(
     }
     let g_inv = invert_spd(&g);
 
-    // Build V row-by-row over Y (linear in m): for each column j of C we
-    // need c_j = C[rows, j] (s values), then V_j = G⁻¹ Aᵀ c_j.
+    // Build V row-by-row over a streamed Y sweep (linear in m): for each
+    // column j of C we need c_j = C[rows, j] (s values), then
+    // V_j = G⁻¹ Aᵀ c_j.
     let mut v = Mat::zeros(m, t);
     let mut atc = vec![0.0f32; t];
-    for j in 0..m {
-        let yj = y.row(j);
-        atc.iter_mut().for_each(|v| *v = 0.0);
-        for (r, &i) in rows.iter().enumerate() {
-            let cij = kind.pair(x.row(i as usize), yj) as f32;
-            let arow = a.row(r);
-            for (acc, &av) in atc.iter_mut().zip(arow) {
-                *acc += av * cij;
+    for_each_chunk(y, chunk_rows, arena, |start, tile| {
+        for jo in 0..tile.rows {
+            let yj = tile.row(jo);
+            atc.iter_mut().for_each(|v| *v = 0.0);
+            for r in 0..rows.len() {
+                let cij = kind.pair(xsamp.row(r), yj) as f32;
+                let arow = a.row(r);
+                for (acc, &av) in atc.iter_mut().zip(arow) {
+                    *acc += av * cij;
+                }
+            }
+            let vrow = v.row_mut(start + jo);
+            for c in 0..t {
+                let mut acc = 0.0f32;
+                let grow = g_inv.row(c);
+                for (gv, av) in grow.iter().zip(&atc) {
+                    acc += gv * av;
+                }
+                vrow[c] = acc;
             }
         }
-        let vrow = v.row_mut(j);
-        for c in 0..t {
-            let mut s = 0.0f32;
-            let grow = g_inv.row(c);
-            for (gv, av) in grow.iter().zip(&atc) {
-                s += gv * av;
-            }
-            vrow[c] = s;
-        }
-    }
+    });
     (u, v)
 }
 
@@ -211,6 +268,43 @@ mod tests {
         }
         let rel = (num / den).sqrt();
         assert!(rel < 0.08, "relative error too high: {rel}");
+    }
+
+    #[test]
+    fn chunked_factorization_identical_to_in_memory_for_any_chunk_size() {
+        let mut rng = Rng::new(9);
+        let x = rand_mat(&mut rng, 61, 3);
+        let y = rand_mat(&mut rng, 47, 3);
+        let (u, v) = factorize(&x, &y, CostKind::Euclidean, 8, 5);
+        let arena = ScratchArena::new(1);
+        let (xs, ys) = (InMemorySource::new(&x), InMemorySource::new(&y));
+        for chunk in [1usize, 5, 17, 61, 512] {
+            let (uc, vc) =
+                factorize_chunked(&xs, &ys, CostKind::Euclidean, 8, 5, chunk, &arena);
+            assert_eq!(u.data, uc.data, "U diverges at chunk {chunk}");
+            assert_eq!(v.data, vc.data, "V diverges at chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn chunked_factorization_from_file_matches_in_memory() {
+        let mut rng = Rng::new(10);
+        let x = rand_mat(&mut rng, 40, 2);
+        let y = rand_mat(&mut rng, 40, 2);
+        let dir = std::env::temp_dir();
+        let px = dir.join(format!("hiref_indyk_x_{}.bin", std::process::id()));
+        let py = dir.join(format!("hiref_indyk_y_{}.bin", std::process::id()));
+        crate::data::stream::write_bin(&px, &x).unwrap();
+        crate::data::stream::write_bin(&py, &y).unwrap();
+        let fx = crate::data::stream::BinFileSource::open(&px, 2).unwrap();
+        let fy = crate::data::stream::BinFileSource::open(&py, 2).unwrap();
+        let arena = ScratchArena::new(1);
+        let (u, v) = factorize(&x, &y, CostKind::Euclidean, 6, 3);
+        let (uf, vf) = factorize_chunked(&fx, &fy, CostKind::Euclidean, 6, 3, 9, &arena);
+        assert_eq!(u.data, uf.data);
+        assert_eq!(v.data, vf.data);
+        let _ = std::fs::remove_file(&px);
+        let _ = std::fs::remove_file(&py);
     }
 
     #[test]

@@ -10,11 +10,20 @@
 //!
 //! Dense costs ([`dense_cost`]) exist only for baselines (Sinkhorn,
 //! Hungarian) and small base-case blocks.
+//!
+//! Both factorisations also ship **chunked twins**
+//! ([`factor::sq_euclidean_factors_chunked`], [`indyk::factorize_chunked`],
+//! dispatched by [`factors_for_source`]) that consume
+//! [`crate::data::stream::DatasetSource`]s in `chunk_rows`-sized tiles:
+//! peak ingestion memory is one tile plus the `O(n·r)` factor output, and
+//! the factors are identical to the in-memory path for any chunk size.
 
 pub mod factor;
 pub mod indyk;
 
+use crate::data::stream::DatasetSource;
 use crate::linalg::{dist, sq_dist, Mat, MatView};
+use crate::pool::ScratchArena;
 
 /// Ground cost selector. Matches the paper's two evaluation costs:
 /// `‖·‖₂` (Wasserstein-1 ground cost) and `‖·‖₂²` (Wasserstein-2).
@@ -105,6 +114,48 @@ pub fn factors_for<'a, 'b>(
     }
 }
 
+/// Chunked twin of [`factors_for`]: build the cost factors from streamed
+/// [`DatasetSource`]s, never holding more than one `chunk_rows`-sized tile
+/// (arena scratch) plus the `O(n·r)` factor output.  Identical factors to
+/// [`factors_for`] for any chunk size.
+pub fn factors_for_source(
+    x: &dyn DatasetSource,
+    y: &dyn DatasetSource,
+    kind: CostKind,
+    target_k: usize,
+    seed: u64,
+    chunk_rows: usize,
+    arena: &ScratchArena,
+) -> (Mat, Mat) {
+    match kind {
+        CostKind::SqEuclidean => factor::sq_euclidean_factors_chunked(x, y, chunk_rows, arena),
+        CostKind::Euclidean => {
+            indyk::factorize_chunked(x, y, kind, target_k, seed, chunk_rows, arena)
+        }
+    }
+}
+
+/// Write the dense `x.rows×y.rows` cost matrix between two (typically
+/// gathered) tiles straight into a row-major `out` buffer — the streaming
+/// twin of [`dense_cost_indexed_into`] for base-case blocks whose points
+/// were fetched from a [`DatasetSource`] into arena scratch.
+pub fn dense_cost_into<'a, 'b>(
+    x: impl Into<MatView<'a>>,
+    y: impl Into<MatView<'b>>,
+    kind: CostKind,
+    out: &mut [f32],
+) {
+    let (x, y) = (x.into(), y.into());
+    assert_eq!(out.len(), x.rows * y.rows, "cost buffer shape mismatch");
+    for i in 0..x.rows {
+        let xi = x.row(i);
+        let crow = &mut out[i * y.rows..(i + 1) * y.rows];
+        for (cv, j) in crow.iter_mut().zip(0..y.rows) {
+            *cv = kind.pair(xi, y.row(j)) as f32;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,6 +211,35 @@ mod tests {
         let want = dense_cost(&x.gather_rows(&idx), &y.gather_rows(&idx), CostKind::SqEuclidean);
         let got = dense_cost(x.row_range(2, 6), y.row_range(2, 6), CostKind::SqEuclidean);
         assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn factors_for_source_matches_in_memory_for_both_kinds() {
+        use crate::data::stream::InMemorySource;
+        let mut rng = Rng::new(11);
+        let x = rand_mat(&mut rng, 33, 3);
+        let y = rand_mat(&mut rng, 33, 3);
+        let arena = ScratchArena::new(1);
+        let (xs, ys) = (InMemorySource::new(&x), InMemorySource::new(&y));
+        for kind in [CostKind::SqEuclidean, CostKind::Euclidean] {
+            let (u, v) = factors_for(&x, &y, kind, 8, 4);
+            for chunk in [3usize, 33] {
+                let (uc, vc) = factors_for_source(&xs, &ys, kind, 8, 4, chunk, &arena);
+                assert_eq!(u.data, uc.data, "{kind:?} chunk {chunk}");
+                assert_eq!(v.data, vc.data, "{kind:?} chunk {chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_cost_into_matches_dense_cost() {
+        let mut rng = Rng::new(12);
+        let x = rand_mat(&mut rng, 6, 2);
+        let y = rand_mat(&mut rng, 5, 2);
+        let want = dense_cost(&x, &y, CostKind::SqEuclidean);
+        let mut got = vec![0.0f32; 30];
+        dense_cost_into(&x, &y, CostKind::SqEuclidean, &mut got);
+        assert_eq!(got, want.data);
     }
 
     #[test]

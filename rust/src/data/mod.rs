@@ -8,7 +8,13 @@
 //!   the substitution argument.
 //! * [`embeddings`] — simulated high-dimensional image-embedding clouds
 //!   standing in for ResNet50 ImageNet embeddings (§4.4, Table 2/S8).
+//! * [`stream`] — chunked [`stream::DatasetSource`] ingestion (in-memory,
+//!   generator-backed, binary-file) for beyond-RAM datasets: the solver
+//!   consumes tiles of `chunk_rows` points, never the whole cloud.
 
 pub mod embeddings;
+pub mod stream;
 pub mod synthetic;
 pub mod transcriptomics;
+
+pub use stream::{BinFileSource, DatasetSource, GeneratorSource, InMemorySource};

@@ -96,6 +96,74 @@ pub fn half_moon_s_curve(n: usize, seed: u64) -> (Mat, Mat) {
     (x, y)
 }
 
+// ---------------------------------------------------------------------------
+// Streaming (per-row) generators
+// ---------------------------------------------------------------------------
+
+/// Per-row RNG for the streaming generators: seeded from a hash of
+/// `(seed, tag, i)`, so any row can be produced independently — the
+/// property [`crate::data::stream::GeneratorSource`] needs for chunked,
+/// random-access generation (the in-memory generators above share one
+/// sequential stream and therefore cannot be windowed).
+fn row_rng(seed: u64, tag: u64, i: usize) -> Rng {
+    let mut state = (seed ^ tag).wrapping_add((i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    Rng::new(crate::prng::splitmix64(&mut state))
+}
+
+/// Streaming twin of the half-moon side of [`half_moon_s_curve`]: write
+/// point `i` of the source cloud (same distribution, independently seeded
+/// per row).
+pub fn half_moon_row(seed: u64, i: usize, out: &mut [f32]) {
+    let mut rng = row_rng(seed, 0x5C0_2E ^ 0xA1A1, i);
+    let noise = 0.05;
+    let upper = rng.next_below(2) == 0;
+    let t = rng.uniform(0.0, std::f64::consts::PI);
+    let (mx, my) = if upper {
+        (t.cos(), t.sin())
+    } else {
+        (1.0 - t.cos(), 0.5 - t.sin())
+    };
+    out[0] = (mx + noise * rng.normal()) as f32;
+    out[1] = (my + noise * rng.normal()) as f32;
+}
+
+/// Streaming twin of the S-curve side of [`half_moon_s_curve`], including
+/// the paper's rotation + scaling + translation (Appendix D.1).
+pub fn s_curve_row(seed: u64, i: usize, out: &mut [f32]) {
+    let mut rng = row_rng(seed, 0x5C0_2E ^ 0xB2B2, i);
+    let noise = 0.05;
+    let t = rng.uniform(-1.5 * std::f64::consts::PI, 1.5 * std::f64::consts::PI);
+    let sx = t.sin();
+    let sz = t.signum() * (t.cos() - 1.0);
+    let a = (sx + noise * rng.normal()) as f32;
+    let b = (sz + noise * rng.normal()) as f32;
+    let theta = 0.5f64;
+    let (c, s) = (theta.cos() as f32, theta.sin() as f32);
+    let lambda = 1.5f32;
+    let (tx, ty) = (1.0f32, -0.5f32);
+    let (a, b) = (a * lambda, b * lambda);
+    out[0] = c * a - s * b + tx;
+    out[1] = s * a + c * b + ty;
+}
+
+/// The Half-Moon & S-Curve benchmark as a pair of streaming
+/// [`crate::data::stream::GeneratorSource`]s: points are generated on
+/// demand per row, so the clouds never exist in memory — the ingestion
+/// path for `n = 2^20` and beyond (`examples/million_points.rs`).
+pub fn half_moon_s_curve_sources(
+    n: usize,
+    seed: u64,
+) -> (
+    crate::data::stream::GeneratorSource,
+    crate::data::stream::GeneratorSource,
+) {
+    use crate::data::stream::GeneratorSource;
+    (
+        GeneratorSource::new(n, 2, move |i, out| half_moon_row(seed, i, out)),
+        GeneratorSource::new(n, 2, move |i, out| s_curve_row(seed, i, out)),
+    )
+}
+
 /// Dataset selector used by the CLI and the benches.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Synthetic {
@@ -173,6 +241,34 @@ mod tests {
             assert!(r < 3.0 * 1.2 + 1.0, "radius {r}");
             assert!(r > 3.0 * 0.25 - 1.0, "radius {r}");
         }
+    }
+
+    #[test]
+    fn streaming_generators_match_in_memory_distribution_envelope() {
+        use crate::data::stream::DatasetSource;
+        let (xs, ys) = half_moon_s_curve_sources(500, 3);
+        assert_eq!((xs.rows(), xs.dim(), ys.rows(), ys.dim()), (500, 2, 500, 2));
+        let mut xbuf = vec![0.0f32; 500 * 2];
+        let mut ybuf = vec![0.0f32; 500 * 2];
+        xs.fill_rows(0, &mut xbuf);
+        ys.fill_rows(0, &mut ybuf);
+        assert!(xbuf.iter().chain(&ybuf).all(|v| v.is_finite()));
+        // half-moon source stays in its known bounding box
+        for row in xbuf.chunks(2) {
+            assert!(row[0].abs() < 2.5 && row[1].abs() < 2.5, "{row:?}");
+        }
+        // transformed s-curve has the scaled spread of the in-memory twin
+        let span = ybuf.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        assert!(span > 2.0, "span {span}");
+        // per-row random access agrees with bulk fill (chunk invariance)
+        let mut row = [0.0f32; 2];
+        xs.fetch_row(123, &mut row);
+        assert_eq!(&row, &xbuf[246..248]);
+        // deterministic across re-creation
+        let (xs2, _) = half_moon_s_curve_sources(500, 3);
+        let mut xbuf2 = vec![0.0f32; 500 * 2];
+        xs2.fill_rows(0, &mut xbuf2);
+        assert_eq!(xbuf, xbuf2);
     }
 
     #[test]

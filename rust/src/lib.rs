@@ -56,6 +56,38 @@
 //! also what a batched/sharded backend needs: same-size blocks at a level
 //! form one strided batch.
 //!
+//! ## Streaming ingestion (beyond-RAM datasets)
+//!
+//! The solve path above never needs the raw point clouds except for (a)
+//! building the cost factors and (b) the ≤ `base_size` rows of each leaf
+//! block — so the clouds themselves need not be resident.
+//! [`data::stream::DatasetSource`] is the chunked ingestion contract
+//! (in-memory, generator-backed, or binary-file sources), the factor
+//! builders have chunked twins ([`costs::factors_for_source`]) that sweep
+//! sources in `chunk_rows`-sized arena tiles, and
+//! [`coordinator::hiref::HiRef::align_source`] runs the full refinement
+//! against sources, gathering base-case rows on demand:
+//!
+//! ```no_run
+//! use hiref::api::HiRefBuilder;
+//! use hiref::data::synthetic;
+//!
+//! // 2^20 points that never exist in memory: generated per row on demand
+//! let (xs, ys) = synthetic::half_moon_s_curve_sources(1 << 20, 0);
+//! let solver = HiRefBuilder::new().chunk_rows(1 << 16).build().unwrap();
+//! let out = solver.align_source(&xs, &ys).unwrap();
+//! assert!(out.is_bijection());
+//! ```
+//!
+//! **Streaming memory model:** `O(n·(d+2))` factor working copies
+//! (`RunStats::factor_bytes`) + `O(n)` permutations/output +
+//! `O(chunk_rows·d)` ingestion tiles and in-flight-block scratch
+//! (`RunStats::peak_scratch_bytes`) — peak memory is bounded by
+//! construction, independent of how the points are stored, and the result
+//! is identical to the in-memory path for any chunk size.  `cli align
+//! --chunk-rows`, `examples/million_points.rs` and the `bench_stream`
+//! profile (`BENCH_stream.json`) exercise this path end to end.
+//!
 //! ## Quick start
 //!
 //! Construct HiRef through [`api::HiRefBuilder`] — the validated,

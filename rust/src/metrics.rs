@@ -3,6 +3,7 @@
 //! precisely that HiRef's output needs `n` nonzeros, not `n²`).
 
 use crate::costs::CostKind;
+use crate::data::stream::DatasetSource;
 use crate::linalg::Mat;
 use crate::pool;
 
@@ -28,6 +29,50 @@ pub fn bijection_cost(x: &Mat, y: &Mat, perm: &[u32], kind: CostKind) -> f64 {
 /// Primal cost `⟨C, P⟩` of a dense coupling (baselines only).
 pub fn dense_cost_of(c: &Mat, p: &Mat) -> f64 {
     c.dot(p)
+}
+
+/// [`bijection_cost`] over streamed [`DatasetSource`]s: x is swept in
+/// `chunk_rows`-sized tiles (chunks in parallel, like the in-memory twin)
+/// and each matched y row is fetched on demand, so evaluating a
+/// million-point alignment needs `O(threads · chunk_rows·d)` memory —
+/// neither cloud is ever materialised.  Per-chunk partial sums are
+/// reduced in index order, so the result is deterministic.
+pub fn bijection_cost_source(
+    x: &dyn DatasetSource,
+    y: &dyn DatasetSource,
+    perm: &[u32],
+    kind: CostKind,
+    chunk_rows: usize,
+) -> f64 {
+    let d = x.dim();
+    assert_eq!(d, y.dim(), "source dimensions must match");
+    let n = x.rows();
+    assert_eq!(n, perm.len(), "permutation length must match x");
+    let m = y.rows();
+    assert!(
+        perm.iter().all(|&j| (j as usize) < m),
+        "permutation target out of range for y ({m} rows)"
+    );
+    if n == 0 {
+        return 0.0;
+    }
+    let chunk = chunk_rows.max(1).min(n);
+    let n_chunks = n.div_ceil(chunk);
+    let threads = pool::default_threads();
+    let partial = pool::parallel_map(n_chunks, threads, |ci| {
+        let start = ci * chunk;
+        let end = (start + chunk).min(n);
+        let mut xtile = vec![0.0f32; (end - start) * d];
+        let mut yrow = vec![0.0f32; d];
+        x.fill_rows(start, &mut xtile);
+        let mut s = 0.0f64;
+        for (o, i) in (start..end).enumerate() {
+            y.fetch_row(perm[i] as usize, &mut yrow);
+            s += kind.pair(&xtile[o * d..(o + 1) * d], &yrow);
+        }
+        s
+    });
+    partial.into_iter().sum::<f64>() / n as f64
 }
 
 /// Primal cost of *any* coupling representation — the uniform entry point
@@ -167,6 +212,23 @@ mod tests {
         let want = dense_cost_of(&c, &p);
         let got = bijection_cost(&x, &y, &perm, CostKind::SqEuclidean);
         assert!((want - got).abs() < 1e-4, "{want} vs {got}");
+    }
+
+    #[test]
+    fn bijection_cost_source_matches_in_memory() {
+        use crate::data::stream::InMemorySource;
+        let mut rng = Rng::new(6);
+        let mut x = Mat::zeros(41, 3);
+        let mut y = Mat::zeros(41, 3);
+        rng.fill_normal(&mut x.data);
+        rng.fill_normal(&mut y.data);
+        let perm = rng.permutation(41);
+        let want = bijection_cost(&x, &y, &perm, CostKind::SqEuclidean);
+        let (xs, ys) = (InMemorySource::new(&x), InMemorySource::new(&y));
+        for chunk in [1usize, 9, 41, 100] {
+            let got = bijection_cost_source(&xs, &ys, &perm, CostKind::SqEuclidean, chunk);
+            assert!((got - want).abs() < 1e-12, "chunk {chunk}: {got} vs {want}");
+        }
     }
 
     #[test]

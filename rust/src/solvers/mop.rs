@@ -228,7 +228,11 @@ pub fn round_sparse_to_bijection(sc: &SparseCoupling) -> Vec<u32> {
     let n = sc.n;
     let entries = &sc.entries;
     let mut order: Vec<usize> = (0..entries.len()).collect();
-    order.sort_by(|&a, &b| entries[b].2.partial_cmp(&entries[a].2).unwrap());
+    // total_cmp instead of partial_cmp().unwrap(): a NaN mass from a
+    // degenerate solve must not panic the rounding (same hardening as
+    // assign::balanced_assign and sinkhorn::round_to_bijection); ties and
+    // NaNs break deterministically by entry index.
+    order.sort_by(|&a, &b| entries[b].2.total_cmp(&entries[a].2).then(a.cmp(&b)));
     let mut perm = vec![u32::MAX; n];
     let mut used = vec![false; n];
     for &e in &order {
@@ -262,6 +266,22 @@ mod tests {
         rng.fill_normal(&mut x.data);
         rng.fill_normal(&mut y.data);
         (x, y)
+    }
+
+    #[test]
+    fn sparse_rounding_survives_nan_mass() {
+        // a NaN mass entry must not panic the sort; the output must
+        // still be a bijection (leftover pairing fills the gaps)
+        let sc = SparseCoupling {
+            n: 4,
+            m: 4,
+            entries: vec![(0, 1, 0.5), (1, 0, f64::NAN), (2, 2, 0.25), (3, 3, 0.25)],
+        };
+        let perm = round_sparse_to_bijection(&sc);
+        let mut seen = vec![false; 4];
+        for &j in &perm {
+            assert!((j as usize) < 4 && !std::mem::replace(&mut seen[j as usize], true));
+        }
     }
 
     #[test]

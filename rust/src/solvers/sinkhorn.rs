@@ -8,16 +8,19 @@
 
 use crate::linalg::{fast_exp, Mat};
 
-/// Log-sum-exp over an f64 buffer.  Potentials stay f64 (precision floor
-/// ~1e-9) but the exp itself runs through the vectorisable `fast_exp`
-/// (rel. err ≤ 7e-6) with pairwise-safe f64 accumulation — the dense
-/// baseline's O(n²)-per-sweep hot loop.
+/// Log-sum-exp over an f64 buffer — the dense baseline's O(n²)-per-sweep
+/// hot loop.  Uses exact `f64::exp`: the dual updates are the path that
+/// sets the solver's precision floor (~1e-9), and routing them through
+/// the f32 `fast_exp` (rel. err ≤ 7e-6) silently capped it, making
+/// `tol = 1e-6` unreachable on ill-scaled costs.  `fast_exp` remains the
+/// right tool where 7e-6 is invisible — the one-shot dense coupling
+/// materialisation in [`solve`].
 fn logsumexp64(xs: &[f64]) -> f64 {
     let mx = xs.iter().fold(f64::NEG_INFINITY, |m, &v| m.max(v));
     if !mx.is_finite() {
         return mx;
     }
-    let s: f64 = xs.iter().map(|&v| fast_exp((v - mx) as f32) as f64).sum();
+    let s: f64 = xs.iter().map(|&v| (v - mx).exp()).sum();
     mx + s.ln()
 }
 
@@ -110,7 +113,7 @@ pub fn solve(c: &Mat, cfg: &SinkhornConfig) -> SinkhornOutput {
         }
         // convergence: row-marginal violation (g-update makes cols exact)
         if it % 10 == 9 && current_eps(cfg, it) <= cfg.epsilon {
-            let viol = row_violation(c, &f, &g, eps, loga);
+            let viol = potentials_marginal_violation(c, &f, &g, eps);
             if viol < cfg.tol {
                 break;
             }
@@ -123,7 +126,12 @@ pub fn solve(c: &Mat, cfg: &SinkhornConfig) -> SinkhornOutput {
         let crow = c.row(i);
         let prow = p.row_mut(i);
         for ((pv, &cv), &gv) in prow.iter_mut().zip(crow).zip(&g) {
-            *pv = ((f[i] + gv - cv as f64) / eps).exp() as f32;
+            // One-shot f32 output: the f32 exponent cast plus fast_exp
+            // bound the entries' relative error at ~1e-5 — coarser than
+            // raw f32 storage, but this is a single O(n²) pass whose
+            // result is rounded to feasibility below and consumed at
+            // far looser tolerances; the duals above stay exact f64.
+            *pv = fast_exp(((f[i] + gv - cv as f64) / eps) as f32);
         }
     }
     round_to_feasible(&mut p);
@@ -187,16 +195,22 @@ fn current_eps(cfg: &SinkhornConfig, it: usize) -> f64 {
     }
 }
 
-fn row_violation(c: &Mat, f: &[f64], g: &[f64], eps: f64, loga: f64) -> f64 {
+/// Worst relative row-marginal violation implied by dual potentials
+/// `(f, g)` at regularisation `eps` under uniform marginals — the
+/// convergence residual [`solve`] tests against `tol`, exposed so tests
+/// and diagnostics can measure the true dual precision (the rounded
+/// coupling is always feasible, so it cannot reveal a stalled solve).
+pub fn potentials_marginal_violation(c: &Mat, f: &[f64], g: &[f64], eps: f64) -> f64 {
     let mut worst = 0.0f64;
     let n = c.rows;
+    let a = 1.0 / n as f64;
     for i in 0..n {
         let crow = c.row(i);
         let mut s = 0.0f64;
         for (&cv, &gv) in crow.iter().zip(g) {
             s += ((f[i] + gv - cv as f64) / eps).exp();
         }
-        worst = worst.max((s - loga.exp()).abs() * n as f64);
+        worst = worst.max((s - a).abs() * n as f64);
     }
     worst
 }
@@ -229,7 +243,11 @@ pub fn round_to_bijection(p: &Mat) -> Vec<u32> {
     let conf: Vec<f32> = (0..n)
         .map(|i| p.row(i).iter().fold(0.0f32, |m, &v| m.max(v)))
         .collect();
-    order.sort_by(|&a, &b| conf[b].partial_cmp(&conf[a]).unwrap());
+    // total_cmp instead of partial_cmp().unwrap(): a NaN coupling entry
+    // must not panic the rounding.  (conf itself is NaN-free — f32::max
+    // ignores NaN operands — this guards the comparison itself and keeps
+    // tie-breaking deterministic by row index.)
+    order.sort_by(|&a, &b| conf[b].total_cmp(&conf[a]).then(a.cmp(&b)));
     let mut taken = vec![false; n];
     let mut perm = vec![u32::MAX; n];
     for &i in &order {
@@ -241,6 +259,11 @@ pub fn round_to_bijection(p: &Mat) -> Vec<u32> {
                 bestv = v;
                 best = j;
             }
+        }
+        if best == usize::MAX {
+            // every untaken column held NaN: take the first open one so
+            // the output stays a bijection instead of panicking
+            best = taken.iter().position(|&t| !t).expect("columns exhausted early");
         }
         perm[i] = best as u32;
         taken[best] = true;
@@ -291,6 +314,50 @@ mod tests {
         let cost = metrics::dense_cost_of(&c, &out.coupling);
         assert!(cost >= exact_cost - 1e-3, "sinkhorn below exact: {cost} < {exact_cost}");
         assert!(cost <= exact_cost * 1.15 + 0.05, "{cost} vs exact {exact_cost}");
+    }
+
+    #[test]
+    fn ill_scaled_costs_converge_below_tol() {
+        // Regression for the logsumexp64 precision cap: the dual updates
+        // must run through exact f64::exp — with the f32 fast_exp in the
+        // log-sum-exp the dual residual stalls around that function's
+        // ~7e-6 relative error and a tol of 1e-6 never fires on
+        // ill-scaled costs.  The residual is measured on the potentials
+        // (the rounded coupling is always feasible and would hide a
+        // stalled solve).
+        let (x, y) = toy(24, 5);
+        let mut c = dense_cost(&x, &y, CostKind::SqEuclidean);
+        for v in c.data.iter_mut() {
+            *v *= 1e4; // ill-scaled: costs in the tens of thousands
+        }
+        let mean = c.data.iter().map(|&v| v as f64).sum::<f64>() / c.data.len() as f64;
+        let eps = 0.05 * mean;
+        let cfg = SinkhornConfig {
+            epsilon: eps,
+            relative_eps: false,
+            tol: 1e-8,
+            max_iters: 4000,
+            ..Default::default()
+        };
+        let out = solve(&c, &cfg);
+        let viol = potentials_marginal_violation(&c, &out.f, &out.g, eps);
+        assert!(viol < 1e-6, "dual residual stalled at {viol:.2e} (precision cap regression)");
+    }
+
+    #[test]
+    fn rounding_survives_nan_confidence() {
+        // a NaN entry, and even a fully-NaN row, must not panic the
+        // greedy rounding — the output must stay a bijection
+        let mut p = Mat::full(4, 4, 1.0 / 16.0);
+        *p.at_mut(2, 1) = f32::NAN;
+        for v in p.row_mut(3) {
+            *v = f32::NAN;
+        }
+        let perm = round_to_bijection(&p);
+        let mut seen = vec![false; 4];
+        for &j in &perm {
+            assert!((j as usize) < 4 && !std::mem::replace(&mut seen[j as usize], true));
+        }
     }
 
     #[test]

@@ -194,6 +194,69 @@ fn prop_hiref_beats_random_pairing() {
 }
 
 #[test]
+fn prop_hiref_bijective_on_tied_and_duplicate_points() {
+    // The classic greedy-assignment tie-breaking bug class: many points
+    // coincide exactly, so factor rows, confidence margins and base-case
+    // costs are all tied.  HiRef must still return a bijection, and
+    // rounding its coupling must round-trip.
+    check("hiref ties", 12, |rng| {
+        let n = 40 + rng.next_below(200);
+        let distinct = 1 + rng.next_below(5); // as few as ONE distinct point
+        let atoms = rand_mat(rng, distinct, 2);
+        let mut x = Mat::zeros(n, 2);
+        for i in 0..n {
+            let a = rng.next_below(distinct);
+            x.row_mut(i).copy_from_slice(atoms.row(a));
+        }
+        // y: an exact shuffled copy of x — optimal cost is exactly 0
+        let perm = rng.permutation(n);
+        let y = x.gather_rows(&perm);
+        let out = HiRef::new(native_cfg(rng)).align(&x, &y).unwrap();
+        assert!(out.is_bijection(), "n={n} distinct={distinct}");
+        let cost = out.cost(&x, &y, CostKind::SqEuclidean);
+        assert!(cost.is_finite() && cost >= 0.0, "cost {cost}");
+        // every x point has an identical partner somewhere in y, so the
+        // alignment must stay far below a uniformly random pairing (the
+        // approximate per-scale splits may mismatch a few tied points
+        // across co-clusters, so exact 0 is not guaranteed)
+        let rand_cost =
+            metrics::bijection_cost(&x, &y, &rng.permutation(n), CostKind::SqEuclidean);
+        if rand_cost > 1e-6 {
+            assert!(
+                cost <= rand_cost * 0.9 + 1e-6,
+                "tied-point cost {cost} vs random {rand_cost} (n={n} distinct={distinct})"
+            );
+        }
+        // Coupling::to_bijection round-trips the bijection unchanged
+        let cpl = hiref::api::Coupling::Bijection(out.perm.clone());
+        assert_eq!(cpl.to_bijection().unwrap(), out.perm);
+        assert_eq!(cpl.marginal_error(), 0.0);
+    });
+}
+
+#[test]
+fn prop_dense_rounding_bijective_on_tied_mass() {
+    // to_bijection on a dense plan with massively tied entries (the
+    // duplicate-point analogue for the rounding path) must stay bijective
+    check("dense rounding ties", 20, |rng| {
+        let n = 4 + rng.next_below(24);
+        // block-uniform plan: every entry tied within its block
+        let mut p = Mat::full(n, n, 1.0 / (n * n) as f32);
+        // a few duplicated heavy rows (identical => tied confidences)
+        let heavy = rng.next_below(n);
+        for j in 0..n {
+            *p.at_mut(heavy, j) = 2.0 / (n * n) as f32;
+        }
+        let cpl = hiref::api::Coupling::Dense(p);
+        let perm = cpl.to_bijection().unwrap();
+        let mut seen = vec![false; n];
+        for &j in &perm {
+            assert!((j as usize) < n && !std::mem::replace(&mut seen[j as usize], true));
+        }
+    });
+}
+
+#[test]
 fn prop_hiref_cost_stable_under_point_relabeling() {
     // relabeling the input points must not change solution quality
     check("hiref relabeling", 8, |rng| {
