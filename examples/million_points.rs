@@ -61,9 +61,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     // Cost evaluation streams too: x in tiles, matched y rows on demand.
     let (cost, cost_secs) =
         timed(|| metrics::bijection_cost_source(&xs, &ys, &out.perm, kind, chunk_rows));
+    let cost = cost?;
     let mut rng = Rng::new(7);
     let rand_cost =
-        metrics::bijection_cost_source(&xs, &ys, &rng.permutation(n), kind, chunk_rows);
+        metrics::bijection_cost_source(&xs, &ys, &rng.permutation(n), kind, chunk_rows)?;
 
     let rs = &out.stats;
     println!("\nRESULTS");

@@ -1,0 +1,112 @@
+//! Batched-vs-per-block A/B profile: run HiRef end-to-end twice on the
+//! same instance — once through the level-synchronous batched engine (the
+//! default) and once through the per-block work-queue path
+//! (`batching(false)`) — verify the permutations are bit-identical, and
+//! emit `BENCH_batch.json` so the speedup and batch shape (lane counts,
+//! arena peaks) are recorded run over run.  CI runs this at small `n` as
+//! an advisory step; profile bigger instances locally with
+//!
+//! ```sh
+//! HIREF_BATCH_N=262144 cargo bench --bench bench_batch
+//! ```
+
+use hiref::coordinator::hiref::{Alignment, BackendKind, HiRef, HiRefConfig};
+use hiref::costs::CostKind;
+use hiref::data::synthetic;
+use hiref::metrics::human_bytes;
+use hiref::pool;
+use hiref::report::{section, timed};
+
+fn run(cfg: &HiRefConfig, x: &hiref::linalg::Mat, y: &hiref::linalg::Mat) -> (Alignment, f64) {
+    let solver = HiRef::new(cfg.clone());
+    // one warm-up solve (page-faults, arena freelists), then the measured run
+    let _ = solver.align(x, y).expect("warm-up align");
+    let (out, secs) = timed(|| solver.align(x, y));
+    (out.expect("align"), secs)
+}
+
+fn main() {
+    let n: usize = std::env::var("HIREF_BATCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(16384);
+    let threads = pool::default_threads();
+    section(&format!("bench_batch — n = {n}, threads = {threads}"));
+
+    let (x, y) = synthetic::half_moon_s_curve(n, 0);
+    let cfg = HiRefConfig { backend: BackendKind::Auto, threads, ..Default::default() };
+
+    let (batched, batched_secs) = run(&HiRefConfig { batching: true, ..cfg.clone() }, &x, &y);
+    let (per_block, per_block_secs) = run(&HiRefConfig { batching: false, ..cfg }, &x, &y);
+
+    assert!(batched.is_bijection(), "batched output must be a bijection");
+    assert_eq!(
+        batched.perm, per_block.perm,
+        "batched and per-block paths must be bit-identical"
+    );
+    let cost = batched.cost(&x, &y, CostKind::SqEuclidean);
+    let rb = &batched.stats;
+    let rq = &per_block.stats;
+    let speedup = per_block_secs / batched_secs.max(1e-12);
+
+    println!("batched         = {:.1} ms", batched_secs * 1e3);
+    println!("per-block       = {:.1} ms  ({speedup:.2}x)", per_block_secs * 1e3);
+    println!("primal W2² cost = {cost:.4}");
+    println!("schedule        = {:?}", batched.schedule);
+    println!(
+        "batches         = {} (widest {} lanes, {:.0}% of blocks in multi-lane batches)",
+        rb.batches,
+        rb.lanes_max,
+        rb.batched_frac * 100.0
+    );
+    println!(
+        "lrot calls      = {} (batched) vs {} (per-block)",
+        rb.lrot_calls, rq.lrot_calls
+    );
+    println!(
+        "scratch peak    = {} (batched) vs {} (per-block)",
+        human_bytes(rb.peak_scratch_bytes),
+        human_bytes(rq.peak_scratch_bytes)
+    );
+
+    // hand-rolled JSON (the vendored universe has no serde)
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"batch\",\n",
+            "  \"n\": {},\n",
+            "  \"threads\": {},\n",
+            "  \"batched_elapsed_ms\": {:.3},\n",
+            "  \"per_block_elapsed_ms\": {:.3},\n",
+            "  \"speedup\": {:.4},\n",
+            "  \"identical\": {},\n",
+            "  \"primal_cost_w2sq\": {:.6},\n",
+            "  \"schedule\": {:?},\n",
+            "  \"batches\": {},\n",
+            "  \"lanes_max\": {},\n",
+            "  \"batched_frac\": {:.4},\n",
+            "  \"lrot_calls\": {},\n",
+            "  \"base_calls\": {},\n",
+            "  \"batched_peak_arena_bytes\": {},\n",
+            "  \"per_block_peak_arena_bytes\": {}\n",
+            "}}\n"
+        ),
+        n,
+        threads,
+        batched_secs * 1e3,
+        per_block_secs * 1e3,
+        speedup,
+        batched.perm == per_block.perm,
+        cost,
+        batched.schedule,
+        rb.batches,
+        rb.lanes_max,
+        rb.batched_frac,
+        rb.lrot_calls,
+        rb.base_calls,
+        rb.peak_scratch_bytes,
+        rq.peak_scratch_bytes,
+    );
+    std::fs::write("BENCH_batch.json", &json).expect("writing BENCH_batch.json");
+    println!("\nwrote BENCH_batch.json");
+}

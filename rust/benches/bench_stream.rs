@@ -48,7 +48,8 @@ fn main() {
     let (out, secs) = timed(|| solver.align_source(&xs, &ys));
     let out = out.expect("align_source");
     assert!(out.is_bijection(), "bench output must be a bijection");
-    let cost = metrics::bijection_cost_source(&xs, &ys, &out.perm, CostKind::SqEuclidean, chunk_rows);
+    let cost = metrics::bijection_cost_source(&xs, &ys, &out.perm, CostKind::SqEuclidean, chunk_rows)
+        .expect("streamed cost evaluation");
     let rs = &out.stats;
     let elapsed_ms = secs * 1e3;
     // the bound the acceptance criterion names: one ingestion tile plus

@@ -117,6 +117,15 @@ impl HiRefBuilder {
         self
     }
 
+    /// Level-synchronous batched execution (default `true`): every
+    /// same-shape group of blocks at a scale is solved as one strided
+    /// LROT batch.  `false` selects the per-block work-queue path —
+    /// bit-identical output, kept selectable for A/B comparison.
+    pub fn batching(mut self, on: bool) -> Self {
+        self.cfg.batching = on;
+        self
+    }
+
     /// Validate and return the configuration.
     pub fn build_config(self) -> Result<HiRefConfig, SolveError> {
         let cfg = self.cfg;
@@ -227,6 +236,7 @@ mod tests {
             .threads(2)
             .max_depth(3)
             .record_scales(true)
+            .batching(false)
             .artifacts_dir("some/dir")
             .build_config()
             .unwrap();
@@ -237,6 +247,12 @@ mod tests {
         assert_eq!(cfg.threads, 2);
         assert_eq!(cfg.max_depth, Some(3));
         assert!(cfg.record_scales);
+        assert!(!cfg.batching);
         assert_eq!(cfg.artifacts_dir, std::path::PathBuf::from("some/dir"));
+    }
+
+    #[test]
+    fn batching_defaults_on() {
+        assert!(HiRefBuilder::new().build_config().unwrap().batching);
     }
 }

@@ -62,6 +62,15 @@ impl fmt::Display for SolveError {
 
 impl std::error::Error for SolveError {}
 
+/// Mid-solve dataset I/O failures (fallible [`crate::data::stream`]
+/// sources) surface as [`SolveError::Backend`] so solve paths can `?`
+/// straight through.
+impl From<std::io::Error> for SolveError {
+    fn from(e: std::io::Error) -> SolveError {
+        SolveError::Backend(format!("dataset I/O: {e}"))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

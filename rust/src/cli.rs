@@ -108,6 +108,8 @@ impl Flags {
 const COST_CHOICES: [&str; 6] = ["sq", "sqeuclidean", "w2", "euclid", "euclidean", "w1"];
 /// Valid `--backend` values.
 const BACKEND_CHOICES: [&str; 3] = ["auto", "native", "pjrt"];
+/// Valid `--batching` values.
+const BATCHING_CHOICES: [&str; 2] = ["on", "off"];
 /// Valid `--dataset` values.
 const DATASET_CHOICES: [&str; 8] = [
     "halfmoon",
@@ -161,6 +163,7 @@ pub fn config_from_flags(flags: &Flags) -> Result<HiRefConfig> {
         "pjrt" => BackendKind::Pjrt,
         _ => BackendKind::Auto,
     });
+    b = b.batching(flags.get_choice("batching", "on", &BATCHING_CHOICES)? == "on");
     Ok(b.build_config()?)
 }
 
@@ -279,6 +282,16 @@ fn cmd_align(flags: &Flags) -> Result<()> {
             rs.lrot_calls, rs.pjrt_calls, rs.native_calls
         );
         println!("base blocks   = {}", rs.base_calls);
+        if rs.batches > 0 {
+            println!(
+                "batches       = {} (widest {} lanes, {:.0}% of blocks in multi-lane batches)",
+                rs.batches,
+                rs.lanes_max,
+                rs.batched_frac * 100.0
+            );
+        } else {
+            println!("batches       = 0 (per-block execution)");
+        }
         println!(
             "scratch peak  = {} (arena hit rate {:.1}%)",
             metrics::human_bytes(rs.peak_scratch_bytes),
@@ -385,6 +398,8 @@ COMMON FLAGS
   --n <int>             dataset size                 [1024]
   --cost sq|euclid      ground cost                  [sq]
   --backend auto|native|pjrt                         [auto]
+  --batching on|off     level-synchronous batched execution (off =
+                        per-block work-queue path, for A/B)      [on]
   --max-rank <int>      annealing max rank C         [16]
   --base-size <int>     exact base-case block Q      [256]
   --hungarian-cutoff <int>  Hungarian/auction crossover (≤ base-size)
@@ -440,6 +455,15 @@ mod tests {
         let f = flags(&["--backend", "cuda"]);
         let e = config_from_flags(&f).unwrap_err();
         assert!(e.0.contains("auto|native|pjrt"), "{e}");
+    }
+
+    #[test]
+    fn batching_flag_reaches_config() {
+        assert!(config_from_flags(&flags(&[])).unwrap().batching);
+        assert!(config_from_flags(&flags(&["--batching", "on"])).unwrap().batching);
+        assert!(!config_from_flags(&flags(&["--batching", "off"])).unwrap().batching);
+        let e = config_from_flags(&flags(&["--batching", "maybe"])).unwrap_err();
+        assert!(e.0.contains("on|off"), "{e}");
     }
 
     #[test]

@@ -31,27 +31,56 @@
 //! Ranges at one scale exactly partition the parent range, so concurrent
 //! workers always own pairwise-disjoint windows of the shared buffers
 //! ([`RangeShared`]) — the same `(start, end)` idiom as hierarchical
-//! community-detection codes, and exactly the layout a future batched /
-//! sharded backend wants (same-size blocks at a level are one strided
-//! batch).
+//! community-detection codes, and exactly the layout the batched backend
+//! exploits (same-size blocks at a level are one strided batch).
+//!
+//! # Level-synchronous batched execution (the default)
+//!
+//! Up to 2^ℓ blocks of *identical shape* exist at scale ℓ, and each block
+//! is already a contiguous window of the shared factor buffers — so the
+//! engine schedules **levels, not blocks**.  Per scale it:
+//!
+//! 1. partitions the level's blocks into base-case blocks and refinement
+//!    blocks, and groups the refinement blocks by size (splits are
+//!    ±1-balanced, so a level has at most two distinct sizes — the ragged
+//!    remainder forms its own batch);
+//! 2. runs **one batched LROT solve per group**
+//!    ([`lrot::solve_factored_batch`], or [`PjrtEngine::lrot_batch`] when
+//!    the backend fits): every block is a lane of one strided
+//!    [`crate::linalg::BatchView`] over the factor working copies, the
+//!    mirror-descent loop is shared across lanes, and per-lane
+//!    convergence masks retire early-converged blocks;
+//! 3. runs one batched balanced-assign / re-index pass (`parallel_map`
+//!    over lanes; sibling ranges are disjoint, so the [`RangeShared`]
+//!    writeback stays sound) to produce the next level's blocks; and
+//! 4. seals the level's base-case blocks with one batched exact pass
+//!    (`parallel_map` over their Hungarian/auction tiles).
+//!
+//! Per-block seeds stay anchored on each range's first original id, so the
+//! batched path is **bit-identical** to the per-block path — which remains
+//! selectable for A/B comparison via `HiRefConfig::batching = false`
+//! (`HiRefBuilder::batching`), executing the classic condvar-parked
+//! [`WorkQueue`] recursion.  Both paths share the split/seed/base-case
+//! helpers and the 1-lane-equals-N-lane LROT core, so they cannot drift.
 //!
 //! # Memory model
 //!
 //! `O(n·d)` for the factor working copies + `O(n)` for the permutations
 //! and output + transient scratch served by a [`ScratchArena`].  Scratch
-//! tracks the blocks currently in flight: the root LROT solve checks out
-//! `O(n·(d + r))` (its logits/gradients), decaying geometrically down the
-//! hierarchy to `O(threads · base_size²)` for the leaf dense costs — so
-//! peak scratch is itself linear in `n` with a small constant.  Peak
-//! bytes and freelist hit-rate are reported in [`RunStats`].  Nothing
-//! anywhere scales quadratically with `n` — the paper's linear-space
-//! claim, now enforced by construction.
+//! tracks **one in-flight level, not one block**: at scale ℓ the batched
+//! LROT state (logits, gradients, potentials) for all 2^ℓ lanes together
+//! is `O(n·r)` — the same linear bound the per-block path reached at its
+//! peak, because sibling blocks shrink geometrically while their count
+//! doubles.  The base-case levels hold `O(threads · base_size²)` dense
+//! tiles.  Peak bytes and freelist hit-rate are reported in [`RunStats`],
+//! along with the batch shape counters (`batches`, `lanes_max`,
+//! `batched_frac`).  Nothing anywhere scales quadratically with `n` — the
+//! paper's linear-space claim, enforced by construction.
 //!
-//! Co-clusters at the same scale are independent, so the engine fans them
-//! out over a condvar-parked work-queue thread pool; LROT solves are
-//! served either by the PJRT runtime (AOT artifacts from the JAX/Pallas
-//! layers) or by the native Rust solver, per block, whichever fits
-//! (`BackendKind::Auto`).
+//! LROT batches are served either by the PJRT runtime (AOT artifacts from
+//! the JAX/Pallas layers) or by the native Rust solver — dispatch is at
+//! **batch granularity** (`BackendKind::Auto` falls back to native for
+//! any batch whose shape has no artifact bucket).
 //!
 //! # Streaming ingestion
 //!
@@ -77,7 +106,7 @@ use crate::coordinator::annealing;
 use crate::coordinator::assign;
 use crate::costs::{self, CostKind};
 use crate::data::stream::{self, DatasetSource};
-use crate::linalg::{Mat, MatView};
+use crate::linalg::{BatchItem, BatchView, Mat, MatView};
 use crate::metrics;
 use crate::pool::{self, RangeShared, ScratchArena, WorkQueue};
 use crate::runtime::PjrtEngine;
@@ -127,6 +156,11 @@ pub struct HiRefConfig {
     /// ([`HiRef::align_source`]): chunked cost factorisation never holds
     /// more than one `chunk_rows×d` tile of points.
     pub chunk_rows: usize,
+    /// Level-synchronous batched execution (the default): every same-shape
+    /// group of blocks at a scale is solved as one strided LROT batch.
+    /// `false` selects the per-block work-queue path — bit-identical
+    /// output, kept for A/B comparison.
+    pub batching: bool,
 }
 
 impl Default for HiRefConfig {
@@ -145,6 +179,7 @@ impl Default for HiRefConfig {
             artifacts_dir: PathBuf::from("artifacts"),
             record_scales: false,
             chunk_rows: 1 << 16,
+            batching: true,
         }
     }
 }
@@ -170,6 +205,15 @@ pub struct RunStats {
     /// `peak_scratch_bytes` this is the whole solve-path footprint of a
     /// streaming run (`O(n·r)` factors + `O(chunk_rows·d)`-bounded tiles).
     pub factor_bytes: usize,
+    /// Batched LROT dispatches issued by the level scheduler (one per
+    /// same-shape group per scale); 0 on the per-block path.
+    pub batches: usize,
+    /// Largest lane count of any single batch (the widest level group).
+    pub lanes_max: usize,
+    /// Fraction of LROT block solves that shared a batch with at least
+    /// one sibling lane (0.0 on the per-block path; singleton batches —
+    /// e.g. the root — do not count as shared).
+    pub batched_frac: f64,
     pub elapsed: Duration,
 }
 
@@ -264,6 +308,29 @@ struct SolveState<'a> {
     perm: Mutex<Vec<u32>>,
     scales: Option<Vec<Mutex<Vec<(Range<u32>, Range<u32>)>>>>,
     stats: StatsAtomics,
+    /// First solver-internal failure (e.g. a mid-solve dataset I/O error
+    /// on the streaming path).  Workers record it and bail out of their
+    /// block; the run surfaces it as the solve result.
+    error: Mutex<Option<SolveError>>,
+}
+
+impl SolveState<'_> {
+    /// Record the first failure; later ones are dropped (the first is the
+    /// actionable one and the run is already doomed).
+    fn set_error(&self, e: SolveError) {
+        let mut guard = self.error.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(e);
+        }
+    }
+
+    /// Has any worker recorded a failure?  Checked before scheduling more
+    /// work so a doomed run (e.g. a vanished dataset with slow failing
+    /// reads) surfaces its error in one block's time, not after
+    /// re-attempting every remaining block.
+    fn has_error(&self) -> bool {
+        self.error.lock().unwrap().is_some()
+    }
 }
 
 impl HiRef {
@@ -359,6 +426,8 @@ impl HiRef {
         self.validate_sizes(x.rows(), y.rows(), x.dim(), y.dim())?;
         let t0 = Instant::now();
         let arena = ScratchArena::new(self.cfg.threads);
+        // factorisation I/O failures surface as SolveError::Backend via
+        // the From<io::Error> conversion
         let (fu, fv) = costs::factors_for_source(
             x,
             y,
@@ -367,7 +436,8 @@ impl HiRef {
             self.cfg.seed,
             self.cfg.chunk_rows,
             &arena,
-        );
+            self.cfg.threads,
+        )?;
         self.align_inner(fu, fv, Points::Sources(x, y), arena, t0)
     }
 
@@ -408,25 +478,30 @@ impl HiRef {
                 None
             },
             stats: StatsAtomics::default(),
+            error: Mutex::new(None),
         };
 
         let root = Block { x: 0..n as u32, y: 0..n as u32, level: 0 };
-        let queue = WorkQueue::new(vec![root]);
-        queue.run(self.cfg.threads, |block, queue| {
-            if let Some(sc) = &st.scales {
-                if block.level < sc.len() {
-                    // O(1) snapshot: just the range pair, no index clones
-                    sc[block.level].lock().unwrap().push((block.x.clone(), block.y.clone()));
+        if self.cfg.batching {
+            // level-synchronous batched execution (the default)
+            self.run_levels(&schedule, points, root, &st);
+        } else {
+            // per-block A/B path: the classic work-queue recursion
+            let queue = WorkQueue::new(vec![root]);
+            queue.run(self.cfg.threads, |block, queue| {
+                self.record_scale(&block, &st);
+                let len = (block.x.end - block.x.start) as usize;
+                if len <= self.cfg.base_size || block.level >= schedule.len() {
+                    self.solve_base(points, &block, &st);
+                } else {
+                    self.refine(&schedule, block, queue, &st);
                 }
-            }
-            let len = (block.x.end - block.x.start) as usize;
-            if len <= self.cfg.base_size || block.level >= schedule.len() {
-                self.solve_base(points, &block, &st);
-            } else {
-                self.refine(&schedule, block, queue, &st);
-            }
-        });
+            });
+        }
 
+        if let Some(e) = st.error.into_inner().unwrap() {
+            return Err(e);
+        }
         let perm = st.perm.into_inner().unwrap();
         let unassigned = perm.iter().filter(|&&j| j == u32::MAX).count();
         if unassigned > 0 {
@@ -458,11 +533,69 @@ impl HiRef {
         Ok(Alignment { perm, schedule, stats, x_order, y_order, scales })
     }
 
-    /// One refinement step: LROT on the co-cluster's factor-row windows,
-    /// balanced assignment, in-place re-indexing of the windows so each
-    /// child is contiguous, then enqueue the child ranges (Algorithm 1,
-    /// lines 8–17 — with `Assign`'s split realised as a stable counting
-    /// reorder instead of index-set materialisation).
+    /// O(1) co-clustering snapshot for Fig. S3 diagnostics: just the
+    /// range pair, no index clones (materialised at the end of the run).
+    fn record_scale(&self, block: &Block, st: &SolveState<'_>) {
+        if let Some(sc) = &st.scales {
+            if block.level < sc.len() {
+                sc[block.level].lock().unwrap().push((block.x.clone(), block.y.clone()));
+            }
+        }
+    }
+
+    /// Per-block deterministic seed, anchored on the first original id in
+    /// the block — invariant under the physical layout **and** under the
+    /// execution strategy, which is what makes the batched and per-block
+    /// paths bit-identical.
+    fn block_seed(&self, block: &Block, st: &SolveState<'_>) -> u64 {
+        let xs = block.x.start as usize;
+        // SAFETY: this block exclusively owns positions [xs, xe) — sibling
+        // ranges are disjoint and the parent finished re-indexing before
+        // this block was scheduled.
+        let anchor = unsafe { st.x_order.slice(xs, xs + 1)[0] };
+        self.cfg
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add((block.level as u64) << 32)
+            .wrapping_add(anchor as u64)
+    }
+
+    /// Balanced assignment + in-place re-indexing of one block's windows
+    /// so each child co-cluster is contiguous; returns the child blocks
+    /// (Algorithm 1, lines 8–17 — with `Assign`'s split realised as a
+    /// stable counting reorder instead of index-set materialisation).
+    /// Shared by the per-block and level-batched paths.
+    fn split_block(&self, block: &Block, q: &Mat, rmat: &Mat, st: &SolveState<'_>) -> Vec<Block> {
+        let (xs, xe) = (block.x.start as usize, block.x.end as usize);
+        let (ys, _ye) = (block.y.start as usize, block.y.end as usize);
+        let len = xe - xs;
+        let rank = q.cols;
+        let labels_x = assign::balanced_assign(q, len);
+        let labels_y = assign::balanced_assign(rmat, len);
+        let caps = assign::capacities(len, rank);
+
+        reorder_window(&st.fu, &st.x_order, xs, len, st.k, &labels_x, &caps, st.arena);
+        reorder_window(&st.fv, &st.y_order, ys, len, st.k, &labels_y, &caps, st.arena);
+
+        let mut children = Vec::with_capacity(caps.len());
+        let mut off = 0usize;
+        for &cap in &caps {
+            if cap > 0 {
+                children.push(Block {
+                    x: (xs + off) as u32..(xs + off + cap) as u32,
+                    y: (ys + off) as u32..(ys + off + cap) as u32,
+                    level: block.level + 1,
+                });
+            }
+            off += cap;
+        }
+        debug_assert_eq!(off, len, "children must partition the parent range");
+        children
+    }
+
+    /// One refinement step of the per-block path: LROT on the co-cluster's
+    /// factor-row windows, then [`HiRef::split_block`], then enqueue the
+    /// children.
     fn refine(
         &self,
         schedule: &[usize],
@@ -470,7 +603,9 @@ impl HiRef {
         queue: &WorkQueue<Block>,
         st: &SolveState<'_>,
     ) {
-        let level = block.level;
+        if st.has_error() {
+            return; // doomed run: drain the queue without doing work
+        }
         let (xs, xe) = (block.x.start as usize, block.x.end as usize);
         let (ys, ye) = (block.y.start as usize, block.y.end as usize);
         let len = xe - xs;
@@ -478,49 +613,145 @@ impl HiRef {
         let k = st.k;
         // Rank at this scale: schedule entry, clamped so a block is never
         // split into more parts than it has points.
-        let rank = schedule[level].min(len).max(2);
-
-        // per-block deterministic seed, anchored on the first original id
-        // in the block (invariant under the physical layout).
-        // SAFETY: this block exclusively owns positions [xs, xe) / [ys, ye)
-        // — sibling ranges are disjoint and the parent finished re-indexing
-        // before enqueueing us.
-        let anchor = unsafe { st.x_order.slice(xs, xs + 1)[0] };
-        let seed = self
-            .cfg
-            .seed
-            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-            .wrapping_add((level as u64) << 32)
-            .wrapping_add(anchor as u64);
+        let rank = schedule[block.level].min(len).max(2);
+        let seed = self.block_seed(&block, st);
 
         st.stats.lrot.fetch_add(1, Ordering::Relaxed);
         let (q, rmat) = {
-            // SAFETY: as above — shared reads of our own window, dropped
-            // before the exclusive re-indexing borrows below.
+            // SAFETY: shared reads of our own window, dropped before the
+            // exclusive re-indexing borrows inside split_block.
             let u = MatView::from_slice(len, k, unsafe { st.fu.slice(xs * k, xe * k) });
             let v = MatView::from_slice(len, k, unsafe { st.fv.slice(ys * k, ye * k) });
             self.solve_lrot(u, v, len, rank, seed, st)
         };
-
-        let labels_x = assign::balanced_assign(&q, len);
-        let labels_y = assign::balanced_assign(&rmat, len);
-        let caps = assign::capacities(len, rank);
-
-        reorder_window(&st.fu, &st.x_order, xs, len, k, &labels_x, &caps, st.arena);
-        reorder_window(&st.fv, &st.y_order, ys, len, k, &labels_y, &caps, st.arena);
-
-        let mut off = 0usize;
-        for &cap in &caps {
-            if cap > 0 {
-                queue.push(Block {
-                    x: (xs + off) as u32..(xs + off + cap) as u32,
-                    y: (ys + off) as u32..(ys + off + cap) as u32,
-                    level: level + 1,
-                });
-            }
-            off += cap;
+        for child in self.split_block(&block, &q, &rmat, st) {
+            queue.push(child);
         }
-        debug_assert_eq!(off, len, "children must partition the parent range");
+    }
+
+    /// The level-synchronous scheduler (the default execution strategy):
+    /// walk the hierarchy one scale at a time, sealing the scale's
+    /// base-case blocks with one batched exact pass and solving each
+    /// same-shape group of refinement blocks as one strided LROT batch.
+    fn run_levels(&self, schedule: &[usize], points: Points<'_>, root: Block, st: &SolveState<'_>) {
+        let threads = self.cfg.threads;
+        let mut current = vec![root];
+        while !current.is_empty() {
+            // fail fast: a recorded error dooms the run, so stop
+            // scheduling levels instead of grinding through them
+            if st.has_error() {
+                return;
+            }
+            for b in &current {
+                self.record_scale(b, st);
+            }
+            let level = current[0].level;
+            debug_assert!(current.iter().all(|b| b.level == level));
+            let (refine, base): (Vec<Block>, Vec<Block>) = current.into_iter().partition(|b| {
+                let len = (b.x.end - b.x.start) as usize;
+                len > self.cfg.base_size && b.level < schedule.len()
+            });
+            // one batched exact pass over the level's base tiles
+            if !base.is_empty() {
+                pool::parallel_map(base.len(), threads, |i| self.solve_base(points, &base[i], st));
+            }
+            // group refinement blocks by size: ±1-balanced splits leave at
+            // most two distinct sizes per level, so the ragged remainder
+            // forms its own (possibly 1-lane) batch.  BTreeMap keeps the
+            // group order deterministic.
+            let mut groups: std::collections::BTreeMap<usize, Vec<Block>> =
+                std::collections::BTreeMap::new();
+            for b in refine {
+                let len = (b.x.end - b.x.start) as usize;
+                groups.entry(len).or_default().push(b);
+            }
+            let mut next = Vec::new();
+            for (len, blocks) in groups {
+                let rank = schedule[level].min(len).max(2);
+                next.extend(self.refine_batch(&blocks, len, rank, st));
+            }
+            current = next;
+        }
+    }
+
+    /// Refine one same-shape group of blocks as a single strided LROT
+    /// batch, then run the batched balanced-assign / re-index pass that
+    /// produces the next level's blocks.
+    fn refine_batch(&self, blocks: &[Block], len: usize, rank: usize, st: &SolveState<'_>) -> Vec<Block> {
+        let lanes = blocks.len();
+        let k = st.k;
+        let n = st.x_order.len();
+        st.stats.lrot.fetch_add(lanes, Ordering::Relaxed);
+        st.stats.batches.fetch_add(1, Ordering::Relaxed);
+        st.stats.lanes_max.fetch_max(lanes, Ordering::Relaxed);
+        if lanes >= 2 {
+            st.stats.batched_lanes.fetch_add(lanes, Ordering::Relaxed);
+        }
+        let seeds: Vec<u64> = blocks.iter().map(|b| self.block_seed(b, st)).collect();
+        let outs: Vec<(Mat, Mat)> = {
+            // SAFETY: the LROT stage only *reads* the factor buffers
+            // (whole-buffer shared borrows sliced into disjoint lane
+            // windows); nothing writes them until the re-index pass below,
+            // by which point these borrows have ended.
+            let fu = unsafe { st.fu.slice(0, n * k) };
+            let fv = unsafe { st.fv.slice(0, n * k) };
+            let u_items: Vec<BatchItem> = blocks
+                .iter()
+                .map(|b| BatchItem::new(b.x.start as usize..b.x.end as usize, k))
+                .collect();
+            let v_items: Vec<BatchItem> = blocks
+                .iter()
+                .map(|b| BatchItem::new(b.y.start as usize..b.y.end as usize, k))
+                .collect();
+            let u = BatchView::new(fu, &u_items);
+            let v = BatchView::new(fv, &v_items);
+            self.solve_lrot_batch(u, v, len, rank, &seeds, st)
+        };
+        // one batched balanced-assign + re-index pass over the lanes;
+        // sibling windows are disjoint, so the concurrent in-place
+        // reorders stay within the RangeShared contract.
+        pool::parallel_map(lanes, self.cfg.threads, |l| {
+            self.split_block(&blocks[l], &outs[l].0, &outs[l].1, st)
+        })
+        .into_iter()
+        .flatten()
+        .collect()
+    }
+
+    /// Batch-granularity LROT dispatch: the whole batch goes to PJRT when
+    /// the backend can serve its shape, else to the native batched solver.
+    fn solve_lrot_batch(
+        &self,
+        u: BatchView<'_>,
+        v: BatchView<'_>,
+        active: usize,
+        rank: usize,
+        seeds: &[u64],
+        st: &SolveState<'_>,
+    ) -> Vec<(Mat, Mat)> {
+        let lanes = u.len();
+        let actives: Vec<(usize, usize)> = vec![(active, active); lanes];
+        if self.cfg.backend != BackendKind::Native {
+            if let Some(engine) = &self.engine {
+                match engine.lrot_batch(u, v, &actives, rank, seeds) {
+                    Ok(Some(outs)) => {
+                        st.stats.pjrt.fetch_add(lanes, Ordering::Relaxed);
+                        return outs;
+                    }
+                    Ok(None) => {} // no bucket for this shape: native batch
+                    Err(e) => {
+                        // degrade gracefully; correctness is identical
+                        eprintln!("[hiref] pjrt LROT batch failed ({e}); using native");
+                    }
+                }
+            }
+        }
+        st.stats.native.fetch_add(lanes, Ordering::Relaxed);
+        let cfg = LrotConfig { rank, ..self.cfg.lrot.clone() };
+        lrot::solve_factored_batch(u, v, &actives, &cfg, seeds, st.arena, self.cfg.threads)
+            .into_iter()
+            .map(|o| (o.q, o.r))
+            .collect()
     }
 
     /// LROT dispatch: PJRT bucket when available, else native.  Both paths
@@ -563,6 +794,9 @@ impl HiRef {
     /// sources into arena scratch (the only point rows a streaming solve
     /// ever materialises).
     fn solve_base(&self, points: Points<'_>, block: &Block, st: &SolveState<'_>) {
+        if st.has_error() {
+            return; // doomed run: don't re-attempt reads block by block
+        }
         st.stats.base.fetch_add(1, Ordering::Relaxed);
         let (xs, xe) = (block.x.start as usize, block.x.end as usize);
         let (ys, ye) = (block.y.start as usize, block.y.end as usize);
@@ -584,8 +818,16 @@ impl HiRef {
                     let d = x.dim();
                     let mut xtile = st.arena.take_f32(len * d);
                     let mut ytile = st.arena.take_f32(len * d);
-                    stream::gather_rows_into(x, xids, &mut xtile);
-                    stream::gather_rows_into(y, yids, &mut ytile);
+                    // mid-solve I/O failures surface as a typed error on
+                    // the run, not a worker panic
+                    let gathered = stream::gather_rows_into(x, xids, &mut xtile)
+                        .and_then(|()| stream::gather_rows_into(y, yids, &mut ytile));
+                    if let Err(e) = gathered {
+                        st.set_error(SolveError::Backend(format!(
+                            "dataset read failed gathering a base block: {e}"
+                        )));
+                        return;
+                    }
                     costs::dense_cost_into(
                         MatView::from_slice(len, d, &xtile),
                         MatView::from_slice(len, d, &ytile),
@@ -651,12 +893,18 @@ struct StatsAtomics {
     pjrt: AtomicUsize,
     native: AtomicUsize,
     base: AtomicUsize,
+    batches: AtomicUsize,
+    lanes_max: AtomicUsize,
+    /// LROT block solves that shared a batch with ≥ 1 sibling lane.
+    batched_lanes: AtomicUsize,
 }
 
 impl StatsAtomics {
     fn snapshot(&self, elapsed: Duration, arena: &ScratchArena) -> RunStats {
+        let lrot_calls = self.lrot.load(Ordering::Relaxed);
+        let batched_lanes = self.batched_lanes.load(Ordering::Relaxed);
         RunStats {
-            lrot_calls: self.lrot.load(Ordering::Relaxed),
+            lrot_calls,
             pjrt_calls: self.pjrt.load(Ordering::Relaxed),
             native_calls: self.native.load(Ordering::Relaxed),
             base_calls: self.base.load(Ordering::Relaxed),
@@ -664,6 +912,13 @@ impl StatsAtomics {
             arena_hits: arena.hits(),
             arena_misses: arena.misses(),
             factor_bytes: 0, // filled in by align_inner
+            batches: self.batches.load(Ordering::Relaxed),
+            lanes_max: self.lanes_max.load(Ordering::Relaxed),
+            batched_frac: if lrot_calls == 0 {
+                0.0
+            } else {
+                batched_lanes as f64 / lrot_calls as f64
+            },
             elapsed,
         }
     }
@@ -737,6 +992,59 @@ mod tests {
     }
 
     #[test]
+    fn batched_and_per_block_paths_bit_identical() {
+        // the acceptance property: batching(true) — the default — must
+        // produce exactly the permutation of the per-block work-queue
+        // path, including the in-place re-index orders.
+        for (n, base, max_rank) in [(300usize, 32usize, 4usize), (97, 16, 8), (40, 32, 4)] {
+            let (x, y, _) = shuffled_pair(n, 2, n as u64);
+            let cfg_b = HiRefConfig { base_size: base, max_rank, ..native_cfg() };
+            let cfg_q = HiRefConfig { batching: false, ..cfg_b.clone() };
+            let a = HiRef::new(cfg_b).align(&x, &y).unwrap();
+            let b = HiRef::new(cfg_q).align(&x, &y).unwrap();
+            assert_eq!(a.perm, b.perm, "n={n} base={base} C={max_rank}");
+            assert_eq!(a.x_order, b.x_order, "n={n}");
+            assert_eq!(a.y_order, b.y_order, "n={n}");
+            // same solver work on both paths
+            assert_eq!(a.stats.lrot_calls, b.stats.lrot_calls);
+            assert_eq!(a.stats.base_calls, b.stats.base_calls);
+        }
+    }
+
+    #[test]
+    fn batch_stats_reported() {
+        let (x, y, _) = shuffled_pair(256, 2, 13);
+        let out = HiRef::new(native_cfg()).align(&x, &y).unwrap();
+        // base 32, C 4 over 256 points: deeper levels have many same-shape
+        // sibling blocks, so real multi-lane batches must occur
+        assert!(out.stats.batches > 0, "no batches recorded");
+        assert!(out.stats.lanes_max >= 2, "lanes_max {}", out.stats.lanes_max);
+        assert!(out.stats.batched_frac > 0.0);
+        assert!(out.stats.batched_frac <= 1.0);
+        // the per-block path reports an unbatched run
+        let cfg = HiRefConfig { batching: false, ..native_cfg() };
+        let out = HiRef::new(cfg).align(&x, &y).unwrap();
+        assert_eq!(out.stats.batches, 0);
+        assert_eq!(out.stats.lanes_max, 0);
+        assert_eq!(out.stats.batched_frac, 0.0);
+    }
+
+    #[test]
+    fn single_block_problem_runs_as_one_lane_batch() {
+        // n ≤ base_size: the level scheduler sees one base block and no
+        // LROT batches at all; n slightly above: the root is a 1-lane batch
+        let (x, y, _) = shuffled_pair(30, 2, 14);
+        let out = HiRef::new(native_cfg()).align(&x, &y).unwrap();
+        assert!(out.is_bijection());
+        assert_eq!(out.stats.batches, 0);
+        let (x, y, _) = shuffled_pair(40, 2, 15);
+        let out = HiRef::new(native_cfg()).align(&x, &y).unwrap();
+        assert!(out.is_bijection());
+        assert!(out.stats.batches >= 1);
+        assert_eq!(out.stats.batched_frac, 0.0, "root lane is a singleton batch");
+    }
+
+    #[test]
     fn deterministic_given_seed() {
         let (x, y, _) = shuffled_pair(128, 2, 5);
         let a = HiRef::new(native_cfg()).align(&x, &y).unwrap();
@@ -792,6 +1100,50 @@ mod tests {
         let b = solver.align_source(&gen(1), &gen(2)).unwrap();
         assert!(a.is_bijection());
         assert_eq!(a.perm, b.perm);
+    }
+
+    #[test]
+    fn align_source_surfaces_mid_solve_read_errors() {
+        use crate::data::stream::DatasetSource;
+        // bulk tile sweeps (factorisation) succeed; the scattered base-case
+        // gather fails — the run must end in a typed Backend error, not a
+        // worker panic and not an IncompleteAssignment.
+        struct GatherFails;
+        impl DatasetSource for GatherFails {
+            fn rows(&self) -> usize {
+                64
+            }
+            fn dim(&self) -> usize {
+                2
+            }
+            fn fill_rows(&self, start: usize, out: &mut [f32]) -> std::io::Result<()> {
+                for (o, row) in out.chunks_mut(2).enumerate() {
+                    row[0] = ((start + o) % 13) as f32;
+                    row[1] = ((start + o) % 7) as f32;
+                }
+                Ok(())
+            }
+            fn fetch_row(&self, _i: usize, _out: &mut [f32]) -> std::io::Result<()> {
+                Err(std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "disk vanished"))
+            }
+        }
+        let err = HiRef::new(native_cfg()).align_source(&GatherFails, &GatherFails).unwrap_err();
+        assert!(matches!(err, SolveError::Backend(_)), "{err:?}");
+        // a source failing during factorisation sweeps errors too
+        struct FillFails;
+        impl DatasetSource for FillFails {
+            fn rows(&self) -> usize {
+                64
+            }
+            fn dim(&self) -> usize {
+                2
+            }
+            fn fill_rows(&self, _start: usize, _out: &mut [f32]) -> std::io::Result<()> {
+                Err(std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "gone"))
+            }
+        }
+        let err = HiRef::new(native_cfg()).align_source(&FillFails, &FillFails).unwrap_err();
+        assert!(matches!(err, SolveError::Backend(_)), "{err:?}");
     }
 
     #[test]

@@ -6,9 +6,11 @@
 //! — both sides must produce identical factors because the Rust coordinator
 //! feeds them to AOT executables lowered from the Python model.
 
-use crate::data::stream::{for_each_chunk, DatasetSource};
+use std::io;
+
+use crate::data::stream::{for_each_chunk_parallel, DatasetSource};
 use crate::linalg::{Mat, MatView};
-use crate::pool::ScratchArena;
+use crate::pool::{ScratchArena, SharedSlice};
 
 /// Write the U-side factor row (`[|x|², 1, −2x]`) for point `xi`.
 #[inline]
@@ -52,32 +54,46 @@ pub fn sq_euclidean_factors<'a, 'b>(
 }
 
 /// Chunked twin of [`sq_euclidean_factors`]: build the exact `d+2` factors
-/// from [`DatasetSource`]s in `chunk_rows`-sized tiles.  The factorisation
-/// is row-separable, so peak memory is one `chunk_rows×d` tile (arena
-/// scratch; zero for memory-resident sources) plus the `O(n·(d+2))`
-/// output — the factors are identical to the in-memory path for any chunk
-/// size.
+/// from [`DatasetSource`]s in `chunk_rows`-sized tiles, swept by up to
+/// `threads` workers.  The factorisation is row-separable — every tile
+/// writes a disjoint window of the output rows — so the result is
+/// **bit-identical** to the in-memory path for any chunk size *and any
+/// thread count*; peak memory is one `chunk_rows×d` tile per worker
+/// (arena scratch; zero for memory-resident sources) plus the
+/// `O(n·(d+2))` output.  Mid-sweep read failures surface as the
+/// `io::Error` instead of panicking.
 pub fn sq_euclidean_factors_chunked(
     x: &dyn DatasetSource,
     y: &dyn DatasetSource,
     chunk_rows: usize,
     arena: &ScratchArena,
-) -> (Mat, Mat) {
+    threads: usize,
+) -> io::Result<(Mat, Mat)> {
     let d = x.dim();
     assert_eq!(d, y.dim(), "dimension mismatch");
-    let mut u = Mat::zeros(x.rows(), d + 2);
-    let mut v = Mat::zeros(y.rows(), d + 2);
-    for_each_chunk(x, chunk_rows, arena, |start, tile| {
-        for i in 0..tile.rows {
-            u_row(tile.row(i), u.row_mut(start + i));
-        }
-    });
-    for_each_chunk(y, chunk_rows, arena, |start, tile| {
-        for j in 0..tile.rows {
-            v_row(tile.row(j), v.row_mut(start + j));
-        }
-    });
-    (u, v)
+    let k = d + 2;
+    let mut u = Mat::zeros(x.rows(), k);
+    let mut v = Mat::zeros(y.rows(), k);
+    {
+        let us = SharedSlice::new(&mut u.data);
+        for_each_chunk_parallel(x, chunk_rows, arena, threads, |start, tile| {
+            // SAFETY: tile [start, start+rows) windows are pairwise
+            // disjoint across workers (tiles partition the row space).
+            let out = unsafe { us.slice_mut(start * k, (start + tile.rows) * k) };
+            for (i, orow) in out.chunks_mut(k).enumerate() {
+                u_row(tile.row(i), orow);
+            }
+        })?;
+        let vs = SharedSlice::new(&mut v.data);
+        for_each_chunk_parallel(y, chunk_rows, arena, threads, |start, tile| {
+            // SAFETY: as above.
+            let out = unsafe { vs.slice_mut(start * k, (start + tile.rows) * k) };
+            for (j, orow) in out.chunks_mut(k).enumerate() {
+                v_row(tile.row(j), orow);
+            }
+        })?;
+    }
+    Ok((u, v))
 }
 
 /// Zero-pad factor width from `k` to `k_target` columns (exact: padded
@@ -129,12 +145,16 @@ mod tests {
         rng.fill_normal(&mut x.data);
         rng.fill_normal(&mut y.data);
         let (u, v) = sq_euclidean_factors(&x, &y);
-        let arena = ScratchArena::new(1);
+        let arena = ScratchArena::new(4);
         let (xs, ys) = (InMemorySource::new(&x), InMemorySource::new(&y));
         for chunk in [1usize, 7, 53, 4096] {
-            let (uc, vc) = sq_euclidean_factors_chunked(&xs, &ys, chunk, &arena);
-            assert_eq!(u.data, uc.data, "U diverges at chunk {chunk}");
-            assert_eq!(v.data, vc.data, "V diverges at chunk {chunk}");
+            // parallel tile sweeps are bit-identical for every thread count
+            for threads in [1usize, 4] {
+                let (uc, vc) =
+                    sq_euclidean_factors_chunked(&xs, &ys, chunk, &arena, threads).unwrap();
+                assert_eq!(u.data, uc.data, "U diverges at chunk {chunk} threads {threads}");
+                assert_eq!(v.data, vc.data, "V diverges at chunk {chunk} threads {threads}");
+            }
         }
     }
 

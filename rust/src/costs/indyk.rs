@@ -12,10 +12,12 @@
 //! which is what gives HiRef log-linear scaling for non-factorisable costs
 //! (paper §3.4, Appendix E.1).
 
+use std::io;
+
 use crate::costs::CostKind;
-use crate::data::stream::{for_each_chunk, DatasetSource, InMemorySource};
+use crate::data::stream::{for_each_chunk_parallel, DatasetSource, InMemorySource};
 use crate::linalg::{invert_spd, Mat, MatView};
-use crate::pool::ScratchArena;
+use crate::pool::{self, ScratchArena, SharedSlice};
 use crate::prng::Rng;
 
 /// Factorise the `kind` distance matrix between rows of `x` and `y` as
@@ -33,7 +35,7 @@ pub fn factorize<'a, 'b>(
     seed: u64,
 ) -> (Mat, Mat) {
     let (x, y) = (x.into(), y.into());
-    let arena = ScratchArena::new(1);
+    let arena = ScratchArena::new(pool::default_threads());
     let chunk = x.rows.max(y.rows).max(1);
     factorize_chunked(
         &InMemorySource::from_view(x),
@@ -43,17 +45,105 @@ pub fn factorize<'a, 'b>(
         seed,
         chunk,
         &arena,
+        pool::default_threads(),
     )
+    .expect("in-memory sources are infallible")
+}
+
+/// Fixed row-segment length for scalar accumulations: per-segment partial
+/// sums are taken linearly in row order and combined by [`tree_reduce`].
+/// The segmentation depends on neither `chunk_rows` nor `threads`, which
+/// is what keeps the sums — and therefore the sampled factorisation —
+/// bit-identical across chunk sizes and thread counts.
+const SEG_ROWS: usize = 4096;
+
+/// Fixed-topology pairwise tree reduction: fold adjacent pairs until one
+/// value remains.  The combine order is a function of the value count
+/// alone, so the result is deterministic however the partials were
+/// produced.
+fn tree_reduce(mut vals: Vec<f64>) -> f64 {
+    if vals.is_empty() {
+        return 0.0;
+    }
+    while vals.len() > 1 {
+        vals = vals
+            .chunks(2)
+            .map(|p| if p.len() == 2 { p[0] + p[1] } else { p[0] })
+            .collect();
+    }
+    vals[0]
+}
+
+/// `Σ_i d(anchor, src_i)²` over all rows of `src`: per-[`SEG_ROWS`]
+/// segment partials computed in parallel, combined by the deterministic
+/// [`tree_reduce`].  Partial-sum *boundaries* are the fixed segments, but
+/// non-resident reads inside a segment honour the caller's `chunk_rows`
+/// memory bound (sub-reads accumulate in row order, so their size cannot
+/// change the per-segment value).
+fn segmented_sq_sum(
+    src: &dyn DatasetSource,
+    anchor: &[f32],
+    kind: CostKind,
+    chunk_rows: usize,
+    arena: &ScratchArena,
+    threads: usize,
+) -> io::Result<f64> {
+    let n = src.rows();
+    let d = src.dim();
+    if n == 0 {
+        return Ok(0.0);
+    }
+    let n_segs = n.div_ceil(SEG_ROWS);
+    let partials = pool::parallel_map(n_segs, threads, |s| -> io::Result<f64> {
+        let start = s * SEG_ROWS;
+        let end = (start + SEG_ROWS).min(n);
+        let mut acc = 0.0f64;
+        match src.view_rows(start, end) {
+            Some(vw) => {
+                for i in 0..vw.rows {
+                    let dd = kind.pair(anchor, vw.row(i));
+                    acc += dd * dd;
+                }
+            }
+            None => {
+                // tile reads stay within the chunk_rows budget even though
+                // the partial-sum segment is larger
+                let sub = chunk_rows.max(1).min(end - start);
+                let mut tile = arena.take_f32(sub * d);
+                let mut lo = start;
+                while lo < end {
+                    let hi = (lo + sub).min(end);
+                    let len = (hi - lo) * d;
+                    src.fill_rows(lo, &mut tile[..len])?;
+                    for row in tile[..len].chunks(d) {
+                        let dd = kind.pair(anchor, row);
+                        acc += dd * dd;
+                    }
+                    lo = hi;
+                }
+            }
+        }
+        Ok(acc)
+    });
+    let mut vals = Vec::with_capacity(partials.len());
+    for p in partials {
+        vals.push(p?);
+    }
+    Ok(tree_reduce(vals))
 }
 
 /// [`factorize`] over chunked [`DatasetSource`]s: every full-dataset sweep
 /// (anchor means, sampling probabilities, the `U = C[:, S]` landmark
 /// distances, the regression right-hand sides for `V`) is streamed in
-/// `chunk_rows`-sized tiles drawn from `arena`.  Peak memory is one tile
-/// (`chunk_rows·d`) plus the `O((n+m)·t)` factor output plus the `O(s·d)`
-/// sampled-row block (`s = 4t`) — never both full point clouds.  Sweeps
-/// accumulate in dataset order, so the result is **identical to the
-/// in-memory path for any chunk size**.
+/// `chunk_rows`-sized tiles drawn from `arena` and fanned out over up to
+/// `threads` workers — per-row outputs write disjoint windows, and the
+/// one order-sensitive scalar sweep (the anchor mean) reduces through the
+/// fixed-topology [`tree_reduce`] over [`SEG_ROWS`]-row segments.  Peak
+/// memory is one tile (`chunk_rows·d`) per worker plus the `O((n+m)·t)`
+/// factor output plus the `O(s·d)` sampled-row block (`s = 4t`) — never
+/// both full point clouds.  The result is **bit-identical for any chunk
+/// size and any thread count**; mid-sweep read failures surface as the
+/// `io::Error`.
 #[allow(clippy::too_many_arguments)]
 pub fn factorize_chunked(
     x: &dyn DatasetSource,
@@ -63,7 +153,8 @@ pub fn factorize_chunked(
     seed: u64,
     chunk_rows: usize,
     arena: &ScratchArena,
-) -> (Mat, Mat) {
+    threads: usize,
+) -> io::Result<(Mat, Mat)> {
     let n = x.rows();
     let m = y.rows();
     let d = x.dim();
@@ -76,57 +167,67 @@ pub fn factorize_chunked(
     let j_star = rng.next_below(m);
     let mut xi_star = vec![0.0f32; d];
     let mut yj_star = vec![0.0f32; d];
-    x.fetch_row(i_star, &mut xi_star);
-    y.fetch_row(j_star, &mut yj_star);
-    let mut sum_to_y = 0.0f64;
-    for_each_chunk(y, chunk_rows, arena, |_, tile| {
-        for j in 0..tile.rows {
-            let dd = kind.pair(&xi_star, tile.row(j));
-            sum_to_y += dd * dd;
-        }
-    });
+    x.fetch_row(i_star, &mut xi_star)?;
+    y.fetch_row(j_star, &mut yj_star)?;
+    let sum_to_y = segmented_sq_sum(y, &xi_star, kind, chunk_rows, arena, threads)?;
     let mean_to_y = sum_to_y / m as f64;
     let d_anchor = {
         let dd = kind.pair(&xi_star, &yj_star);
         dd * dd
     };
-    let mut probs = Vec::with_capacity(n);
-    for_each_chunk(x, chunk_rows, arena, |_, tile| {
-        for i in 0..tile.rows {
-            let dd = kind.pair(tile.row(i), &yj_star);
-            probs.push(dd * dd + d_anchor + mean_to_y);
-        }
-    });
+    // per-row probabilities: independent per row, so tiles write disjoint
+    // windows and the parallel sweep is trivially deterministic
+    let mut probs = vec![0.0f64; n];
+    {
+        let ps = SharedSlice::new(&mut probs);
+        for_each_chunk_parallel(x, chunk_rows, arena, threads, |start, tile| {
+            // SAFETY: tiles partition the row space — windows are disjoint.
+            let out = unsafe { ps.slice_mut(start, start + tile.rows) };
+            for (i, o) in out.iter_mut().enumerate() {
+                let dd = kind.pair(tile.row(i), &yj_star);
+                *o = dd * dd + d_anchor + mean_to_y;
+            }
+        })?;
+    }
 
     // --- draw t landmark columns (rows of Y) by the induced column
     // distribution (sample rows of X first, then their nearest structure is
     // captured by sampling Y uniformly among the paired draws; IVWW sample
     // columns with the symmetric distribution — we mirror it).
-    let mut col_probs = Vec::with_capacity(m);
-    for_each_chunk(y, chunk_rows, arena, |_, tile| {
-        for j in 0..tile.rows {
-            let dd = kind.pair(&xi_star, tile.row(j));
-            col_probs.push(dd * dd + d_anchor + mean_to_y);
-        }
-    });
+    let mut col_probs = vec![0.0f64; m];
+    {
+        let ps = SharedSlice::new(&mut col_probs);
+        for_each_chunk_parallel(y, chunk_rows, arena, threads, |start, tile| {
+            // SAFETY: as above.
+            let out = unsafe { ps.slice_mut(start, start + tile.rows) };
+            for (j, o) in out.iter_mut().enumerate() {
+                let dd = kind.pair(&xi_star, tile.row(j));
+                *o = dd * dd + d_anchor + mean_to_y;
+            }
+        })?;
+    }
     let cols = sample_weighted_distinct(&mut rng, &col_probs, t);
 
     // --- U = C[:, S]  (n×t): landmarks gathered once (t·d floats), then
-    // one streamed sweep over X.
+    // one parallel streamed sweep over X writing disjoint row windows.
     let mut landmarks = Mat::zeros(t, d);
     for (c, &j) in cols.iter().enumerate() {
-        y.fetch_row(j as usize, landmarks.row_mut(c));
+        y.fetch_row(j as usize, landmarks.row_mut(c))?;
     }
     let mut u = Mat::zeros(n, t);
-    for_each_chunk(x, chunk_rows, arena, |start, tile| {
-        for i in 0..tile.rows {
-            let xi = tile.row(i);
-            let urow = u.row_mut(start + i);
-            for (uv, c) in urow.iter_mut().zip(0..t) {
-                *uv = kind.pair(xi, landmarks.row(c)) as f32;
+    {
+        let us = SharedSlice::new(&mut u.data);
+        for_each_chunk_parallel(x, chunk_rows, arena, threads, |start, tile| {
+            // SAFETY: disjoint row windows, as above.
+            let out = unsafe { us.slice_mut(start * t, (start + tile.rows) * t) };
+            for (i, urow) in out.chunks_mut(t).enumerate() {
+                let xi = tile.row(i);
+                for (uv, c) in urow.iter_mut().zip(0..t) {
+                    *uv = kind.pair(xi, landmarks.row(c)) as f32;
+                }
             }
-        }
-    });
+        })?;
+    }
 
     // --- row sample for the regression fit ------------------------------
     let s = (4 * t).min(n);
@@ -138,7 +239,7 @@ pub fn factorize_chunked(
     let mut xsamp = Mat::zeros(s, d);
     for (r, &i) in rows.iter().enumerate() {
         a.row_mut(r).copy_from_slice(u.row(i as usize));
-        x.fetch_row(i as usize, xsamp.row_mut(r));
+        x.fetch_row(i as usize, xsamp.row_mut(r))?;
     }
     // Solve (AᵀA + λI) W = Aᵀ B  for W (t×m);  V = Wᵀ (m×t).
     let ata = a.t_matmul(&a);
@@ -149,34 +250,38 @@ pub fn factorize_chunked(
     }
     let g_inv = invert_spd(&g);
 
-    // Build V row-by-row over a streamed Y sweep (linear in m): for each
-    // column j of C we need c_j = C[rows, j] (s values), then
-    // V_j = G⁻¹ Aᵀ c_j.
+    // Build V row-by-row over a parallel streamed Y sweep (linear in m):
+    // for each column j of C we need c_j = C[rows, j] (s values), then
+    // V_j = G⁻¹ Aᵀ c_j.  Rows are independent — disjoint windows again.
     let mut v = Mat::zeros(m, t);
-    let mut atc = vec![0.0f32; t];
-    for_each_chunk(y, chunk_rows, arena, |start, tile| {
-        for jo in 0..tile.rows {
-            let yj = tile.row(jo);
-            atc.iter_mut().for_each(|v| *v = 0.0);
-            for r in 0..rows.len() {
-                let cij = kind.pair(xsamp.row(r), yj) as f32;
-                let arow = a.row(r);
-                for (acc, &av) in atc.iter_mut().zip(arow) {
-                    *acc += av * cij;
+    {
+        let vs = SharedSlice::new(&mut v.data);
+        for_each_chunk_parallel(y, chunk_rows, arena, threads, |start, tile| {
+            // SAFETY: disjoint row windows, as above.
+            let out = unsafe { vs.slice_mut(start * t, (start + tile.rows) * t) };
+            let mut atc = vec![0.0f32; t];
+            for (jo, vrow) in out.chunks_mut(t).enumerate() {
+                let yj = tile.row(jo);
+                atc.iter_mut().for_each(|v| *v = 0.0);
+                for r in 0..rows.len() {
+                    let cij = kind.pair(xsamp.row(r), yj) as f32;
+                    let arow = a.row(r);
+                    for (acc, &av) in atc.iter_mut().zip(arow) {
+                        *acc += av * cij;
+                    }
+                }
+                for (c, slot) in vrow.iter_mut().enumerate() {
+                    let mut acc = 0.0f32;
+                    let grow = g_inv.row(c);
+                    for (gv, av) in grow.iter().zip(&atc) {
+                        acc += gv * av;
+                    }
+                    *slot = acc;
                 }
             }
-            let vrow = v.row_mut(start + jo);
-            for c in 0..t {
-                let mut acc = 0.0f32;
-                let grow = g_inv.row(c);
-                for (gv, av) in grow.iter().zip(&atc) {
-                    acc += gv * av;
-                }
-                vrow[c] = acc;
-            }
-        }
-    });
-    (u, v)
+        })?;
+    }
+    Ok((u, v))
 }
 
 /// Weighted sampling of `k` distinct indices (probabilities ∝ weights).
@@ -276,14 +381,67 @@ mod tests {
         let x = rand_mat(&mut rng, 61, 3);
         let y = rand_mat(&mut rng, 47, 3);
         let (u, v) = factorize(&x, &y, CostKind::Euclidean, 8, 5);
-        let arena = ScratchArena::new(1);
+        let arena = ScratchArena::new(4);
         let (xs, ys) = (InMemorySource::new(&x), InMemorySource::new(&y));
         for chunk in [1usize, 5, 17, 61, 512] {
             let (uc, vc) =
-                factorize_chunked(&xs, &ys, CostKind::Euclidean, 8, 5, chunk, &arena);
+                factorize_chunked(&xs, &ys, CostKind::Euclidean, 8, 5, chunk, &arena, 2).unwrap();
             assert_eq!(u.data, uc.data, "U diverges at chunk {chunk}");
             assert_eq!(v.data, vc.data, "V diverges at chunk {chunk}");
         }
+    }
+
+    #[test]
+    fn parallel_sweeps_bit_identical_to_serial_for_any_thread_count() {
+        // the satellite contract: the deterministic tree reduction makes
+        // the whole sampled factorisation (anchor mean → probabilities →
+        // sampled landmarks → regression) invariant to the worker count
+        let mut rng = Rng::new(14);
+        // > SEG_ROWS rows would be ideal but slow; several segments still
+        // form when chunk < n, and the tree shape is n-dependent only
+        let x = rand_mat(&mut rng, 173, 3);
+        let y = rand_mat(&mut rng, 131, 3);
+        let arena = ScratchArena::new(8);
+        let (xs, ys) = (InMemorySource::new(&x), InMemorySource::new(&y));
+        let (u1, v1) =
+            factorize_chunked(&xs, &ys, CostKind::Euclidean, 8, 5, 19, &arena, 1).unwrap();
+        for threads in [2usize, 4, 8] {
+            let (ut, vt) =
+                factorize_chunked(&xs, &ys, CostKind::Euclidean, 8, 5, 19, &arena, threads)
+                    .unwrap();
+            assert_eq!(u1.data, ut.data, "U diverges at threads {threads}");
+            assert_eq!(v1.data, vt.data, "V diverges at threads {threads}");
+        }
+        // the segmented anchor sum itself: serial == parallel, any segs
+        let anchor = x.row(0);
+        let s1 = segmented_sq_sum(&ys, anchor, CostKind::Euclidean, 19, &arena, 1).unwrap();
+        let s8 = segmented_sq_sum(&ys, anchor, CostKind::Euclidean, 19, &arena, 8).unwrap();
+        assert_eq!(s1.to_bits(), s8.to_bits());
+        // with > SEG_ROWS rows several segments exist, so the pairwise
+        // tree really fires — and a generated (fill_rows) source takes
+        // the per-worker tile path, whose sub-reads honour chunk_rows
+        // without changing the per-segment sums
+        let big = crate::data::stream::GeneratorSource::new(2 * SEG_ROWS + 123, 2, |i, out| {
+            out[0] = (i % 97) as f32 * 0.013;
+            out[1] = (i % 89) as f32 * -0.007;
+        });
+        let anchor2 = [0.5f32, -0.25];
+        let b1 = segmented_sq_sum(&big, &anchor2, CostKind::Euclidean, 64, &arena, 1).unwrap();
+        let b7 = segmented_sq_sum(&big, &anchor2, CostKind::Euclidean, 977, &arena, 7).unwrap();
+        let b_all = segmented_sq_sum(&big, &anchor2, CostKind::Euclidean, usize::MAX, &arena, 4)
+            .unwrap();
+        assert_eq!(b1.to_bits(), b7.to_bits());
+        assert_eq!(b1.to_bits(), b_all.to_bits());
+    }
+
+    #[test]
+    fn tree_reduce_is_fixed_topology() {
+        assert_eq!(tree_reduce(vec![]), 0.0);
+        assert_eq!(tree_reduce(vec![3.5]), 3.5);
+        // ((a+b)+(c+d)) + e — not left-to-right
+        let vals = vec![1e16, 1.0, -1e16, 1.0, 2.0];
+        let want = ((1e16 + 1.0) + (-1e16 + 1.0)) + 2.0;
+        assert_eq!(tree_reduce(vals).to_bits(), want.to_bits());
     }
 
     #[test]
@@ -298,9 +456,10 @@ mod tests {
         crate::data::stream::write_bin(&py, &y).unwrap();
         let fx = crate::data::stream::BinFileSource::open(&px, 2).unwrap();
         let fy = crate::data::stream::BinFileSource::open(&py, 2).unwrap();
-        let arena = ScratchArena::new(1);
+        let arena = ScratchArena::new(2);
         let (u, v) = factorize(&x, &y, CostKind::Euclidean, 6, 3);
-        let (uf, vf) = factorize_chunked(&fx, &fy, CostKind::Euclidean, 6, 3, 9, &arena);
+        let (uf, vf) =
+            factorize_chunked(&fx, &fy, CostKind::Euclidean, 6, 3, 9, &arena, 2).unwrap();
         assert_eq!(u.data, uf.data);
         assert_eq!(v.data, vf.data);
         let _ = std::fs::remove_file(&px);

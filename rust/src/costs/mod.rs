@@ -115,9 +115,15 @@ pub fn factors_for<'a, 'b>(
 }
 
 /// Chunked twin of [`factors_for`]: build the cost factors from streamed
-/// [`DatasetSource`]s, never holding more than one `chunk_rows`-sized tile
-/// (arena scratch) plus the `O(n·r)` factor output.  Identical factors to
-/// [`factors_for`] for any chunk size.
+/// [`DatasetSource`]s, with the tile sweeps fanned out over up to
+/// `threads` workers — never holding more than one `chunk_rows`-sized
+/// tile per worker (arena scratch) plus the `O(n·r)` factor output.
+/// Scalar accumulations reduce through a fixed-topology deterministic
+/// tree (see [`indyk::factorize_chunked`]), so the factors are
+/// **identical for any chunk size and any thread count**.  Mid-sweep
+/// dataset read failures surface as the `io::Error` (solve paths convert
+/// it to [`crate::api::SolveError::Backend`]).
+#[allow(clippy::too_many_arguments)]
 pub fn factors_for_source(
     x: &dyn DatasetSource,
     y: &dyn DatasetSource,
@@ -126,11 +132,14 @@ pub fn factors_for_source(
     seed: u64,
     chunk_rows: usize,
     arena: &ScratchArena,
-) -> (Mat, Mat) {
+    threads: usize,
+) -> std::io::Result<(Mat, Mat)> {
     match kind {
-        CostKind::SqEuclidean => factor::sq_euclidean_factors_chunked(x, y, chunk_rows, arena),
+        CostKind::SqEuclidean => {
+            factor::sq_euclidean_factors_chunked(x, y, chunk_rows, arena, threads)
+        }
         CostKind::Euclidean => {
-            indyk::factorize_chunked(x, y, kind, target_k, seed, chunk_rows, arena)
+            indyk::factorize_chunked(x, y, kind, target_k, seed, chunk_rows, arena, threads)
         }
     }
 }
@@ -219,15 +228,39 @@ mod tests {
         let mut rng = Rng::new(11);
         let x = rand_mat(&mut rng, 33, 3);
         let y = rand_mat(&mut rng, 33, 3);
-        let arena = ScratchArena::new(1);
+        let arena = ScratchArena::new(4);
         let (xs, ys) = (InMemorySource::new(&x), InMemorySource::new(&y));
         for kind in [CostKind::SqEuclidean, CostKind::Euclidean] {
             let (u, v) = factors_for(&x, &y, kind, 8, 4);
             for chunk in [3usize, 33] {
-                let (uc, vc) = factors_for_source(&xs, &ys, kind, 8, 4, chunk, &arena);
-                assert_eq!(u.data, uc.data, "{kind:?} chunk {chunk}");
-                assert_eq!(v.data, vc.data, "{kind:?} chunk {chunk}");
+                for threads in [1usize, 4] {
+                    let (uc, vc) =
+                        factors_for_source(&xs, &ys, kind, 8, 4, chunk, &arena, threads).unwrap();
+                    assert_eq!(u.data, uc.data, "{kind:?} chunk {chunk} threads {threads}");
+                    assert_eq!(v.data, vc.data, "{kind:?} chunk {chunk} threads {threads}");
+                }
             }
+        }
+    }
+
+    #[test]
+    fn factors_for_source_propagates_read_errors() {
+        struct Failing;
+        impl crate::data::stream::DatasetSource for Failing {
+            fn rows(&self) -> usize {
+                16
+            }
+            fn dim(&self) -> usize {
+                2
+            }
+            fn fill_rows(&self, _start: usize, _out: &mut [f32]) -> std::io::Result<()> {
+                Err(std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "gone"))
+            }
+        }
+        let arena = ScratchArena::new(1);
+        for kind in [CostKind::SqEuclidean, CostKind::Euclidean] {
+            let got = factors_for_source(&Failing, &Failing, kind, 4, 0, 8, &arena, 2);
+            assert!(got.is_err(), "{kind:?} must surface the read failure");
         }
     }
 

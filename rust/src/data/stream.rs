@@ -28,6 +28,14 @@
 //! (the factor builders in [`crate::costs`], the base case of
 //! [`crate::coordinator::hiref`]) hold **one tile plus their `O(n·r)`
 //! output** — peak ingestion memory is `O(chunk_rows·d)` by construction.
+//! [`for_each_chunk_parallel`] is its multi-worker twin (one live tile
+//! *per worker*) for sweeps whose per-tile work is independent.
+//!
+//! All row access is **fallible**: [`DatasetSource::fill_rows`] /
+//! [`DatasetSource::fetch_row`] return `io::Result`, and the chunk
+//! drivers propagate the first failure instead of panicking mid-solve —
+//! the coordinator surfaces it as a typed
+//! [`crate::api::SolveError::Backend`].
 
 use std::fs::File;
 use std::io::{self, Write};
@@ -38,12 +46,13 @@ use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
 use crate::linalg::{Mat, MatView};
-use crate::pool::ScratchArena;
+use crate::pool::{self, ScratchArena};
 
 /// A chunked, deterministic source of `rows() × dim()` row-major points.
 ///
 /// `Sync` is a supertrait because sources are shared across the HiRef
-/// worker pool (base-case blocks gather their rows concurrently).
+/// worker pool (base-case blocks gather their rows concurrently, and the
+/// parallel factor builders sweep tiles from several workers).
 pub trait DatasetSource: Sync {
     /// Number of points.
     fn rows(&self) -> usize;
@@ -55,12 +64,12 @@ pub trait DatasetSource: Sync {
     /// (row-major; `out.len()` must be a multiple of `dim()` and the range
     /// must be in bounds).  Must be deterministic in `start`.
     ///
-    /// The contract is infallible: sources whose backing storage can fail
-    /// mid-read (e.g. [`BinFileSource`]) **panic** on I/O errors — open
-    /// your source up front so configuration errors surface as
-    /// `io::Result` before a solve starts.  Threading a typed error
-    /// channel through the chunked sweeps is an open ROADMAP item.
-    fn fill_rows(&self, start: usize, out: &mut [f32]);
+    /// Sources whose backing storage can fail mid-read (e.g.
+    /// [`BinFileSource`] on a truncated or vanished file) return the
+    /// `io::Error` instead of panicking; solve paths thread it through as
+    /// [`crate::api::SolveError::Backend`].  In-memory and generated
+    /// sources are infallible and always return `Ok(())`.
+    fn fill_rows(&self, start: usize, out: &mut [f32]) -> io::Result<()>;
 
     /// Zero-copy borrowed window for memory-resident sources; `None` means
     /// the caller must go through [`DatasetSource::fill_rows`] scratch.
@@ -70,25 +79,26 @@ pub trait DatasetSource: Sync {
 
     /// Fetch a single row (used for scattered access: factorisation
     /// anchors, base-case gathers, streamed cost evaluation).
-    fn fetch_row(&self, i: usize, out: &mut [f32]) {
-        self.fill_rows(i, out);
+    fn fetch_row(&self, i: usize, out: &mut [f32]) -> io::Result<()> {
+        self.fill_rows(i, out)
     }
 }
 
 /// Drive `src` in `chunk_rows`-sized tiles, calling `f(start, tile)` for
 /// each.  Tiles for non-resident sources are checked out of `arena` (one
 /// tile live at a time — the bounded-memory contract); memory-resident
-/// sources stream borrowed views with no copy at all.
+/// sources stream borrowed views with no copy at all.  Stops at the first
+/// read failure and returns it.
 pub fn for_each_chunk(
     src: &dyn DatasetSource,
     chunk_rows: usize,
     arena: &ScratchArena,
     mut f: impl FnMut(usize, MatView<'_>),
-) {
+) -> io::Result<()> {
     let n = src.rows();
     let d = src.dim();
     if n == 0 {
-        return;
+        return Ok(());
     }
     let chunk = chunk_rows.max(1).min(n);
     // lazy checkout: a source that serves borrowed views (in-memory data)
@@ -102,23 +112,66 @@ pub fn for_each_chunk(
             None => {
                 let t = tile.get_or_insert_with(|| arena.take_f32(chunk * d));
                 let len = (end - start) * d;
-                src.fill_rows(start, &mut t[..len]);
+                src.fill_rows(start, &mut t[..len])?;
                 f(start, MatView::from_slice(end - start, d, &t[..len]));
             }
         }
         start = end;
     }
+    Ok(())
+}
+
+/// Multi-worker twin of [`for_each_chunk`]: tiles are claimed by up to
+/// `threads` workers (each with its own arena tile, so peak ingestion
+/// memory is `O(threads · chunk_rows · d)`), and `f` runs once per tile,
+/// concurrently.  `f` must therefore only touch disjoint per-tile state —
+/// e.g. disjoint output row windows through a
+/// [`crate::pool::SharedSlice`].  Tile boundaries depend only on
+/// `chunk_rows`, never on `threads`, so any writes keyed by row index are
+/// bit-identical for every thread count.  Returns the first read failure,
+/// after all workers have stopped.
+pub fn for_each_chunk_parallel(
+    src: &dyn DatasetSource,
+    chunk_rows: usize,
+    arena: &ScratchArena,
+    threads: usize,
+    f: impl Fn(usize, MatView<'_>) + Sync,
+) -> io::Result<()> {
+    let n = src.rows();
+    let d = src.dim();
+    if n == 0 {
+        return Ok(());
+    }
+    let chunk = chunk_rows.max(1).min(n);
+    let n_tiles = n.div_ceil(chunk);
+    let results = pool::parallel_map(n_tiles, threads, |t| -> io::Result<()> {
+        let start = t * chunk;
+        let end = (start + chunk).min(n);
+        match src.view_rows(start, end) {
+            Some(v) => f(start, v),
+            None => {
+                let len = (end - start) * d;
+                let mut tile = arena.take_f32(len);
+                src.fill_rows(start, &mut tile[..len])?;
+                f(start, MatView::from_slice(end - start, d, &tile[..len]));
+            }
+        }
+        Ok(())
+    });
+    results.into_iter().collect()
 }
 
 /// Gather scattered rows `ids` of `src` into a row-major `out` buffer
 /// (`out.len() == ids.len() * dim`).  The base-case path of the streaming
-/// solve: a block's points are fetched once into arena scratch.
-pub fn gather_rows_into(src: &dyn DatasetSource, ids: &[u32], out: &mut [f32]) {
+/// solve: a block's points are fetched once into arena scratch.  Stops at
+/// the first read failure and returns it.
+pub fn gather_rows_into(src: &dyn DatasetSource, ids: &[u32], out: &mut [f32]) -> io::Result<()> {
     let d = src.dim();
     assert_eq!(out.len(), ids.len() * d, "gather buffer shape mismatch");
     for (row, &i) in out.chunks_mut(d).zip(ids) {
-        src.fetch_row(i as usize, row);
+        src.fetch_row(i as usize, row)?;
     }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -151,10 +204,11 @@ impl DatasetSource for InMemorySource<'_> {
         self.view.cols
     }
 
-    fn fill_rows(&self, start: usize, out: &mut [f32]) {
+    fn fill_rows(&self, start: usize, out: &mut [f32]) -> io::Result<()> {
         let d = self.view.cols;
         let k = out.len() / d;
         out.copy_from_slice(&self.view.data[start * d..(start + k) * d]);
+        Ok(())
     }
 
     fn view_rows(&self, start: usize, end: usize) -> Option<MatView<'_>> {
@@ -195,10 +249,11 @@ impl DatasetSource for GeneratorSource {
         self.dim
     }
 
-    fn fill_rows(&self, start: usize, out: &mut [f32]) {
+    fn fill_rows(&self, start: usize, out: &mut [f32]) -> io::Result<()> {
         for (o, row) in out.chunks_mut(self.dim).enumerate() {
             (self.f)(start + o, row);
         }
+        Ok(())
     }
 }
 
@@ -255,16 +310,16 @@ impl BinFileSource {
     /// Read `bytes.len()` bytes at absolute `offset` (lock-free `pread`
     /// on unix, mutexed seek + read elsewhere).
     #[cfg(unix)]
-    fn read_at(&self, offset: u64, bytes: &mut [u8]) {
+    fn read_at(&self, offset: u64, bytes: &mut [u8]) -> io::Result<()> {
         use std::os::unix::fs::FileExt;
-        self.file.read_exact_at(bytes, offset).expect("read from dataset file");
+        self.file.read_exact_at(bytes, offset)
     }
 
     #[cfg(not(unix))]
-    fn read_at(&self, offset: u64, bytes: &mut [u8]) {
+    fn read_at(&self, offset: u64, bytes: &mut [u8]) -> io::Result<()> {
         let mut f = self.file.lock().unwrap();
-        f.seek(SeekFrom::Start(offset)).expect("seek in dataset file");
-        f.read_exact(bytes).expect("read from dataset file");
+        f.seek(SeekFrom::Start(offset))?;
+        f.read_exact(bytes)
     }
 }
 
@@ -277,7 +332,7 @@ impl DatasetSource for BinFileSource {
         self.dim
     }
 
-    fn fill_rows(&self, start: usize, out: &mut [f32]) {
+    fn fill_rows(&self, start: usize, out: &mut [f32]) -> io::Result<()> {
         // Byte staging goes through a per-thread reusable buffer: after
         // warm-up, neither single-row fetches (base-case gathers,
         // streamed cost evaluation — called per row) nor tile-sized
@@ -291,11 +346,12 @@ impl DatasetSource for BinFileSource {
             let mut bytes = cell.borrow_mut();
             bytes.clear();
             bytes.resize(out.len() * 4, 0);
-            self.read_at((start * self.dim * 4) as u64, &mut bytes);
+            self.read_at((start * self.dim * 4) as u64, &mut bytes)?;
             for (v, b) in out.iter_mut().zip(bytes.chunks_exact(4)) {
                 *v = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
             }
-        });
+            Ok(())
+        })
     }
 }
 
@@ -330,8 +386,35 @@ mod tests {
         for_each_chunk(src, chunk_rows, &arena, |start, tile| {
             let d = tile.cols;
             out[start * d..start * d + tile.data.len()].copy_from_slice(tile.data);
-        });
+        })
+        .unwrap();
         out
+    }
+
+    /// A source that errors once reads reach row `fail_at` — the
+    /// mid-solve I/O failure the fallible contract exists for.
+    struct FailingSource {
+        rows: usize,
+        dim: usize,
+        fail_at: usize,
+    }
+
+    impl DatasetSource for FailingSource {
+        fn rows(&self) -> usize {
+            self.rows
+        }
+
+        fn dim(&self) -> usize {
+            self.dim
+        }
+
+        fn fill_rows(&self, start: usize, out: &mut [f32]) -> io::Result<()> {
+            if start + out.len() / self.dim > self.fail_at {
+                return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "device vanished"));
+            }
+            out.fill(start as f32);
+            Ok(())
+        }
     }
 
     #[test]
@@ -347,7 +430,7 @@ mod tests {
         assert_eq!(v.data, &m.data[15..27]);
         // scattered fetch
         let mut row = [0.0f32; 3];
-        src.fetch_row(11, &mut row);
+        src.fetch_row(11, &mut row).unwrap();
         assert_eq!(&row, m.row(11));
     }
 
@@ -365,7 +448,7 @@ mod tests {
         assert_eq!(a, c);
         // per-row random access agrees with bulk fill
         let mut row = [0.0f32; 4];
-        src.fetch_row(23, &mut row);
+        src.fetch_row(23, &mut row).unwrap();
         assert_eq!(&row, &a[23 * 4..24 * 4]);
     }
 
@@ -381,9 +464,17 @@ mod tests {
             assert_eq!(drain(&src, chunk), m.data, "chunk {chunk}");
         }
         let mut row = [0.0f32; 5];
-        src.fetch_row(17, &mut row);
+        src.fetch_row(17, &mut row).unwrap();
         assert_eq!(&row, m.row(17));
-        // truncated file (not a whole number of rows) is rejected
+        // a file truncated AFTER open surfaces a typed read error, not a
+        // panic (the fallible mid-solve contract); the surviving prefix
+        // still reads fine
+        std::fs::write(&path, &m.data[..5].iter().flat_map(|v| v.to_le_bytes()).collect::<Vec<_>>())
+            .unwrap(); // one row survives
+        let mut tile = vec![0.0f32; 2 * 5];
+        assert!(src.fill_rows(3, &mut tile).is_err());
+        assert!(src.fill_rows(0, &mut row).is_ok());
+        // truncated file (not a whole number of rows) is rejected at open
         std::fs::write(&path, [0u8; 7]).unwrap();
         assert!(BinFileSource::open(&path, 5).is_err());
         let _ = std::fs::remove_file(&path);
@@ -395,7 +486,7 @@ mod tests {
         let src = InMemorySource::new(&m);
         let ids = [19u32, 0, 7, 7, 3];
         let mut got = vec![0.0f32; ids.len() * 2];
-        gather_rows_into(&src, &ids, &mut got);
+        gather_rows_into(&src, &ids, &mut got).unwrap();
         assert_eq!(got, m.gather_rows(&ids).data);
     }
 
@@ -405,7 +496,55 @@ mod tests {
         let src = InMemorySource::new(&m);
         let arena = ScratchArena::new(1);
         let mut calls = 0;
-        for_each_chunk(&src, 8, &arena, |_, _| calls += 1);
+        for_each_chunk(&src, 8, &arena, |_, _| calls += 1).unwrap();
         assert_eq!(calls, 0);
+    }
+
+    #[test]
+    fn chunk_drivers_propagate_read_errors() {
+        let src = FailingSource { rows: 40, dim: 2, fail_at: 20 };
+        let arena = ScratchArena::new(2);
+        // serial driver: tiles before the failure are delivered, then the
+        // error surfaces instead of a panic
+        let mut seen = 0usize;
+        let err = for_each_chunk(&src, 8, &arena, |_, tile| seen += tile.rows).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        assert_eq!(seen, 16, "tiles before the failure still stream");
+        // parallel driver: every worker stops, first error returned
+        let err =
+            for_each_chunk_parallel(&src, 8, &arena, 4, |_, _| {}).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        // gather: scattered fetch past the failure point errors too
+        let mut out = vec![0.0f32; 4];
+        assert!(gather_rows_into(&src, &[1, 39], &mut out).is_err());
+        assert!(gather_rows_into(&src, &[1, 2], &mut out).is_ok());
+    }
+
+    #[test]
+    fn parallel_chunk_driver_matches_serial_for_any_thread_count() {
+        use std::sync::Mutex;
+        let m = rand_mat(11, 53, 3);
+        let src = InMemorySource::new(&m);
+        let arena = ScratchArena::new(4);
+        for threads in [1usize, 2, 8] {
+            let out = Mutex::new(vec![0.0f32; 53 * 3]);
+            for_each_chunk_parallel(&src, 7, &arena, threads, |start, tile| {
+                let d = tile.cols;
+                out.lock().unwrap()[start * d..start * d + tile.data.len()]
+                    .copy_from_slice(tile.data);
+            })
+            .unwrap();
+            assert_eq!(out.into_inner().unwrap(), m.data, "threads {threads}");
+        }
+        // a generator (fill_rows) source takes the per-worker tile path
+        let gen = GeneratorSource::new(29, 2, |i, out| out.fill(i as f32));
+        let want = drain(&gen, 5);
+        let got = Mutex::new(vec![0.0f32; 29 * 2]);
+        for_each_chunk_parallel(&gen, 5, &arena, 3, |start, tile| {
+            got.lock().unwrap()[start * 2..start * 2 + tile.data.len()]
+                .copy_from_slice(tile.data);
+        })
+        .unwrap();
+        assert_eq!(got.into_inner().unwrap(), want);
     }
 }

@@ -250,8 +250,8 @@ mod tests {
         assert_eq!((xs.rows(), xs.dim(), ys.rows(), ys.dim()), (500, 2, 500, 2));
         let mut xbuf = vec![0.0f32; 500 * 2];
         let mut ybuf = vec![0.0f32; 500 * 2];
-        xs.fill_rows(0, &mut xbuf);
-        ys.fill_rows(0, &mut ybuf);
+        xs.fill_rows(0, &mut xbuf).unwrap();
+        ys.fill_rows(0, &mut ybuf).unwrap();
         assert!(xbuf.iter().chain(&ybuf).all(|v| v.is_finite()));
         // half-moon source stays in its known bounding box
         for row in xbuf.chunks(2) {
@@ -262,12 +262,12 @@ mod tests {
         assert!(span > 2.0, "span {span}");
         // per-row random access agrees with bulk fill (chunk invariance)
         let mut row = [0.0f32; 2];
-        xs.fetch_row(123, &mut row);
+        xs.fetch_row(123, &mut row).unwrap();
         assert_eq!(&row, &xbuf[246..248]);
         // deterministic across re-creation
         let (xs2, _) = half_moon_s_curve_sources(500, 3);
         let mut xbuf2 = vec![0.0f32; 500 * 2];
-        xs2.fill_rows(0, &mut xbuf2);
+        xs2.fill_rows(0, &mut xbuf2).unwrap();
         assert_eq!(xbuf, xbuf2);
     }
 

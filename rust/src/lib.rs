@@ -35,8 +35,10 @@
 //!   in place so each child co-cluster is a contiguous `start..end`
 //!   range.  A block is two `Range<u32>`s and a level — see
 //!   [`coordinator::hiref`].
-//! * **[`linalg::MatView`]** — a borrowed row-range view over a row-major
-//!   buffer.  Cost construction ([`costs::dense_cost`]), LROT
+//! * **[`linalg::MatView`] / [`linalg::BatchView`]** — borrowed views
+//!   over row-major buffers: a single row-range window, or a whole batch
+//!   of `(row_range, cols)` strides over one shared buffer.  Cost
+//!   construction ([`costs::dense_cost`]), LROT
 //!   ([`solvers::lrot::solve_factored_in`]), the exact base-case solvers
 //!   ([`solvers::exact`]) and balanced assignment
 //!   ([`coordinator::assign`]) all accept views, so sub-blocks are
@@ -48,13 +50,32 @@
 //!   freelist hit-rate are reported per run in
 //!   [`coordinator::hiref::RunStats`].
 //!
+//! ## Level-synchronous batched execution
+//!
+//! Blocks at one scale of the hierarchy all have (nearly) identical
+//! shape, and the contiguous range layout makes a whole level **one
+//! strided batch** over the shared factor buffers.  The engine therefore
+//! schedules *levels, not blocks*: each scale's same-shape block groups
+//! are solved by one batched LROT call
+//! ([`solvers::lrot::solve_factored_batch`] — a single mirror-descent
+//! loop shared across all lanes, with per-lane convergence masks that
+//! stop early-converged blocks paying matmuls), followed by one batched
+//! balanced-assign / re-index pass and one batched exact pass over the
+//! scale's base-case tiles.  Backend dispatch (native vs the PJRT AOT
+//! runtime) happens at batch granularity.  The per-block work-queue path
+//! survives behind [`api::HiRefBuilder::batching`]`(false)` for A/B runs
+//! and is **bit-identical** — the per-block solver is literally the
+//! 1-lane case of the batched loop, and per-block seeds are anchored on
+//! each range's first original id, invariant to execution order.
+//!
 //! **Memory model:** `O(n·d)` factor working copies + `O(n)` permutations
-//! and output + transient scratch that tracks the blocks in flight
-//! (`O(n·(d + r))` during the root LROT solve, geometrically less at each
-//! deeper scale, `O(threads · base_size²)` at the leaves) — everything is
-//! linear in `n`; nothing is ever quadratic.  The contiguous layout is
-//! also what a batched/sharded backend needs: same-size blocks at a level
-//! form one strided batch.
+//! and output + transient scratch that tracks **one in-flight level**
+//! (`O(n·(d + r))` during the root LROT solve, still `O(n·r)` at deeper
+//! scales where lane count doubles as lane size halves, and
+//! `O(threads · base_size²)` at the leaf levels) — everything is linear
+//! in `n`; nothing is ever quadratic.  [`coordinator::hiref::RunStats`]
+//! reports the batch shape (`batches`, `lanes_max`, `batched_frac`)
+//! alongside the arena counters.
 //!
 //! ## Streaming ingestion (beyond-RAM datasets)
 //!

@@ -6,6 +6,15 @@
 //! The solve path is **view-based**: once the global cost factors exist,
 //! every sub-block is a [`MatView`] slice of them — `gather_rows` survives
 //! only for dataset plumbing and tests, never for per-block refinement.
+//!
+//! On top of the single-matrix views sits the **strided batch layer**:
+//! a [`BatchView`] names many matrices at once as `(row_range, cols)`
+//! windows over one shared buffer (exactly how a level of the HiRef
+//! hierarchy lays out its same-shape co-cluster factor blocks), and the
+//! `batch_*` kernels ([`batch_matmul_into`], [`batch_vt_matmul_into`],
+//! [`batch_row_softmax_into`]) iterate the items in their inner loop so a
+//! caller parallelises with **one** `parallel_map` over lane subsets
+//! instead of dispatching per-block tasks.
 
 /// Row-major single-precision matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -61,6 +70,90 @@ impl<'a> From<&'a Mat> for MatView<'a> {
     #[inline]
     fn from(m: &'a Mat) -> MatView<'a> {
         MatView { rows: m.rows, cols: m.cols, data: &m.data }
+    }
+}
+
+/// One item of a [`BatchView`]: a `(row_range, cols)` stride naming the
+/// row-major window `rows.start * cols .. rows.end * cols` of the shared
+/// buffer.  Items of one batch may differ in shape (ragged batches are
+/// legal); the HiRef level scheduler groups same-shape blocks so its
+/// batches are uniform.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchItem {
+    /// Row window into the shared buffer (in rows, not elements).
+    pub rows: std::ops::Range<usize>,
+    /// Row stride / width of this item.
+    pub cols: usize,
+}
+
+impl BatchItem {
+    #[inline]
+    pub fn new(rows: std::ops::Range<usize>, cols: usize) -> BatchItem {
+        BatchItem { rows, cols }
+    }
+
+    /// Number of rows in this item.
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.rows.end - self.rows.start
+    }
+
+    /// First element offset into the shared buffer.
+    #[inline]
+    pub fn start(&self) -> usize {
+        self.rows.start * self.cols
+    }
+
+    /// One-past-last element offset into the shared buffer.
+    #[inline]
+    pub fn end(&self) -> usize {
+        self.rows.end * self.cols
+    }
+}
+
+/// A batch of row-major matrices living in **one** shared `&[f32]` buffer,
+/// each named by a [`BatchItem`] stride — zero-copy, `Copy`, and cheap to
+/// re-slice.  This is the dispatch unit of the level-synchronous HiRef
+/// engine: every co-cluster at a scale is a contiguous row range of the
+/// shared factor working copies, so a whole level is one `BatchView`.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchView<'a> {
+    pub data: &'a [f32],
+    pub items: &'a [BatchItem],
+}
+
+impl<'a> BatchView<'a> {
+    /// Wrap `data` + per-item strides; every item window must be in
+    /// bounds (checked once here, not per kernel call).
+    pub fn new(data: &'a [f32], items: &'a [BatchItem]) -> BatchView<'a> {
+        for (i, it) in items.iter().enumerate() {
+            assert!(
+                it.rows.start <= it.rows.end && it.end() <= data.len(),
+                "batch item {i} ({:?} x{}) out of a {}-element buffer",
+                it.rows,
+                it.cols,
+                data.len()
+            );
+        }
+        BatchView { data, items }
+    }
+
+    /// Number of items (lanes) in the batch.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Item `i` as a zero-copy [`MatView`].
+    #[inline]
+    pub fn item(&self, i: usize) -> MatView<'a> {
+        let it = &self.items[i];
+        MatView::from_slice(it.nrows(), it.cols, &self.data[it.start()..it.end()])
     }
 }
 
@@ -242,6 +335,94 @@ pub fn vt_matmul_into_slice(a: MatView<'_>, b: MatView<'_>, out: &mut [f32]) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Batched kernels: iterate batch items in the inner loop
+// ---------------------------------------------------------------------------
+//
+// Each kernel applies its per-matrix operation to every (a_i, b_i, out_i)
+// triple of the batch, serially — parallelism belongs to the caller, who
+// wraps ONE `pool::parallel_map` around disjoint lane subsets (the
+// level-synchronous replacement for per-block task dispatch).  Outputs are
+// per-item windows of one shared `out` buffer, described by `out_items`;
+// windows must be pairwise disjoint (each is fully overwritten).
+
+/// `C_i = A_i @ B_i` for every item `i` of the batch.
+pub fn batch_matmul_into(a: BatchView<'_>, b: BatchView<'_>, out: &mut [f32], out_items: &[BatchItem]) {
+    assert_eq!(a.len(), b.len(), "batch lane count mismatch");
+    assert_eq!(a.len(), out_items.len(), "batch output count mismatch");
+    for i in 0..a.len() {
+        let o = &out_items[i];
+        matmul_into_slice(a.item(i), b.item(i), &mut out[o.start()..o.end()]);
+    }
+}
+
+/// `C_i = A_iᵀ B_i` for every item `i` of the batch (no transposes are
+/// materialised — the strided core of the batched LROT gradient).
+pub fn batch_vt_matmul_into(
+    a: BatchView<'_>,
+    b: BatchView<'_>,
+    out: &mut [f32],
+    out_items: &[BatchItem],
+) {
+    assert_eq!(a.len(), b.len(), "batch lane count mismatch");
+    assert_eq!(a.len(), out_items.len(), "batch output count mismatch");
+    for i in 0..a.len() {
+        let o = &out_items[i];
+        vt_matmul_into_slice(a.item(i), b.item(i), &mut out[o.start()..o.end()]);
+    }
+}
+
+/// Log-mass sentinel for phantom-padding rows, shared by the whole stack:
+/// `solvers::lrot::NEG` re-exports it (the constant lives here because
+/// linalg sits below the solver layer and its masked kernels need it).
+/// Mirrors `kernels/ref.py` NEG on the Python side.
+pub const NEG_LOGMASS: f32 = -1.0e9;
+
+/// Masked row softmax for every item of the batch: `out_i[p, z] =
+/// exp(l[p, z] − m_p) / Σ_z exp(l[p, z] − m_p)` with `m_p` the row max.
+/// Rows whose max is `≤ NEG_LOGMASS / 2` (phantom padding) produce
+/// all-zero rows instead of NaN.
+///
+/// The third primitive of the strided batch-kernel family: a one-sweep
+/// row-normalisation turning logit lanes into row-stochastic soft
+/// assignments.  The LROT loop itself keeps its raw `exp` of
+/// Sinkhorn-projected logits (rows there must sum to the *marginal*, not
+/// to 1, and the AOT artifacts bake that exact arithmetic), so today this
+/// kernel serves soft-assignment consumers and diagnostics rather than
+/// the solve path — see the unit tests for its contract.
+pub fn batch_row_softmax_into(
+    logits: BatchView<'_>,
+    out: &mut [f32],
+    out_items: &[BatchItem],
+) {
+    assert_eq!(logits.len(), out_items.len(), "batch output count mismatch");
+    for i in 0..logits.len() {
+        let l = logits.item(i);
+        let o = &out_items[i];
+        assert_eq!(o.nrows(), l.rows, "softmax output shape mismatch");
+        assert_eq!(o.cols, l.cols, "softmax output shape mismatch");
+        let dst = &mut out[o.start()..o.end()];
+        for (p, row) in dst.chunks_mut(l.cols).enumerate() {
+            let src = l.row(p);
+            let mx = src.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            if !(mx > NEG_LOGMASS / 2.0) {
+                row.fill(0.0);
+                continue;
+            }
+            let mut sum = 0.0f32;
+            for (d, &v) in row.iter_mut().zip(src) {
+                let e = fast_exp(v - mx);
+                *d = e;
+                sum += e;
+            }
+            let inv = 1.0 / sum;
+            for d in row.iter_mut() {
+                *d *= inv;
+            }
+        }
+    }
+}
+
 /// Max absolute entry of a slice (step-size normalisation).
 #[inline]
 pub fn slice_max_abs(xs: &[f32]) -> f32 {
@@ -331,6 +512,97 @@ mod tests {
         vt_matmul_into_slice(a.view(), bt.view(), &mut ct);
         assert_eq!(ct, want_t.data);
         assert_eq!(slice_max_abs(&[-3.0, 2.0, 0.5]), 3.0);
+    }
+
+    #[test]
+    fn batch_view_items_are_matviews() {
+        // two stacked 2x3 blocks in one buffer
+        let data: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        let items = [BatchItem::new(0..2, 3), BatchItem::new(2..4, 3)];
+        let b = BatchView::new(&data, &items);
+        assert_eq!(b.len(), 2);
+        assert!(!b.is_empty());
+        assert_eq!(b.item(0).row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(b.item(1).row(0), &[6.0, 7.0, 8.0]);
+        // ragged batches are legal
+        let ragged = [BatchItem::new(0..1, 3), BatchItem::new(1..4, 3)];
+        let b = BatchView::new(&data, &ragged);
+        assert_eq!((b.item(0).rows, b.item(1).rows), (1, 3));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of")]
+    fn batch_view_rejects_out_of_bounds_items() {
+        let data = vec![0.0f32; 6];
+        let items = [BatchItem::new(0..3, 3)]; // needs 9 elements
+        let _ = BatchView::new(&data, &items);
+    }
+
+    #[test]
+    fn batch_matmuls_match_scalar_kernels_per_lane() {
+        let mut rng = 1u64;
+        let mut next = move || {
+            rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((rng >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+        };
+        // 3 lanes of (s x k) stacked in one buffer, k = 2, s = {2, 3, 2}
+        let (k, r) = (2usize, 3usize);
+        let a_data: Vec<f32> = (0..7 * k).map(|_| next()).collect();
+        let b_data: Vec<f32> = (0..7 * r).map(|_| next()).collect();
+        let a_items =
+            [BatchItem::new(0..2, k), BatchItem::new(2..5, k), BatchItem::new(5..7, k)];
+        let b_items =
+            [BatchItem::new(0..2, r), BatchItem::new(2..5, r), BatchItem::new(5..7, r)];
+        let a = BatchView::new(&a_data, &a_items);
+        let b = BatchView::new(&b_data, &b_items);
+        // Aᵀ B per lane: k x r outputs, stacked densely
+        let out_items =
+            [BatchItem::new(0..k, r), BatchItem::new(k..2 * k, r), BatchItem::new(2 * k..3 * k, r)];
+        let mut got = vec![0.0f32; 3 * k * r];
+        batch_vt_matmul_into(a, b, &mut got, &out_items);
+        for l in 0..3 {
+            let mut want = vec![0.0f32; k * r];
+            vt_matmul_into_slice(a.item(l), b.item(l), &mut want);
+            let o = &out_items[l];
+            assert_eq!(&got[o.start()..o.end()], &want[..], "vt lane {l}");
+        }
+        // A_i @ W_i with W the k x r products just computed
+        let w = BatchView::new(&got, &out_items);
+        let c_items =
+            [BatchItem::new(0..2, r), BatchItem::new(2..5, r), BatchItem::new(5..7, r)];
+        let mut c = vec![0.0f32; 7 * r];
+        batch_matmul_into(a, w, &mut c, &c_items);
+        for l in 0..3 {
+            let mut want = vec![0.0f32; a.item(l).rows * r];
+            matmul_into_slice(a.item(l), w.item(l), &mut want);
+            let o = &c_items[l];
+            assert_eq!(&c[o.start()..o.end()], &want[..], "mm lane {l}");
+        }
+    }
+
+    #[test]
+    fn batch_row_softmax_normalises_and_masks() {
+        const NEG: f32 = -1.0e9;
+        let data = vec![
+            0.0, 1.0, 2.0, // lane 0 row 0
+            NEG, NEG, NEG, // lane 0 row 1: padding
+            5.0, 5.0, 5.0, // lane 1 row 0: ties
+        ];
+        let items = [BatchItem::new(0..2, 3), BatchItem::new(2..3, 3)];
+        let b = BatchView::new(&data, &items);
+        let out_items = [BatchItem::new(0..2, 3), BatchItem::new(2..3, 3)];
+        let mut out = vec![f32::NAN; 9];
+        batch_row_softmax_into(b, &mut out, &out_items);
+        // row 0: softmax of [0,1,2] — increasing, sums to 1
+        let s: f32 = out[0..3].iter().sum();
+        assert!((s - 1.0).abs() < 1e-5, "sum {s}");
+        assert!(out[0] < out[1] && out[1] < out[2]);
+        // padding row is exactly zero, not NaN
+        assert_eq!(&out[3..6], &[0.0, 0.0, 0.0]);
+        // tied row: uniform
+        for &v in &out[6..9] {
+            assert!((v - 1.0 / 3.0).abs() < 1e-5, "{v}");
+        }
     }
 
     #[test]

@@ -36,14 +36,15 @@ pub fn dense_cost_of(c: &Mat, p: &Mat) -> f64 {
 /// and each matched y row is fetched on demand, so evaluating a
 /// million-point alignment needs `O(threads · chunk_rows·d)` memory —
 /// neither cloud is ever materialised.  Per-chunk partial sums are
-/// reduced in index order, so the result is deterministic.
+/// reduced in index order, so the result is deterministic.  Mid-sweep
+/// read failures surface as the `io::Error` instead of panicking.
 pub fn bijection_cost_source(
     x: &dyn DatasetSource,
     y: &dyn DatasetSource,
     perm: &[u32],
     kind: CostKind,
     chunk_rows: usize,
-) -> f64 {
+) -> std::io::Result<f64> {
     let d = x.dim();
     assert_eq!(d, y.dim(), "source dimensions must match");
     let n = x.rows();
@@ -54,25 +55,29 @@ pub fn bijection_cost_source(
         "permutation target out of range for y ({m} rows)"
     );
     if n == 0 {
-        return 0.0;
+        return Ok(0.0);
     }
     let chunk = chunk_rows.max(1).min(n);
     let n_chunks = n.div_ceil(chunk);
     let threads = pool::default_threads();
-    let partial = pool::parallel_map(n_chunks, threads, |ci| {
+    let partial = pool::parallel_map(n_chunks, threads, |ci| -> std::io::Result<f64> {
         let start = ci * chunk;
         let end = (start + chunk).min(n);
         let mut xtile = vec![0.0f32; (end - start) * d];
         let mut yrow = vec![0.0f32; d];
-        x.fill_rows(start, &mut xtile);
+        x.fill_rows(start, &mut xtile)?;
         let mut s = 0.0f64;
         for (o, i) in (start..end).enumerate() {
-            y.fetch_row(perm[i] as usize, &mut yrow);
+            y.fetch_row(perm[i] as usize, &mut yrow)?;
             s += kind.pair(&xtile[o * d..(o + 1) * d], &yrow);
         }
-        s
+        Ok(s)
     });
-    partial.into_iter().sum::<f64>() / n as f64
+    let mut total = 0.0f64;
+    for p in partial {
+        total += p?;
+    }
+    Ok(total / n as f64)
 }
 
 /// Primal cost of *any* coupling representation — the uniform entry point
@@ -226,7 +231,8 @@ mod tests {
         let want = bijection_cost(&x, &y, &perm, CostKind::SqEuclidean);
         let (xs, ys) = (InMemorySource::new(&x), InMemorySource::new(&y));
         for chunk in [1usize, 9, 41, 100] {
-            let got = bijection_cost_source(&xs, &ys, &perm, CostKind::SqEuclidean, chunk);
+            let got =
+                bijection_cost_source(&xs, &ys, &perm, CostKind::SqEuclidean, chunk).unwrap();
             assert!((got - want).abs() < 1e-12, "chunk {chunk}: {got} vs {want}");
         }
     }

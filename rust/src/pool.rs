@@ -17,10 +17,19 @@
 //! * [`RangeShared`] — a buffer whose **disjoint** ranges are mutated
 //!   concurrently by workers (the in-place recursive re-indexing of the
 //!   refinement hierarchy: each co-cluster owns exactly its `start..end`).
+//! * [`SharedSlice`] — the borrowed twin of [`RangeShared`]: the same
+//!   disjoint-range contract over an existing `&mut [T]` (e.g. a
+//!   scratch-arena checkout or a `Mat`'s backing vector), so batched
+//!   kernels and parallel tile sweeps can write lane/row windows from
+//!   several workers without taking ownership of the buffer.
 //! * [`WorkQueue`] — a condvar-parked dynamic queue (no spin): idle
-//!   workers sleep until a push or global completion wakes them.
+//!   workers sleep until a push or global completion wakes them.  Since
+//!   the level-synchronous batch scheduler became the default
+//!   (`coordinator::hiref`), this serves the `batching(false)` per-block
+//!   A/B path.
 
 use std::cell::UnsafeCell;
+use std::marker::PhantomData;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 
@@ -106,6 +115,68 @@ impl<T> RangeShared<T> {
     /// Reclaim the underlying vector (all borrows must have ended).
     pub fn into_inner(self) -> Vec<T> {
         self.data.into_inner()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SharedSlice: borrowed disjoint-range shared mutation
+// ---------------------------------------------------------------------------
+
+/// The borrowed twin of [`RangeShared`]: wraps an existing `&mut [T]`
+/// (scratch-arena checkout, `Mat` backing storage, ...) so that worker
+/// threads which hand-partition it into pairwise-disjoint index ranges can
+/// write their windows concurrently.  Nothing is moved or reallocated —
+/// when the wrapper goes out of scope the original borrow resumes.
+///
+/// All accessors are `unsafe` under the same contract as [`RangeShared`]:
+/// the **caller** promises that no two concurrently live borrows overlap
+/// and that no shared borrow is used while an overlapping exclusive borrow
+/// exists.
+pub struct SharedSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _borrow: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: same argument as RangeShared — exclusive access is coordinated
+// by the caller-supplied disjointness contract; `slice` allows concurrent
+// shared borrows, which demands T: Sync on top of T: Send.
+unsafe impl<T: Send + Sync> Sync for SharedSlice<'_, T> {}
+unsafe impl<T: Send> Send for SharedSlice<'_, T> {}
+
+impl<'a, T> SharedSlice<'a, T> {
+    pub fn new(data: &'a mut [T]) -> SharedSlice<'a, T> {
+        SharedSlice { ptr: data.as_mut_ptr(), len: data.len(), _borrow: PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Shared view of `start..end`.  Bounds checked in release builds too
+    /// (an out-of-range window would be silent heap corruption).
+    ///
+    /// # Safety
+    /// No concurrently live *exclusive* borrow may overlap `start..end`.
+    #[inline]
+    pub unsafe fn slice(&self, start: usize, end: usize) -> &[T] {
+        assert!(start <= end && end <= self.len, "range {start}..{end} out of 0..{}", self.len);
+        std::slice::from_raw_parts(self.ptr.add(start), end - start)
+    }
+
+    /// Exclusive view of `start..end`.  Bounds checked in release builds.
+    ///
+    /// # Safety
+    /// No concurrently live borrow of any kind may overlap `start..end`.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, start: usize, end: usize) -> &mut [T] {
+        assert!(start <= end && end <= self.len, "range {start}..{end} out of 0..{}", self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), end - start)
     }
 }
 
@@ -502,6 +573,38 @@ mod tests {
     #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn shared_slice_disjoint_writes_into_borrowed_buffer() {
+        let mut buf = vec![0u32; 64];
+        {
+            let shared = SharedSlice::new(&mut buf);
+            std::thread::scope(|s| {
+                for w in 0..4 {
+                    let shared = &shared;
+                    s.spawn(move || {
+                        let part = unsafe { shared.slice_mut(w * 16, (w + 1) * 16) };
+                        for (o, v) in part.iter_mut().enumerate() {
+                            *v = (w * 16 + o) as u32;
+                        }
+                    });
+                }
+            });
+            assert_eq!(shared.len(), 64);
+            assert!(!shared.is_empty());
+        }
+        // the original borrow resumes with the workers' writes in place
+        let want: Vec<u32> = (0..64).collect();
+        assert_eq!(buf, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of")]
+    fn shared_slice_bounds_checked() {
+        let mut buf = vec![0u8; 4];
+        let shared = SharedSlice::new(&mut buf);
+        let _ = unsafe { shared.slice(2, 5) };
     }
 
     #[test]

@@ -14,11 +14,30 @@
 //! factors arrive as borrowed [`MatView`]s (HiRef slices its contiguous
 //! working buffers, never gathers), and every intermediate — logits,
 //! factor exponentials, gradients, Sinkhorn potentials — is checked out of
-//! a [`ScratchArena`] ([`solve_factored_in`]).  Only the output factors
-//! are owned, and those leave the arena without a copy via `detach`.
+//! a [`ScratchArena`].
+//!
+//! # Batched execution
+//!
+//! The mirror-descent loop is written once, over **lanes**: a level of the
+//! HiRef hierarchy hands all of its same-shape co-cluster blocks to
+//! [`solve_factored_batch`] as one strided [`BatchView`] pair, and every
+//! iteration runs the batched gradient kernels
+//! ([`crate::linalg::batch_vt_matmul_into`] /
+//! [`crate::linalg::batch_matmul_into`]) across all still-active lanes —
+//! one `parallel_map` over lane chunks per iteration instead of one task
+//! per block.  A **per-lane convergence mask** retires lanes whose hard
+//! co-clustering has stabilised, so early-converged blocks stop paying
+//! matmuls while their siblings finish.  [`solve_factored_in`] is the
+//! 1-lane case of the same loop — the per-block and batched paths share
+//! every floating-point operation and therefore cannot drift: lane `l` of
+//! a batch is bit-identical to a solo solve of the same block with the
+//! same seed, for any thread count and any batch composition.
 
-use crate::linalg::{fast_exp, matmul_into_slice, slice_max_abs, vt_matmul_into_slice, Mat, MatView};
-use crate::pool::{self, ScratchArena};
+use crate::linalg::{
+    batch_matmul_into, batch_vt_matmul_into, fast_exp, slice_max_abs, BatchItem, BatchView, Mat,
+    MatView,
+};
+use crate::pool::{self, RangeShared, ScratchArena, SharedSlice};
 use crate::prng::Rng;
 
 /// Row-parallelism threshold: blocks below this stay single-threaded (the
@@ -35,8 +54,10 @@ fn threads_for(cells: usize) -> usize {
     }
 }
 
-/// Log-mass of padded points (mirrors kernels/ref.py NEG).
-pub const NEG: f32 = -1.0e9;
+/// Log-mass of padded points (mirrors kernels/ref.py NEG).  The value
+/// lives in [`crate::linalg::NEG_LOGMASS`] so the masked batch kernels
+/// and this solver can never drift apart.
+pub const NEG: f32 = crate::linalg::NEG_LOGMASS;
 
 /// Hyper-parameters; defaults equal the AOT artifacts' baked values so the
 /// native and PJRT backends are interchangeable.
@@ -63,6 +84,10 @@ impl Default for LrotConfig {
 pub struct LrotOutput {
     pub q: Mat,
     pub r: Mat,
+    /// Mirror-descent iterations this solve actually entered (≤
+    /// `cfg.outer`): the per-lane convergence mask stops a lane — solo or
+    /// batched — once its hard co-clustering is stable for 5 iterations.
+    pub iters: usize,
 }
 
 /// Solve LROT on cost factors `(u, v)` (C = U Vᵀ restricted to the block)
@@ -84,6 +109,10 @@ pub fn solve_factored<'a, 'b>(
 }
 
 /// [`solve_factored`] with every intermediate drawn from `arena`.
+///
+/// This is exactly the **1-lane case** of [`solve_factored_batch`]: the
+/// per-block and batched execution paths share one mirror-descent loop
+/// (one set of floating-point operations per lane), so they cannot drift.
 pub fn solve_factored_in(
     u: MatView<'_>,
     v: MatView<'_>,
@@ -93,75 +122,350 @@ pub fn solve_factored_in(
     seed: u64,
     arena: &ScratchArena,
 ) -> LrotOutput {
-    let s = u.rows;
-    let sv = v.rows;
-    let r = cfg.rank;
-    assert!(active_x <= s && active_y <= sv);
-    let mut rng = Rng::new(seed ^ 0x160_7);
+    let u_items = [BatchItem::new(0..u.rows, u.cols)];
+    let v_items = [BatchItem::new(0..v.rows, v.cols)];
+    solve_factored_batch(
+        BatchView::new(u.data, &u_items),
+        BatchView::new(v.data, &v_items),
+        &[(active_x, active_y)],
+        cfg,
+        &[seed],
+        arena,
+        1,
+    )
+    .pop()
+    .expect("one lane in, one output out")
+}
 
-    let mut loga = arena.take_f32(s);
-    let mut logb = arena.take_f32(sv);
-    fill_log_marginal(&mut loga, active_x);
-    fill_log_marginal(&mut logb, active_y);
+/// Per-lane geometry: shapes, active row counts, and each lane's window
+/// offsets into the strided state buffers shared by the whole batch.
+#[derive(Clone, Copy)]
+struct Geo {
+    s: usize,
+    sv: usize,
+    ax: usize,
+    ay: usize,
+    off_s: usize,
+    off_sv: usize,
+    off_sr: usize,
+    off_svr: usize,
+    off_f: usize,
+}
+
+/// Per-lane convergence bookkeeping (worker-exclusive via `RangeShared`).
+#[derive(Default)]
+struct LaneCtl {
+    prev: Option<(Vec<u16>, Vec<u16>)>,
+    iters: usize,
+}
+
+/// Strided per-lane solver state: each buffer holds every lane's window
+/// back to back; a lane is only ever touched by the single worker that
+/// owns it for the current pass, which is what makes the `SharedSlice`
+/// disjoint-range accesses sound.
+struct BatchState<'a> {
+    loga: SharedSlice<'a, f32>,
+    logb: SharedSlice<'a, f32>,
+    fpot: SharedSlice<'a, f32>,
+    hpot: SharedSlice<'a, f32>,
+    log_q: SharedSlice<'a, f32>,
+    log_r: SharedSlice<'a, f32>,
+    ctl: RangeShared<LaneCtl>,
+}
+
+/// Partition `lanes` into at most `threads` contiguous chunks, run `f` on
+/// each chunk concurrently, and concatenate the returned lane lists.  The
+/// per-lane computation is self-contained, so results are bit-identical
+/// for any thread count.
+fn par_lane_chunks(
+    lanes: &[u32],
+    threads: usize,
+    f: impl Fn(&[u32]) -> Vec<u32> + Sync,
+) -> Vec<u32> {
+    if lanes.is_empty() {
+        return Vec::new();
+    }
+    let chunk = lanes.len().div_ceil(threads.max(1).min(lanes.len()));
+    // re-derive the chunk count from the rounded-up chunk size: with e.g.
+    // 5 lanes over 4 threads (chunk 2) only 3 chunks exist — indexing by
+    // the thread count would step past the slice.
+    let n_chunks = lanes.len().div_ceil(chunk);
+    pool::parallel_map(n_chunks, n_chunks, |c| {
+        let lo = c * chunk;
+        let hi = ((c + 1) * chunk).min(lanes.len());
+        f(&lanes[lo..hi])
+    })
+    .into_iter()
+    .flatten()
+    .collect()
+}
+
+/// Solve many LROT sub-problems as **one strided batch**: lane `l` is the
+/// factor pair `(u.item(l), v.item(l))` with uniform marginals over its
+/// first `active[l]` rows, seeded by `seeds[l]`.  All lanes share one
+/// mirror-descent iteration loop; per-lane convergence masks retire lanes
+/// whose hard co-clustering has stabilised, so early-converged blocks stop
+/// paying matmuls.  Lanes may be ragged (different shapes); the HiRef
+/// level scheduler groups same-shape blocks so its batches are uniform.
+///
+/// Lane `l`'s output is **bit-identical** to
+/// `solve_factored_in(u.item(l), v.item(l), ...)` with the same seed —
+/// independent of `threads` and of which other lanes share the batch.
+pub fn solve_factored_batch(
+    u: BatchView<'_>,
+    v: BatchView<'_>,
+    active: &[(usize, usize)],
+    cfg: &LrotConfig,
+    seeds: &[u64],
+    arena: &ScratchArena,
+    threads: usize,
+) -> Vec<LrotOutput> {
+    let lanes = u.len();
+    assert_eq!(lanes, v.len(), "u/v lane count mismatch");
+    assert_eq!(lanes, active.len(), "active lane count mismatch");
+    assert_eq!(lanes, seeds.len(), "seed lane count mismatch");
+    if lanes == 0 {
+        return Vec::new();
+    }
+    let r = cfg.rank;
     let logg = -(r as f32).ln();
+
+    // --- per-lane geometry + strided offsets ---------------------------
+    let mut geo = Vec::with_capacity(lanes);
+    let (mut ts, mut tsv, mut tsr, mut tsvr, mut tf) = (0usize, 0, 0, 0, 0);
+    for l in 0..lanes {
+        let (s, k) = (u.items[l].nrows(), u.items[l].cols);
+        let (sv, kv) = (v.items[l].nrows(), v.items[l].cols);
+        assert_eq!(k, kv, "factor width mismatch in lane {l}");
+        let (ax, ay) = active[l];
+        assert!(ax <= s && ay <= sv, "lane {l}: active exceeds shape");
+        geo.push(Geo { s, sv, ax, ay, off_s: ts, off_sv: tsv, off_sr: tsr, off_svr: tsvr, off_f: tf });
+        ts += s;
+        tsv += sv;
+        tsr += s * r;
+        tsvr += sv * r;
+        tf += s.max(sv);
+    }
+
+    // --- persistent per-lane state: lane windows of shared checkouts ---
+    let mut loga_buf = arena.take_f32(ts);
+    let mut logb_buf = arena.take_f32(tsv);
+    let mut fpot_buf = arena.take_f32(tf);
+    let mut hpot_buf = arena.take_f32(lanes * r);
+    let mut logq_buf = arena.take_f32(tsr);
+    let mut logr_buf = arena.take_f32(tsvr);
+    let st = BatchState {
+        loga: SharedSlice::new(&mut loga_buf),
+        logb: SharedSlice::new(&mut logb_buf),
+        fpot: SharedSlice::new(&mut fpot_buf),
+        hpot: SharedSlice::new(&mut hpot_buf),
+        log_q: SharedSlice::new(&mut logq_buf),
+        log_r: SharedSlice::new(&mut logr_buf),
+        ctl: RangeShared::new((0..lanes).map(|_| LaneCtl::default()).collect()),
+    };
+
+    // --- init every lane: product marginal + noise, projected ----------
+    let all: Vec<u32> = (0..lanes as u32).collect();
+    par_lane_chunks(&all, threads, |ids| {
+        for &l in ids {
+            init_lane(l as usize, r, logg, cfg, seeds, &geo, &st);
+        }
+        Vec::new()
+    });
+
+    // --- the shared mirror-descent loop with per-lane masks ------------
+    let mut live = all;
+    for it in 0..cfg.outer {
+        if live.is_empty() {
+            break;
+        }
+        let check = it % 5 == 4;
+        let converged =
+            par_lane_chunks(&live, threads, |ids| step_lanes(ids, check, u, v, cfg, r, logg, &geo, &st, arena));
+        if !converged.is_empty() {
+            let mut gone = vec![false; lanes];
+            for &l in &converged {
+                gone[l as usize] = true;
+            }
+            live.retain(|&l| !gone[l as usize]);
+        }
+    }
+
+    // --- finalise: exp the projected logits into owned factors ---------
+    pool::parallel_map(lanes, threads, |l| {
+        let g = &geo[l];
+        // SAFETY: the iteration loop has completed; nothing writes any more.
+        let lq = unsafe { st.log_q.slice(g.off_sr, g.off_sr + g.s * r) };
+        let lr = unsafe { st.log_r.slice(g.off_svr, g.off_svr + g.sv * r) };
+        let mut q = vec![0.0f32; g.s * r];
+        let mut rr = vec![0.0f32; g.sv * r];
+        exp_into(lq, &mut q);
+        exp_into(lr, &mut rr);
+        let iters = unsafe { st.ctl.slice(l, l + 1) }[0].iters;
+        LrotOutput { q: Mat::from_vec(g.s, r, q), r: Mat::from_vec(g.sv, r, rr), iters }
+    })
+}
+
+/// Lane initialisation: marginals, noisy product-coupling logits, first
+/// KL projection.  Same operation order as the historical per-block solve.
+fn init_lane(
+    l: usize,
+    r: usize,
+    logg: f32,
+    cfg: &LrotConfig,
+    seeds: &[u64],
+    geo: &[Geo],
+    st: &BatchState<'_>,
+) {
+    let g = &geo[l];
+    let mut rng = Rng::new(seeds[l] ^ 0x160_7);
+    // SAFETY: lane l's windows are owned by this worker for the whole pass.
+    let loga = unsafe { st.loga.slice_mut(g.off_s, g.off_s + g.s) };
+    let logb = unsafe { st.logb.slice_mut(g.off_sv, g.off_sv + g.sv) };
+    fill_log_marginal(loga, g.ax);
+    fill_log_marginal(logb, g.ay);
+    let lq = unsafe { st.log_q.slice_mut(g.off_sr, g.off_sr + g.s * r) };
+    let lr = unsafe { st.log_r.slice_mut(g.off_svr, g.off_svr + g.sv * r) };
+    init_logits(lq, loga, r, logg, cfg.tau, &mut rng);
+    init_logits(lr, logb, r, logg, cfg.tau, &mut rng);
+    let f = unsafe { st.fpot.slice_mut(g.off_f, g.off_f + g.s.max(g.sv)) };
+    let h = unsafe { st.hpot.slice_mut(l * r, (l + 1) * r) };
+    sinkhorn_project(lq, g.s, r, loga, logg, cfg.inner, &mut f[..g.s], h);
+    sinkhorn_project(lr, g.sv, r, logb, logg, cfg.inner, &mut f[..g.sv], h);
+}
+
+/// One mirror-descent iteration for this worker's lanes: exp the logits,
+/// (every 5th iteration) test the hard co-clustering for stability and
+/// retire stable lanes, then run the batched gradient kernels over the
+/// lanes still stepping, take the step and re-project.  Returns the lane
+/// ids that converged this iteration.
+#[allow(clippy::too_many_arguments)]
+fn step_lanes(
+    ids: &[u32],
+    check: bool,
+    u: BatchView<'_>,
+    v: BatchView<'_>,
+    cfg: &LrotConfig,
+    r: usize,
+    logg: f32,
+    geo: &[Geo],
+    st: &BatchState<'_>,
+    arena: &ScratchArena,
+) -> Vec<u32> {
+    // dense transient layout for this worker's lanes
+    let mut q_items = Vec::with_capacity(ids.len());
+    let mut rr_items = Vec::with_capacity(ids.len());
+    let (mut rq, mut rrr) = (0usize, 0usize);
+    for &l in ids {
+        let g = &geo[l as usize];
+        q_items.push(BatchItem::new(rq..rq + g.s, r));
+        rr_items.push(BatchItem::new(rrr..rrr + g.sv, r));
+        rq += g.s;
+        rrr += g.sv;
+    }
+    let mut q_buf = arena.take_f32(rq * r);
+    let mut rr_buf = arena.take_f32(rrr * r);
+
+    // Q = exp(log_Q), R = exp(log_R) per lane
+    for (i, &l) in ids.iter().enumerate() {
+        let g = &geo[l as usize];
+        // SAFETY: lane l is owned by this worker for the whole call.
+        let lq = unsafe { st.log_q.slice(g.off_sr, g.off_sr + g.s * r) };
+        let lr = unsafe { st.log_r.slice(g.off_svr, g.off_svr + g.sv * r) };
+        let qi = &q_items[i];
+        let ri = &rr_items[i];
+        exp_into(lq, &mut q_buf[qi.start()..qi.end()]);
+        exp_into(lr, &mut rr_buf[ri.start()..ri.end()]);
+    }
+
+    // Early stop per lane: once the hard co-clustering is stable, further
+    // mirror-descent steps cannot change HiRef's refinement decision.
+    let mut converged = Vec::new();
+    let mut stepping: Vec<usize> = Vec::with_capacity(ids.len());
+    for (i, &l) in ids.iter().enumerate() {
+        // SAFETY: disjoint single-lane window, this worker only.
+        let ctl = unsafe { &mut st.ctl.slice_mut(l as usize, l as usize + 1)[0] };
+        ctl.iters += 1;
+        if check {
+            let qi = &q_items[i];
+            let ri = &rr_items[i];
+            let labels = (
+                argmax_labels(&q_buf[qi.start()..qi.end()], r),
+                argmax_labels(&rr_buf[ri.start()..ri.end()], r),
+            );
+            if ctl.prev.as_ref() == Some(&labels) {
+                converged.push(l);
+                continue;
+            }
+            ctl.prev = Some(labels);
+        }
+        stepping.push(i);
+    }
+    if stepping.is_empty() {
+        return converged;
+    }
+
+    // batch views for the lanes still stepping
+    let u_sub: Vec<BatchItem> = stepping.iter().map(|&i| u.items[ids[i] as usize].clone()).collect();
+    let v_sub: Vec<BatchItem> = stepping.iter().map(|&i| v.items[ids[i] as usize].clone()).collect();
+    let q_sub: Vec<BatchItem> = stepping.iter().map(|&i| q_items[i].clone()).collect();
+    let rr_sub: Vec<BatchItem> = stepping.iter().map(|&i| rr_items[i].clone()).collect();
+    let mut w_items = Vec::with_capacity(stepping.len());
+    let mut gq_items = Vec::with_capacity(stepping.len());
+    let mut gr_items = Vec::with_capacity(stepping.len());
+    let (mut rw, mut rgq, mut rgr) = (0usize, 0usize, 0usize);
+    for &i in &stepping {
+        let g = &geo[ids[i] as usize];
+        let k = u.items[ids[i] as usize].cols;
+        w_items.push(BatchItem::new(rw..rw + k, r));
+        gq_items.push(BatchItem::new(rgq..rgq + g.s, r));
+        gr_items.push(BatchItem::new(rgr..rgr + g.sv, r));
+        rw += k;
+        rgq += g.s;
+        rgr += g.sv;
+    }
+    let mut w_buf = arena.take_f32(rw * r);
+    let mut gq_buf = arena.take_f32(rgq * r);
+    let mut gr_buf = arena.take_f32(rgr * r);
     let inv_g = r as f32;
 
-    // Sinkhorn potential buffers, checked out once per solve and reused by
-    // every projection (f is sliced per side; h is zeroed per call).
-    let mut fpot = arena.take_f32(s.max(sv));
-    let mut hpot = arena.take_f32(r);
+    // gq = U (Vᵀ R) · inv_g ; gr = V (Uᵀ Q) · inv_g — strided over lanes
+    let uv = BatchView::new(u.data, &u_sub);
+    let vv = BatchView::new(v.data, &v_sub);
+    batch_vt_matmul_into(vv, BatchView::new(&rr_buf, &rr_sub), &mut w_buf, &w_items);
+    batch_matmul_into(uv, BatchView::new(&w_buf, &w_items), &mut gq_buf, &gq_items);
+    gq_buf.iter_mut().for_each(|x| *x *= inv_g);
+    batch_vt_matmul_into(uv, BatchView::new(&q_buf, &q_sub), &mut w_buf, &w_items);
+    batch_matmul_into(vv, BatchView::new(&w_buf, &w_items), &mut gr_buf, &gr_items);
+    gr_buf.iter_mut().for_each(|x| *x *= inv_g);
 
-    // init: product marginal + noise, projected
-    let mut log_q = arena.take_f32(s * r);
-    let mut log_r = arena.take_f32(sv * r);
-    init_logits(&mut log_q, &loga, r, logg, cfg.tau, &mut rng);
-    init_logits(&mut log_r, &logb, r, logg, cfg.tau, &mut rng);
-    sinkhorn_project(&mut log_q, s, r, &loga, logg, cfg.inner, &mut fpot[..s], &mut hpot);
-    sinkhorn_project(&mut log_r, sv, r, &logb, logg, cfg.inner, &mut fpot[..sv], &mut hpot);
-
-    // scratch buffers for the hot loop (freelist checkouts, not allocs)
-    let mut q = arena.take_f32(s * r);
-    let mut rr = arena.take_f32(sv * r);
-    let mut w = arena.take_f32(u.cols * r);
-    let mut gq = arena.take_f32(s * r);
-    let mut gr = arena.take_f32(sv * r);
-
-    let mut prev_labels: Option<(Vec<u16>, Vec<u16>)> = None;
-    for it in 0..cfg.outer {
-        exp_into(&log_q, &mut q);
-        exp_into(&log_r, &mut rr);
-        // Early stop: once the hard co-clustering is stable, further
-        // mirror-descent steps cannot change HiRef's refinement decision.
-        if it % 5 == 4 {
-            let labels = (argmax_labels(&q, r), argmax_labels(&rr, r));
-            if prev_labels.as_ref() == Some(&labels) {
-                break;
-            }
-            prev_labels = Some(labels);
-        }
-        // gq = U (Vᵀ R) * inv_g ; gr = V (Uᵀ Q) * inv_g
-        vt_matmul_into_slice(v, MatView::from_slice(sv, r, &rr), &mut w);
-        matmul_into_slice(u, MatView::from_slice(u.cols, r, &w), &mut gq);
-        gq.iter_mut().for_each(|x| *x *= inv_g);
-        vt_matmul_into_slice(u, MatView::from_slice(s, r, &q), &mut w);
-        matmul_into_slice(v, MatView::from_slice(v.cols, r, &w), &mut gr);
-        gr.iter_mut().for_each(|x| *x *= inv_g);
-
-        let scale = slice_max_abs(&gq).max(slice_max_abs(&gr)).max(1e-12);
+    // per-lane step-size normalisation, mirror step, KL projections
+    for (o, &i) in stepping.iter().enumerate() {
+        let l = ids[i] as usize;
+        let g = &geo[l];
+        let gqi = &gq_items[o];
+        let gri = &gr_items[o];
+        let gq = &gq_buf[gqi.start()..gqi.end()];
+        let gr = &gr_buf[gri.start()..gri.end()];
+        let scale = slice_max_abs(gq).max(slice_max_abs(gr)).max(1e-12);
         let step = cfg.gamma / scale;
-        for (lq, g) in log_q.iter_mut().zip(gq.iter()) {
-            *lq -= step * g;
+        // SAFETY: lane l is owned by this worker for the whole call.
+        let lq = unsafe { st.log_q.slice_mut(g.off_sr, g.off_sr + g.s * r) };
+        let lr = unsafe { st.log_r.slice_mut(g.off_svr, g.off_svr + g.sv * r) };
+        for (x, gv) in lq.iter_mut().zip(gq) {
+            *x -= step * gv;
         }
-        for (lr, g) in log_r.iter_mut().zip(gr.iter()) {
-            *lr -= step * g;
+        for (x, gv) in lr.iter_mut().zip(gr) {
+            *x -= step * gv;
         }
-        sinkhorn_project(&mut log_q, s, r, &loga, logg, cfg.inner, &mut fpot[..s], &mut hpot);
-        sinkhorn_project(&mut log_r, sv, r, &logb, logg, cfg.inner, &mut fpot[..sv], &mut hpot);
+        let loga = unsafe { st.loga.slice(g.off_s, g.off_s + g.s) };
+        let logb = unsafe { st.logb.slice(g.off_sv, g.off_sv + g.sv) };
+        let f = unsafe { st.fpot.slice_mut(g.off_f, g.off_f + g.s.max(g.sv)) };
+        let h = unsafe { st.hpot.slice_mut(l * r, (l + 1) * r) };
+        sinkhorn_project(lq, g.s, r, loga, logg, cfg.inner, &mut f[..g.s], h);
+        sinkhorn_project(lr, g.sv, r, logb, logg, cfg.inner, &mut f[..g.sv], h);
     }
-    exp_into(&log_q, &mut q);
-    exp_into(&log_r, &mut rr);
-    // detach(): the output factors leave the arena without a copy
-    LrotOutput { q: Mat::from_vec(s, r, q.detach()), r: Mat::from_vec(sv, r, rr.detach()) }
+    converged
 }
 
 /// Primal cost `⟨C, Q diag(1/g) Rᵀ⟩` with C = U Vᵀ and uniform g = 1/r,
@@ -454,6 +758,184 @@ mod tests {
             costs.push(lowrank_cost(&u, &v, &out.q, &out.r));
         }
         assert!(costs[2] < costs[0] * 1.02, "rank-32 {} vs rank-2 {}", costs[2], costs[0]);
+    }
+
+    /// Stack per-lane factor matrices into one shared buffer + items —
+    /// the layout `solve_factored_batch` consumes.
+    fn stack_lanes(mats: &[&Mat]) -> (Vec<f32>, Vec<BatchItem>) {
+        let mut data = Vec::new();
+        let mut items = Vec::new();
+        let mut row = 0usize;
+        for m in mats {
+            items.push(BatchItem::new(row..row + m.rows, m.cols));
+            data.extend_from_slice(&m.data);
+            row += m.rows;
+        }
+        (data, items)
+    }
+
+    #[test]
+    fn batch_lanes_bit_identical_to_solo_solves() {
+        // three same-shape lanes plus, separately, a ragged pair: every
+        // lane of a batch must equal its solo solve exactly, for any
+        // thread count.
+        let cfg = LrotConfig { rank: 3, ..Default::default() };
+        let mats: Vec<(Mat, Mat)> = (0..3)
+            .map(|i| {
+                let (x, y, _) = shuffled_pair(64, 2, 20 + i);
+                sq_euclidean_factors(&x, &y)
+            })
+            .collect();
+        let (udata, uitems) = stack_lanes(&mats.iter().map(|(u, _)| u).collect::<Vec<_>>());
+        let (vdata, vitems) = stack_lanes(&mats.iter().map(|(_, v)| v).collect::<Vec<_>>());
+        let seeds = [101u64, 102, 103];
+        let active = [(64, 64); 3];
+        let arena = ScratchArena::new(4);
+        for threads in [1usize, 4] {
+            let outs = solve_factored_batch(
+                BatchView::new(&udata, &uitems),
+                BatchView::new(&vdata, &vitems),
+                &active,
+                &cfg,
+                &seeds,
+                &arena,
+                threads,
+            );
+            assert_eq!(outs.len(), 3);
+            for (l, out) in outs.iter().enumerate() {
+                let (u, v) = &mats[l];
+                let solo = solve_factored(u, v, 64, 64, &cfg, seeds[l]);
+                assert_eq!(out.q.data, solo.q.data, "lane {l} Q diverges (threads {threads})");
+                assert_eq!(out.r.data, solo.r.data, "lane {l} R diverges (threads {threads})");
+                assert_eq!(out.iters, solo.iters, "lane {l} iteration count diverges");
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_batch_lanes_match_solo_solves() {
+        let cfg = LrotConfig { rank: 2, ..Default::default() };
+        let (xa, ya, _) = shuffled_pair(48, 2, 31);
+        let (xb, yb, _) = shuffled_pair(33, 2, 32);
+        let (ua, va) = sq_euclidean_factors(&xa, &ya);
+        let (ub, vb) = sq_euclidean_factors(&xb, &yb);
+        let (udata, uitems) = stack_lanes(&[&ua, &ub]);
+        let (vdata, vitems) = stack_lanes(&[&va, &vb]);
+        // second lane exercises padding too (active < rows)
+        let active = [(48, 48), (30, 30)];
+        let seeds = [7u64, 8];
+        let arena = ScratchArena::new(2);
+        let outs = solve_factored_batch(
+            BatchView::new(&udata, &uitems),
+            BatchView::new(&vdata, &vitems),
+            &active,
+            &cfg,
+            &seeds,
+            &arena,
+            2,
+        );
+        let solo_a = solve_factored(&ua, &va, 48, 48, &cfg, 7);
+        let solo_b = solve_factored(&ub, &vb, 30, 30, &cfg, 8);
+        assert_eq!(outs[0].q.data, solo_a.q.data);
+        assert_eq!(outs[0].r.data, solo_a.r.data);
+        assert_eq!(outs[1].q.data, solo_b.q.data);
+        assert_eq!(outs[1].r.data, solo_b.r.data);
+        // padding rows of the short lane carry zero mass
+        for i in 30..33 {
+            assert!(outs[1].q.row(i).iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn lane_count_not_divisible_by_threads_does_not_panic() {
+        // regression: 5 lanes over 4 threads gives ceil(5/4)=2-lane chunks
+        // — only 3 chunks exist, and the chunker must not index a 4th.
+        let cfg = LrotConfig { rank: 2, outer: 6, ..Default::default() };
+        let mats: Vec<(Mat, Mat)> = (0..5u64)
+            .map(|i| {
+                let (x, y, _) = shuffled_pair(24, 2, 50 + i);
+                sq_euclidean_factors(&x, &y)
+            })
+            .collect();
+        let (udata, uitems) = stack_lanes(&mats.iter().map(|(u, _)| u).collect::<Vec<_>>());
+        let (vdata, vitems) = stack_lanes(&mats.iter().map(|(_, v)| v).collect::<Vec<_>>());
+        let arena = ScratchArena::new(4);
+        let seeds: Vec<u64> = (0..5).collect();
+        let outs = solve_factored_batch(
+            BatchView::new(&udata, &uitems),
+            BatchView::new(&vdata, &vitems),
+            &[(24, 24); 5],
+            &cfg,
+            &seeds,
+            &arena,
+            4,
+        );
+        assert_eq!(outs.len(), 5);
+        for (l, out) in outs.iter().enumerate() {
+            let (u, v) = &mats[l];
+            let solo = solve_factored(u, v, 24, 24, &cfg, seeds[l]);
+            assert_eq!(out.q.data, solo.q.data, "lane {l}");
+        }
+    }
+
+    #[test]
+    fn empty_batch_returns_no_outputs() {
+        let arena = ScratchArena::new(1);
+        let outs = solve_factored_batch(
+            BatchView::new(&[], &[]),
+            BatchView::new(&[], &[]),
+            &[],
+            &LrotConfig::default(),
+            &[],
+            &arena,
+            4,
+        );
+        assert!(outs.is_empty());
+    }
+
+    #[test]
+    fn convergence_mask_stops_iterating_converged_lanes() {
+        // lane A: two tight, far-apart clusters — the argmax co-clustering
+        // locks in almost immediately, so the mask must retire the lane
+        // long before `outer` runs out.  Lane B: a larger generic problem
+        // that keeps stepping.  Each lane's iteration count must equal its
+        // solo count (the mask is per lane, not per batch).
+        let mut rng = Rng::new(40);
+        let mut xa = Mat::zeros(16, 2);
+        for i in 0..16 {
+            let c = if i < 8 { -100.0 } else { 100.0 };
+            xa.row_mut(i)[0] = c + 0.01 * rng.normal_f32();
+            xa.row_mut(i)[1] = 0.01 * rng.normal_f32();
+        }
+        let ya = xa.clone();
+        let (ua, va) = sq_euclidean_factors(&xa, &ya);
+        let (xb, yb, _) = shuffled_pair(96, 2, 41);
+        let (ub, vb) = sq_euclidean_factors(&xb, &yb);
+        let cfg = LrotConfig { rank: 2, outer: 500, ..Default::default() };
+        let solo_a = solve_factored(&ua, &va, 16, 16, &cfg, 1);
+        let solo_b = solve_factored(&ub, &vb, 96, 96, &cfg, 2);
+        assert!(
+            solo_a.iters < cfg.outer,
+            "well-separated clusters must early-stop (ran {} iters)",
+            solo_a.iters
+        );
+        let (udata, uitems) = stack_lanes(&[&ua, &ub]);
+        let (vdata, vitems) = stack_lanes(&[&va, &vb]);
+        let arena = ScratchArena::new(2);
+        let outs = solve_factored_batch(
+            BatchView::new(&udata, &uitems),
+            BatchView::new(&vdata, &vitems),
+            &[(16, 16), (96, 96)],
+            &cfg,
+            &[1, 2],
+            &arena,
+            2,
+        );
+        assert_eq!(outs[0].iters, solo_a.iters, "batched lane A iter count");
+        assert_eq!(outs[1].iters, solo_b.iters, "batched lane B iter count");
+        // the retired lane's factors are frozen at its early-stop state
+        assert_eq!(outs[0].q.data, solo_a.q.data);
+        assert_eq!(outs[1].q.data, solo_b.q.data);
     }
 
     #[test]

@@ -169,6 +169,38 @@ fn native_cfg(rng: &mut Rng) -> HiRefConfig {
 }
 
 #[test]
+fn prop_batched_equals_per_block_across_shapes_and_schedules() {
+    // The level-synchronous batched engine (default) must produce exactly
+    // the permutation — and the in-place re-index orders — of the
+    // per-block work-queue path, across sizes that exercise ragged last
+    // batches (n not a multiple of base_size or rank), 1-lane batches
+    // (the root, tiny n), and varying rank schedules / thread counts.
+    check("batched = per-block", 15, |rng| {
+        let n = 10 + rng.next_below(400);
+        let x = rand_mat(rng, n, 2);
+        let y = rand_mat(rng, n, 2);
+        let cfg = native_cfg(rng); // random base_size, max_rank, threads, seed
+        let batched = HiRef::new(HiRefConfig { batching: true, ..cfg.clone() })
+            .align(&x, &y)
+            .unwrap();
+        let per_block = HiRef::new(HiRefConfig { batching: false, ..cfg.clone() })
+            .align(&x, &y)
+            .unwrap();
+        assert_eq!(
+            batched.perm, per_block.perm,
+            "permutations diverge (n={n} base={} C={} threads={})",
+            cfg.base_size, cfg.max_rank, cfg.threads
+        );
+        assert_eq!(batched.x_order, per_block.x_order, "x_order diverges (n={n})");
+        assert_eq!(batched.y_order, per_block.y_order, "y_order diverges (n={n})");
+        assert_eq!(batched.schedule, per_block.schedule);
+        assert_eq!(batched.stats.lrot_calls, per_block.stats.lrot_calls);
+        assert_eq!(batched.stats.base_calls, per_block.stats.base_calls);
+        assert!(batched.is_bijection());
+    });
+}
+
+#[test]
 fn prop_hiref_always_bijection() {
     check("hiref bijection", 25, |rng| {
         let n = 10 + rng.next_below(400);
