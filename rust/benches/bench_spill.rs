@@ -1,0 +1,121 @@
+//! Spill-path perf profile: run the same HiRef instance with resident and
+//! spilled factor storage and emit `BENCH_spill.json` (elapsed for both,
+//! spill traffic, resident factor peak) so the cost of the FactorStore
+//! indirection is recorded run over run.  Asserts the two runs are
+//! bit-identical — the FactorStore acceptance property — and that the
+//! resident factor peak respects `budget + one level batch's lane
+//! windows`.
+//!
+//! CI runs this at small `n` with a deliberately tiny budget (constant
+//! eviction); locally:
+//!
+//! ```sh
+//! HIREF_SPILL_N=262144 HIREF_SPILL_BUDGET=$((64<<20)) \
+//!     cargo bench --bench bench_spill
+//! ```
+
+use hiref::coordinator::hiref::{BackendKind, HiRef, HiRefConfig, SpillConfig};
+use hiref::data::synthetic;
+use hiref::metrics::human_bytes;
+use hiref::pool;
+use hiref::report::{section, timed};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let n = env_usize("HIREF_SPILL_N", 16384);
+    let budget = env_usize("HIREF_SPILL_BUDGET", 1 << 20);
+    let dir = std::env::var("HIREF_SPILL_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::env::temp_dir().join(format!("hiref_bench_spill_{}", std::process::id()))
+        });
+    let threads = pool::default_threads();
+    section(&format!(
+        "bench_spill — n = {n}, threads = {threads}, budget = {}, dir = {}",
+        human_bytes(budget),
+        dir.display()
+    ));
+
+    let (x, y) = synthetic::half_moon_s_curve(n, 0);
+    let cfg = HiRefConfig { backend: BackendKind::Auto, threads, ..Default::default() };
+
+    // resident baseline (one warm-up, then measured)
+    let resident_solver = HiRef::new(cfg.clone());
+    let _ = resident_solver.align(&x, &y).expect("warm-up align");
+    let (res, res_secs) = timed(|| resident_solver.align(&x, &y));
+    let res = res.expect("resident align");
+
+    // spilled run, same seed/config
+    let spill_cfg = HiRefConfig {
+        spill: Some(SpillConfig { dir: dir.clone(), budget_bytes: budget }),
+        ..cfg
+    };
+    let spill_solver = HiRef::new(spill_cfg);
+    let (sp, sp_secs) = timed(|| spill_solver.align(&x, &y));
+    let sp = sp.expect("spill align");
+
+    // the acceptance properties, enforced on every bench run
+    assert_eq!(sp.perm, res.perm, "spill run must be bit-identical to resident");
+    assert_eq!(sp.x_order, res.x_order);
+    assert_eq!(sp.y_order, res.y_order);
+    let rs = &sp.stats;
+    assert!(
+        rs.resident_factor_bytes <= budget + rs.factor_bytes,
+        "resident factor peak {} exceeds budget {} + lane windows {}",
+        rs.resident_factor_bytes,
+        budget,
+        rs.factor_bytes
+    );
+
+    let (res_ms, sp_ms) = (res_secs * 1e3, sp_secs * 1e3);
+    println!("resident elapsed   = {res_ms:.1} ms");
+    println!("spill elapsed      = {sp_ms:.1} ms ({:.2}x resident)", sp_ms / res_ms.max(1e-9));
+    println!("factor bytes       = {}", human_bytes(rs.factor_bytes));
+    println!(
+        "resident peak      = {} (budget {})",
+        human_bytes(rs.resident_factor_bytes),
+        human_bytes(budget)
+    );
+    println!(
+        "spill traffic      = wrote {}, {} shard reads",
+        human_bytes(rs.spill_bytes_written),
+        rs.spill_reads
+    );
+    println!("identical          = true");
+
+    // hand-rolled JSON (the vendored universe has no serde)
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"spill\",\n",
+            "  \"n\": {},\n",
+            "  \"threads\": {},\n",
+            "  \"spill_budget_bytes\": {},\n",
+            "  \"resident_elapsed_ms\": {:.3},\n",
+            "  \"spill_elapsed_ms\": {:.3},\n",
+            "  \"spill_overhead_x\": {:.4},\n",
+            "  \"factor_bytes\": {},\n",
+            "  \"resident_factor_bytes\": {},\n",
+            "  \"spill_bytes_written\": {},\n",
+            "  \"spill_reads\": {},\n",
+            "  \"identical\": true\n",
+            "}}\n"
+        ),
+        n,
+        threads,
+        budget,
+        res_ms,
+        sp_ms,
+        sp_ms / res_ms.max(1e-9),
+        rs.factor_bytes,
+        rs.resident_factor_bytes,
+        rs.spill_bytes_written,
+        rs.spill_reads,
+    );
+    std::fs::write("BENCH_spill.json", &json).expect("writing BENCH_spill.json");
+    println!("\nwrote BENCH_spill.json");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -6,7 +6,7 @@
 
 use std::path::PathBuf;
 
-use crate::coordinator::hiref::{BackendKind, HiRef, HiRefConfig};
+use crate::coordinator::hiref::{BackendKind, HiRef, HiRefConfig, SpillConfig, DEFAULT_SPILL_BUDGET};
 use crate::costs::CostKind;
 use crate::solvers::lrot::LrotConfig;
 
@@ -29,12 +29,14 @@ use super::error::SolveError;
 #[derive(Clone, Debug, Default)]
 pub struct HiRefBuilder {
     cfg: HiRefConfig,
+    spill_dir: Option<PathBuf>,
+    spill_budget: Option<usize>,
 }
 
 impl HiRefBuilder {
     /// Start from [`HiRefConfig::default`].
     pub fn new() -> HiRefBuilder {
-        HiRefBuilder { cfg: HiRefConfig::default() }
+        HiRefBuilder::default()
     }
 
     /// Ground cost (paper uses both `‖·‖₂` and `‖·‖₂²`).
@@ -126,9 +128,38 @@ impl HiRefBuilder {
         self
     }
 
+    /// Spill the factor working copies to scratch files under `dir` so
+    /// only the `O(n)` permutations (plus the bounded shard cache and one
+    /// in-flight level batch) stay resident.  Output is bit-identical to
+    /// the resident default.
+    pub fn spill_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.spill_dir = Some(dir.into());
+        self
+    }
+
+    /// Cap on resident spill-cache bytes (both sides together; default
+    /// 256 MiB; 0 disables caching entirely).  Requires
+    /// [`HiRefBuilder::spill_dir`].
+    pub fn spill_budget_bytes(mut self, bytes: usize) -> Self {
+        self.spill_budget = Some(bytes);
+        self
+    }
+
     /// Validate and return the configuration.
     pub fn build_config(self) -> Result<HiRefConfig, SolveError> {
-        let cfg = self.cfg;
+        let mut cfg = self.cfg;
+        cfg.spill = match (self.spill_dir, self.spill_budget) {
+            (None, None) => None,
+            (None, Some(_)) => {
+                return Err(SolveError::InvalidConfig(
+                    "spill_budget_bytes requires spill_dir (no spill directory configured)"
+                        .into(),
+                ))
+            }
+            (Some(dir), budget) => {
+                Some(SpillConfig { dir, budget_bytes: budget.unwrap_or(DEFAULT_SPILL_BUDGET) })
+            }
+        };
         if cfg.base_size == 0 {
             return Err(SolveError::InvalidConfig(
                 "base_size must be >= 1 (got 0)".into(),
@@ -254,5 +285,26 @@ mod tests {
     #[test]
     fn batching_defaults_on() {
         assert!(HiRefBuilder::new().build_config().unwrap().batching);
+    }
+
+    #[test]
+    fn spill_knobs_validated_and_reach_config() {
+        // budget without a directory is inconsistent
+        let err = HiRefBuilder::new().spill_budget_bytes(1 << 20).build_config().unwrap_err();
+        assert!(matches!(err, SolveError::InvalidConfig(_)), "{err}");
+        // no knobs: resident factors
+        assert!(HiRefBuilder::new().build_config().unwrap().spill.is_none());
+        // dir alone gets the default budget
+        let cfg = HiRefBuilder::new().spill_dir("/tmp/hiref-spill").build_config().unwrap();
+        let sc = cfg.spill.unwrap();
+        assert_eq!(sc.dir, std::path::PathBuf::from("/tmp/hiref-spill"));
+        assert_eq!(sc.budget_bytes, DEFAULT_SPILL_BUDGET);
+        // dir + budget (0 is legal: cache disabled)
+        let cfg = HiRefBuilder::new()
+            .spill_dir("d")
+            .spill_budget_bytes(0)
+            .build_config()
+            .unwrap();
+        assert_eq!(cfg.spill.unwrap().budget_bytes, 0);
     }
 }

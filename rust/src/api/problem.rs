@@ -127,6 +127,25 @@ impl SolveStats {
     pub fn peak_scratch_bytes(&self) -> usize {
         self.hiref.as_ref().map_or(0, |rs| rs.peak_scratch_bytes)
     }
+
+    /// Bytes a HiRef solve wrote to its factor spill files (0 for
+    /// resident runs and non-HiRef solvers).
+    pub fn spill_bytes_written(&self) -> usize {
+        self.hiref.as_ref().map_or(0, |rs| rs.spill_bytes_written)
+    }
+
+    /// Factor shard reads a HiRef solve served from its spill files (0
+    /// for resident runs and non-HiRef solvers).
+    pub fn spill_reads(&self) -> usize {
+        self.hiref.as_ref().map_or(0, |rs| rs.spill_reads)
+    }
+
+    /// Peak resident factor bytes of a HiRef solve: the full working
+    /// copies when resident, `≤ spill_budget + one level batch's lane
+    /// windows` when spilled; 0 for non-HiRef solvers.
+    pub fn resident_factor_bytes(&self) -> usize {
+        self.hiref.as_ref().map_or(0, |rs| rs.resident_factor_bytes)
+    }
 }
 
 /// A coupling plus how it was obtained.

@@ -63,19 +63,39 @@
 //! [`WorkQueue`] recursion.  Both paths share the split/seed/base-case
 //! helpers and the 1-lane-equals-N-lane LROT core, so they cannot drift.
 //!
+//! # Spillable factor storage
+//!
+//! Factor ownership lives behind the [`FactorStore`] protocol: the
+//! default [`ResidentStore`] is today's zero-cost behaviour (checkouts
+//! are pointers into one shared buffer), while [`SpillStore`]
+//! ([`HiRefConfig::spill`]) keeps the rows in a scratch file with a
+//! bounded LRU shard cache.  The engine checks factor windows out **per
+//! level batch**: `run_levels` pins exactly one batch group's lane
+//! windows at a time (sub-capped by the spill budget — lane solves are
+//! independent, so sub-batching preserves bit-identity), the
+//! counting-sort re-index rewrites each lane in place, and the dirty
+//! release writes the shards back.  A level batch is thus the unit of
+//! storage — the natural shard unit for multi-node sharding later.
+//! Spilled and resident runs are **bit-identical by construction**: same
+//! rows, same views, same seeds.
+//!
 //! # Memory model
 //!
-//! `O(n·d)` for the factor working copies + `O(n)` for the permutations
-//! and output + transient scratch served by a [`ScratchArena`].  Scratch
-//! tracks **one in-flight level, not one block**: at scale ℓ the batched
-//! LROT state (logits, gradients, potentials) for all 2^ℓ lanes together
-//! is `O(n·r)` — the same linear bound the per-block path reached at its
-//! peak, because sibling blocks shrink geometrically while their count
-//! doubles.  The base-case levels hold `O(threads · base_size²)` dense
-//! tiles.  Peak bytes and freelist hit-rate are reported in [`RunStats`],
-//! along with the batch shape counters (`batches`, `lanes_max`,
-//! `batched_frac`).  Nothing anywhere scales quadratically with `n` — the
-//! paper's linear-space claim, enforced by construction.
+//! Three bounded tiers: `O(chunk_rows·d)` streaming ingestion tiles (see
+//! below) + factor working copies that are either fully resident
+//! (`O(n·d)`) or spilled (`O(spill_budget)` cache + one in-flight level
+//! batch's lane windows) + `O(n)` permutations and output + transient
+//! scratch served by a [`ScratchArena`].  Scratch tracks **one in-flight
+//! level, not one block**: at scale ℓ the batched LROT state (logits,
+//! gradients, potentials) for all 2^ℓ lanes together is `O(n·r)` — the
+//! same linear bound the per-block path reached at its peak, because
+//! sibling blocks shrink geometrically while their count doubles.  The
+//! base-case levels hold `O(threads · base_size²)` dense tiles.  Peak
+//! bytes and freelist hit-rate are reported in [`RunStats`], along with
+//! the batch shape counters (`batches`, `lanes_max`, `batched_frac`) and
+//! the spill counters (`spill_bytes_written`, `spill_reads`,
+//! `resident_factor_bytes`).  Nothing anywhere scales quadratically with
+//! `n` — the paper's linear-space claim, enforced by construction.
 //!
 //! LROT batches are served either by the PJRT runtime (AOT artifacts from
 //! the JAX/Pallas layers) or by the native Rust solver — dispatch is at
@@ -88,10 +108,11 @@
 //! the ≤ `base_size` rows of each leaf block, so [`HiRef::align_source`]
 //! runs the identical recursion against chunked
 //! [`DatasetSource`]s: factors come from the chunked builders
-//! ([`costs::factors_for_source`], one `chunk_rows×d` tile at a time) and
-//! base blocks gather their rows into arena scratch on demand.  Peak
-//! memory is then bounded by construction — factors + permutations +
-//! tiles — regardless of where (or whether) the points are stored.
+//! ([`costs::factors_for_source_into`], one `chunk_rows×d` tile at a
+//! time, written straight into the factor stores) and base blocks gather
+//! their rows into arena scratch on demand.  Peak memory is then bounded
+//! by construction — factors (spillable) + permutations + tiles —
+//! regardless of where (or whether) the points are stored.
 //! [`HiRef::align_prefactored`] additionally accepts caller-built
 //! factors, so one factorisation can serve many solves.
 
@@ -108,7 +129,9 @@ use crate::costs::{self, CostKind};
 use crate::data::stream::{self, DatasetSource};
 use crate::linalg::{BatchItem, BatchView, Mat, MatView};
 use crate::metrics;
-use crate::pool::{self, RangeShared, ScratchArena, WorkQueue};
+use crate::pool::{
+    self, Checkout, FactorStore, RangeShared, ResidentStore, ScratchArena, SpillStore, WorkQueue,
+};
 use crate::runtime::PjrtEngine;
 use crate::solvers::exact;
 use crate::solvers::lrot::{self, LrotConfig};
@@ -123,6 +146,26 @@ pub enum BackendKind {
     /// PJRT when a bucket fits, native otherwise (default).
     Auto,
 }
+
+/// Spillable factor storage ([`HiRefConfig::spill`]): when set, the
+/// per-side factor working copies live in a [`SpillStore`] — file-backed
+/// shards under `dir` with at most `budget_bytes` of unpinned shard cache
+/// resident — instead of a fully resident buffer, so only the `O(n)`
+/// permutations (plus one in-flight level batch's lane windows) must stay
+/// in memory.  Output is bit-identical to the resident path.
+#[derive(Clone, Debug)]
+pub struct SpillConfig {
+    /// Directory for the per-solve scratch files (created if absent,
+    /// files removed when the solve finishes).
+    pub dir: PathBuf,
+    /// Cap on resident *unpinned* shard-cache bytes across both sides
+    /// (half per side); 0 disables caching so every checkout re-reads its
+    /// shards from disk.
+    pub budget_bytes: usize,
+}
+
+/// Default spill cache budget when only a directory was configured.
+pub const DEFAULT_SPILL_BUDGET: usize = 256 << 20;
 
 /// Configuration for [`HiRef`].
 #[derive(Clone, Debug)]
@@ -161,6 +204,10 @@ pub struct HiRefConfig {
     /// `false` selects the per-block work-queue path — bit-identical
     /// output, kept for A/B comparison.
     pub batching: bool,
+    /// Spillable factor storage: `None` (default) keeps the factor
+    /// working copies fully resident ([`ResidentStore`]); `Some` moves
+    /// them behind a file-backed [`SpillStore`] (see [`SpillConfig`]).
+    pub spill: Option<SpillConfig>,
 }
 
 impl Default for HiRefConfig {
@@ -180,6 +227,7 @@ impl Default for HiRefConfig {
             record_scales: false,
             chunk_rows: 1 << 16,
             batching: true,
+            spill: None,
         }
     }
 }
@@ -214,6 +262,18 @@ pub struct RunStats {
     /// one sibling lane (0.0 on the per-block path; singleton batches —
     /// e.g. the root — do not count as shared).
     pub batched_frac: f64,
+    /// Bytes written to the factor spill files (initial factor build +
+    /// dirty shard write-backs after each level's re-index); 0 on
+    /// resident runs.
+    pub spill_bytes_written: usize,
+    /// Factor shard reads served from the spill files (checkouts the
+    /// resident shard cache could not serve); 0 on resident runs.
+    pub spill_reads: usize,
+    /// Peak resident factor bytes, both sides: the whole working copies
+    /// (== `factor_bytes`) on resident runs; cache + in-flight checkout
+    /// windows — bounded by `spill_budget + one level batch's lane
+    /// windows` — on spill runs.
+    pub resident_factor_bytes: usize,
     pub elapsed: Duration,
 }
 
@@ -298,10 +358,13 @@ struct SolveState<'a> {
     /// Factor width (columns of the working factor buffers).
     k: usize,
     /// Working factor rows, X side (row p belongs to original point
-    /// `x_order[p]`), re-ordered in place at every split.
-    fu: RangeShared<f32>,
-    fv: RangeShared<f32>,
-    /// position → original id maps, re-ordered in tandem with fu/fv.
+    /// `x_order[p]`), checked out per block / per level batch and
+    /// re-ordered in place at every split.  Resident or spilled behind
+    /// the [`FactorStore`] protocol — same rows either way.
+    fu: &'a dyn FactorStore,
+    fv: &'a dyn FactorStore,
+    /// position → original id maps, re-ordered in tandem with fu/fv
+    /// (always resident — the `O(n)` term of the memory model).
     x_order: RangeShared<u32>,
     y_order: RangeShared<u32>,
     arena: &'a ScratchArena,
@@ -372,6 +435,46 @@ impl HiRef {
         Ok(())
     }
 
+    /// Wrap prebuilt factor matrices in the configured [`FactorStore`]s:
+    /// zero-cost resident buffers by default, or spill files (the
+    /// matrices are written out and dropped) when `cfg.spill` is set.
+    fn stores_from_mats(
+        &self,
+        fu: Mat,
+        fv: Mat,
+    ) -> Result<(Box<dyn FactorStore>, Box<dyn FactorStore>), SolveError> {
+        match &self.cfg.spill {
+            None => Ok((Box::new(ResidentStore::from_mat(fu)), Box::new(ResidentStore::from_mat(fv)))),
+            Some(sc) => {
+                let su = SpillStore::create(&sc.dir, fu.rows, fu.cols, sc.budget_bytes / 2)?;
+                let sv = SpillStore::create(&sc.dir, fv.rows, fv.cols, sc.budget_bytes / 2)?;
+                // SAFETY: no checkouts exist yet; single-threaded writes.
+                unsafe {
+                    su.write_rows(0, &fu.data)?;
+                    sv.write_rows(0, &fv.data)?;
+                }
+                Ok((Box::new(su), Box::new(sv)))
+            }
+        }
+    }
+
+    /// Empty stores of the given shapes for the chunked factor builders
+    /// to fill tile by tile (the streaming path's no-full-matrix route).
+    fn empty_stores(
+        &self,
+        n: usize,
+        m: usize,
+        k: usize,
+    ) -> Result<(Box<dyn FactorStore>, Box<dyn FactorStore>), SolveError> {
+        match &self.cfg.spill {
+            None => Ok((Box::new(ResidentStore::zeroed(n, k)), Box::new(ResidentStore::zeroed(m, k)))),
+            Some(sc) => Ok((
+                Box::new(SpillStore::create(&sc.dir, n, k, sc.budget_bytes / 2)?),
+                Box::new(SpillStore::create(&sc.dir, m, k, sc.budget_bytes / 2)?),
+            )),
+        }
+    }
+
     /// Compute a bijective alignment between equal-sized `x` and `y`.
     pub fn align(&self, x: &Mat, y: &Mat) -> Result<Alignment, SolveError> {
         self.validate_sizes(x.rows, y.rows, x.cols, y.cols)?;
@@ -382,8 +485,9 @@ impl HiRef {
         // re-ordered in place from here on.
         let (fu, fv) =
             costs::factors_for(x, y, self.cfg.cost, self.cfg.indyk_width, self.cfg.seed);
+        let stores = self.stores_from_mats(fu, fv)?;
         let arena = ScratchArena::new(self.cfg.threads);
-        self.align_inner(fu, fv, Points::Mats(x, y), arena, t0)
+        self.align_inner(stores, Points::Mats(x, y), arena, t0)
     }
 
     /// [`HiRef::align`] with caller-supplied cost factors `C ≈ fu · fvᵀ`
@@ -405,8 +509,9 @@ impl HiRef {
             )));
         }
         let t0 = Instant::now();
+        let stores = self.stores_from_mats(fu, fv)?;
         let arena = ScratchArena::new(self.cfg.threads);
-        self.align_inner(fu, fv, Points::Mats(x, y), arena, t0)
+        self.align_inner(stores, Points::Mats(x, y), arena, t0)
     }
 
     /// Streaming alignment: both point clouds arrive as chunked
@@ -426,9 +531,13 @@ impl HiRef {
         self.validate_sizes(x.rows(), y.rows(), x.dim(), y.dim())?;
         let t0 = Instant::now();
         let arena = ScratchArena::new(self.cfg.threads);
-        // factorisation I/O failures surface as SolveError::Backend via
-        // the From<io::Error> conversion
-        let (fu, fv) = costs::factors_for_source(
+        // The chunked builders write factor tiles straight into the
+        // stores — with spill configured, the full factor matrices never
+        // exist in memory at any point of the run.  Factorisation I/O
+        // failures surface as SolveError::Backend via From<io::Error>.
+        let k = costs::factor_width(self.cfg.cost, x.dim(), x.rows(), y.rows(), self.cfg.indyk_width);
+        let stores = self.empty_stores(x.rows(), y.rows(), k)?;
+        costs::factors_for_source_into(
             x,
             y,
             self.cfg.cost,
@@ -437,25 +546,27 @@ impl HiRef {
             self.cfg.chunk_rows,
             &arena,
             self.cfg.threads,
+            &*stores.0,
+            &*stores.1,
         )?;
-        self.align_inner(fu, fv, Points::Sources(x, y), arena, t0)
+        self.align_inner(stores, Points::Sources(x, y), arena, t0)
     }
 
     /// The recursion shared by every entry point: consumes the factor
-    /// working copies, fans the co-cluster hierarchy out over the worker
-    /// pool, and seals base blocks against `points`.
+    /// stores, fans the co-cluster hierarchy out over the worker pool,
+    /// and seals base blocks against `points`.
     fn align_inner(
         &self,
-        fu: Mat,
-        fv: Mat,
+        stores: (Box<dyn FactorStore>, Box<dyn FactorStore>),
         points: Points<'_>,
         arena: ScratchArena,
         t0: Instant,
     ) -> Result<Alignment, SolveError> {
-        let n = fu.rows;
-        let k = fu.cols;
-        debug_assert_eq!(k, fv.cols);
-        let factor_bytes = (fu.data.len() + fv.data.len()) * std::mem::size_of::<f32>();
+        let (fu, fv) = stores;
+        let n = fu.rows();
+        let k = fu.cols();
+        debug_assert_eq!(k, fv.cols());
+        let factor_bytes = (fu.rows() + fv.rows()) * k * std::mem::size_of::<f32>();
 
         let schedule = annealing::optimal_rank_schedule(
             n,
@@ -466,8 +577,8 @@ impl HiRef {
 
         let st = SolveState {
             k,
-            fu: RangeShared::new(fu.data),
-            fv: RangeShared::new(fv.data),
+            fu: &*fu,
+            fv: &*fv,
             x_order: RangeShared::new((0..n as u32).collect()),
             y_order: RangeShared::new((0..n as u32).collect()),
             arena: &arena,
@@ -530,6 +641,10 @@ impl HiRef {
         });
         let mut stats = st.stats.snapshot(t0.elapsed(), &arena);
         stats.factor_bytes = factor_bytes;
+        let (su, sv) = (fu.stats(), fv.stats());
+        stats.spill_bytes_written = su.spill_bytes_written + sv.spill_bytes_written;
+        stats.spill_reads = su.spill_reads + sv.spill_reads;
+        stats.resident_factor_bytes = su.resident_peak + sv.resident_peak;
         Ok(Alignment { perm, schedule, stats, x_order, y_order, scales })
     }
 
@@ -564,18 +679,36 @@ impl HiRef {
     /// so each child co-cluster is contiguous; returns the child blocks
     /// (Algorithm 1, lines 8–17 — with `Assign`'s split realised as a
     /// stable counting reorder instead of index-set materialisation).
+    /// The factor rows are rewritten inside the checked-out lane windows
+    /// (`cox`/`coy` lane `lane`) — the store persists them at release —
+    /// while the permutation windows mutate in place (always resident).
     /// Shared by the per-block and level-batched paths.
-    fn split_block(&self, block: &Block, q: &Mat, rmat: &Mat, st: &SolveState<'_>) -> Vec<Block> {
+    #[allow(clippy::too_many_arguments)]
+    fn split_block(
+        &self,
+        block: &Block,
+        cox: &Checkout<'_>,
+        coy: &Checkout<'_>,
+        lane: usize,
+        q: &Mat,
+        rmat: &Mat,
+        st: &SolveState<'_>,
+    ) -> Vec<Block> {
         let (xs, xe) = (block.x.start as usize, block.x.end as usize);
-        let (ys, _ye) = (block.y.start as usize, block.y.end as usize);
+        let (ys, ye) = (block.y.start as usize, block.y.end as usize);
         let len = xe - xs;
         let rank = q.cols;
         let labels_x = assign::balanced_assign(q, len);
         let labels_y = assign::balanced_assign(rmat, len);
         let caps = assign::capacities(len, rank);
 
-        reorder_window(&st.fu, &st.x_order, xs, len, st.k, &labels_x, &caps, st.arena);
-        reorder_window(&st.fv, &st.y_order, ys, len, st.k, &labels_y, &caps, st.arena);
+        // SAFETY: this block exclusively owns its lane and its order
+        // window — sibling lanes/ranges are disjoint, and the batch's
+        // LROT read phase has ended before any split runs.
+        unsafe {
+            reorder_window(cox.lane_mut(lane), st.x_order.slice_mut(xs, xe), st.k, &labels_x, &caps, st.arena);
+            reorder_window(coy.lane_mut(lane), st.y_order.slice_mut(ys, ye), st.k, &labels_y, &caps, st.arena);
+        }
 
         let mut children = Vec::with_capacity(caps.len());
         let mut off = 0usize;
@@ -593,9 +726,10 @@ impl HiRef {
         children
     }
 
-    /// One refinement step of the per-block path: LROT on the co-cluster's
-    /// factor-row windows, then [`HiRef::split_block`], then enqueue the
-    /// children.
+    /// One refinement step of the per-block path: check the co-cluster's
+    /// factor-row windows out of the stores, LROT on them, then
+    /// [`HiRef::split_block`], then release (dirty — the split re-indexed
+    /// the rows) and enqueue the children.
     fn refine(
         &self,
         schedule: &[usize],
@@ -616,17 +750,50 @@ impl HiRef {
         let rank = schedule[block.level].min(len).max(2);
         let seed = self.block_seed(&block, st);
 
+        let cox = match st.fu.checkout(std::slice::from_ref(&block.x), st.arena) {
+            Ok(c) => c,
+            Err(e) => return st.set_error(e.into()),
+        };
+        let coy = match st.fv.checkout(std::slice::from_ref(&block.y), st.arena) {
+            Ok(c) => c,
+            Err(e) => {
+                let _ = st.fu.release(cox, false);
+                return st.set_error(e.into());
+            }
+        };
         st.stats.lrot.fetch_add(1, Ordering::Relaxed);
         let (q, rmat) = {
-            // SAFETY: shared reads of our own window, dropped before the
+            // SAFETY: shared reads of our own lanes, dropped before the
             // exclusive re-indexing borrows inside split_block.
-            let u = MatView::from_slice(len, k, unsafe { st.fu.slice(xs * k, xe * k) });
-            let v = MatView::from_slice(len, k, unsafe { st.fv.slice(ys * k, ye * k) });
+            let u = MatView::from_slice(len, k, unsafe { cox.lane(0) });
+            let v = MatView::from_slice(len, k, unsafe { coy.lane(0) });
             self.solve_lrot(u, v, len, rank, seed, st)
         };
-        for child in self.split_block(&block, &q, &rmat, st) {
+        let children = self.split_block(&block, &cox, &coy, 0, &q, &rmat, st);
+        // write back only if some child will read these rows again — a
+        // block whose children are all base cases never has its factor
+        // rows checked out again, so its write-back would be wasted I/O
+        // (release both sides even if the first write-back fails)
+        let dirty = self.any_child_refines(&children, schedule);
+        let ru = st.fu.release(cox, dirty);
+        let rv = st.fv.release(coy, dirty);
+        if let Err(e) = ru.and(rv) {
+            return st.set_error(e.into());
+        }
+        for child in children {
             queue.push(child);
         }
+    }
+
+    /// Will any of these freshly split children be refined (and therefore
+    /// check its factor rows out again)?  Mirrors the base/refine
+    /// partition predicate of [`HiRef::run_levels`]: base-case children
+    /// are sealed from points and orders alone, so a block whose children
+    /// are all base cases needs no factor write-back.
+    fn any_child_refines(&self, children: &[Block], schedule: &[usize]) -> bool {
+        children.iter().any(|c| {
+            (c.x.end - c.x.start) as usize > self.cfg.base_size && c.level < schedule.len()
+        })
     }
 
     /// The level-synchronous scheduler (the default execution strategy):
@@ -668,19 +835,73 @@ impl HiRef {
             let mut next = Vec::new();
             for (len, blocks) in groups {
                 let rank = schedule[level].min(len).max(2);
-                next.extend(self.refine_batch(&blocks, len, rank, st));
+                // With spill configured, cap the lanes pinned at once so
+                // the in-flight checkout window tracks the budget (lane
+                // solves are independent, so sub-batching preserves
+                // bit-identity; the resident path keeps whole groups).
+                let cap = self.batch_lane_cap(len, st.k);
+                let mut i = 0usize;
+                while i < blocks.len() {
+                    let j = blocks.len().min(i.saturating_add(cap));
+                    next.extend(self.refine_batch(&blocks[i..j], len, rank, schedule, st));
+                    i = j;
+                }
             }
             current = next;
         }
     }
 
+    /// How many same-shape lanes one batch may pin: unbounded on the
+    /// resident path (zero-copy checkouts), budget-derived on the spill
+    /// path — but always at least one lane, because a lane's rows must be
+    /// resident to solve it (the root pins one full-side lane).
+    fn batch_lane_cap(&self, len: usize, k: usize) -> usize {
+        match &self.cfg.spill {
+            None => usize::MAX,
+            Some(sc) => {
+                let lane_bytes = (len * k * 4).max(1);
+                ((sc.budget_bytes / 2) / lane_bytes).max(1)
+            }
+        }
+    }
+
     /// Refine one same-shape group of blocks as a single strided LROT
-    /// batch, then run the batched balanced-assign / re-index pass that
-    /// produces the next level's blocks.
-    fn refine_batch(&self, blocks: &[Block], len: usize, rank: usize, st: &SolveState<'_>) -> Vec<Block> {
+    /// batch over the group's checked-out lane windows, then run the
+    /// batched balanced-assign / re-index pass that produces the next
+    /// level's blocks, then release the windows (dirty) so the store
+    /// persists the re-indexed rows.
+    fn refine_batch(
+        &self,
+        blocks: &[Block],
+        len: usize,
+        rank: usize,
+        schedule: &[usize],
+        st: &SolveState<'_>,
+    ) -> Vec<Block> {
+        if st.has_error() {
+            return Vec::new(); // doomed run: stop scheduling batches
+        }
         let lanes = blocks.len();
         let k = st.k;
-        let n = st.x_order.len();
+        // pin exactly this batch's lane windows — the "one in-flight
+        // level batch" unit of the spill memory model
+        let x_ranges: Vec<Range<u32>> = blocks.iter().map(|b| b.x.clone()).collect();
+        let y_ranges: Vec<Range<u32>> = blocks.iter().map(|b| b.y.clone()).collect();
+        let cox = match st.fu.checkout(&x_ranges, st.arena) {
+            Ok(c) => c,
+            Err(e) => {
+                st.set_error(e.into());
+                return Vec::new();
+            }
+        };
+        let coy = match st.fv.checkout(&y_ranges, st.arena) {
+            Ok(c) => c,
+            Err(e) => {
+                let _ = st.fu.release(cox, false);
+                st.set_error(e.into());
+                return Vec::new();
+            }
+        };
         st.stats.lrot.fetch_add(lanes, Ordering::Relaxed);
         st.stats.batches.fetch_add(1, Ordering::Relaxed);
         st.stats.lanes_max.fetch_max(lanes, Ordering::Relaxed);
@@ -689,33 +910,48 @@ impl HiRef {
         }
         let seeds: Vec<u64> = blocks.iter().map(|b| self.block_seed(b, st)).collect();
         let outs: Vec<(Mat, Mat)> = {
-            // SAFETY: the LROT stage only *reads* the factor buffers
-            // (whole-buffer shared borrows sliced into disjoint lane
-            // windows); nothing writes them until the re-index pass below,
-            // by which point these borrows have ended.
-            let fu = unsafe { st.fu.slice(0, n * k) };
-            let fv = unsafe { st.fv.slice(0, n * k) };
-            let u_items: Vec<BatchItem> = blocks
-                .iter()
-                .map(|b| BatchItem::new(b.x.start as usize..b.x.end as usize, k))
+            // SAFETY: the LROT stage only *reads* the checked-out spans
+            // (sliced into disjoint lane windows); nothing writes them
+            // until the re-index pass below, by which point these borrows
+            // have ended.
+            let fu = unsafe { cox.data() };
+            let fv = unsafe { coy.data() };
+            let u_items: Vec<BatchItem> = (0..lanes)
+                .map(|l| {
+                    let r0 = cox.lane_row(l);
+                    BatchItem::new(r0..r0 + len, k)
+                })
                 .collect();
-            let v_items: Vec<BatchItem> = blocks
-                .iter()
-                .map(|b| BatchItem::new(b.y.start as usize..b.y.end as usize, k))
+            let v_items: Vec<BatchItem> = (0..lanes)
+                .map(|l| {
+                    let r0 = coy.lane_row(l);
+                    BatchItem::new(r0..r0 + len, k)
+                })
                 .collect();
             let u = BatchView::new(fu, &u_items);
             let v = BatchView::new(fv, &v_items);
             self.solve_lrot_batch(u, v, len, rank, &seeds, st)
         };
         // one batched balanced-assign + re-index pass over the lanes;
-        // sibling windows are disjoint, so the concurrent in-place
-        // reorders stay within the RangeShared contract.
-        pool::parallel_map(lanes, self.cfg.threads, |l| {
-            self.split_block(&blocks[l], &outs[l].0, &outs[l].1, st)
+        // sibling lane windows are disjoint, so the concurrent in-place
+        // reorders stay within the checkout's disjointness contract.
+        let children: Vec<Block> = pool::parallel_map(lanes, self.cfg.threads, |l| {
+            self.split_block(&blocks[l], &cox, &coy, l, &outs[l].0, &outs[l].1, st)
         })
         .into_iter()
         .flatten()
-        .collect()
+        .collect();
+        // write back only if some child will read these rows again (see
+        // any_child_refines); release both sides even if the first
+        // write-back fails
+        let dirty = self.any_child_refines(&children, schedule);
+        let ru = st.fu.release(cox, dirty);
+        let rv = st.fv.release(coy, dirty);
+        if let Err(e) = ru.and(rv) {
+            st.set_error(e.into());
+            return Vec::new();
+        }
+        children
     }
 
     /// Batch-granularity LROT dispatch: the whole batch goes to PJRT when
@@ -850,32 +1086,28 @@ impl HiRef {
     }
 }
 
-/// Stable counting-sort reorder of one side's window: factor rows and the
-/// position→id map move together so that cluster `z`'s members become the
-/// contiguous sub-range `offsets[z]..offsets[z]+caps[z]` (order within a
-/// cluster preserves the parent's order — the same sequence
-/// `assign::split_by_labels` would have produced, without materialising
-/// index sets).  Scratch comes from the arena; the two `copy_from_slice`
-/// writebacks are the only data movement per split.
-#[allow(clippy::too_many_arguments)]
+/// Stable counting-sort reorder of one side's window: factor rows (the
+/// block's checked-out lane) and the position→id map move together so
+/// that cluster `z`'s members become the contiguous sub-range
+/// `offsets[z]..offsets[z]+caps[z]` (order within a cluster preserves the
+/// parent's order — the same sequence `assign::split_by_labels` would
+/// have produced, without materialising index sets).  Scratch comes from
+/// the arena; the two `copy_from_slice` writebacks are the only data
+/// movement per split.
 fn reorder_window(
-    rows: &RangeShared<f32>,
-    order: &RangeShared<u32>,
-    start: usize,
-    len: usize,
+    dst_rows: &mut [f32],
+    dst_order: &mut [u32],
     k: usize,
     labels: &[u32],
     caps: &[usize],
     arena: &ScratchArena,
 ) {
+    let len = dst_order.len();
     debug_assert_eq!(labels.len(), len);
+    debug_assert_eq!(dst_rows.len(), len * k);
     let mut cursor = assign::cluster_offsets(caps);
     let mut srows = arena.take_f32(len * k);
     let mut sorder = arena.take_u32(len);
-    // SAFETY: the caller's block exclusively owns [start, start+len); no
-    // other worker can touch it until the children are enqueued.
-    let dst_rows = unsafe { rows.slice_mut(start * k, (start + len) * k) };
-    let dst_order = unsafe { order.slice_mut(start, start + len) };
     for (i, &z) in labels.iter().enumerate() {
         let d = cursor[z as usize];
         cursor[z as usize] += 1;
@@ -911,7 +1143,10 @@ impl StatsAtomics {
             peak_scratch_bytes: arena.peak_bytes(),
             arena_hits: arena.hits(),
             arena_misses: arena.misses(),
-            factor_bytes: 0, // filled in by align_inner
+            factor_bytes: 0, // filled in by align_inner, as are the
+            spill_bytes_written: 0, // store counters below
+            spill_reads: 0,
+            resident_factor_bytes: 0,
             batches: self.batches.load(Ordering::Relaxed),
             lanes_max: self.lanes_max.load(Ordering::Relaxed),
             batched_frac: if lrot_calls == 0 {
@@ -1164,6 +1399,115 @@ mod tests {
         let (x, _, _) = shuffled_pair(16, 2, 6);
         let (y, _, _) = shuffled_pair(17, 2, 7);
         assert!(HiRef::new(native_cfg()).align(&x, &y).is_err());
+    }
+
+    fn spill_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("hiref_spill_test_{}_{tag}", std::process::id()))
+    }
+
+    #[test]
+    fn spill_run_bit_identical_to_resident() {
+        let (x, y, _) = shuffled_pair(300, 2, 30);
+        let want = HiRef::new(native_cfg()).align(&x, &y).unwrap();
+        let dir = spill_dir("identical");
+        // budget 0 forces a disk read for every checkout; 4 KiB forces
+        // eviction at every level; 16 MiB caches everything
+        for budget in [0usize, 4096, 1 << 24] {
+            let cfg = HiRefConfig {
+                spill: Some(SpillConfig { dir: dir.clone(), budget_bytes: budget }),
+                ..native_cfg()
+            };
+            let out = HiRef::new(cfg).align(&x, &y).unwrap();
+            assert_eq!(out.perm, want.perm, "budget {budget}");
+            assert_eq!(out.x_order, want.x_order, "budget {budget}");
+            assert_eq!(out.y_order, want.y_order, "budget {budget}");
+            assert!(out.stats.spill_bytes_written > 0, "nothing was spilled");
+            if budget == 0 {
+                assert!(out.stats.spill_reads > 0, "budget 0 must read from disk");
+            }
+            // the acceptance bound: cache budget + in-flight lane windows
+            // (the root batch pins one full-side lane per side)
+            assert!(
+                out.stats.resident_factor_bytes <= budget + out.stats.factor_bytes,
+                "resident {} > budget {budget} + factors {}",
+                out.stats.resident_factor_bytes,
+                out.stats.factor_bytes
+            );
+        }
+        // the resident run reports zero spill traffic
+        assert_eq!(want.stats.spill_bytes_written, 0);
+        assert_eq!(want.stats.spill_reads, 0);
+        assert_eq!(want.stats.resident_factor_bytes, want.stats.factor_bytes);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_per_block_path_bit_identical_too() {
+        let (x, y, _) = shuffled_pair(200, 2, 31);
+        let want = HiRef::new(native_cfg()).align(&x, &y).unwrap();
+        let dir = spill_dir("perblock");
+        let cfg = HiRefConfig {
+            batching: false,
+            spill: Some(SpillConfig { dir: dir.clone(), budget_bytes: 2048 }),
+            ..native_cfg()
+        };
+        let out = HiRef::new(cfg).align(&x, &y).unwrap();
+        assert_eq!(out.perm, want.perm);
+        assert_eq!(out.x_order, want.x_order);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_align_source_identical_and_streams_factors() {
+        use crate::data::stream::InMemorySource;
+        let (x, y, _) = shuffled_pair(257, 2, 32);
+        let want = HiRef::new(native_cfg()).align(&x, &y).unwrap();
+        let dir = spill_dir("source");
+        let cfg = HiRefConfig {
+            chunk_rows: 19,
+            spill: Some(SpillConfig { dir: dir.clone(), budget_bytes: 4096 }),
+            ..native_cfg()
+        };
+        let out = HiRef::new(cfg)
+            .align_source(&InMemorySource::new(&x), &InMemorySource::new(&y))
+            .unwrap();
+        assert_eq!(out.perm, want.perm);
+        // the chunked builders wrote the factor tiles straight to disk
+        assert!(out.stats.spill_bytes_written >= out.stats.factor_bytes);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_euclidean_cost_identical() {
+        // the Indyk builder reads sampled U rows back through the store —
+        // exercise that path end to end
+        let (x, y, _) = shuffled_pair(150, 3, 33);
+        let cfg = HiRefConfig { cost: CostKind::Euclidean, indyk_width: 8, ..native_cfg() };
+        let want = HiRef::new(cfg.clone()).align(&x, &y).unwrap();
+        let dir = spill_dir("euclid");
+        let cfg = HiRefConfig {
+            spill: Some(SpillConfig { dir: dir.clone(), budget_bytes: 0 }),
+            ..cfg
+        };
+        let out = HiRef::new(cfg).align(&x, &y).unwrap();
+        assert_eq!(out.perm, want.perm);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_dir_under_a_file_errors_as_backend() {
+        let dir = spill_dir("badroot");
+        std::fs::create_dir_all(&dir).unwrap();
+        let file_path = dir.join("not_a_dir");
+        std::fs::write(&file_path, b"x").unwrap();
+        let (x, y, _) = shuffled_pair(64, 2, 34);
+        let cfg = HiRefConfig {
+            spill: Some(SpillConfig { dir: file_path.join("sub"), budget_bytes: 0 }),
+            ..native_cfg()
+        };
+        let err = HiRef::new(cfg).align(&x, &y).unwrap_err();
+        assert!(matches!(err, SolveError::Backend(_)), "{err:?}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

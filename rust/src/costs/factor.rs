@@ -8,9 +8,10 @@
 
 use std::io;
 
+use crate::costs::ErrOnce;
 use crate::data::stream::{for_each_chunk_parallel, DatasetSource};
 use crate::linalg::{Mat, MatView};
-use crate::pool::{ScratchArena, SharedSlice};
+use crate::pool::{FactorStore, ResidentStore, ScratchArena};
 
 /// Write the U-side factor row (`[|x|², 1, −2x]`) for point `xi`.
 #[inline]
@@ -55,13 +56,64 @@ pub fn sq_euclidean_factors<'a, 'b>(
 
 /// Chunked twin of [`sq_euclidean_factors`]: build the exact `d+2` factors
 /// from [`DatasetSource`]s in `chunk_rows`-sized tiles, swept by up to
-/// `threads` workers.  The factorisation is row-separable — every tile
-/// writes a disjoint window of the output rows — so the result is
-/// **bit-identical** to the in-memory path for any chunk size *and any
-/// thread count*; peak memory is one `chunk_rows×d` tile per worker
-/// (arena scratch; zero for memory-resident sources) plus the
-/// `O(n·(d+2))` output.  Mid-sweep read failures surface as the
-/// `io::Error` instead of panicking.
+/// `threads` workers, writing each factor tile **straight into the
+/// [`FactorStore`] pair** — no full-matrix intermediate, so a
+/// [`crate::pool::SpillStore`] bounds factor memory during the build too.
+/// The factorisation is row-separable — every tile writes a disjoint row
+/// window of the store — so the result is **bit-identical** to the
+/// in-memory path for any chunk size *and any thread count*; peak memory
+/// is one `chunk_rows×d` point tile plus one `chunk_rows×(d+2)` factor
+/// tile per worker (arena scratch).  Mid-sweep read failures and store
+/// I/O failures surface as the `io::Error` instead of panicking.
+pub fn sq_euclidean_factors_chunked_into(
+    x: &dyn DatasetSource,
+    y: &dyn DatasetSource,
+    chunk_rows: usize,
+    arena: &ScratchArena,
+    threads: usize,
+    us: &dyn FactorStore,
+    vs: &dyn FactorStore,
+) -> io::Result<()> {
+    let d = x.dim();
+    assert_eq!(d, y.dim(), "dimension mismatch");
+    let k = d + 2;
+    assert_eq!((us.rows(), us.cols()), (x.rows(), k), "U store shape mismatch");
+    assert_eq!((vs.rows(), vs.cols()), (y.rows(), k), "V store shape mismatch");
+    let sink = ErrOnce::new();
+    for_each_chunk_parallel(x, chunk_rows, arena, threads, |start, tile| {
+        // SAFETY: tile [start, start+rows) windows are pairwise disjoint
+        // across workers (tiles partition the row space).
+        let res = unsafe {
+            us.fill_rows_with(start, tile.rows, arena, &mut |out| {
+                for (i, orow) in out.chunks_mut(k).enumerate() {
+                    u_row(tile.row(i), orow);
+                }
+            })
+        };
+        if let Err(e) = res {
+            sink.set(e);
+        }
+    })?;
+    sink.take()?;
+    let sink = ErrOnce::new();
+    for_each_chunk_parallel(y, chunk_rows, arena, threads, |start, tile| {
+        // SAFETY: as above.
+        let res = unsafe {
+            vs.fill_rows_with(start, tile.rows, arena, &mut |out| {
+                for (j, orow) in out.chunks_mut(k).enumerate() {
+                    v_row(tile.row(j), orow);
+                }
+            })
+        };
+        if let Err(e) = res {
+            sink.set(e);
+        }
+    })?;
+    sink.take()
+}
+
+/// [`sq_euclidean_factors_chunked_into`] materialised to owned matrices
+/// (resident stores underneath).
 pub fn sq_euclidean_factors_chunked(
     x: &dyn DatasetSource,
     y: &dyn DatasetSource,
@@ -69,31 +121,11 @@ pub fn sq_euclidean_factors_chunked(
     arena: &ScratchArena,
     threads: usize,
 ) -> io::Result<(Mat, Mat)> {
-    let d = x.dim();
-    assert_eq!(d, y.dim(), "dimension mismatch");
-    let k = d + 2;
-    let mut u = Mat::zeros(x.rows(), k);
-    let mut v = Mat::zeros(y.rows(), k);
-    {
-        let us = SharedSlice::new(&mut u.data);
-        for_each_chunk_parallel(x, chunk_rows, arena, threads, |start, tile| {
-            // SAFETY: tile [start, start+rows) windows are pairwise
-            // disjoint across workers (tiles partition the row space).
-            let out = unsafe { us.slice_mut(start * k, (start + tile.rows) * k) };
-            for (i, orow) in out.chunks_mut(k).enumerate() {
-                u_row(tile.row(i), orow);
-            }
-        })?;
-        let vs = SharedSlice::new(&mut v.data);
-        for_each_chunk_parallel(y, chunk_rows, arena, threads, |start, tile| {
-            // SAFETY: as above.
-            let out = unsafe { vs.slice_mut(start * k, (start + tile.rows) * k) };
-            for (j, orow) in out.chunks_mut(k).enumerate() {
-                v_row(tile.row(j), orow);
-            }
-        })?;
-    }
-    Ok((u, v))
+    let k = x.dim() + 2;
+    let us = ResidentStore::zeroed(x.rows(), k);
+    let vs = ResidentStore::zeroed(y.rows(), k);
+    sq_euclidean_factors_chunked_into(x, y, chunk_rows, arena, threads, &us, &vs)?;
+    Ok((Box::new(us).into_mat()?, Box::new(vs).into_mat()?))
 }
 
 /// Zero-pad factor width from `k` to `k_target` columns (exact: padded

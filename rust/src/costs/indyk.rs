@@ -14,10 +14,10 @@
 
 use std::io;
 
-use crate::costs::CostKind;
+use crate::costs::{CostKind, ErrOnce};
 use crate::data::stream::{for_each_chunk_parallel, DatasetSource, InMemorySource};
 use crate::linalg::{invert_spd, Mat, MatView};
-use crate::pool::{self, ScratchArena, SharedSlice};
+use crate::pool::{self, FactorStore, ResidentStore, ScratchArena, SharedSlice};
 use crate::prng::Rng;
 
 /// Factorise the `kind` distance matrix between rows of `x` and `y` as
@@ -132,20 +132,24 @@ fn segmented_sq_sum(
     Ok(tree_reduce(vals))
 }
 
-/// [`factorize`] over chunked [`DatasetSource`]s: every full-dataset sweep
-/// (anchor means, sampling probabilities, the `U = C[:, S]` landmark
-/// distances, the regression right-hand sides for `V`) is streamed in
-/// `chunk_rows`-sized tiles drawn from `arena` and fanned out over up to
-/// `threads` workers — per-row outputs write disjoint windows, and the
-/// one order-sensitive scalar sweep (the anchor mean) reduces through the
-/// fixed-topology [`tree_reduce`] over [`SEG_ROWS`]-row segments.  Peak
-/// memory is one tile (`chunk_rows·d`) per worker plus the `O((n+m)·t)`
-/// factor output plus the `O(s·d)` sampled-row block (`s = 4t`) — never
-/// both full point clouds.  The result is **bit-identical for any chunk
-/// size and any thread count**; mid-sweep read failures surface as the
-/// `io::Error`.
+/// [`factorize`] over chunked [`DatasetSource`]s, writing the factors
+/// **straight into a [`FactorStore`] pair** (no full-matrix intermediate,
+/// so a [`crate::pool::SpillStore`] bounds factor memory during the build
+/// too): every full-dataset sweep (anchor means, sampling probabilities,
+/// the `U = C[:, S]` landmark distances, the regression right-hand sides
+/// for `V`) is streamed in `chunk_rows`-sized tiles drawn from `arena`
+/// and fanned out over up to `threads` workers — per-row outputs write
+/// disjoint store row windows, the regression's sampled `U` rows are read
+/// back through [`FactorStore::read_rows`], and the one order-sensitive
+/// scalar sweep (the anchor mean) reduces through the fixed-topology
+/// [`tree_reduce`] over [`SEG_ROWS`]-row segments.  Peak memory is one
+/// point tile plus one factor tile (`chunk_rows·(d+t)`) per worker plus
+/// the `O(s·(d+t))` sampled-row block (`s = 4t`) — never both full point
+/// clouds and, with a spill store, never the full factors.  The result is
+/// **bit-identical for any chunk size and any thread count**; mid-sweep
+/// read failures surface as the `io::Error`.
 #[allow(clippy::too_many_arguments)]
-pub fn factorize_chunked(
+pub fn factorize_chunked_into(
     x: &dyn DatasetSource,
     y: &dyn DatasetSource,
     kind: CostKind,
@@ -154,12 +158,18 @@ pub fn factorize_chunked(
     chunk_rows: usize,
     arena: &ScratchArena,
     threads: usize,
-) -> io::Result<(Mat, Mat)> {
+    us: &dyn FactorStore,
+    vs: &dyn FactorStore,
+) -> io::Result<()> {
     let n = x.rows();
     let m = y.rows();
     let d = x.dim();
     assert_eq!(d, y.dim(), "dimension mismatch");
+    // sampling width, independent of `kind` (the IVWW scheme works for any
+    // metric); equals `factor_width` for the Euclidean dispatch path
     let t = target_k.min(n).min(m).max(1);
+    assert_eq!((us.rows(), us.cols()), (n, t), "U store shape mismatch");
+    assert_eq!((vs.rows(), vs.cols()), (m, t), "V store shape mismatch");
     let mut rng = Rng::new(seed ^ 0x1D1_9EB);
 
     // --- IVWW sampling probabilities -----------------------------------
@@ -209,24 +219,30 @@ pub fn factorize_chunked(
     let cols = sample_weighted_distinct(&mut rng, &col_probs, t);
 
     // --- U = C[:, S]  (n×t): landmarks gathered once (t·d floats), then
-    // one parallel streamed sweep over X writing disjoint row windows.
+    // one parallel streamed sweep over X writing disjoint store windows.
     let mut landmarks = Mat::zeros(t, d);
     for (c, &j) in cols.iter().enumerate() {
         y.fetch_row(j as usize, landmarks.row_mut(c))?;
     }
-    let mut u = Mat::zeros(n, t);
     {
-        let us = SharedSlice::new(&mut u.data);
+        let sink = ErrOnce::new();
         for_each_chunk_parallel(x, chunk_rows, arena, threads, |start, tile| {
             // SAFETY: disjoint row windows, as above.
-            let out = unsafe { us.slice_mut(start * t, (start + tile.rows) * t) };
-            for (i, urow) in out.chunks_mut(t).enumerate() {
-                let xi = tile.row(i);
-                for (uv, c) in urow.iter_mut().zip(0..t) {
-                    *uv = kind.pair(xi, landmarks.row(c)) as f32;
-                }
+            let res = unsafe {
+                us.fill_rows_with(start, tile.rows, arena, &mut |out| {
+                    for (i, urow) in out.chunks_mut(t).enumerate() {
+                        let xi = tile.row(i);
+                        for (uv, c) in urow.iter_mut().zip(0..t) {
+                            *uv = kind.pair(xi, landmarks.row(c)) as f32;
+                        }
+                    }
+                })
+            };
+            if let Err(e) = res {
+                sink.set(e);
             }
         })?;
+        sink.take()?;
     }
 
     // --- row sample for the regression fit ------------------------------
@@ -234,11 +250,13 @@ pub fn factorize_chunked(
     let rows = sample_weighted_distinct(&mut rng, &probs, s);
 
     // A = U[rows, :]  (s×t),  B = C[rows, :]  (s×m); the sampled X rows
-    // are gathered once (s·d floats).
+    // are gathered once (s·d floats), the sampled U rows read back from
+    // the store (bit-exact round-trip).
     let mut a = Mat::zeros(s, t);
     let mut xsamp = Mat::zeros(s, d);
     for (r, &i) in rows.iter().enumerate() {
-        a.row_mut(r).copy_from_slice(u.row(i as usize));
+        // SAFETY: the U build sweep has joined; no concurrent writers.
+        unsafe { us.read_rows(i as usize, a.row_mut(r)) }?;
         x.fetch_row(i as usize, xsamp.row_mut(r))?;
     }
     // Solve (AᵀA + λI) W = Aᵀ B  for W (t×m);  V = Wᵀ (m×t).
@@ -252,36 +270,63 @@ pub fn factorize_chunked(
 
     // Build V row-by-row over a parallel streamed Y sweep (linear in m):
     // for each column j of C we need c_j = C[rows, j] (s values), then
-    // V_j = G⁻¹ Aᵀ c_j.  Rows are independent — disjoint windows again.
-    let mut v = Mat::zeros(m, t);
+    // V_j = G⁻¹ Aᵀ c_j.  Rows are independent — disjoint store windows.
     {
-        let vs = SharedSlice::new(&mut v.data);
+        let sink = ErrOnce::new();
         for_each_chunk_parallel(y, chunk_rows, arena, threads, |start, tile| {
-            // SAFETY: disjoint row windows, as above.
-            let out = unsafe { vs.slice_mut(start * t, (start + tile.rows) * t) };
             let mut atc = vec![0.0f32; t];
-            for (jo, vrow) in out.chunks_mut(t).enumerate() {
-                let yj = tile.row(jo);
-                atc.iter_mut().for_each(|v| *v = 0.0);
-                for r in 0..rows.len() {
-                    let cij = kind.pair(xsamp.row(r), yj) as f32;
-                    let arow = a.row(r);
-                    for (acc, &av) in atc.iter_mut().zip(arow) {
-                        *acc += av * cij;
+            // SAFETY: disjoint row windows, as above.
+            let res = unsafe {
+                vs.fill_rows_with(start, tile.rows, arena, &mut |out| {
+                    for (jo, vrow) in out.chunks_mut(t).enumerate() {
+                        let yj = tile.row(jo);
+                        atc.iter_mut().for_each(|v| *v = 0.0);
+                        for r in 0..rows.len() {
+                            let cij = kind.pair(xsamp.row(r), yj) as f32;
+                            let arow = a.row(r);
+                            for (acc, &av) in atc.iter_mut().zip(arow) {
+                                *acc += av * cij;
+                            }
+                        }
+                        for (c, slot) in vrow.iter_mut().enumerate() {
+                            let mut acc = 0.0f32;
+                            let grow = g_inv.row(c);
+                            for (gv, av) in grow.iter().zip(&atc) {
+                                acc += gv * av;
+                            }
+                            *slot = acc;
+                        }
                     }
-                }
-                for (c, slot) in vrow.iter_mut().enumerate() {
-                    let mut acc = 0.0f32;
-                    let grow = g_inv.row(c);
-                    for (gv, av) in grow.iter().zip(&atc) {
-                        acc += gv * av;
-                    }
-                    *slot = acc;
-                }
+                })
+            };
+            if let Err(e) = res {
+                sink.set(e);
             }
         })?;
+        sink.take()?;
     }
-    Ok((u, v))
+    Ok(())
+}
+
+/// [`factorize_chunked_into`] materialised to owned matrices (resident
+/// stores underneath) — the historical signature, still the back end of
+/// the in-memory [`factorize`].
+#[allow(clippy::too_many_arguments)]
+pub fn factorize_chunked(
+    x: &dyn DatasetSource,
+    y: &dyn DatasetSource,
+    kind: CostKind,
+    target_k: usize,
+    seed: u64,
+    chunk_rows: usize,
+    arena: &ScratchArena,
+    threads: usize,
+) -> io::Result<(Mat, Mat)> {
+    let t = target_k.min(x.rows()).min(y.rows()).max(1);
+    let us = ResidentStore::zeroed(x.rows(), t);
+    let vs = ResidentStore::zeroed(y.rows(), t);
+    factorize_chunked_into(x, y, kind, target_k, seed, chunk_rows, arena, threads, &us, &vs)?;
+    Ok((Box::new(us).into_mat()?, Box::new(vs).into_mat()?))
 }
 
 /// Weighted sampling of `k` distinct indices (probabilities ∝ weights).

@@ -21,9 +21,36 @@
 pub mod factor;
 pub mod indyk;
 
+use std::io;
+
 use crate::data::stream::DatasetSource;
 use crate::linalg::{dist, sq_dist, Mat, MatView};
-use crate::pool::ScratchArena;
+use crate::pool::{FactorStore, ResidentStore, ScratchArena};
+
+/// First-error sink for parallel tile sweeps whose closures are
+/// infallible (`Fn(usize, MatView)`): workers stash the first failure,
+/// the driver surfaces it once the sweep has joined.
+pub(crate) struct ErrOnce(std::sync::Mutex<Option<io::Error>>);
+
+impl ErrOnce {
+    pub(crate) fn new() -> ErrOnce {
+        ErrOnce(std::sync::Mutex::new(None))
+    }
+
+    pub(crate) fn set(&self, e: io::Error) {
+        let mut guard = self.0.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(e);
+        }
+    }
+
+    pub(crate) fn take(self) -> io::Result<()> {
+        match self.0.into_inner().unwrap() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
 
 /// Ground cost selector. Matches the paper's two evaluation costs:
 /// `‖·‖₂` (Wasserstein-1 ground cost) and `‖·‖₂²` (Wasserstein-2).
@@ -114,15 +141,54 @@ pub fn factors_for<'a, 'b>(
     }
 }
 
+/// Width of the factor matrices [`factors_for`] / the chunked builders
+/// produce for a `dim`-dimensional `n × m` problem: the exact `d + 2` for
+/// squared Euclidean, the (clamped) sampling width `t` for the Indyk
+/// path.  Callers that pre-create a [`FactorStore`] size it with this, so
+/// the store shape and the builders cannot drift.
+pub fn factor_width(kind: CostKind, dim: usize, n: usize, m: usize, target_k: usize) -> usize {
+    match kind {
+        CostKind::SqEuclidean => dim + 2,
+        CostKind::Euclidean => target_k.min(n).min(m).max(1),
+    }
+}
+
 /// Chunked twin of [`factors_for`]: build the cost factors from streamed
-/// [`DatasetSource`]s, with the tile sweeps fanned out over up to
+/// [`DatasetSource`]s **directly into a pair of [`FactorStore`]s** (sized
+/// `rows × `[`factor_width`]), with the tile sweeps fanned out over up to
 /// `threads` workers — never holding more than one `chunk_rows`-sized
-/// tile per worker (arena scratch) plus the `O(n·r)` factor output.
-/// Scalar accumulations reduce through a fixed-topology deterministic
-/// tree (see [`indyk::factorize_chunked`]), so the factors are
-/// **identical for any chunk size and any thread count**.  Mid-sweep
-/// dataset read failures surface as the `io::Error` (solve paths convert
-/// it to [`crate::api::SolveError::Backend`]).
+/// tile plus one factor tile per worker; no full factor matrix is ever
+/// materialised outside the stores, so a [`crate::pool::SpillStore`]
+/// bounds factor memory end to end.  Scalar accumulations reduce through
+/// a fixed-topology deterministic tree (see [`indyk::factorize_chunked`]),
+/// so the factors are **identical for any chunk size and any thread
+/// count**.  Mid-sweep dataset read failures surface as the `io::Error`
+/// (solve paths convert it to [`crate::api::SolveError::Backend`]).
+#[allow(clippy::too_many_arguments)]
+pub fn factors_for_source_into(
+    x: &dyn DatasetSource,
+    y: &dyn DatasetSource,
+    kind: CostKind,
+    target_k: usize,
+    seed: u64,
+    chunk_rows: usize,
+    arena: &ScratchArena,
+    threads: usize,
+    us: &dyn FactorStore,
+    vs: &dyn FactorStore,
+) -> io::Result<()> {
+    match kind {
+        CostKind::SqEuclidean => {
+            factor::sq_euclidean_factors_chunked_into(x, y, chunk_rows, arena, threads, us, vs)
+        }
+        CostKind::Euclidean => indyk::factorize_chunked_into(
+            x, y, kind, target_k, seed, chunk_rows, arena, threads, us, vs,
+        ),
+    }
+}
+
+/// [`factors_for_source_into`] materialised to owned matrices (resident
+/// stores underneath) — for callers that want plain `(U, V)`.
 #[allow(clippy::too_many_arguments)]
 pub fn factors_for_source(
     x: &dyn DatasetSource,
@@ -134,14 +200,11 @@ pub fn factors_for_source(
     arena: &ScratchArena,
     threads: usize,
 ) -> std::io::Result<(Mat, Mat)> {
-    match kind {
-        CostKind::SqEuclidean => {
-            factor::sq_euclidean_factors_chunked(x, y, chunk_rows, arena, threads)
-        }
-        CostKind::Euclidean => {
-            indyk::factorize_chunked(x, y, kind, target_k, seed, chunk_rows, arena, threads)
-        }
-    }
+    let k = factor_width(kind, x.dim(), x.rows(), y.rows(), target_k);
+    let us = ResidentStore::zeroed(x.rows(), k);
+    let vs = ResidentStore::zeroed(y.rows(), k);
+    factors_for_source_into(x, y, kind, target_k, seed, chunk_rows, arena, threads, &us, &vs)?;
+    Ok((Box::new(us).into_mat()?, Box::new(vs).into_mat()?))
 }
 
 /// Write the dense `x.rows×y.rows` cost matrix between two (typically
@@ -241,6 +304,34 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn factors_into_spill_store_bit_identical_to_resident() {
+        use crate::data::stream::InMemorySource;
+        use crate::pool::SpillStore;
+        let mut rng = Rng::new(17);
+        let x = rand_mat(&mut rng, 41, 3);
+        let y = rand_mat(&mut rng, 41, 3);
+        let arena = ScratchArena::new(2);
+        let (xs, ys) = (InMemorySource::new(&x), InMemorySource::new(&y));
+        let dir = std::env::temp_dir().join(format!("hiref_costs_spill_{}", std::process::id()));
+        for kind in [CostKind::SqEuclidean, CostKind::Euclidean] {
+            let (u, v) = factors_for(&x, &y, kind, 8, 4);
+            let su = SpillStore::create(&dir, 41, u.cols, 0).unwrap();
+            let sv = SpillStore::create(&dir, 41, v.cols, 0).unwrap();
+            factors_for_source_into(&xs, &ys, kind, 8, 4, 7, &arena, 2, &su, &sv).unwrap();
+            // the builders wrote tiles straight to disk...
+            assert!(su.stats().spill_bytes_written >= 41 * u.cols * 4, "{kind:?}");
+            // ...and the stored factors are bit-identical to the in-memory
+            // build (the Indyk path reads its regression sample back
+            // through the store, so this covers read_rows too)
+            let (ud, vd) =
+                (Box::new(su).into_mat().unwrap(), Box::new(sv).into_mat().unwrap());
+            assert_eq!(u.data, ud.data, "{kind:?} U diverges through the spill store");
+            assert_eq!(v.data, vd.data, "{kind:?} V diverges through the spill store");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

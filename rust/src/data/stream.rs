@@ -39,12 +39,9 @@
 
 use std::fs::File;
 use std::io::{self, Write};
-#[cfg(not(unix))]
-use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
-#[cfg(not(unix))]
-use std::sync::Mutex;
 
+use crate::fsio::PositionedFile;
 use crate::linalg::{Mat, MatView};
 use crate::pool::{self, ScratchArena};
 
@@ -261,18 +258,40 @@ impl DatasetSource for GeneratorSource {
 // BinFileSource
 // ---------------------------------------------------------------------------
 
-/// Little-endian `f32` rows read from a binary file on demand — the
-/// mmap-style path for datasets on disk.  On unix, reads are positioned
-/// (`pread`): no shared cursor and no lock, so concurrent base-case
-/// gathers from the worker pool never serialise on this source.
+/// On-disk element type of a [`BinFileSource`] (both little-endian;
+/// `f64` values are narrowed to `f32` on read).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BinElem {
+    F32,
+    F64,
+}
+
+impl BinElem {
+    fn size(self) -> usize {
+        match self {
+            BinElem::F32 => 4,
+            BinElem::F64 => 8,
+        }
+    }
+}
+
+/// Little-endian float rows read from a binary file on demand — the
+/// mmap-style path for datasets on disk.  [`BinFileSource::open`] reads
+/// the raw headerless `.bin` format (f32 rows);
+/// [`BinFileSource::open_npy`] reads NumPy `.npy` files (v1/v2 headers,
+/// C-order `<f4`/`<f8`, f64 narrowed to f32).  On unix, reads are
+/// positioned (`pread`): no shared cursor and no lock, so concurrent
+/// base-case gathers from the worker pool never serialise on this
+/// source.
 pub struct BinFileSource {
     path: PathBuf,
     rows: usize,
     dim: usize,
-    #[cfg(unix)]
-    file: File,
-    #[cfg(not(unix))]
-    file: Mutex<File>,
+    /// Byte offset of the first data element (0 for raw `.bin`, the
+    /// header length for `.npy`).
+    offset: u64,
+    elem: BinElem,
+    file: PositionedFile,
 }
 
 impl BinFileSource {
@@ -296,10 +315,52 @@ impl BinFileSource {
             path,
             rows: bytes / row_bytes,
             dim,
-            #[cfg(unix)]
-            file,
-            #[cfg(not(unix))]
-            file: Mutex::new(file),
+            offset: 0,
+            elem: BinElem::F32,
+            file: PositionedFile::new(file),
+        })
+    }
+
+    /// Open a NumPy `.npy` file: v1/v2 headers, C-order (`fortran_order:
+    /// False`), dtype `<f4` or `<f8` (f64 is narrowed to f32 on read),
+    /// shape `(n,)` or `(n, d)`.  Shape and dtype come from the header;
+    /// the payload length is validated against them.
+    pub fn open_npy(path: impl AsRef<Path>) -> io::Result<BinFileSource> {
+        let path = path.as_ref().to_path_buf();
+        let file = File::open(&path)?;
+        let header = parse_npy_header(&path, &file)?;
+        let total = file.metadata()?.len();
+        // checked: a corrupt header declaring an absurd shape must be
+        // rejected, not wrap the expected length around
+        let payload = header
+            .rows
+            .checked_mul(header.dim)
+            .and_then(|e| e.checked_mul(header.elem.size()))
+            .ok_or_else(|| {
+                npy_err(&path, format!("npy shape ({}, {}) overflows", header.rows, header.dim))
+            })?;
+        let expect = header.offset + payload as u64;
+        if total != expect {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "{}: payload is {} bytes but the npy header promises {} ({}×{} {:?})",
+                    path.display(),
+                    total - header.offset.min(total),
+                    expect - header.offset,
+                    header.rows,
+                    header.dim,
+                    header.elem
+                ),
+            ));
+        }
+        Ok(BinFileSource {
+            path,
+            rows: header.rows,
+            dim: header.dim,
+            offset: header.offset,
+            elem: header.elem,
+            file: PositionedFile::new(file),
         })
     }
 
@@ -308,18 +369,9 @@ impl BinFileSource {
     }
 
     /// Read `bytes.len()` bytes at absolute `offset` (lock-free `pread`
-    /// on unix, mutexed seek + read elsewhere).
-    #[cfg(unix)]
+    /// on unix, mutexed seek + read elsewhere — see [`PositionedFile`]).
     fn read_at(&self, offset: u64, bytes: &mut [u8]) -> io::Result<()> {
-        use std::os::unix::fs::FileExt;
-        self.file.read_exact_at(bytes, offset)
-    }
-
-    #[cfg(not(unix))]
-    fn read_at(&self, offset: u64, bytes: &mut [u8]) -> io::Result<()> {
-        let mut f = self.file.lock().unwrap();
-        f.seek(SeekFrom::Start(offset))?;
-        f.read_exact(bytes)
+        self.file.read_at(offset, bytes)
     }
 }
 
@@ -342,17 +394,198 @@ impl DatasetSource for BinFileSource {
             static STAGING: std::cell::RefCell<Vec<u8>> =
                 const { std::cell::RefCell::new(Vec::new()) };
         }
+        let esize = self.elem.size();
         STAGING.with(|cell| {
             let mut bytes = cell.borrow_mut();
             bytes.clear();
-            bytes.resize(out.len() * 4, 0);
-            self.read_at((start * self.dim * 4) as u64, &mut bytes)?;
-            for (v, b) in out.iter_mut().zip(bytes.chunks_exact(4)) {
-                *v = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            bytes.resize(out.len() * esize, 0);
+            self.read_at(self.offset + (start * self.dim * esize) as u64, &mut bytes)?;
+            match self.elem {
+                BinElem::F32 => {
+                    for (v, b) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+                        *v = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+                    }
+                }
+                BinElem::F64 => {
+                    for (v, b) in out.iter_mut().zip(bytes.chunks_exact(8)) {
+                        let d = f64::from_le_bytes([
+                            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+                        ]);
+                        *v = d as f32;
+                    }
+                }
             }
             Ok(())
         })
     }
+}
+
+// ---------------------------------------------------------------------------
+// npy header parsing
+// ---------------------------------------------------------------------------
+
+struct NpyHeader {
+    rows: usize,
+    dim: usize,
+    elem: BinElem,
+    offset: u64,
+}
+
+fn npy_err(path: &Path, msg: impl std::fmt::Display) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("{}: {msg}", path.display()))
+}
+
+/// Parse a NumPy v1/v2 `.npy` header: magic `\x93NUMPY`, version, header
+/// length (u16 LE for v1, u32 LE for v2), then the ASCII dict
+/// `{'descr': '<f4', 'fortran_order': False, 'shape': (n, d), }`.
+fn parse_npy_header(path: &Path, file: &File) -> io::Result<NpyHeader> {
+    use std::io::Read;
+    let mut f = file;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic).map_err(|_| npy_err(path, "file too short for an npy magic"))?;
+    if &magic[..6] != b"\x93NUMPY" {
+        return Err(npy_err(path, "not an npy file (bad magic)"));
+    }
+    let major = magic[6];
+    let (hlen, data_from) = match major {
+        1 => {
+            let mut b = [0u8; 2];
+            f.read_exact(&mut b)?;
+            (u16::from_le_bytes(b) as usize, 10usize)
+        }
+        2 | 3 => {
+            let mut b = [0u8; 4];
+            f.read_exact(&mut b)?;
+            (u32::from_le_bytes(b) as usize, 12usize)
+        }
+        v => return Err(npy_err(path, format!("unsupported npy major version {v}"))),
+    };
+    let mut hdr = vec![0u8; hlen];
+    f.read_exact(&mut hdr).map_err(|_| npy_err(path, "truncated npy header"))?;
+    // header dicts are ASCII (latin-1 by spec; keys/values we read are
+    // plain ASCII in practice)
+    let hdr = String::from_utf8_lossy(&hdr);
+
+    let descr = npy_field(&hdr, "descr").ok_or_else(|| npy_err(path, "npy header has no 'descr'"))?;
+    let elem = match descr.trim_matches(|c| c == '\'' || c == '"') {
+        "<f4" => BinElem::F32,
+        "<f8" => BinElem::F64,
+        other => {
+            return Err(npy_err(
+                path,
+                format!("unsupported npy dtype {other:?} (supported: <f4, <f8)"),
+            ))
+        }
+    };
+    let fortran =
+        npy_field(&hdr, "fortran_order").ok_or_else(|| npy_err(path, "npy header has no 'fortran_order'"))?;
+    if fortran.trim() != "False" {
+        return Err(npy_err(path, "fortran_order npy files are not supported (need C order)"));
+    }
+    let shape =
+        npy_field(&hdr, "shape").ok_or_else(|| npy_err(path, "npy header has no 'shape'"))?;
+    let dims = parse_npy_shape(shape).ok_or_else(|| npy_err(path, format!("bad npy shape {shape:?}")))?;
+    let (rows, dim) = match dims.as_slice() {
+        [n] => (*n, 1usize),
+        [n, d] => (*n, *d),
+        other => {
+            return Err(npy_err(
+                path,
+                format!("npy shape has {} axes (need 1 or 2 for point rows)", other.len()),
+            ))
+        }
+    };
+    if dim == 0 || rows == 0 {
+        return Err(npy_err(path, "npy shape has a zero axis"));
+    }
+    Ok(NpyHeader { rows, dim, elem, offset: (data_from + hlen) as u64 })
+}
+
+/// Value substring of `'key': value` inside an npy header dict — up to
+/// the comma that closes the entry (tuple commas are kept by matching
+/// parens).
+fn npy_field<'a>(hdr: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("'{key}':");
+    let at = hdr.find(&pat)? + pat.len();
+    let rest = &hdr[at..];
+    let mut depth = 0i32;
+    for (i, c) in rest.char_indices() {
+        match c {
+            '(' | '[' => depth += 1,
+            ')' | ']' => depth -= 1,
+            ',' | '}' if depth <= 0 => return Some(rest[..i].trim()),
+            _ => {}
+        }
+    }
+    Some(rest.trim_end_matches('}').trim())
+}
+
+/// Parse `(n,)` / `(n, d)` into its axes.
+fn parse_npy_shape(s: &str) -> Option<Vec<usize>> {
+    let inner = s.trim().strip_prefix('(')?.strip_suffix(')')?;
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue; // the trailing comma of a 1-tuple
+        }
+        out.push(part.parse().ok()?);
+    }
+    Some(out)
+}
+
+/// Stream `src` into the raw little-endian f32 `.bin` format
+/// [`BinFileSource::open`] reads, one `chunk_rows`-sized tile at a time —
+/// the workhorse of `hiref convert`.  Returns the number of rows written.
+/// Both read and write failures stop the conversion immediately (a doomed
+/// run must not keep streaming a beyond-RAM source).
+pub fn convert_to_bin(
+    src: &dyn DatasetSource,
+    out_path: impl AsRef<Path>,
+    chunk_rows: usize,
+    arena: &ScratchArena,
+) -> io::Result<usize> {
+    let mut w = io::BufWriter::new(File::create(out_path.as_ref())?);
+    let n = src.rows();
+    let d = src.dim();
+    let mut written = 0usize;
+    if n > 0 {
+        let chunk = chunk_rows.max(1).min(n);
+        // one staged write per tile, not one per element — at beyond-RAM
+        // scales the per-call overhead of element-wise writes dominates
+        let mut staging: Vec<u8> = Vec::new();
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + chunk).min(n);
+            let mut tile;
+            let view = match src.view_rows(start, end) {
+                Some(v) => v,
+                None => {
+                    tile = arena.take_f32((end - start) * d);
+                    src.fill_rows(start, &mut tile)?;
+                    MatView::from_slice(end - start, d, &tile)
+                }
+            };
+            staging.clear();
+            staging.reserve(view.data.len() * 4);
+            for &v in view.data {
+                staging.extend_from_slice(&v.to_le_bytes());
+            }
+            w.write_all(&staging)?;
+            written += view.rows;
+            start = end;
+        }
+    }
+    w.into_inner()?.sync_all().ok();
+    // row sanity check: a short generator or a lying header would
+    // otherwise silently truncate the dataset
+    if written != src.rows() {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("wrote {written} rows but the source reports {}", src.rows()),
+        ));
+    }
+    Ok(written)
 }
 
 /// Write a matrix (or any view) as little-endian `f32` rows — the format
@@ -478,6 +711,112 @@ mod tests {
         std::fs::write(&path, [0u8; 7]).unwrap();
         assert!(BinFileSource::open(&path, 5).is_err());
         let _ = std::fs::remove_file(&path);
+    }
+
+    /// Write a minimal `.npy` file by hand (v1 or v2 header).
+    fn write_npy(path: &Path, descr: &str, fortran: bool, shape: &str, payload: &[u8], v2: bool) {
+        let dict = format!(
+            "{{'descr': '{descr}', 'fortran_order': {}, 'shape': {shape}, }}",
+            if fortran { "True" } else { "False" }
+        );
+        // pad the header so data starts 64-byte aligned, as numpy does
+        let pre = if v2 { 12 } else { 10 };
+        let pad = (64 - (pre + dict.len() + 1) % 64) % 64;
+        let header = format!("{dict}{}\n", " ".repeat(pad));
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"\x93NUMPY");
+        if v2 {
+            bytes.extend_from_slice(&[2, 0]);
+            bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        } else {
+            bytes.extend_from_slice(&[1, 0]);
+            bytes.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        }
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(payload);
+        std::fs::write(path, bytes).unwrap();
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("hiref_npy_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn npy_f32_v1_round_trips() {
+        let m = rand_mat(21, 13, 3);
+        let payload: Vec<u8> = m.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let path = tmp("f32v1.npy");
+        write_npy(&path, "<f4", false, "(13, 3)", &payload, false);
+        let src = BinFileSource::open_npy(&path).unwrap();
+        assert_eq!((src.rows(), src.dim()), (13, 3));
+        for chunk in [1usize, 5, 13] {
+            assert_eq!(drain(&src, chunk), m.data, "chunk {chunk}");
+        }
+        let mut row = [0.0f32; 3];
+        src.fetch_row(7, &mut row).unwrap();
+        assert_eq!(&row, m.row(7));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn npy_f64_v2_narrows_to_f32() {
+        let m = rand_mat(22, 9, 2);
+        let payload: Vec<u8> =
+            m.data.iter().flat_map(|&v| (v as f64).to_le_bytes()).collect();
+        let path = tmp("f64v2.npy");
+        write_npy(&path, "<f8", false, "(9, 2)", &payload, true);
+        let src = BinFileSource::open_npy(&path).unwrap();
+        assert_eq!((src.rows(), src.dim()), (9, 2));
+        // f32 → f64 → f32 is exact, so the round trip is bitwise
+        assert_eq!(drain(&src, 4), m.data);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn npy_one_dimensional_shape_reads_as_dim_1() {
+        let vals = [1.5f32, -2.0, 3.25];
+        let payload: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let path = tmp("1d.npy");
+        write_npy(&path, "<f4", false, "(3,)", &payload, false);
+        let src = BinFileSource::open_npy(&path).unwrap();
+        assert_eq!((src.rows(), src.dim()), (3, 1));
+        assert_eq!(drain(&src, 2), vals);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn npy_rejects_fortran_wrong_dtype_and_bad_lengths() {
+        let payload = [0u8; 24];
+        let path = tmp("bad.npy");
+        write_npy(&path, "<f4", true, "(2, 3)", &payload, false);
+        assert!(BinFileSource::open_npy(&path).is_err(), "fortran order must be rejected");
+        write_npy(&path, "<i4", false, "(2, 3)", &payload, false);
+        assert!(BinFileSource::open_npy(&path).is_err(), "non-float dtype must be rejected");
+        // header promises more data than the payload holds
+        write_npy(&path, "<f4", false, "(2, 4)", &payload, false);
+        assert!(BinFileSource::open_npy(&path).is_err(), "short payload must be rejected");
+        // not an npy file at all
+        std::fs::write(&path, b"PK\x03\x04 definitely a zip").unwrap();
+        assert!(BinFileSource::open_npy(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn convert_to_bin_round_trips_npy() {
+        let m = rand_mat(23, 17, 4);
+        let payload: Vec<u8> = m.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let npy = tmp("conv.npy");
+        let bin = tmp("conv.bin");
+        write_npy(&npy, "<f4", false, "(17, 4)", &payload, false);
+        let src = BinFileSource::open_npy(&npy).unwrap();
+        let arena = ScratchArena::new(1);
+        let written = convert_to_bin(&src, &bin, 5, &arena).unwrap();
+        assert_eq!(written, 17);
+        let out = BinFileSource::open(&bin, 4).unwrap();
+        assert_eq!((out.rows(), out.dim()), (17, 4));
+        assert_eq!(drain(&out, 17), m.data);
+        let _ = std::fs::remove_file(&npy);
+        let _ = std::fs::remove_file(&bin);
     }
 
     #[test]

@@ -1,0 +1,87 @@
+//! Positioned file I/O shared by every file-backed data path
+//! ([`crate::data::stream::BinFileSource`], [`crate::pool::SpillStore`]).
+//!
+//! On unix, reads and writes are positioned (`pread`/`pwrite`): no shared
+//! cursor and no lock, so concurrent accesses from the worker pool never
+//! serialise on the file.  Elsewhere a mutexed seek + read/write pair
+//! provides the same interface.  One implementation, two consumers — the
+//! platform-conditional code cannot drift between them.
+
+use std::fs::File;
+use std::io;
+#[cfg(not(unix))]
+use std::sync::Mutex;
+
+/// A file handle supporting concurrent offset-addressed reads and writes.
+pub(crate) struct PositionedFile {
+    #[cfg(unix)]
+    file: File,
+    #[cfg(not(unix))]
+    file: Mutex<File>,
+}
+
+impl PositionedFile {
+    pub(crate) fn new(file: File) -> PositionedFile {
+        PositionedFile {
+            #[cfg(unix)]
+            file,
+            #[cfg(not(unix))]
+            file: Mutex::new(file),
+        }
+    }
+
+    /// Read exactly `bytes.len()` bytes at absolute `offset`.
+    #[cfg(unix)]
+    pub(crate) fn read_at(&self, offset: u64, bytes: &mut [u8]) -> io::Result<()> {
+        use std::os::unix::fs::FileExt;
+        self.file.read_exact_at(bytes, offset)
+    }
+
+    /// Write all of `bytes` at absolute `offset`.
+    #[cfg(unix)]
+    pub(crate) fn write_at(&self, offset: u64, bytes: &[u8]) -> io::Result<()> {
+        use std::os::unix::fs::FileExt;
+        self.file.write_all_at(bytes, offset)
+    }
+
+    #[cfg(not(unix))]
+    pub(crate) fn read_at(&self, offset: u64, bytes: &mut [u8]) -> io::Result<()> {
+        use std::io::{Read, Seek, SeekFrom};
+        let mut f = self.file.lock().unwrap();
+        f.seek(SeekFrom::Start(offset))?;
+        f.read_exact(bytes)
+    }
+
+    #[cfg(not(unix))]
+    pub(crate) fn write_at(&self, offset: u64, bytes: &[u8]) -> io::Result<()> {
+        use std::io::{Seek, SeekFrom, Write};
+        let mut f = self.file.lock().unwrap();
+        f.seek(SeekFrom::Start(offset))?;
+        f.write_all(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs::OpenOptions;
+
+    #[test]
+    fn positioned_round_trip() {
+        let path = std::env::temp_dir().join(format!("hiref_fsio_{}.bin", std::process::id()));
+        let file =
+            OpenOptions::new().read(true).write(true).create(true).truncate(true).open(&path).unwrap();
+        let pf = PositionedFile::new(file);
+        pf.write_at(4, &[1, 2, 3, 4]).unwrap();
+        pf.write_at(0, &[9, 9]).unwrap();
+        let mut out = [0u8; 4];
+        pf.read_at(4, &mut out).unwrap();
+        assert_eq!(out, [1, 2, 3, 4]);
+        let mut two = [0u8; 2];
+        pf.read_at(0, &mut two).unwrap();
+        assert_eq!(two, [9, 9]);
+        // reads past EOF error instead of panicking
+        assert!(pf.read_at(6, &mut out).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -68,14 +68,29 @@
 //! 1-lane case of the batched loop, and per-block seeds are anchored on
 //! each range's first original id, invariant to execution order.
 //!
-//! **Memory model:** `O(n·d)` factor working copies + `O(n)` permutations
-//! and output + transient scratch that tracks **one in-flight level**
-//! (`O(n·(d + r))` during the root LROT solve, still `O(n·r)` at deeper
-//! scales where lane count doubles as lane size halves, and
-//! `O(threads · base_size²)` at the leaf levels) — everything is linear
-//! in `n`; nothing is ever quadratic.  [`coordinator::hiref::RunStats`]
-//! reports the batch shape (`batches`, `lanes_max`, `batched_frac`)
-//! alongside the arena counters.
+//! **Memory model — three tiers, every one bounded by construction:**
+//!
+//! 1. **Streaming ingestion, `O(chunk_rows · d)`** — the raw point
+//!    clouds never need to be resident: chunked sources
+//!    ([`data::stream::DatasetSource`]) feed the factor builders one
+//!    tile per worker, and base-case blocks gather their ≤ `base_size`
+//!    rows on demand.
+//! 2. **Spillable factors, `O(spill_budget)`** — the per-side factor
+//!    working copies live behind [`pool::FactorStore`]: fully resident
+//!    by default ([`pool::ResidentStore`], zero-cost), or file-backed
+//!    ([`pool::SpillStore`], via [`api::HiRefBuilder::spill_dir`]) so
+//!    that only a bounded shard cache plus **one in-flight level batch's
+//!    lane windows** occupy memory, with bit-identical output.
+//! 3. **Resident permutations, `O(n)`** — the position→id orders, the
+//!    output bijection, and transient arena scratch that tracks one
+//!    in-flight level (`O(n·r)` LROT state at any scale,
+//!    `O(threads · base_size²)` dense tiles at the leaves).
+//!
+//! Nothing anywhere is quadratic in `n`.
+//! [`coordinator::hiref::RunStats`] reports every tier: the batch shape
+//! (`batches`, `lanes_max`, `batched_frac`), the arena counters, and the
+//! spill counters (`spill_bytes_written`, `spill_reads`,
+//! `resident_factor_bytes`).
 //!
 //! ## Streaming ingestion (beyond-RAM datasets)
 //!
@@ -100,14 +115,16 @@
 //! assert!(out.is_bijection());
 //! ```
 //!
-//! **Streaming memory model:** `O(n·(d+2))` factor working copies
-//! (`RunStats::factor_bytes`) + `O(n)` permutations/output +
-//! `O(chunk_rows·d)` ingestion tiles and in-flight-block scratch
-//! (`RunStats::peak_scratch_bytes`) — peak memory is bounded by
-//! construction, independent of how the points are stored, and the result
-//! is identical to the in-memory path for any chunk size.  `cli align
-//! --chunk-rows`, `examples/million_points.rs` and the `bench_stream`
-//! profile (`BENCH_stream.json`) exercise this path end to end.
+//! With spill configured too, the chunked builders write factor tiles
+//! **straight into the [`pool::SpillStore`]** — the full factor matrices
+//! never exist in memory at any point of the run, completing the
+//! three-tier model above: tiles are `O(chunk_rows·d)`, factors are
+//! `O(spill_budget)` + one level batch, and only the `O(n)` permutations
+//! must stay resident.  The result is identical to the in-memory path
+//! for any chunk size and any budget.  `cli align --chunk-rows
+//! [--spill-dir]`, `examples/million_points.rs` and the
+//! `bench_stream`/`bench_spill` profiles (`BENCH_stream.json`,
+//! `BENCH_spill.json`) exercise these paths end to end.
 //!
 //! ## Quick start
 //!
@@ -125,6 +142,18 @@
 //! assert!(out.is_bijection());
 //! println!("primal W2² cost = {}", out.cost(&x, &y, CostKind::SqEuclidean));
 //! ```
+//!
+//! The knobs that govern scale (all on [`api::HiRefBuilder`], mirrored by
+//! `cli align` flags):
+//!
+//! | Knob | Memory tier it bounds | Default |
+//! |---|---|---|
+//! | `chunk_rows` | streaming ingestion tiles, `O(chunk_rows·d)` | 65536 |
+//! | `spill_dir` | factor working copies → file-backed shards | off (resident) |
+//! | `spill_budget_bytes` | resident spill-shard cache | 256 MiB |
+//! | `base_size` | leaf dense tiles, `O(threads · base_size²)` | 256 |
+//! | `threads` | worker fan-out (and per-worker tiles) | all cores |
+//! | `batching` | level-synchronous batched execution | on |
 //!
 //! Every baseline the paper compares against is reachable through the
 //! same uniform interface — a [`api::TransportSolver`] that maps a
@@ -168,6 +197,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod costs;
 pub mod data;
+mod fsio;
 pub mod linalg;
 pub mod metrics;
 pub mod pool;

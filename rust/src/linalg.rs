@@ -10,11 +10,15 @@
 //! On top of the single-matrix views sits the **strided batch layer**:
 //! a [`BatchView`] names many matrices at once as `(row_range, cols)`
 //! windows over one shared buffer (exactly how a level of the HiRef
-//! hierarchy lays out its same-shape co-cluster factor blocks), and the
-//! `batch_*` kernels ([`batch_matmul_into`], [`batch_vt_matmul_into`],
-//! [`batch_row_softmax_into`]) iterate the items in their inner loop so a
-//! caller parallelises with **one** `parallel_map` over lane subsets
-//! instead of dispatching per-block tasks.
+//! hierarchy lays out its same-shape co-cluster factor blocks) — the
+//! dispatch unit of the batched LROT solver and the PJRT boundary.  The
+//! `batch_*` wrappers ([`batch_matmul_into`], [`batch_vt_matmul_into`],
+//! [`batch_row_softmax_into`]) are the strided *reference form* of the
+//! per-item operation: the LROT iteration loop applies the scalar
+//! kernels ([`matmul_into_slice`] / [`vt_matmul_into_slice`]) directly
+//! to each lane's persistent window — the same FLOPs in the same order,
+//! which the wrappers' unit tests pin down — so external callers get the
+//! batched form while the hot loop pays no per-iteration item plumbing.
 
 /// Row-major single-precision matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -341,10 +345,14 @@ pub fn vt_matmul_into_slice(a: MatView<'_>, b: MatView<'_>, out: &mut [f32]) {
 //
 // Each kernel applies its per-matrix operation to every (a_i, b_i, out_i)
 // triple of the batch, serially — parallelism belongs to the caller, who
-// wraps ONE `pool::parallel_map` around disjoint lane subsets (the
-// level-synchronous replacement for per-block task dispatch).  Outputs are
-// per-item windows of one shared `out` buffer, described by `out_items`;
-// windows must be pairwise disjoint (each is fully overwritten).
+// wraps ONE `pool::parallel_map` around disjoint lane subsets.  Outputs
+// are per-item windows of one shared `out` buffer, described by
+// `out_items`; windows must be pairwise disjoint (each is fully
+// overwritten).  These are the strided REFERENCE form: since the LROT
+// hot loop moved to persistent per-lane windows it calls the scalar
+// `*_into_slice` kernels per lane directly (identical FLOPs/order — the
+// unit tests below pin the equivalence), and the wrappers serve external
+// batch consumers and the PJRT-boundary tests.
 
 /// `C_i = A_i @ B_i` for every item `i` of the batch.
 pub fn batch_matmul_into(a: BatchView<'_>, b: BatchView<'_>, out: &mut [f32], out_items: &[BatchItem]) {

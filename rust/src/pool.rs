@@ -27,6 +27,17 @@
 //!   the level-synchronous batch scheduler became the default
 //!   (`coordinator::hiref`), this serves the `batching(false)` per-block
 //!   A/B path.
+//!
+//! On top of these sits [`store::FactorStore`] — the ownership
+//! abstraction for the per-side cost-factor working copies, with a
+//! zero-cost resident implementation ([`store::ResidentStore`], a
+//! [`RangeShared`] underneath) and a file-backed spillable one
+//! ([`store::SpillStore`]) so that only the `O(n)` permutations must stay
+//! resident.
+
+pub mod store;
+
+pub use store::{Checkout, FactorStore, ResidentStore, SpillStore, StoreStats};
 
 use std::cell::UnsafeCell;
 use std::marker::PhantomData;

@@ -1,0 +1,1002 @@
+//! Spillable, shard-aware storage for the per-side cost-factor working
+//! copies — the [`FactorStore`] abstraction behind which every consumer of
+//! the `O(n·(d+2))` factor buffers now lives.
+//!
+//! The refinement core (see [`crate::coordinator::hiref`]) is linear-space
+//! by construction, but until this module the *working copies of the cost
+//! factors* were fully resident, so they — not the algorithm — set the
+//! scaling ceiling.  `FactorStore` turns factor ownership into an access
+//! protocol:
+//!
+//! * [`ResidentStore`] — today's behaviour, zero-cost: the factor rows
+//!   live in one [`RangeShared`] buffer and a checkout is nothing but a
+//!   pointer + per-lane offsets (no copy, no I/O).
+//! * [`SpillStore`] — file-backed: the factor rows live in a
+//!   process-private scratch file, and a checkout reads exactly the
+//!   requested contiguous level ranges into one packed arena buffer.
+//!   Released shards are written back (write-through), any cached shard
+//!   overlapping the released rows is invalidated (so the cache is
+//!   always coherent with the file), and a bounded LRU cache — capped by
+//!   `budget_bytes` — keeps the freshly released shards resident so
+//!   checkouts at the next scale skip the disk.
+//!
+//! The unit of checkout is a **batch of contiguous level ranges** — the
+//! lane windows of one level-synchronous LROT batch — which makes a level
+//! batch the unit of storage and therefore the natural shard unit for the
+//! multi-node sharding the ROADMAP aims at.  The cache invariant is
+//! `resident ≤ budget + pinned` at all times: cached (unpinned) shards
+//! never exceed the budget, and pinned bytes are exactly the in-flight
+//! checkout windows (one level batch at a time on the batched path).
+//!
+//! Spilled and resident runs are **bit-identical by construction**: a
+//! checkout hands back exactly the same `f32` rows either way (the spill
+//! file round-trips raw bits), and the solver consumes the same
+//! [`crate::linalg::MatView`]/`BatchView` windows over them.
+
+use std::fs::OpenOptions;
+use std::io;
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::fsio::PositionedFile;
+use crate::linalg::Mat;
+use crate::pool::{RangeShared, ScratchArena, ScratchF32};
+
+/// Storage counters of a [`FactorStore`], all in bytes unless noted.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Bytes written to the spill file (initial population + dirty shard
+    /// write-backs); 0 for a resident store.
+    pub spill_bytes_written: usize,
+    /// Shard reads served from the spill file (count, not bytes); 0 for a
+    /// resident store and for checkouts served from the shard cache.
+    pub spill_reads: usize,
+    /// Checkout lanes served from the resident shard cache.
+    pub cache_hits: usize,
+    /// Factor bytes resident right now (cache + pinned checkouts; for a
+    /// resident store this is the whole buffer).
+    pub resident_bytes: usize,
+    /// High-water mark of `resident_bytes`.
+    pub resident_peak: usize,
+    /// Bytes pinned by in-flight checkouts right now.
+    pub pinned_bytes: usize,
+    /// High-water mark of `pinned_bytes` — “one level batch's lane
+    /// windows” in the memory model (`resident_peak ≤ budget +
+    /// pinned_peak` for a [`SpillStore`]).
+    pub pinned_peak: usize,
+}
+
+/// One lane of a [`Checkout`]: which store rows it covers and where it
+/// starts inside the checked-out span.
+struct Lane {
+    start: u32,
+    rows: u32,
+    off_rows: usize,
+}
+
+/// A pinned set of factor-row windows: one shared row-major span of
+/// `cols()` columns in which lane `i` occupies rows
+/// `lane_row(i) .. lane_row(i) + len_i`.
+///
+/// For a [`ResidentStore`] the span aliases the store's own buffer
+/// (zero-copy, lane offsets relative to the covering span); for a
+/// [`SpillStore`] it is a packed arena buffer holding exactly the
+/// requested rows.  Accessors are `unsafe` under the same caller-enforced
+/// disjointness contract as [`RangeShared`]: no concurrently live borrow
+/// may overlap an exclusive [`Checkout::lane_mut`] window, which the
+/// refinement hierarchy guarantees structurally (sibling lanes are
+/// disjoint; the LROT read phase ends before the re-index write phase).
+pub struct Checkout<'a> {
+    ptr: *mut f32,
+    len: usize,
+    k: usize,
+    lanes: Vec<Lane>,
+    /// Pinned bytes this checkout accounts for in its store.
+    bytes: usize,
+    /// Keeps the packed arena buffer alive for spill checkouts.
+    _buf: Option<ScratchF32<'a>>,
+}
+
+// SAFETY: same argument as `SharedSlice` — all access goes through the
+// caller-enforced disjoint-range contract on the unsafe accessors.
+unsafe impl Send for Checkout<'_> {}
+unsafe impl Sync for Checkout<'_> {}
+
+impl Checkout<'_> {
+    /// Number of lanes (requested ranges).
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Row offset of lane `i` within the checked-out span.
+    #[inline]
+    pub fn lane_row(&self, i: usize) -> usize {
+        self.lanes[i].off_rows
+    }
+
+    /// Number of rows in lane `i`.
+    #[inline]
+    pub fn lane_rows(&self, i: usize) -> usize {
+        self.lanes[i].rows as usize
+    }
+
+    /// The whole span as a shared slice (the backing buffer of a
+    /// `BatchView` over the lanes).
+    ///
+    /// # Safety
+    /// No concurrently live [`Checkout::lane_mut`] borrow may exist
+    /// anywhere in the span.
+    #[inline]
+    pub unsafe fn data(&self) -> &[f32] {
+        std::slice::from_raw_parts(self.ptr, self.len)
+    }
+
+    /// Lane `i` as a shared slice (`len_i · cols` elements, row-major).
+    ///
+    /// # Safety
+    /// No concurrently live exclusive borrow may overlap lane `i`.
+    #[inline]
+    pub unsafe fn lane(&self, i: usize) -> &[f32] {
+        let l = &self.lanes[i];
+        std::slice::from_raw_parts(self.ptr.add(l.off_rows * self.k), l.rows as usize * self.k)
+    }
+
+    /// Lane `i` as an exclusive slice (the in-place re-index target).
+    ///
+    /// # Safety
+    /// No concurrently live borrow of any kind may overlap lane `i`.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn lane_mut(&self, i: usize) -> &mut [f32] {
+        let l = &self.lanes[i];
+        std::slice::from_raw_parts_mut(self.ptr.add(l.off_rows * self.k), l.rows as usize * self.k)
+    }
+}
+
+/// Ownership abstraction for one side's factor working copy: `rows()`
+/// row-major rows of `cols()` f32 columns, accessed through pinned
+/// [`Checkout`]s of contiguous level ranges.
+///
+/// Implementations must hand back bit-identical rows regardless of where
+/// they live — the refinement engine relies on this for the spilled ==
+/// resident equivalence.
+pub trait FactorStore: Send + Sync {
+    /// Number of factor rows (`n`).
+    fn rows(&self) -> usize;
+
+    /// Factor width (`d + 2` for squared Euclidean, `t` for Indyk).
+    fn cols(&self) -> usize;
+
+    /// Write `data.len()/cols()` rows starting at `start_row` (initial
+    /// population by the chunked factor builders — tiles go straight into
+    /// the store, no full-matrix intermediate).
+    ///
+    /// # Safety
+    /// Concurrent callers must write pairwise-disjoint row windows, and no
+    /// checkout may be live over the written rows (same contract as
+    /// [`crate::pool::SharedSlice`]).
+    unsafe fn write_rows(&self, start_row: usize, data: &[f32]) -> io::Result<()>;
+
+    /// Read `out.len()/cols()` rows starting at `start_row` (scattered
+    /// access, e.g. the Indyk regression's sampled rows).
+    ///
+    /// # Safety
+    /// No concurrently live overlapping [`FactorStore::write_rows`] or
+    /// dirty checkout may exist over the read rows.
+    unsafe fn read_rows(&self, start_row: usize, out: &mut [f32]) -> io::Result<()>;
+
+    /// Populate `n_rows` rows starting at `start_row` by calling `fill`
+    /// on a mutable window (`fill` must fully overwrite it — prior
+    /// content is unspecified) — the tile-build primitive of the chunked
+    /// factor builders.  The default stages in `arena` scratch and writes
+    /// through ([`FactorStore::write_rows`]); a resident store overrides
+    /// it to hand out its own row window, so the resident build path
+    /// stays copy-free.
+    ///
+    /// # Safety
+    /// Same contract as [`FactorStore::write_rows`]: concurrent callers
+    /// must fill pairwise-disjoint row windows with no live checkout over
+    /// them.
+    unsafe fn fill_rows_with(
+        &self,
+        start_row: usize,
+        n_rows: usize,
+        arena: &ScratchArena,
+        fill: &mut dyn FnMut(&mut [f32]),
+    ) -> io::Result<()> {
+        let mut buf = arena.take_f32(n_rows * self.cols());
+        fill(&mut buf);
+        self.write_rows(start_row, &buf)
+    }
+
+    /// Pin the factor rows of `ranges` (pairwise disjoint, each in
+    /// bounds) as the lanes of one [`Checkout`].  Spill stores draw the
+    /// packed buffer from `arena`.
+    fn checkout<'a>(
+        &'a self,
+        ranges: &[Range<u32>],
+        arena: &'a ScratchArena,
+    ) -> io::Result<Checkout<'a>>;
+
+    /// Unpin a checkout.  `dirty` means the lanes were rewritten in place
+    /// (the counting-sort re-index) and must be persisted; a resident
+    /// store mutated its own buffer, a spill store writes the shards back
+    /// and re-admits them to the bounded cache.
+    fn release(&self, co: Checkout<'_>, dirty: bool) -> io::Result<()>;
+
+    /// Storage counters (see [`StoreStats`]).
+    fn stats(&self) -> StoreStats;
+
+    /// Materialise the full factor matrix (tests and compatibility
+    /// wrappers only — the solve path never does this).
+    fn into_mat(self: Box<Self>) -> io::Result<Mat>;
+}
+
+// ---------------------------------------------------------------------------
+// ResidentStore
+// ---------------------------------------------------------------------------
+
+/// The zero-cost [`FactorStore`]: factor rows live in one
+/// [`RangeShared`] buffer (exactly the pre-store behaviour), and a
+/// checkout is a pointer into it — no copy, no I/O, `release` is a no-op.
+pub struct ResidentStore {
+    rows: usize,
+    k: usize,
+    buf: RangeShared<f32>,
+    pinned: AtomicUsize,
+    pinned_peak: AtomicUsize,
+}
+
+impl ResidentStore {
+    /// Take ownership of prebuilt factors.
+    pub fn from_mat(m: Mat) -> ResidentStore {
+        ResidentStore {
+            rows: m.rows,
+            k: m.cols,
+            buf: RangeShared::new(m.data),
+            pinned: AtomicUsize::new(0),
+            pinned_peak: AtomicUsize::new(0),
+        }
+    }
+
+    /// An all-zero store for the chunked builders to fill.
+    pub fn zeroed(rows: usize, k: usize) -> ResidentStore {
+        ResidentStore::from_mat(Mat::zeros(rows, k))
+    }
+}
+
+impl FactorStore for ResidentStore {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.k
+    }
+
+    unsafe fn write_rows(&self, start_row: usize, data: &[f32]) -> io::Result<()> {
+        debug_assert_eq!(data.len() % self.k, 0);
+        // SAFETY: caller promises disjoint concurrent windows (trait
+        // contract); bounds are checked by slice_mut.
+        self.buf
+            .slice_mut(start_row * self.k, start_row * self.k + data.len())
+            .copy_from_slice(data);
+        Ok(())
+    }
+
+    unsafe fn read_rows(&self, start_row: usize, out: &mut [f32]) -> io::Result<()> {
+        debug_assert_eq!(out.len() % self.k, 0);
+        // SAFETY: caller promises no overlapping concurrent writes.
+        out.copy_from_slice(
+            self.buf.slice(start_row * self.k, start_row * self.k + out.len()),
+        );
+        Ok(())
+    }
+
+    unsafe fn fill_rows_with(
+        &self,
+        start_row: usize,
+        n_rows: usize,
+        _arena: &ScratchArena,
+        fill: &mut dyn FnMut(&mut [f32]),
+    ) -> io::Result<()> {
+        // copy-free: hand the builder our own row window directly.
+        // SAFETY: caller promises disjoint concurrent windows (trait
+        // contract); bounds are checked by slice_mut.
+        fill(self.buf.slice_mut(start_row * self.k, (start_row + n_rows) * self.k));
+        Ok(())
+    }
+
+    fn checkout<'a>(
+        &'a self,
+        ranges: &[Range<u32>],
+        _arena: &'a ScratchArena,
+    ) -> io::Result<Checkout<'a>> {
+        assert!(!ranges.is_empty(), "empty checkout");
+        let lo = ranges.iter().map(|r| r.start).min().unwrap() as usize;
+        let hi = ranges.iter().map(|r| r.end).max().unwrap() as usize;
+        assert!(hi <= self.rows, "checkout {lo}..{hi} out of 0..{}", self.rows);
+        let mut bytes = 0usize;
+        let lanes = ranges
+            .iter()
+            .map(|r| {
+                assert!(r.start <= r.end, "inverted range");
+                bytes += (r.end - r.start) as usize * self.k * 4;
+                Lane { start: r.start, rows: r.end - r.start, off_rows: (r.start as usize) - lo }
+            })
+            .collect();
+        let pinned = self.pinned.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.pinned_peak.fetch_max(pinned, Ordering::Relaxed);
+        Ok(Checkout {
+            // SAFETY: lo·k is in bounds (hi ≤ rows was asserted above);
+            // aliasing is governed by the Checkout accessor contract.
+            ptr: unsafe { self.buf.ptr.add(lo * self.k) },
+            len: (hi - lo) * self.k,
+            k: self.k,
+            lanes,
+            bytes,
+            _buf: None,
+        })
+    }
+
+    fn release(&self, co: Checkout<'_>, _dirty: bool) -> io::Result<()> {
+        // in-place mutation already landed in the shared buffer
+        self.pinned.fetch_sub(co.bytes, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn stats(&self) -> StoreStats {
+        let bytes = self.rows * self.k * 4;
+        StoreStats {
+            resident_bytes: bytes,
+            resident_peak: bytes,
+            pinned_bytes: self.pinned.load(Ordering::Relaxed),
+            pinned_peak: self.pinned_peak.load(Ordering::Relaxed),
+            ..StoreStats::default()
+        }
+    }
+
+    fn into_mat(self: Box<Self>) -> io::Result<Mat> {
+        Ok(Mat::from_vec(self.rows, self.k, self.buf.into_inner()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SpillStore
+// ---------------------------------------------------------------------------
+
+/// Distinguishes spill files of concurrent solves within one process.
+static SPILL_FILE_ID: AtomicU64 = AtomicU64::new(0);
+
+#[inline]
+fn f32s_as_bytes(v: &[f32]) -> &[u8] {
+    // SAFETY: f32 has no padding and alignment ≥ u8; the spill file is
+    // process-private native-endian scratch, never an interchange format.
+    unsafe { std::slice::from_raw_parts(v.as_ptr().cast(), v.len() * 4) }
+}
+
+#[inline]
+fn f32s_as_bytes_mut(v: &mut [f32]) -> &mut [u8] {
+    // SAFETY: as above; any bit pattern is a valid f32.
+    unsafe { std::slice::from_raw_parts_mut(v.as_mut_ptr().cast(), v.len() * 4) }
+}
+
+/// One cached shard: a contiguous level range released by a dirty
+/// checkout, kept resident until the LRU budget pushes it out.  The
+/// buffer is an `Arc` so checkout hits can clone the handle under the
+/// cache lock and memcpy outside it.
+struct Shard {
+    start: u32,
+    rows: u32,
+    buf: std::sync::Arc<[f32]>,
+    last_use: u64,
+}
+
+#[derive(Default)]
+struct SpillState {
+    /// Cache coherence invariant: every cached shard always agrees with
+    /// the (write-through) spill file — a dirty release first drops any
+    /// cached shard overlapping the released windows, then inserts the
+    /// fresh ones.  Any containing shard is therefore valid to serve a
+    /// checkout; no ordering or recency rule carries correctness.
+    shards: Vec<Shard>,
+    tick: u64,
+    cached: usize,
+    pinned: usize,
+    resident_peak: usize,
+    pinned_peak: usize,
+}
+
+/// The file-backed [`FactorStore`]: rows live in a process-private scratch
+/// file (removed on drop); checkouts pack the requested level ranges into
+/// one arena buffer; dirty releases write shards back (write-through) and
+/// cache them under an LRU budget of `budget_bytes`.
+pub struct SpillStore {
+    path: PathBuf,
+    rows: usize,
+    k: usize,
+    budget: usize,
+    file: PositionedFile,
+    state: Mutex<SpillState>,
+    bytes_written: AtomicUsize,
+    reads: AtomicUsize,
+    hits: AtomicUsize,
+}
+
+impl SpillStore {
+    /// Create an all-zero `rows × k` store backed by a fresh scratch file
+    /// under `dir` (created if absent), with a resident shard cache capped
+    /// at `budget_bytes` (0 disables caching — every checkout reads the
+    /// file).
+    pub fn create(
+        dir: impl AsRef<Path>,
+        rows: usize,
+        k: usize,
+        budget_bytes: usize,
+    ) -> io::Result<SpillStore> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let id = SPILL_FILE_ID.fetch_add(1, Ordering::Relaxed);
+        let path = dir.join(format!("hiref-factors-{}-{id}.spill", std::process::id()));
+        let file = OpenOptions::new().read(true).write(true).create_new(true).open(&path)?;
+        file.set_len((rows * k * 4) as u64)?;
+        Ok(SpillStore {
+            path,
+            rows,
+            k,
+            budget: budget_bytes,
+            file: PositionedFile::new(file),
+            state: Mutex::new(SpillState::default()),
+            bytes_written: AtomicUsize::new(0),
+            reads: AtomicUsize::new(0),
+            hits: AtomicUsize::new(0),
+        })
+    }
+
+    /// Where the scratch file lives (removed when the store drops).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Positioned I/O (lock-free `pread`/`pwrite` on unix — see
+    /// [`PositionedFile`]).
+    fn read_at(&self, offset: u64, bytes: &mut [u8]) -> io::Result<()> {
+        self.file.read_at(offset, bytes)
+    }
+
+    fn write_at(&self, offset: u64, bytes: &[u8]) -> io::Result<()> {
+        self.file.write_at(offset, bytes)
+    }
+}
+
+impl Drop for SpillStore {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+impl FactorStore for SpillStore {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.k
+    }
+
+    unsafe fn write_rows(&self, start_row: usize, data: &[f32]) -> io::Result<()> {
+        debug_assert_eq!(data.len() % self.k, 0);
+        assert!(start_row * self.k + data.len() <= self.rows * self.k, "write out of bounds");
+        self.write_at((start_row * self.k * 4) as u64, f32s_as_bytes(data))?;
+        self.bytes_written.fetch_add(data.len() * 4, Ordering::Relaxed);
+        Ok(())
+    }
+
+    unsafe fn read_rows(&self, start_row: usize, out: &mut [f32]) -> io::Result<()> {
+        debug_assert_eq!(out.len() % self.k, 0);
+        assert!(start_row * self.k + out.len() <= self.rows * self.k, "read out of bounds");
+        self.read_at((start_row * self.k * 4) as u64, f32s_as_bytes_mut(out))?;
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn checkout<'a>(
+        &'a self,
+        ranges: &[Range<u32>],
+        arena: &'a ScratchArena,
+    ) -> io::Result<Checkout<'a>> {
+        assert!(!ranges.is_empty(), "empty checkout");
+        let k = self.k;
+        let total_rows: usize = ranges.iter().map(|r| (r.end - r.start) as usize).sum();
+        let mut guard = arena.take_f32(total_rows * k);
+        let bytes = total_rows * k * 4;
+        let mut lanes = Vec::with_capacity(ranges.len());
+        let mut misses: Vec<(usize, u32, u32)> = Vec::new();
+        // (dest element offset, shard handle, source element offset, len)
+        let mut hits: Vec<(usize, std::sync::Arc<[f32]>, usize, usize)> = Vec::new();
+        {
+            let mut st = self.state.lock().unwrap();
+            st.tick += 1;
+            let tick = st.tick;
+            let mut off = 0usize;
+            for r in ranges {
+                assert!(
+                    r.start <= r.end && (r.end as usize) <= self.rows,
+                    "checkout range {r:?} out of 0..{}",
+                    self.rows
+                );
+                let rows = r.end - r.start;
+                // any containing shard is coherent (see SpillState); only
+                // the Arc handle is cloned under the lock — the memcpy
+                // happens after it is released
+                if let Some(sh) = st
+                    .shards
+                    .iter_mut()
+                    .find(|s| s.start <= r.start && r.end <= s.start + s.rows)
+                {
+                    sh.last_use = tick;
+                    let so = (r.start - sh.start) as usize * k;
+                    hits.push((off * k, sh.buf.clone(), so, rows as usize * k));
+                } else {
+                    misses.push((off, r.start, rows));
+                }
+                lanes.push(Lane { start: r.start, rows, off_rows: off });
+                off += rows as usize;
+            }
+            st.pinned += bytes;
+            st.pinned_peak = st.pinned_peak.max(st.pinned);
+            st.resident_peak = st.resident_peak.max(st.cached + st.pinned);
+        }
+        // copies and file reads happen outside the lock: pread is
+        // positional and the shard handles are refcounted, so concurrent
+        // per-block checkouts don't serialise on the cache
+        for (dst, buf, so, len) in hits {
+            guard[dst..dst + len].copy_from_slice(&buf[so..so + len]);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        for (off, start, rows) in misses {
+            let dst = &mut guard[off * k..(off + rows as usize) * k];
+            if let Err(e) = self.read_at((start as usize * k * 4) as u64, f32s_as_bytes_mut(dst)) {
+                self.state.lock().unwrap().pinned -= bytes;
+                return Err(e);
+            }
+            self.reads.fetch_add(1, Ordering::Relaxed);
+        }
+        let ptr = guard.as_mut_ptr();
+        let len = guard.len();
+        Ok(Checkout { ptr, len, k, lanes, bytes, _buf: Some(guard) })
+    }
+
+    fn release(&self, co: Checkout<'_>, dirty: bool) -> io::Result<()> {
+        let k = self.k;
+        let mut write_err = None;
+        // Only a suffix of the released lanes can survive this release's
+        // own LRU churn (inserts share one tick; earlier inserts are the
+        // eviction victims), so copy only that suffix — not every
+        // budget-fitting lane.
+        let mut stage_from = co.lanes.len();
+        if dirty {
+            let mut acc = 0usize;
+            for (i, lane) in co.lanes.iter().enumerate().rev() {
+                let lane_bytes = lane.rows as usize * k * 4;
+                if lane_bytes == 0 || acc + lane_bytes > self.budget {
+                    break;
+                }
+                acc += lane_bytes;
+                stage_from = i;
+            }
+        }
+        // staged outside the lock: (lane index, shard copy)
+        let mut staged: Vec<(usize, std::sync::Arc<[f32]>)> = Vec::new();
+        if dirty {
+            // write-through: the file is always authoritative, which makes
+            // cache eviction free and shard lookups coherent
+            for (i, lane) in co.lanes.iter().enumerate() {
+                // SAFETY: release owns `co` exclusively; no borrows remain.
+                let data = unsafe { co.lane(i) };
+                match self.write_at((lane.start as usize * k * 4) as u64, f32s_as_bytes(data)) {
+                    Ok(()) => {
+                        self.bytes_written.fetch_add(data.len() * 4, Ordering::Relaxed);
+                        if i >= stage_from {
+                            staged.push((i, std::sync::Arc::from(data)));
+                        }
+                    }
+                    Err(e) => {
+                        write_err = Some(e);
+                        break;
+                    }
+                }
+            }
+        }
+        let mut st = self.state.lock().unwrap();
+        st.pinned -= co.bytes;
+        if dirty {
+            // coherence: drop every cached shard overlapping the released
+            // windows — their copies of those rows are stale against the
+            // file.  This runs even after a mid-loop write failure: lanes
+            // written before the error already changed the file, so the
+            // overlapping cache must go regardless (the run is doomed
+            // anyway, but no path may ever serve stale rows).
+            let mut freed = 0usize;
+            st.shards.retain(|s| {
+                let overlaps = co.lanes.iter().any(|l| {
+                    s.start < l.start + l.rows && l.start < s.start + s.rows
+                });
+                if overlaps {
+                    freed += s.buf.len() * 4;
+                }
+                !overlaps
+            });
+            st.cached -= freed;
+        }
+        if dirty && write_err.is_none() {
+            st.tick += 1;
+            let tick = st.tick;
+            for (i, buf) in staged {
+                let lane = &co.lanes[i];
+                let lane_bytes = lane.rows as usize * k * 4;
+                while st.cached + lane_bytes > self.budget {
+                    let victim = st
+                        .shards
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(_, s)| s.last_use)
+                        .map(|(i, _)| i);
+                    match victim {
+                        Some(v) => {
+                            let s = st.shards.swap_remove(v);
+                            st.cached -= s.buf.len() * 4;
+                        }
+                        None => break,
+                    }
+                }
+                // staging guarantees lane_bytes ≤ budget and the eviction
+                // loop only stops under-budget or on an empty cache, so
+                // the insert below always fits
+                debug_assert!(st.cached + lane_bytes <= self.budget);
+                st.shards.push(Shard { start: lane.start, rows: lane.rows, buf, last_use: tick });
+                st.cached += lane_bytes;
+            }
+            st.resident_peak = st.resident_peak.max(st.cached + st.pinned);
+        }
+        drop(st);
+        drop(co);
+        match write_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    fn stats(&self) -> StoreStats {
+        let st = self.state.lock().unwrap();
+        StoreStats {
+            spill_bytes_written: self.bytes_written.load(Ordering::Relaxed),
+            spill_reads: self.reads.load(Ordering::Relaxed),
+            cache_hits: self.hits.load(Ordering::Relaxed),
+            resident_bytes: st.cached + st.pinned,
+            resident_peak: st.resident_peak,
+            pinned_bytes: st.pinned,
+            pinned_peak: st.pinned_peak,
+        }
+    }
+
+    fn into_mat(self: Box<Self>) -> io::Result<Mat> {
+        let mut m = Mat::zeros(self.rows, self.k);
+        self.read_at(0, f32s_as_bytes_mut(&mut m.data))?;
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn rand_mat(seed: u64, n: usize, k: usize) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut m = Mat::zeros(n, k);
+        rng.fill_normal(&mut m.data);
+        m
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "hiref_store_{}_{}_{tag}",
+            std::process::id(),
+            SPILL_FILE_ID.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// Populate a store with `m`'s rows through the builder write path.
+    fn fill(store: &dyn FactorStore, m: &Mat) {
+        unsafe { store.write_rows(0, &m.data) }.unwrap();
+    }
+
+    #[test]
+    fn resident_store_round_trips_and_checkout_is_zero_copy() {
+        let m = rand_mat(0, 20, 3);
+        let store = ResidentStore::zeroed(20, 3);
+        fill(&store, &m);
+        let mut out = vec![0.0f32; 4 * 3];
+        unsafe { store.read_rows(5, &mut out) }.unwrap();
+        assert_eq!(out, &m.data[15..27]);
+        let arena = ScratchArena::new(1);
+        let co = store.checkout(&[2..5, 9..12], &arena).unwrap();
+        assert_eq!(co.lanes(), 2);
+        // lanes are windows of the covering span at their absolute offsets
+        assert_eq!(co.lane_row(0), 0);
+        assert_eq!(co.lane_row(1), 7);
+        assert_eq!(unsafe { co.lane(0) }, &m.data[2 * 3..5 * 3]);
+        assert_eq!(unsafe { co.lane(1) }, &m.data[9 * 3..12 * 3]);
+        // zero-copy: no arena scratch was drawn
+        assert_eq!(arena.peak_bytes(), 0);
+        let st = store.stats();
+        assert_eq!(st.pinned_bytes, 6 * 3 * 4);
+        store.release(co, true).unwrap();
+        assert_eq!(store.stats().pinned_bytes, 0);
+        let got = Box::new(store).into_mat().unwrap();
+        assert_eq!(got.data, m.data);
+    }
+
+    #[test]
+    fn resident_checkout_mutation_lands_in_store() {
+        let m = rand_mat(1, 10, 2);
+        let store = ResidentStore::from_mat(m.clone());
+        let arena = ScratchArena::new(1);
+        let co = store.checkout(&[3..6], &arena).unwrap();
+        unsafe { co.lane_mut(0) }.iter_mut().for_each(|v| *v = -1.0);
+        store.release(co, true).unwrap();
+        let got = Box::new(store).into_mat().unwrap();
+        assert!(got.data[6..12].iter().all(|&v| v == -1.0));
+        assert_eq!(got.data[..6], m.data[..6]);
+    }
+
+    #[test]
+    fn spill_store_round_trips_bit_identically() {
+        let dir = tmp_dir("roundtrip");
+        let m = rand_mat(2, 37, 4);
+        let store = SpillStore::create(&dir, 37, 4, 1 << 20).unwrap();
+        fill(&store, &m);
+        let mut out = vec![0.0f32; 5 * 4];
+        unsafe { store.read_rows(7, &mut out) }.unwrap();
+        for (a, b) in out.iter().zip(&m.data[28..48]) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let arena = ScratchArena::new(1);
+        let co = store.checkout(&[0..10, 20..37], &arena).unwrap();
+        assert_eq!(unsafe { co.lane(0) }, &m.data[..10 * 4]);
+        assert_eq!(unsafe { co.lane(1) }, &m.data[20 * 4..]);
+        // packed layout: lane 1 starts right after lane 0
+        assert_eq!(co.lane_row(1), 10);
+        store.release(co, false).unwrap();
+        let path = store.path().to_path_buf();
+        assert!(path.exists());
+        let got = Box::new(store).into_mat().unwrap();
+        assert_eq!(got.data, m.data);
+        assert!(!path.exists(), "spill file must be removed on drop");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_dirty_release_persists_and_caches() {
+        let dir = tmp_dir("dirty");
+        let m = rand_mat(3, 16, 2);
+        let store = SpillStore::create(&dir, 16, 2, 1 << 20).unwrap();
+        fill(&store, &m);
+        let arena = ScratchArena::new(1);
+        let reads0 = store.stats().spill_reads;
+        let co = store.checkout(&[4..8], &arena).unwrap();
+        unsafe { co.lane_mut(0) }.iter_mut().for_each(|v| *v = 9.0);
+        store.release(co, true).unwrap();
+        // sub-range of the released shard: served from cache, no disk read
+        let co = store.checkout(&[5..7], &arena).unwrap();
+        assert!(unsafe { co.lane(0) }.iter().all(|&v| v == 9.0));
+        store.release(co, false).unwrap();
+        let st = store.stats();
+        assert_eq!(st.spill_reads, reads0 + 1, "second checkout must hit the cache");
+        assert!(st.cache_hits >= 1);
+        // the file too holds the mutation (write-through)
+        let got = Box::new(store).into_mat().unwrap();
+        assert!(got.data[8..16].iter().all(|&v| v == 9.0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dirty_release_invalidates_stale_overlapping_shards() {
+        let dir = tmp_dir("coherence");
+        let m = rand_mat(4, 8, 1);
+        let store = SpillStore::create(&dir, 8, 1, 1 << 20).unwrap();
+        fill(&store, &m);
+        let arena = ScratchArena::new(1);
+        // parent release caches 0..8
+        let co = store.checkout(&[0..8], &arena).unwrap();
+        store.release(co, true).unwrap();
+        // child rewrites 0..4: the parent's cached copy of those rows is
+        // now stale, so the dirty release must drop it (write-through
+        // keeps the file fresh for the untouched half)
+        let co = store.checkout(&[0..4], &arena).unwrap();
+        unsafe { co.lane_mut(0) }.iter_mut().for_each(|v| *v = 5.0);
+        store.release(co, true).unwrap();
+        // a grandchild inside the child sees the child's fresh shard...
+        let co = store.checkout(&[1..3], &arena).unwrap();
+        assert!(unsafe { co.lane(0) }.iter().all(|&v| v == 5.0));
+        store.release(co, false).unwrap();
+        // ...and a sibling in the untouched half — whose covering parent
+        // shard was invalidated — reads correct rows back from the file
+        let reads_before = store.stats().spill_reads;
+        let co = store.checkout(&[5..7], &arena).unwrap();
+        assert_eq!(unsafe { co.lane(0) }, &m.data[5..7]);
+        store.release(co, false).unwrap();
+        assert_eq!(store.stats().spill_reads, reads_before + 1, "parent shard must be gone");
+        // even after LRU churn no stale data can ever be served: only
+        // coherent shards remain cached
+        let co = store.checkout(&[0..2], &arena).unwrap();
+        assert!(unsafe { co.lane(0) }.iter().all(|&v| v == 5.0));
+        store.release(co, false).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pin_release_accounting_and_budget_invariant() {
+        let dir = tmp_dir("pins");
+        let n = 64usize;
+        let k = 4usize;
+        let budget = 24 * k * 4; // fits 24 rows of cache
+        let store = SpillStore::create(&dir, n, k, budget).unwrap();
+        fill(&store, &rand_mat(5, n, k));
+        let arena = ScratchArena::new(1);
+        let co_a = store.checkout(&[0..16], &arena).unwrap();
+        let co_b = store.checkout(&[16..48], &arena).unwrap();
+        let st = store.stats();
+        assert_eq!(st.pinned_bytes, (16 + 32) * k * 4);
+        assert_eq!(st.pinned_peak, (16 + 32) * k * 4);
+        store.release(co_b, true).unwrap();
+        store.release(co_a, true).unwrap();
+        let st = store.stats();
+        assert_eq!(st.pinned_bytes, 0);
+        // the 32-row shard exceeds the 24-row budget and is never cached;
+        // the 16-row shard fits
+        assert!(st.resident_bytes <= budget, "cache {} over budget {budget}", st.resident_bytes);
+        // the acceptance invariant: resident never exceeded budget + the
+        // in-flight lane windows
+        assert!(
+            st.resident_peak <= budget + st.pinned_peak,
+            "resident_peak {} > budget {budget} + pinned_peak {}",
+            st.resident_peak,
+            st.pinned_peak
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn zero_budget_forces_disk_reads_every_checkout() {
+        let dir = tmp_dir("zero");
+        let store = SpillStore::create(&dir, 32, 2, 0).unwrap();
+        fill(&store, &rand_mat(6, 32, 2));
+        let arena = ScratchArena::new(1);
+        for _ in 0..3 {
+            let co = store.checkout(&[0..32], &arena).unwrap();
+            store.release(co, true).unwrap();
+        }
+        let st = store.stats();
+        assert_eq!(st.spill_reads, 3, "every checkout must read the file");
+        assert_eq!(st.cache_hits, 0);
+        assert!(st.resident_peak <= st.pinned_peak);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lru_eviction_prefers_least_recently_used() {
+        let dir = tmp_dir("lru");
+        let k = 1usize;
+        // budget holds exactly two 8-row shards
+        let store = SpillStore::create(&dir, 32, k, 16 * 4).unwrap();
+        fill(&store, &rand_mat(7, 32, k));
+        let arena = ScratchArena::new(1);
+        for r in [0u32..8, 8..16] {
+            let co = store.checkout(&[r], &arena).unwrap();
+            store.release(co, true).unwrap();
+        }
+        // touch 0..8 so 8..16 becomes the LRU victim
+        let co = store.checkout(&[0..8], &arena).unwrap();
+        store.release(co, false).unwrap();
+        let reads_before = store.stats().spill_reads;
+        // caching 16..24 evicts 8..16
+        let co = store.checkout(&[16..24], &arena).unwrap();
+        store.release(co, true).unwrap();
+        let co = store.checkout(&[0..8], &arena).unwrap(); // still cached
+        store.release(co, false).unwrap();
+        let co = store.checkout(&[8..16], &arena).unwrap(); // evicted: disk
+        store.release(co, false).unwrap();
+        let st = store.stats();
+        assert_eq!(st.spill_reads, reads_before + 2, "16..24 miss + evicted 8..16");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn create_under_a_file_errors() {
+        let dir = tmp_dir("badparent");
+        let file_path = dir.join("iamafile");
+        std::fs::write(&file_path, b"x").unwrap();
+        let bad = file_path.join("sub");
+        assert!(SpillStore::create(&bad, 8, 2, 0).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_file_surfaces_read_errors() {
+        let dir = tmp_dir("trunc");
+        let store = SpillStore::create(&dir, 16, 2, 0).unwrap();
+        fill(&store, &rand_mat(8, 16, 2));
+        // truncate behind the store's back: reads past EOF must error, not
+        // panic (the mid-solve failure path)
+        OpenOptions::new()
+            .write(true)
+            .open(store.path())
+            .unwrap()
+            .set_len(8)
+            .unwrap();
+        let arena = ScratchArena::new(1);
+        let err = store.checkout(&[8..16], &arena).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        // the failed checkout must not leak pinned bytes
+        assert_eq!(store.stats().pinned_bytes, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fill_rows_with_matches_write_rows_on_both_stores() {
+        let dir = tmp_dir("fillwith");
+        let m = rand_mat(10, 12, 3);
+        let res = ResidentStore::zeroed(12, 3);
+        let sp = SpillStore::create(&dir, 12, 3, 0).unwrap();
+        let arena = ScratchArena::new(1);
+        for store in [&res as &dyn FactorStore, &sp as &dyn FactorStore] {
+            // build in two tiles through the builder primitive
+            for (start, rows) in [(0usize, 7usize), (7, 5)] {
+                unsafe {
+                    store
+                        .fill_rows_with(start, rows, &arena, &mut |out| {
+                            out.copy_from_slice(&m.data[start * 3..(start + rows) * 3]);
+                        })
+                        .unwrap();
+                }
+            }
+            let mut got = vec![0.0f32; 12 * 3];
+            unsafe { store.read_rows(0, &mut got) }.unwrap();
+            assert_eq!(got, m.data);
+        }
+        // the resident override is copy-free: no arena scratch drawn for
+        // its fills (the spill default stages one tile per call)
+        assert!(arena.peak_bytes() > 0, "spill default must stage in the arena");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_and_resident_checkouts_agree_bitwise() {
+        let dir = tmp_dir("agree");
+        let m = rand_mat(9, 48, 5);
+        let res = ResidentStore::from_mat(m.clone());
+        let sp = SpillStore::create(&dir, 48, 5, 64).unwrap();
+        fill(&sp, &m);
+        let arena = ScratchArena::new(1);
+        for ranges in [vec![0u32..48], vec![3..9, 9..15, 40..48]] {
+            let a = res.checkout(&ranges, &arena).unwrap();
+            let b = sp.checkout(&ranges, &arena).unwrap();
+            for l in 0..ranges.len() {
+                let (la, lb) = unsafe { (a.lane(l), b.lane(l)) };
+                assert_eq!(la.len(), lb.len());
+                for (x, y) in la.iter().zip(lb) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "lane {l} diverges");
+                }
+            }
+            res.release(a, false).unwrap();
+            sp.release(b, false).unwrap();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

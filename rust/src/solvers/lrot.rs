@@ -21,10 +21,7 @@
 //! The mirror-descent loop is written once, over **lanes**: a level of the
 //! HiRef hierarchy hands all of its same-shape co-cluster blocks to
 //! [`solve_factored_batch`] as one strided [`BatchView`] pair, and every
-//! iteration runs the batched gradient kernels
-//! ([`crate::linalg::batch_vt_matmul_into`] /
-//! [`crate::linalg::batch_matmul_into`]) across all still-active lanes —
-//! one `parallel_map` over lane chunks per iteration instead of one task
+//! iteration runs one `parallel_map` over lane chunks instead of one task
 //! per block.  A **per-lane convergence mask** retires lanes whose hard
 //! co-clustering has stabilised, so early-converged blocks stop paying
 //! matmuls while their siblings finish.  [`solve_factored_in`] is the
@@ -32,9 +29,19 @@
 //! every floating-point operation and therefore cannot drift: lane `l` of
 //! a batch is bit-identical to a solo solve of the same block with the
 //! same seed, for any thread count and any batch composition.
+//!
+//! The iteration loop is **allocation-free**: every per-lane buffer —
+//! logits, factor exponentials, gradients, the `UᵀQ`/`VᵀR` workspace —
+//! lives in strided per-batch state checked out of the arena *once* at
+//! batch setup, with per-lane window offsets fixed up front ([`Geo`]), so
+//! an iteration touches no allocator and no arena freelist.  The gradient
+//! stage applies the scalar kernels ([`crate::linalg::matmul_into_slice`]
+//! / [`crate::linalg::vt_matmul_into_slice`]) per lane window — the same
+//! FLOPs, in the same order, as the strided `batch_*` wrappers those
+//! kernels back.
 
 use crate::linalg::{
-    batch_matmul_into, batch_vt_matmul_into, fast_exp, slice_max_abs, BatchItem, BatchView, Mat,
+    fast_exp, matmul_into_slice, slice_max_abs, vt_matmul_into_slice, BatchItem, BatchView, Mat,
     MatView,
 };
 use crate::pool::{self, RangeShared, ScratchArena, SharedSlice};
@@ -138,7 +145,9 @@ pub fn solve_factored_in(
 }
 
 /// Per-lane geometry: shapes, active row counts, and each lane's window
-/// offsets into the strided state buffers shared by the whole batch.
+/// offsets into the strided state buffers shared by the whole batch —
+/// computed once at batch setup so the iteration loop never rebuilds
+/// per-lane layout.
 #[derive(Clone, Copy)]
 struct Geo {
     s: usize,
@@ -150,6 +159,8 @@ struct Geo {
     off_sr: usize,
     off_svr: usize,
     off_f: usize,
+    /// Element offset of this lane's `k×r` workspace window.
+    off_w: usize,
 }
 
 /// Per-lane convergence bookkeeping (worker-exclusive via `RangeShared`).
@@ -162,7 +173,10 @@ struct LaneCtl {
 /// Strided per-lane solver state: each buffer holds every lane's window
 /// back to back; a lane is only ever touched by the single worker that
 /// owns it for the current pass, which is what makes the `SharedSlice`
-/// disjoint-range accesses sound.
+/// disjoint-range accesses sound.  The exponential, gradient and
+/// workspace buffers are **persistent for the whole batch** — checked out
+/// of the arena once at setup — so the mirror-descent hot loop allocates
+/// nothing (first half of the ROADMAP "persistent lane workers" item).
 struct BatchState<'a> {
     loga: SharedSlice<'a, f32>,
     logb: SharedSlice<'a, f32>,
@@ -170,6 +184,14 @@ struct BatchState<'a> {
     hpot: SharedSlice<'a, f32>,
     log_q: SharedSlice<'a, f32>,
     log_r: SharedSlice<'a, f32>,
+    /// exp(log_Q) / exp(log_R), refreshed in place each iteration.
+    q_exp: SharedSlice<'a, f32>,
+    r_exp: SharedSlice<'a, f32>,
+    /// Mirror-descent gradients, one `s×r` / `sv×r` window per lane.
+    gq: SharedSlice<'a, f32>,
+    gr: SharedSlice<'a, f32>,
+    /// `k×r` matmul workspace per lane (holds `VᵀR`, then `UᵀQ`).
+    w: SharedSlice<'a, f32>,
     ctl: RangeShared<LaneCtl>,
 }
 
@@ -232,28 +254,46 @@ pub fn solve_factored_batch(
 
     // --- per-lane geometry + strided offsets ---------------------------
     let mut geo = Vec::with_capacity(lanes);
-    let (mut ts, mut tsv, mut tsr, mut tsvr, mut tf) = (0usize, 0, 0, 0, 0);
+    let (mut ts, mut tsv, mut tsr, mut tsvr, mut tf, mut tw) = (0usize, 0, 0, 0, 0, 0);
     for l in 0..lanes {
         let (s, k) = (u.items[l].nrows(), u.items[l].cols);
         let (sv, kv) = (v.items[l].nrows(), v.items[l].cols);
         assert_eq!(k, kv, "factor width mismatch in lane {l}");
         let (ax, ay) = active[l];
         assert!(ax <= s && ay <= sv, "lane {l}: active exceeds shape");
-        geo.push(Geo { s, sv, ax, ay, off_s: ts, off_sv: tsv, off_sr: tsr, off_svr: tsvr, off_f: tf });
+        geo.push(Geo {
+            s,
+            sv,
+            ax,
+            ay,
+            off_s: ts,
+            off_sv: tsv,
+            off_sr: tsr,
+            off_svr: tsvr,
+            off_f: tf,
+            off_w: tw,
+        });
         ts += s;
         tsv += sv;
         tsr += s * r;
         tsvr += sv * r;
         tf += s.max(sv);
+        tw += k * r;
     }
 
-    // --- persistent per-lane state: lane windows of shared checkouts ---
+    // --- persistent per-lane state: lane windows of shared checkouts,
+    // --- taken once per batch so the iteration loop never allocates ----
     let mut loga_buf = arena.take_f32(ts);
     let mut logb_buf = arena.take_f32(tsv);
     let mut fpot_buf = arena.take_f32(tf);
     let mut hpot_buf = arena.take_f32(lanes * r);
     let mut logq_buf = arena.take_f32(tsr);
     let mut logr_buf = arena.take_f32(tsvr);
+    let mut qexp_buf = arena.take_f32(tsr);
+    let mut rexp_buf = arena.take_f32(tsvr);
+    let mut gq_buf = arena.take_f32(tsr);
+    let mut gr_buf = arena.take_f32(tsvr);
+    let mut w_buf = arena.take_f32(tw);
     let st = BatchState {
         loga: SharedSlice::new(&mut loga_buf),
         logb: SharedSlice::new(&mut logb_buf),
@@ -261,6 +301,11 @@ pub fn solve_factored_batch(
         hpot: SharedSlice::new(&mut hpot_buf),
         log_q: SharedSlice::new(&mut logq_buf),
         log_r: SharedSlice::new(&mut logr_buf),
+        q_exp: SharedSlice::new(&mut qexp_buf),
+        r_exp: SharedSlice::new(&mut rexp_buf),
+        gq: SharedSlice::new(&mut gq_buf),
+        gr: SharedSlice::new(&mut gr_buf),
+        w: SharedSlice::new(&mut w_buf),
         ctl: RangeShared::new((0..lanes).map(|_| LaneCtl::default()).collect()),
     };
 
@@ -281,7 +326,7 @@ pub fn solve_factored_batch(
         }
         let check = it % 5 == 4;
         let converged =
-            par_lane_chunks(&live, threads, |ids| step_lanes(ids, check, u, v, cfg, r, logg, &geo, &st, arena));
+            par_lane_chunks(&live, threads, |ids| step_lanes(ids, check, u, v, cfg, r, logg, &geo, &st));
         if !converged.is_empty() {
             let mut gone = vec![false; lanes];
             for &l in &converged {
@@ -334,10 +379,15 @@ fn init_lane(
     sinkhorn_project(lr, g.sv, r, logb, logg, cfg.inner, &mut f[..g.sv], h);
 }
 
-/// One mirror-descent iteration for this worker's lanes: exp the logits,
-/// (every 5th iteration) test the hard co-clustering for stability and
-/// retire stable lanes, then run the batched gradient kernels over the
-/// lanes still stepping, take the step and re-project.  Returns the lane
+/// One mirror-descent iteration for this worker's lanes: exp the logits
+/// into the persistent exponential windows, (every 5th iteration) test
+/// the hard co-clustering for stability and retire stable lanes, then
+/// compute the gradient in each still-stepping lane's persistent windows,
+/// take the step and re-project.  Everything writes into per-lane windows
+/// of the batch state fixed at setup — the loop performs **zero**
+/// allocations and zero arena checkouts.  Per-lane work is self-contained
+/// (no cross-lane data flow), so results are bit-identical to the
+/// historical stage-wise batched-kernel formulation.  Returns the lane
 /// ids that converged this iteration.
 #[allow(clippy::too_many_arguments)]
 fn step_lanes(
@@ -350,112 +400,60 @@ fn step_lanes(
     logg: f32,
     geo: &[Geo],
     st: &BatchState<'_>,
-    arena: &ScratchArena,
 ) -> Vec<u32> {
-    // dense transient layout for this worker's lanes
-    let mut q_items = Vec::with_capacity(ids.len());
-    let mut rr_items = Vec::with_capacity(ids.len());
-    let (mut rq, mut rrr) = (0usize, 0usize);
+    let inv_g = r as f32;
+    let mut converged = Vec::new();
     for &l in ids {
-        let g = &geo[l as usize];
-        q_items.push(BatchItem::new(rq..rq + g.s, r));
-        rr_items.push(BatchItem::new(rrr..rrr + g.sv, r));
-        rq += g.s;
-        rrr += g.sv;
-    }
-    let mut q_buf = arena.take_f32(rq * r);
-    let mut rr_buf = arena.take_f32(rrr * r);
-
-    // Q = exp(log_Q), R = exp(log_R) per lane
-    for (i, &l) in ids.iter().enumerate() {
-        let g = &geo[l as usize];
-        // SAFETY: lane l is owned by this worker for the whole call.
+        let l = l as usize;
+        let g = &geo[l];
+        let k = u.items[l].cols;
+        // Q = exp(log_Q), R = exp(log_R) into the persistent windows.
+        // SAFETY (here and below): lane l's windows are owned by this
+        // worker for the whole call — lane subsets are disjoint.
         let lq = unsafe { st.log_q.slice(g.off_sr, g.off_sr + g.s * r) };
         let lr = unsafe { st.log_r.slice(g.off_svr, g.off_svr + g.sv * r) };
-        let qi = &q_items[i];
-        let ri = &rr_items[i];
-        exp_into(lq, &mut q_buf[qi.start()..qi.end()]);
-        exp_into(lr, &mut rr_buf[ri.start()..ri.end()]);
-    }
+        let qe = unsafe { st.q_exp.slice_mut(g.off_sr, g.off_sr + g.s * r) };
+        let re = unsafe { st.r_exp.slice_mut(g.off_svr, g.off_svr + g.sv * r) };
+        exp_into(lq, qe);
+        exp_into(lr, re);
 
-    // Early stop per lane: once the hard co-clustering is stable, further
-    // mirror-descent steps cannot change HiRef's refinement decision.
-    let mut converged = Vec::new();
-    let mut stepping: Vec<usize> = Vec::with_capacity(ids.len());
-    for (i, &l) in ids.iter().enumerate() {
-        // SAFETY: disjoint single-lane window, this worker only.
-        let ctl = unsafe { &mut st.ctl.slice_mut(l as usize, l as usize + 1)[0] };
+        // Early stop: once the hard co-clustering is stable, further
+        // mirror-descent steps cannot change HiRef's refinement decision.
+        let ctl = unsafe { &mut st.ctl.slice_mut(l, l + 1)[0] };
         ctl.iters += 1;
         if check {
-            let qi = &q_items[i];
-            let ri = &rr_items[i];
-            let labels = (
-                argmax_labels(&q_buf[qi.start()..qi.end()], r),
-                argmax_labels(&rr_buf[ri.start()..ri.end()], r),
-            );
+            let labels = (argmax_labels(qe, r), argmax_labels(re, r));
             if ctl.prev.as_ref() == Some(&labels) {
-                converged.push(l);
+                converged.push(l as u32);
                 continue;
             }
             ctl.prev = Some(labels);
         }
-        stepping.push(i);
-    }
-    if stepping.is_empty() {
-        return converged;
-    }
 
-    // batch views for the lanes still stepping
-    let u_sub: Vec<BatchItem> = stepping.iter().map(|&i| u.items[ids[i] as usize].clone()).collect();
-    let v_sub: Vec<BatchItem> = stepping.iter().map(|&i| v.items[ids[i] as usize].clone()).collect();
-    let q_sub: Vec<BatchItem> = stepping.iter().map(|&i| q_items[i].clone()).collect();
-    let rr_sub: Vec<BatchItem> = stepping.iter().map(|&i| rr_items[i].clone()).collect();
-    let mut w_items = Vec::with_capacity(stepping.len());
-    let mut gq_items = Vec::with_capacity(stepping.len());
-    let mut gr_items = Vec::with_capacity(stepping.len());
-    let (mut rw, mut rgq, mut rgr) = (0usize, 0usize, 0usize);
-    for &i in &stepping {
-        let g = &geo[ids[i] as usize];
-        let k = u.items[ids[i] as usize].cols;
-        w_items.push(BatchItem::new(rw..rw + k, r));
-        gq_items.push(BatchItem::new(rgq..rgq + g.s, r));
-        gr_items.push(BatchItem::new(rgr..rgr + g.sv, r));
-        rw += k;
-        rgq += g.s;
-        rgr += g.sv;
-    }
-    let mut w_buf = arena.take_f32(rw * r);
-    let mut gq_buf = arena.take_f32(rgq * r);
-    let mut gr_buf = arena.take_f32(rgr * r);
-    let inv_g = r as f32;
+        // gq = U (Vᵀ R) · inv_g ; gr = V (Uᵀ Q) · inv_g — scalar kernels
+        // over this lane's windows (identical FLOPs to the batch_* form)
+        let uv = u.item(l);
+        let vv = v.item(l);
+        let w = unsafe { st.w.slice_mut(g.off_w, g.off_w + k * r) };
+        let gq = unsafe { st.gq.slice_mut(g.off_sr, g.off_sr + g.s * r) };
+        vt_matmul_into_slice(vv, MatView::from_slice(g.sv, r, re), w);
+        matmul_into_slice(uv, MatView::from_slice(k, r, w), gq);
+        gq.iter_mut().for_each(|x| *x *= inv_g);
+        let w = unsafe { st.w.slice_mut(g.off_w, g.off_w + k * r) };
+        let gr = unsafe { st.gr.slice_mut(g.off_svr, g.off_svr + g.sv * r) };
+        vt_matmul_into_slice(uv, MatView::from_slice(g.s, r, qe), w);
+        matmul_into_slice(vv, MatView::from_slice(k, r, w), gr);
+        gr.iter_mut().for_each(|x| *x *= inv_g);
 
-    // gq = U (Vᵀ R) · inv_g ; gr = V (Uᵀ Q) · inv_g — strided over lanes
-    let uv = BatchView::new(u.data, &u_sub);
-    let vv = BatchView::new(v.data, &v_sub);
-    batch_vt_matmul_into(vv, BatchView::new(&rr_buf, &rr_sub), &mut w_buf, &w_items);
-    batch_matmul_into(uv, BatchView::new(&w_buf, &w_items), &mut gq_buf, &gq_items);
-    gq_buf.iter_mut().for_each(|x| *x *= inv_g);
-    batch_vt_matmul_into(uv, BatchView::new(&q_buf, &q_sub), &mut w_buf, &w_items);
-    batch_matmul_into(vv, BatchView::new(&w_buf, &w_items), &mut gr_buf, &gr_items);
-    gr_buf.iter_mut().for_each(|x| *x *= inv_g);
-
-    // per-lane step-size normalisation, mirror step, KL projections
-    for (o, &i) in stepping.iter().enumerate() {
-        let l = ids[i] as usize;
-        let g = &geo[l];
-        let gqi = &gq_items[o];
-        let gri = &gr_items[o];
-        let gq = &gq_buf[gqi.start()..gqi.end()];
-        let gr = &gr_buf[gri.start()..gri.end()];
+        // step-size normalisation, mirror step, KL projections
         let scale = slice_max_abs(gq).max(slice_max_abs(gr)).max(1e-12);
         let step = cfg.gamma / scale;
-        // SAFETY: lane l is owned by this worker for the whole call.
         let lq = unsafe { st.log_q.slice_mut(g.off_sr, g.off_sr + g.s * r) };
         let lr = unsafe { st.log_r.slice_mut(g.off_svr, g.off_svr + g.sv * r) };
-        for (x, gv) in lq.iter_mut().zip(gq) {
+        for (x, &gv) in lq.iter_mut().zip(gq.iter()) {
             *x -= step * gv;
         }
-        for (x, gv) in lr.iter_mut().zip(gr) {
+        for (x, &gv) in lr.iter_mut().zip(gr.iter()) {
             *x -= step * gv;
         }
         let loga = unsafe { st.loga.slice(g.off_s, g.off_s + g.s) };

@@ -7,8 +7,9 @@
 
 use hiref::coordinator::annealing::{effective_ranks, optimal_rank_schedule, schedule_cost};
 use hiref::coordinator::assign::{balanced_assign, capacities, split_by_labels};
-use hiref::coordinator::hiref::{BackendKind, HiRef, HiRefConfig};
+use hiref::coordinator::hiref::{BackendKind, HiRef, HiRefConfig, SpillConfig};
 use hiref::costs::{dense_cost, factor::sq_euclidean_factors, CostKind};
+use hiref::data::stream::InMemorySource;
 use hiref::linalg::Mat;
 use hiref::metrics;
 use hiref::prng::Rng;
@@ -198,6 +199,67 @@ fn prop_batched_equals_per_block_across_shapes_and_schedules() {
         assert_eq!(batched.stats.base_calls, per_block.stats.base_calls);
         assert!(batched.is_bijection());
     });
+}
+
+#[test]
+fn prop_spill_store_bit_identical_to_resident() {
+    // The FactorStore acceptance property: a SpillStore run — any budget,
+    // including one small enough to force eviction (and disk reads) at
+    // every level — produces exactly the resident run's alignment (both
+    // permutations AND the in-place re-index orders), across n /
+    // base_size / rank / threads / chunk sizes and both execution paths.
+    let dir = std::env::temp_dir().join(format!("hiref_prop_spill_{}", std::process::id()));
+    let dir_ref = &dir;
+    check("spill = resident", 10, move |rng| {
+        let n = 20 + rng.next_below(350);
+        let x = rand_mat(rng, n, 2);
+        let y = rand_mat(rng, n, 2);
+        let mut cfg = native_cfg(rng); // random base_size, max_rank, threads, seed
+        cfg.batching = rng.next_below(4) > 0; // mostly batched, sometimes per-block
+        cfg.chunk_rows = [7usize, 64, 1 << 16][rng.next_below(3)];
+        let resident = HiRef::new(cfg.clone()).align(&x, &y).unwrap();
+        // budget 0 = read every shard from disk; 2 KiB = constant
+        // eviction; huge = everything cached after first release
+        for budget in [0usize, 2048, 1 << 26] {
+            let spill_cfg = HiRefConfig {
+                spill: Some(SpillConfig { dir: dir_ref.clone(), budget_bytes: budget }),
+                ..cfg.clone()
+            };
+            let out = HiRef::new(spill_cfg).align(&x, &y).unwrap();
+            assert_eq!(
+                out.perm, resident.perm,
+                "perm diverges (n={n} base={} C={} threads={} batching={} budget={budget})",
+                cfg.base_size, cfg.max_rank, cfg.threads, cfg.batching
+            );
+            assert_eq!(out.x_order, resident.x_order, "x_order diverges (budget={budget})");
+            assert_eq!(out.y_order, resident.y_order, "y_order diverges (budget={budget})");
+            assert!(out.stats.spill_bytes_written > 0, "nothing spilled (budget={budget})");
+            // the acceptance bound: resident factor bytes never exceed the
+            // cache budget plus one in-flight batch's lane windows (the
+            // root batch pins one full side per store, i.e. factor_bytes)
+            assert!(
+                out.stats.resident_factor_bytes <= budget + out.stats.factor_bytes,
+                "resident {} > budget {budget} + lane windows {}",
+                out.stats.resident_factor_bytes,
+                out.stats.factor_bytes
+            );
+            // a root small enough to be pure base case never checks
+            // factors out, so only assert disk reads when LROT ran
+            if budget == 0 && out.stats.lrot_calls > 0 {
+                assert!(out.stats.spill_reads > 0, "budget 0 must hit the disk");
+            }
+        }
+        // the streaming ingestion path spills the factor build too
+        let spill_cfg = HiRefConfig {
+            spill: Some(SpillConfig { dir: dir_ref.clone(), budget_bytes: 2048 }),
+            ..cfg.clone()
+        };
+        let src = HiRef::new(spill_cfg)
+            .align_source(&InMemorySource::new(&x), &InMemorySource::new(&y))
+            .unwrap();
+        assert_eq!(src.perm, resident.perm, "align_source spill diverges (n={n})");
+    });
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
