@@ -1,0 +1,215 @@
+//! Serving-path perf profile: boot an in-process `hiref serve` daemon,
+//! measure a cold solve (factorisation included) against warm repeats and
+//! a concurrent client burst, and emit `BENCH_serve.json` (cold vs warm
+//! latency, microbatched lane fraction, cache traffic).  Asserts the
+//! service acceptance properties on every run: each served permutation is
+//! bit-identical to a solo offline `HiRef::align`, and warm solves perform
+//! zero factorisation.
+//!
+//! CI runs this at small `n`; locally:
+//!
+//! ```sh
+//! HIREF_SERVE_N=65536 HIREF_SERVE_CLIENTS=8 \
+//!     cargo bench --bench bench_serve
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use hiref::coordinator::hiref::{BackendKind, HiRef, HiRefConfig};
+use hiref::data::stream::write_bin;
+use hiref::data::synthetic;
+use hiref::pool;
+use hiref::report::{section, timed};
+use hiref::serve::{protocol, serve, Json, ServeConfig, ServerHandle};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(handle: &ServerHandle) -> Client {
+        let stream = TcpStream::connect(handle.addr()).expect("connect to serve");
+        Client { reader: BufReader::new(stream.try_clone().expect("clone stream")), writer: stream }
+    }
+
+    fn call(&mut self, req: &Json) -> Json {
+        self.writer.write_all(req.render().as_bytes()).expect("send request");
+        self.writer.write_all(b"\n").expect("send newline");
+        self.writer.flush().expect("flush request");
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).expect("read reply");
+        let reply = protocol::parse(&reply).expect("parse reply");
+        assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{}", reply.render());
+        reply
+    }
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn solve_req(x: &str, y: &str) -> Json {
+    obj(vec![
+        ("verb", Json::Str("solve".into())),
+        ("x", Json::Str(x.to_string())),
+        ("y", Json::Str(y.to_string())),
+    ])
+}
+
+fn perm_of(reply: &Json) -> Vec<u32> {
+    reply
+        .get("perm")
+        .and_then(Json::as_arr)
+        .expect("perm array")
+        .iter()
+        .map(|v| v.as_f64().expect("perm entry") as u32)
+        .collect()
+}
+
+fn main() {
+    let n = env_usize("HIREF_SERVE_N", 4096);
+    let clients = env_usize("HIREF_SERVE_CLIENTS", 4);
+    let window_ms = env_usize("HIREF_SERVE_WINDOW_MS", 2);
+    let threads = pool::default_threads();
+    section(&format!(
+        "bench_serve — n = {n}, clients = {clients}, window = {window_ms} ms, threads = {threads}"
+    ));
+
+    let (x, y) = synthetic::half_moon_s_curve(n, 0);
+    let solver_cfg = HiRefConfig { backend: BackendKind::Auto, threads, ..Default::default() };
+
+    // the solo offline reference every served result must match bit-for-bit
+    let (offline, offline_secs) = timed(|| HiRef::new(solver_cfg.clone()).align(&x, &y));
+    let want = offline.expect("offline align").perm;
+
+    let handle = serve(ServeConfig {
+        listen: "127.0.0.1:0".to_string(),
+        solver: solver_cfg,
+        workers: threads.max(2),
+        queue_depth: 2 * clients.max(1) + 4,
+        session_budget: 1 << 30,
+        session_spill_dir: None,
+        micro_window: Duration::from_millis(window_ms as u64),
+    })
+    .expect("start server");
+
+    // datasets go in as .bin files, the shape a real deployment would use
+    let dir = std::env::temp_dir().join(format!("hiref_bench_serve_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench temp dir");
+    let (xp, yp) = (dir.join("x.bin"), dir.join("y.bin"));
+    write_bin(&xp, &x).expect("write x.bin");
+    write_bin(&yp, &y).expect("write y.bin");
+    let mut c = Client::connect(&handle);
+    let mut register = |path: &std::path::Path, dim: usize| -> String {
+        let reply = c.call(&obj(vec![
+            ("verb", Json::Str("register".into())),
+            ("path", Json::Str(path.to_string_lossy().into_owned())),
+            ("dim", Json::Num(dim as f64)),
+        ]));
+        reply.str_field("dataset").expect("dataset id").to_string()
+    };
+    let xid = register(&xp, x.cols);
+    let yid = register(&yp, y.cols);
+
+    // cold: factorisation + solve; warm: the session cache skips the build
+    let (cold, cold_secs) = timed(|| c.call(&solve_req(&xid, &yid)));
+    assert_eq!(cold.get("warm"), Some(&Json::Bool(false)), "first solve must be cold");
+    assert_eq!(perm_of(&cold), want, "cold served perm drifted from offline align");
+    let (warm, warm_secs) = timed(|| c.call(&solve_req(&xid, &yid)));
+    assert_eq!(warm.get("warm"), Some(&Json::Bool(true)), "second solve must hit the session");
+    assert_eq!(perm_of(&warm), want, "warm served perm drifted from offline align");
+
+    // concurrent burst: same pair from `clients` connections at once
+    let (_, burst_secs) = timed(|| {
+        std::thread::scope(|s| {
+            for _ in 0..clients {
+                let (xid, yid) = (xid.clone(), yid.clone());
+                let (handle, want) = (&handle, &want);
+                s.spawn(move || {
+                    let mut c = Client::connect(handle);
+                    let reply = c.call(&solve_req(&xid, &yid));
+                    assert_eq!(reply.get("warm"), Some(&Json::Bool(true)));
+                    assert_eq!(&perm_of(&reply), want, "burst perm drifted from offline align");
+                });
+            }
+        })
+    });
+
+    let stats = c.call(&obj(vec![("verb", Json::Str("stats".into()))]));
+    let stats = stats.get("stats").expect("stats object").clone();
+    let stat = |key: &str| {
+        stats.u64_field(key).unwrap_or_else(|| panic!("stat {key} in {}", stats.render()))
+    };
+    let fstat = |key: &str| {
+        stats.get(key).and_then(Json::as_f64).unwrap_or_else(|| panic!("stat {key}"))
+    };
+    assert_eq!(stat("factor_builds"), 1, "warm solves must skip factorisation");
+    assert_eq!(stat("session_hits"), 1 + clients as u64);
+    assert_eq!(stat("solves_ok"), 2 + clients as u64);
+    let lane_frac = fstat("microbatched_lane_frac");
+
+    let (offline_ms, cold_ms, warm_ms) = (offline_secs * 1e3, cold_secs * 1e3, warm_secs * 1e3);
+    let burst_ms = burst_secs * 1e3;
+    println!("offline align      = {offline_ms:.1} ms");
+    println!("cold serve         = {cold_ms:.1} ms");
+    println!(
+        "warm serve         = {warm_ms:.1} ms ({:.2}x cold)",
+        warm_ms / cold_ms.max(1e-9)
+    );
+    println!("burst wall         = {burst_ms:.1} ms for {clients} clients");
+    println!("microbatched lanes = {:.1}%", 100.0 * lane_frac);
+    println!("latency p50 / p99  = {:.1} / {:.1} ms", fstat("latency_p50_ms"), fstat("latency_p99_ms"));
+    println!("identical          = true");
+
+    // hand-rolled JSON (the vendored universe has no serde)
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"serve\",\n",
+            "  \"n\": {},\n",
+            "  \"clients\": {},\n",
+            "  \"threads\": {},\n",
+            "  \"micro_window_ms\": {},\n",
+            "  \"offline_ms\": {:.3},\n",
+            "  \"cold_ms\": {:.3},\n",
+            "  \"warm_ms\": {:.3},\n",
+            "  \"warm_speedup_x\": {:.4},\n",
+            "  \"burst_wall_ms\": {:.3},\n",
+            "  \"microbatched_lane_frac\": {:.4},\n",
+            "  \"latency_p50_ms\": {:.3},\n",
+            "  \"latency_p99_ms\": {:.3},\n",
+            "  \"factor_builds\": {},\n",
+            "  \"session_hits\": {},\n",
+            "  \"identical\": true\n",
+            "}}\n"
+        ),
+        n,
+        clients,
+        threads,
+        window_ms,
+        offline_ms,
+        cold_ms,
+        warm_ms,
+        cold_ms / warm_ms.max(1e-9),
+        burst_ms,
+        lane_frac,
+        fstat("latency_p50_ms"),
+        fstat("latency_p99_ms"),
+        stat("factor_builds"),
+        stat("session_hits"),
+    );
+    std::fs::write("BENCH_serve.json", &json).expect("writing BENCH_serve.json");
+    println!("\nwrote BENCH_serve.json");
+
+    let reply = c.call(&obj(vec![("verb", Json::Str("shutdown".into()))]));
+    assert_eq!(reply.get("stopped"), Some(&Json::Bool(true)));
+    handle.join();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -24,6 +24,11 @@ pub enum SolveError {
     UnknownSolver { name: String, known: Vec<String> },
     /// A backend (e.g. the PJRT runtime) is unavailable or failed.
     Backend(String),
+    /// The run was aborted by its host before completing — a per-request
+    /// deadline or service shutdown observed through
+    /// [`crate::coordinator::hiref::SolveHooks::cancelled`].  The serve
+    /// protocol maps this to its typed `timeout` reply.
+    Cancelled,
     /// The refinement recursion finished without pairing every point — a
     /// solver-internal invariant violation (balanced splits must partition
     /// both sides), surfaced as a typed error instead of a silent
@@ -49,6 +54,9 @@ impl fmt::Display for SolveError {
                 write!(f, "unknown solver '{name}' (valid solvers: {})", known.join(", "))
             }
             SolveError::Backend(msg) => write!(f, "backend error: {msg}"),
+            SolveError::Cancelled => {
+                write!(f, "solve cancelled by host (deadline exceeded or shutdown)")
+            }
             SolveError::IncompleteAssignment { n, unassigned } => {
                 write!(
                     f,

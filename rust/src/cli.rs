@@ -124,19 +124,36 @@ const DATASET_CHOICES: [&str; 8] = [
 
 /// Parse a byte count with an optional `k`/`m`/`g` suffix (KiB/MiB/GiB,
 /// case-insensitive): `--spill-budget 64m`, `--spill-budget 4096`.
+///
+/// Counts beyond `u64::MAX` (or this platform's `usize::MAX`) are a
+/// typed [`api::SolveError::InvalidConfig`] — never a silent wrap —
+/// distinct from the not-a-number parse error.
 pub fn parse_bytes(v: &str) -> Result<usize> {
     let s = v.trim().to_ascii_lowercase();
     let (num, mult) = match s.as_bytes().last() {
-        Some(&b'k') => (&s[..s.len() - 1], 1usize << 10),
-        Some(&b'm') => (&s[..s.len() - 1], 1usize << 20),
-        Some(&b'g') => (&s[..s.len() - 1], 1usize << 30),
-        _ => (s.as_str(), 1usize),
+        Some(&b'k') => (&s[..s.len() - 1], 1u128 << 10),
+        Some(&b'm') => (&s[..s.len() - 1], 1u128 << 20),
+        Some(&b'g') => (&s[..s.len() - 1], 1u128 << 30),
+        _ => (s.as_str(), 1u128),
     };
-    let n: usize = num
-        .trim()
-        .parse()
-        .map_err(|_| err(format!("could not parse byte count {v} (use e.g. 4096, 64m, 1g)")))?;
-    n.checked_mul(mult).ok_or_else(|| err(format!("byte count {v} overflows")))
+    let overflow =
+        || CliError::from(api::SolveError::InvalidConfig(format!("byte count {v} overflows u64")));
+    // parse into u128 so a digit string just past u64::MAX is still
+    // classified as overflow, not as "could not parse"
+    let n: u128 = match num.trim().parse::<u128>() {
+        Ok(n) => n,
+        Err(e) if matches!(e.kind(), std::num::IntErrorKind::PosOverflow) => {
+            return Err(overflow())
+        }
+        Err(_) => {
+            return Err(err(format!("could not parse byte count {v} (use e.g. 4096, 64m, 1g)")))
+        }
+    };
+    let total = n.checked_mul(mult).ok_or_else(overflow)?;
+    if total > u64::MAX as u128 || total > usize::MAX as u128 {
+        return Err(overflow());
+    }
+    Ok(total as usize)
 }
 
 /// Parse a `--cost` value into a [`CostKind`] (case-insensitive); the
@@ -242,6 +259,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "align" => cmd_align(&flags),
         "compare" => cmd_compare(&flags),
         "convert" => cmd_convert(&flags),
+        "serve" => cmd_serve(&flags),
         "solvers" => cmd_solvers(),
         "schedule" => cmd_schedule(&flags),
         "buckets" => cmd_buckets(&flags),
@@ -422,11 +440,46 @@ fn cmd_convert(flags: &Flags) -> Result<()> {
     }
     let arena = ScratchArena::new(1);
     let rows = convert_to_bin(&src, output, chunk, &arena).map_err(|e| err(e.to_string()))?;
+    // hash the written file, not the input source: the printed id is
+    // exactly what `hiref serve` computes when this .bin is registered
+    let written = BinFileSource::open(output, src.dim()).map_err(|e| err(e.to_string()))?;
+    let hash = crate::data::stream::content_hash_hex(&written, chunk, &arena)
+        .map_err(|e| err(e.to_string()))?;
     println!(
-        "wrote {output}: {rows} rows × {} dims ({})",
+        "wrote {output}: {rows} rows × {} dims ({}), content hash {hash}",
         src.dim(),
         metrics::human_bytes(rows * src.dim() * 4)
     );
+    Ok(())
+}
+
+/// `hiref serve --listen 127.0.0.1:7878 [...]` — run the alignment
+/// service until a client sends the `shutdown` verb (which drains
+/// in-flight work).  Solver flags (`--cost`, `--max-rank`, …) configure
+/// the shared solver; see `docs/serve.md` for the wire protocol.
+fn cmd_serve(flags: &Flags) -> Result<()> {
+    use std::time::Duration;
+    let solver = config_from_flags(flags)?;
+    let workers = flags.get("workers", 2usize)?;
+    let cfg = crate::serve::ServeConfig {
+        listen: flags.get_str("listen", "127.0.0.1:7878"),
+        workers,
+        queue_depth: flags.get("queue-depth", 32usize)?,
+        session_budget: match flags.named.get("session-budget") {
+            Some(v) => parse_bytes(v)?,
+            None => 256 << 20,
+        },
+        session_spill_dir: flags.named.get("session-spill-dir").map(PathBuf::from),
+        micro_window: Duration::from_millis(flags.get("microbatch-window-ms", 2u64)?),
+        solver,
+    };
+    let handle = crate::serve::serve(cfg)?;
+    println!(
+        "hiref serve listening on {} ({workers} workers; send {{\"verb\":\"shutdown\"}} to stop)",
+        handle.addr()
+    );
+    handle.wait();
+    println!("hiref serve: drained and stopped");
     Ok(())
 }
 
@@ -490,8 +543,14 @@ USAGE: hiref <command> [flags]
 COMMANDS
   align     run one solver on a dataset and report cost/stats
   compare   run several solvers on a dataset through the uniform API
-  convert   re-encode a dataset (.npy or raw) as raw LE-f32 .bin
+  convert   re-encode a dataset (.npy or raw) as raw LE-f32 .bin and
+            print its content hash (the serve dataset id)
             (--input a.npy --output a.bin [--dim d] [--chunk-rows n])
+  serve     run the alignment service (NDJSON over TCP; warm factor
+            sessions + cross-request microbatching — see docs/serve.md)
+            (--listen addr [--workers n] [--queue-depth n]
+             [--session-budget n] [--session-spill-dir d]
+             [--microbatch-window-ms n] + solver flags)
   solvers   list the registered solvers (HiRef + all paper baselines)
   schedule  print the optimal rank-annealing schedule for given n
   buckets   list AOT artifact buckets (artifacts/manifest.tsv)
@@ -649,8 +708,27 @@ mod tests {
         assert_eq!(parse_bytes("64k").unwrap(), 64 << 10);
         assert_eq!(parse_bytes("64M").unwrap(), 64 << 20);
         assert_eq!(parse_bytes("1g").unwrap(), 1 << 30);
+        // uppercase suffixes are equivalent to lowercase
+        assert_eq!(parse_bytes("2K").unwrap(), 2 << 10);
+        assert_eq!(parse_bytes("3G").unwrap(), 3usize << 30);
         assert!(parse_bytes("lots").is_err());
         assert!(parse_bytes("12q").is_err());
+    }
+
+    #[test]
+    fn parse_bytes_rejects_overflow_as_invalid_config() {
+        // u64::MAX + 1 as a bare digit string, and a suffixed count whose
+        // product overflows: both must be the typed InvalidConfig error,
+        // not a wrapped value or a generic parse failure
+        for v in ["18446744073709551616", "20000000000g", "999999999999999999999999999999999"] {
+            let e = parse_bytes(v).unwrap_err();
+            assert!(e.0.contains("invalid configuration"), "{v}: {e}");
+            assert!(e.0.contains("overflows"), "{v}: {e}");
+        }
+        // the largest representable count still parses
+        if usize::MAX as u128 >= u64::MAX as u128 {
+            assert_eq!(parse_bytes("18446744073709551615").unwrap(), u64::MAX as usize);
+        }
     }
 
     #[test]

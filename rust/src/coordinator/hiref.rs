@@ -325,10 +325,51 @@ impl Alignment {
     }
 }
 
+/// Hooks a long-lived host (e.g. the `serve` scheduler) installs on a
+/// solver via [`HiRef::with_hooks`] to observe and steer a run from
+/// outside the engine:
+///
+/// * [`SolveHooks::cancelled`] is polled at every scheduling edge — level
+///   step, per-block refine, batch start, base-case seal — and **never
+///   while a factor checkout is pinned**, so returning `true` aborts the
+///   run promptly with [`SolveError::Cancelled`] without leaking pinned
+///   checkouts or arena scratch (every guard is released before the next
+///   poll by construction).
+/// * [`SolveHooks::lrot_batch`] may take over dispatch of one same-shape
+///   LROT batch.  The serve scheduler uses this to merge batches from
+///   different in-flight requests into one strided
+///   [`lrot::solve_factored_batch`] call; lane solves are independent of
+///   `threads` and of which other lanes share the batch (asserted in the
+///   LROT tests), so any such regrouping is bit-identical to a solo run.
+pub trait SolveHooks: Send + Sync {
+    /// Should the run abort now?  Polled between batches/blocks only;
+    /// must be cheap (an atomic or clock read).
+    fn cancelled(&self) -> bool {
+        false
+    }
+
+    /// Intercept one LROT batch (all lanes share `active` rows and
+    /// `cfg`; lane `l` is `u.items[l]`/`v.items[l]` with seed
+    /// `seeds[l]`).  Return `Some(outputs)` — one `(Q, R)` per lane, in
+    /// lane order — to substitute for the in-process solve, or `None` to
+    /// let the engine dispatch locally (PJRT or native).
+    fn lrot_batch(
+        &self,
+        _u: BatchView<'_>,
+        _v: BatchView<'_>,
+        _active: usize,
+        _cfg: &LrotConfig,
+        _seeds: &[u64],
+    ) -> Option<Vec<(Mat, Mat)>> {
+        None
+    }
+}
+
 /// The Hierarchical Refinement solver.
 pub struct HiRef {
     cfg: HiRefConfig,
     engine: Option<Arc<PjrtEngine>>,
+    hooks: Option<Arc<dyn SolveHooks>>,
 }
 
 /// One co-cluster: contiguous position ranges into the per-side working
@@ -407,12 +448,32 @@ impl HiRef {
                 PjrtEngine::load(&cfg.artifacts_dir).ok().map(Arc::new)
             }
         };
-        HiRef { cfg, engine }
+        HiRef { cfg, engine, hooks: None }
+    }
+
+    /// Install host [`SolveHooks`] (cancellation polling + LROT batch
+    /// interception) on this instance.
+    pub fn with_hooks(mut self, hooks: Arc<dyn SolveHooks>) -> HiRef {
+        self.hooks = Some(hooks);
+        self
     }
 
     /// Borrow the loaded PJRT engine, if any.
     pub fn engine(&self) -> Option<&Arc<PjrtEngine>> {
         self.engine.as_ref()
+    }
+
+    /// Poll the host hooks; on cancellation record the typed error (the
+    /// run then drains without doing further work, exactly like an I/O
+    /// failure) and report `true`.
+    fn poll_cancel(&self, st: &SolveState<'_>) -> bool {
+        match &self.hooks {
+            Some(h) if h.cancelled() => {
+                st.set_error(SolveError::Cancelled);
+                true
+            }
+            _ => false,
+        }
     }
 
     /// Shared structural validation for every alignment entry point.
@@ -512,6 +573,33 @@ impl HiRef {
         let stores = self.stores_from_mats(fu, fv)?;
         let arena = ScratchArena::new(self.cfg.threads);
         self.align_inner(stores, Points::Mats(x, y), arena, t0)
+    }
+
+    /// [`HiRef::align_prefactored`] against chunked [`DatasetSource`]s —
+    /// the warm-session serving path: factors were built once (and cached
+    /// by the host), the points stay wherever they live, and base-case
+    /// blocks gather their ≤ `base_size` rows on demand.  Performs zero
+    /// factorisation work; bit-identical to [`HiRef::align`] /
+    /// [`HiRef::align_source`] on equal data.
+    pub fn align_prefactored_source(
+        &self,
+        fu: Mat,
+        fv: Mat,
+        x: &dyn DatasetSource,
+        y: &dyn DatasetSource,
+    ) -> Result<Alignment, SolveError> {
+        self.validate_sizes(x.rows(), y.rows(), x.dim(), y.dim())?;
+        if fu.rows != x.rows() || fv.rows != y.rows() || fu.cols != fv.cols {
+            return Err(SolveError::InvalidConfig(format!(
+                "prefactored shapes {}x{} / {}x{} do not match an {}-point problem",
+                fu.rows, fu.cols, fv.rows, fv.cols,
+                x.rows()
+            )));
+        }
+        let t0 = Instant::now();
+        let stores = self.stores_from_mats(fu, fv)?;
+        let arena = ScratchArena::new(self.cfg.threads);
+        self.align_inner(stores, Points::Sources(x, y), arena, t0)
     }
 
     /// Streaming alignment: both point clouds arrive as chunked
@@ -737,7 +825,7 @@ impl HiRef {
         queue: &WorkQueue<Block>,
         st: &SolveState<'_>,
     ) {
-        if st.has_error() {
+        if st.has_error() || self.poll_cancel(st) {
             return; // doomed run: drain the queue without doing work
         }
         let (xs, xe) = (block.x.start as usize, block.x.end as usize);
@@ -804,9 +892,10 @@ impl HiRef {
         let threads = self.cfg.threads;
         let mut current = vec![root];
         while !current.is_empty() {
-            // fail fast: a recorded error dooms the run, so stop
-            // scheduling levels instead of grinding through them
-            if st.has_error() {
+            // fail fast: a recorded error (or a host cancellation — no
+            // checkout is pinned here) dooms the run, so stop scheduling
+            // levels instead of grinding through them
+            if st.has_error() || self.poll_cancel(st) {
                 return;
             }
             for b in &current {
@@ -878,7 +967,7 @@ impl HiRef {
         schedule: &[usize],
         st: &SolveState<'_>,
     ) -> Vec<Block> {
-        if st.has_error() {
+        if st.has_error() || self.poll_cancel(st) {
             return Vec::new(); // doomed run: stop scheduling batches
         }
         let lanes = blocks.len();
@@ -966,6 +1055,17 @@ impl HiRef {
         st: &SolveState<'_>,
     ) -> Vec<(Mat, Mat)> {
         let lanes = u.len();
+        // a host hook (the serve microbatcher) may take the whole batch —
+        // e.g. to merge it with same-shape batches of other in-flight
+        // requests; lane independence keeps the outputs bit-identical
+        if let Some(hooks) = &self.hooks {
+            let cfg = LrotConfig { rank, ..self.cfg.lrot.clone() };
+            if let Some(outs) = hooks.lrot_batch(u, v, active, &cfg, seeds) {
+                assert_eq!(outs.len(), lanes, "hook returned a wrong-sized batch");
+                st.stats.native.fetch_add(lanes, Ordering::Relaxed);
+                return outs;
+            }
+        }
         let actives: Vec<(usize, usize)> = vec![(active, active); lanes];
         if self.cfg.backend != BackendKind::Native {
             if let Some(engine) = &self.engine {
@@ -1030,7 +1130,7 @@ impl HiRef {
     /// sources into arena scratch (the only point rows a streaming solve
     /// ever materialises).
     fn solve_base(&self, points: Points<'_>, block: &Block, st: &SolveState<'_>) {
-        if st.has_error() {
+        if st.has_error() || self.poll_cancel(st) {
             return; // doomed run: don't re-attempt reads block by block
         }
         st.stats.base.fetch_add(1, Ordering::Relaxed);
@@ -1392,6 +1492,99 @@ mod tests {
         let (fu, fv) = costs::factors_for(&x, &y, CostKind::SqEuclidean, 32, 0);
         let (bad, _, _) = shuffled_pair(151, 2, 24);
         assert!(HiRef::new(native_cfg()).align_prefactored(fu, fv, &bad, &bad).is_err());
+    }
+
+    #[test]
+    fn align_prefactored_source_matches_align() {
+        use crate::data::stream::InMemorySource;
+        let (x, y, _) = shuffled_pair(150, 2, 29);
+        let want = HiRef::new(native_cfg()).align(&x, &y).unwrap();
+        let (fu, fv) = costs::factors_for(&x, &y, CostKind::SqEuclidean, 32, 0);
+        let out = HiRef::new(native_cfg())
+            .align_prefactored_source(fu, fv, &InMemorySource::new(&x), &InMemorySource::new(&y))
+            .unwrap();
+        assert_eq!(out.perm, want.perm);
+        assert_eq!(out.x_order, want.x_order);
+        assert_eq!(out.y_order, want.y_order);
+        // shape-mismatched factors are rejected
+        let (fu, fv) = costs::factors_for(&x, &y, CostKind::SqEuclidean, 32, 0);
+        let (bad, _, _) = shuffled_pair(151, 2, 24);
+        assert!(matches!(
+            HiRef::new(native_cfg()).align_prefactored_source(
+                fu,
+                fv,
+                &InMemorySource::new(&bad),
+                &InMemorySource::new(&bad)
+            ),
+            Err(SolveError::InvalidConfig(_))
+        ));
+    }
+
+    #[test]
+    fn hooks_cancellation_is_typed_and_prompt() {
+        // a hook that cancels after a few polls: the run must abort with
+        // the typed error, and a fresh solve on the same inputs must be
+        // unaffected (no corrupted shared state anywhere)
+        struct CancelAfter(AtomicUsize, usize);
+        impl SolveHooks for CancelAfter {
+            fn cancelled(&self) -> bool {
+                self.0.fetch_add(1, Ordering::Relaxed) + 1 > self.1
+            }
+        }
+        let (x, y, _) = shuffled_pair(300, 2, 31);
+        let want = HiRef::new(native_cfg()).align(&x, &y).unwrap();
+        for polls in [0usize, 2] {
+            let solver =
+                HiRef::new(native_cfg()).with_hooks(Arc::new(CancelAfter(AtomicUsize::new(0), polls)));
+            match solver.align(&x, &y) {
+                Err(SolveError::Cancelled) => {}
+                other => panic!("expected Cancelled after {polls} polls, got {other:?}"),
+            }
+        }
+        // a hook that never fires leaves the run bit-identical
+        struct Never;
+        impl SolveHooks for Never {}
+        let out = HiRef::new(native_cfg()).with_hooks(Arc::new(Never)).align(&x, &y).unwrap();
+        assert_eq!(out.perm, want.perm);
+    }
+
+    #[test]
+    fn hooks_lrot_batch_takeover_is_bit_identical() {
+        // an external hook that re-solves every batch itself — through a
+        // different arena and thread count — must reproduce the engine's
+        // output bit for bit (the serve microbatcher's correctness
+        // property: lane solves are independent of execution context)
+        struct Takeover {
+            arena: ScratchArena,
+            calls: AtomicUsize,
+        }
+        impl SolveHooks for Takeover {
+            fn lrot_batch(
+                &self,
+                u: BatchView<'_>,
+                v: BatchView<'_>,
+                active: usize,
+                cfg: &LrotConfig,
+                seeds: &[u64],
+            ) -> Option<Vec<(Mat, Mat)>> {
+                self.calls.fetch_add(1, Ordering::Relaxed);
+                let actives = vec![(active, active); u.len()];
+                Some(
+                    lrot::solve_factored_batch(u, v, &actives, cfg, seeds, &self.arena, 3)
+                        .into_iter()
+                        .map(|o| (o.q, o.r))
+                        .collect(),
+                )
+            }
+        }
+        let (x, y, _) = shuffled_pair(260, 3, 37);
+        let want = HiRef::new(native_cfg()).align(&x, &y).unwrap();
+        let hook = Arc::new(Takeover { arena: ScratchArena::new(3), calls: AtomicUsize::new(0) });
+        let out = HiRef::new(native_cfg()).with_hooks(hook.clone()).align(&x, &y).unwrap();
+        assert!(hook.calls.load(Ordering::Relaxed) > 0, "hook never dispatched a batch");
+        assert_eq!(out.perm, want.perm);
+        assert_eq!(out.x_order, want.x_order);
+        assert_eq!(out.y_order, want.y_order);
     }
 
     #[test]

@@ -171,6 +171,52 @@ pub fn gather_rows_into(src: &dyn DatasetSource, ids: &[u32], out: &mut [f32]) -
     Ok(())
 }
 
+/// Streaming FNV-1a (64-bit) content hash of a dataset: the shape
+/// (`rows`, `dim`) followed by every row's `f32`s as little-endian bytes,
+/// consumed in `chunk_rows`-sized tiles — no full materialisation, so it
+/// works on beyond-RAM [`BinFileSource`]s at `O(chunk_rows · dim)` memory.
+///
+/// The hash identifies dataset *content*, independent of where it lives:
+/// an [`InMemorySource`] and the `.bin` file produced from it by
+/// [`convert_to_bin`] hash identically, for any chunk size.  `hiref
+/// convert` prints it, and the `serve` subsystem uses it as the warm
+/// session cache key (see [`crate::serve`]).
+pub fn content_hash(
+    src: &dyn DatasetSource,
+    chunk_rows: usize,
+    arena: &ScratchArena,
+) -> io::Result<u64> {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    #[inline]
+    fn mix(mut h: u64, bytes: &[u8]) -> u64 {
+        for &b in bytes {
+            h = (h ^ u64::from(b)).wrapping_mul(FNV_PRIME);
+        }
+        h
+    }
+    // shape prefix: the same bytes viewed as 4×2 and 2×4 must not collide
+    let mut h = FNV_OFFSET;
+    h = mix(h, &(src.rows() as u64).to_le_bytes());
+    h = mix(h, &(src.dim() as u64).to_le_bytes());
+    for_each_chunk(src, chunk_rows, arena, |_, tile| {
+        for &v in tile.data {
+            h = mix(h, &v.to_le_bytes());
+        }
+    })?;
+    Ok(h)
+}
+
+/// [`content_hash`] rendered as the fixed-width hex id the serve protocol
+/// and `hiref convert` print (16 lowercase hex digits).
+pub fn content_hash_hex(
+    src: &dyn DatasetSource,
+    chunk_rows: usize,
+    arena: &ScratchArena,
+) -> io::Result<String> {
+    Ok(format!("{:016x}", content_hash(src, chunk_rows, arena)?))
+}
+
 // ---------------------------------------------------------------------------
 // InMemorySource
 // ---------------------------------------------------------------------------
@@ -885,5 +931,46 @@ mod tests {
         })
         .unwrap();
         assert_eq!(got.into_inner().unwrap(), want);
+    }
+
+    #[test]
+    fn content_hash_is_chunk_invariant_and_location_independent() {
+        let arena = ScratchArena::new(1);
+        let m = rand_mat(3, 41, 5);
+        let src = InMemorySource::new(&m);
+        let h = content_hash(&src, 41, &arena).unwrap();
+        for chunk in [1usize, 2, 7, 40, 41, 1000] {
+            assert_eq!(content_hash(&src, chunk, &arena).unwrap(), h, "chunk {chunk}");
+        }
+        // the converted .bin file hashes identically to the in-memory data
+        let path =
+            std::env::temp_dir().join(format!("hiref_hash_{}.bin", std::process::id()));
+        write_bin(&path, &m).unwrap();
+        let file = BinFileSource::open(&path, 5).unwrap();
+        assert_eq!(content_hash(&file, 7, &arena).unwrap(), h);
+        assert_eq!(content_hash_hex(&file, 7, &arena).unwrap(), format!("{h:016x}"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn content_hash_separates_content_and_shape() {
+        let arena = ScratchArena::new(1);
+        let a = rand_mat(1, 32, 4);
+        let mut b = a.clone();
+        b.data[17] += 1.0; // one-element perturbation
+        let ha = content_hash(&InMemorySource::new(&a), 8, &arena).unwrap();
+        let hb = content_hash(&InMemorySource::new(&b), 8, &arena).unwrap();
+        assert_ne!(ha, hb);
+        // same bytes, different shape: the (rows, dim) prefix must split them
+        let wide = Mat::from_vec(16, 8, a.data.clone());
+        let hw = content_hash(&InMemorySource::new(&wide), 8, &arena).unwrap();
+        assert_ne!(ha, hw);
+    }
+
+    #[test]
+    fn content_hash_surfaces_read_errors() {
+        let arena = ScratchArena::new(1);
+        let src = FailingSource { rows: 64, dim: 2, fail_at: 16 };
+        assert!(content_hash(&src, 8, &arena).is_err());
     }
 }

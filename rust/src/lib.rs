@@ -177,6 +177,35 @@
 //! }
 //! ```
 //!
+//! ## Serving (`hiref serve`)
+//!
+//! For workloads that align the same or overlapping datasets repeatedly,
+//! the [`serve`] subsystem keeps the expensive state resident in a
+//! long-lived daemon (`hiref serve --listen 127.0.0.1:7878`, or
+//! [`serve::serve`] in-process) speaking newline-delimited JSON over TCP
+//! — see `docs/serve.md` for the wire protocol and a worked client:
+//!
+//! * **Sessions** — datasets are registered once, identified by a
+//!   streaming content hash ([`data::stream::content_hash`]), and each
+//!   `(x, y, cost config)` pair's cost factors are built once and
+//!   archived in a [`pool::FactorStore`] under an LRU byte budget.  A
+//!   warm solve does **zero factorisation work**.
+//! * **Scheduling** — bounded worker pool + bounded admission queue
+//!   (typed `overloaded` reply), per-request deadlines with typed
+//!   `timeout` replies (cancellation polls only between batches, so no
+//!   checkout or scratch leaks), and graceful drain on shutdown.
+//! * **Cross-request microbatching** — same-shape LROT batches from
+//!   different in-flight requests merge into one strided
+//!   [`solvers::lrot::solve_factored_batch`] call.  Per-lane outputs are
+//!   independent of batch composition and thread count, so every served
+//!   permutation stays **bit-identical** to a solo offline
+//!   [`coordinator::hiref::HiRef::align`].
+//!
+//! The host seam is [`coordinator::hiref::SolveHooks`]
+//! ([`coordinator::hiref::HiRef::with_hooks`]): cancellation polling and
+//! LROT batch interception, usable by any embedding, not just the TCP
+//! server.
+//!
 //! ## Choosing a solver
 //!
 //! | Registry name | Paper baseline | Output representation |
@@ -205,4 +234,5 @@ pub mod prng;
 pub mod regress;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod solvers;

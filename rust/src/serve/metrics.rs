@@ -1,0 +1,183 @@
+//! Service-level counters behind the `stats` protocol verb.
+//!
+//! Everything is lock-free atomics except the latency reservoir (a small
+//! ring under a mutex, touched once per finished solve).  Per-run solver
+//! diagnostics stay in [`crate::coordinator::hiref::RunStats`]; this
+//! module aggregates the *service* view across requests: admission and
+//! backpressure, session-cache effectiveness, cross-request microbatch
+//! shape, spill traffic, and p50/p99 solve latency.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::protocol::Json;
+
+/// Latency samples kept for the percentile estimate (a ring: the stats
+/// verb reports percentiles over the most recent `LAT_CAP` solves).
+const LAT_CAP: usize = 4096;
+
+#[derive(Default)]
+struct LatRing {
+    samples_us: Vec<u64>,
+    next: usize,
+}
+
+/// Counters of one serve instance.  All monotonic unless noted.
+#[derive(Default)]
+pub struct ServeMetrics {
+    /// Protocol requests received (every verb, every connection).
+    pub requests: AtomicUsize,
+    /// Solve requests admitted to the queue.
+    pub solves: AtomicUsize,
+    /// Solves that returned an alignment.
+    pub solves_ok: AtomicUsize,
+    /// Solves that returned a typed error (excluding timeouts).
+    pub solve_errors: AtomicUsize,
+    /// Solve requests rejected at admission (queue full).
+    pub overloaded: AtomicUsize,
+    /// Deadline expiries — queued past the deadline or cancelled mid-solve.
+    pub timeouts: AtomicUsize,
+    /// Warm-session factor reuses (zero factorisation work).
+    pub session_hits: AtomicUsize,
+    /// Cold pairs that had to factorise.
+    pub session_misses: AtomicUsize,
+    /// Sessions evicted by the LRU byte budget.
+    pub session_evictions: AtomicUsize,
+    /// Factorisation passes actually run (== `session_misses`; kept
+    /// separate so the zero-factorisation-when-warm property is asserted
+    /// against the builder itself, not cache bookkeeping).
+    pub factor_builds: AtomicUsize,
+    /// Current admission-queue depth (gauge).
+    pub queue_depth: AtomicUsize,
+    /// High-water mark of `queue_depth`.
+    pub queue_peak: AtomicUsize,
+    /// LROT batch submissions reaching the microbatcher.
+    pub micro_calls: AtomicUsize,
+    /// Merged cross-request solves issued (≥ 2 participants).
+    pub micro_merged_calls: AtomicUsize,
+    /// Lanes through the microbatcher, total.
+    pub micro_lanes: AtomicUsize,
+    /// Lanes that shared a merged solve with another request's lanes.
+    pub micro_merged_lanes: AtomicUsize,
+    /// Spill bytes written across served solves (from `RunStats`).
+    pub spill_bytes_written: AtomicUsize,
+    /// Spill shard reads across served solves (from `RunStats`).
+    pub spill_reads: AtomicUsize,
+    lat: Mutex<LatRing>,
+}
+
+impl ServeMetrics {
+    /// Record one finished solve's wall latency.
+    pub fn record_latency(&self, elapsed: Duration) {
+        let us = elapsed.as_micros().min(u128::from(u64::MAX)) as u64;
+        let mut g = self.lat.lock().unwrap();
+        if g.samples_us.len() < LAT_CAP {
+            g.samples_us.push(us);
+        } else {
+            let i = g.next;
+            g.samples_us[i] = us;
+        }
+        g.next = (g.next + 1) % LAT_CAP;
+    }
+
+    /// (p50, p99) of recent solve latencies, in milliseconds (0.0 when no
+    /// solve has finished yet).  Nearest-rank on the retained window.
+    pub fn latency_percentiles_ms(&self) -> (f64, f64) {
+        let mut s = self.lat.lock().unwrap().samples_us.clone();
+        if s.is_empty() {
+            return (0.0, 0.0);
+        }
+        s.sort_unstable();
+        let rank = |p: f64| -> f64 {
+            let idx = ((p * s.len() as f64).ceil() as usize).clamp(1, s.len()) - 1;
+            s[idx] as f64 / 1e3
+        };
+        (rank(0.50), rank(0.99))
+    }
+
+    /// Fraction of microbatcher lanes that rode a merged cross-request
+    /// solve (0.0 before any batch was submitted).
+    pub fn microbatched_lane_frac(&self) -> f64 {
+        let lanes = self.micro_lanes.load(Ordering::Relaxed);
+        if lanes == 0 {
+            0.0
+        } else {
+            self.micro_merged_lanes.load(Ordering::Relaxed) as f64 / lanes as f64
+        }
+    }
+
+    /// Raise `queue_peak` to at least `depth`.
+    pub fn note_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth, Ordering::Relaxed);
+        self.queue_peak.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    /// The `stats` verb's counter object.
+    pub fn to_json(&self) -> Json {
+        let ld = |c: &AtomicUsize| Json::Num(c.load(Ordering::Relaxed) as f64);
+        let (p50, p99) = self.latency_percentiles_ms();
+        Json::Obj(vec![
+            ("requests".into(), ld(&self.requests)),
+            ("solves".into(), ld(&self.solves)),
+            ("solves_ok".into(), ld(&self.solves_ok)),
+            ("solve_errors".into(), ld(&self.solve_errors)),
+            ("overloaded".into(), ld(&self.overloaded)),
+            ("timeouts".into(), ld(&self.timeouts)),
+            ("session_hits".into(), ld(&self.session_hits)),
+            ("session_misses".into(), ld(&self.session_misses)),
+            ("session_evictions".into(), ld(&self.session_evictions)),
+            ("factor_builds".into(), ld(&self.factor_builds)),
+            ("queue_depth".into(), ld(&self.queue_depth)),
+            ("queue_peak".into(), ld(&self.queue_peak)),
+            ("micro_calls".into(), ld(&self.micro_calls)),
+            ("micro_merged_calls".into(), ld(&self.micro_merged_calls)),
+            ("micro_lanes".into(), ld(&self.micro_lanes)),
+            ("micro_merged_lanes".into(), ld(&self.micro_merged_lanes)),
+            ("microbatched_lane_frac".into(), Json::Num(self.microbatched_lane_frac())),
+            ("spill_bytes_written".into(), ld(&self.spill_bytes_written)),
+            ("spill_reads".into(), ld(&self.spill_reads)),
+            ("latency_p50_ms".into(), Json::Num(p50)),
+            ("latency_p99_ms".into(), Json::Num(p99)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_are_nearest_rank() {
+        let m = ServeMetrics::default();
+        assert_eq!(m.latency_percentiles_ms(), (0.0, 0.0));
+        for ms in 1..=100u64 {
+            m.record_latency(Duration::from_millis(ms));
+        }
+        let (p50, p99) = m.latency_percentiles_ms();
+        assert_eq!(p50, 50.0);
+        assert_eq!(p99, 99.0);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let m = ServeMetrics::default();
+        for _ in 0..(LAT_CAP + 10) {
+            m.record_latency(Duration::from_millis(7));
+        }
+        assert_eq!(m.lat.lock().unwrap().samples_us.len(), LAT_CAP);
+        assert_eq!(m.latency_percentiles_ms().0, 7.0);
+    }
+
+    #[test]
+    fn lane_fraction_and_json_shape() {
+        let m = ServeMetrics::default();
+        assert_eq!(m.microbatched_lane_frac(), 0.0);
+        m.micro_lanes.store(8, Ordering::Relaxed);
+        m.micro_merged_lanes.store(6, Ordering::Relaxed);
+        assert!((m.microbatched_lane_frac() - 0.75).abs() < 1e-12);
+        let j = m.to_json();
+        assert_eq!(j.u64_field("micro_lanes"), Some(8));
+        assert!(j.get("latency_p99_ms").is_some());
+    }
+}

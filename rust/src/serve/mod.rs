@@ -1,0 +1,54 @@
+//! `hiref serve`: a long-lived alignment service with warm factor
+//! caching and cross-request microbatching.
+//!
+//! The offline CLI pays the full pipeline on every invocation — process
+//! start, dataset ingestion, cost factorisation, solve.  For workloads
+//! that align the same (or overlapping) datasets repeatedly, almost all
+//! of that is reusable.  This subsystem keeps it resident:
+//!
+//! * **Protocol** ([`protocol`]) — newline-delimited JSON over TCP.
+//!   Every request carries a client `id` echoed on the reply; failures
+//!   are *typed* (`{"ok":false,"error":{"kind":...}}`) with kinds mapped
+//!   1:1 from [`crate::api::SolveError`], plus service-level kinds
+//!   (`overloaded`, `shutting_down`, `unknown_dataset`, `bad_request`).
+//!   Hand-rolled parser/writer — the crate stays dependency-free.
+//! * **Sessions** ([`session`]) — datasets are registered once and
+//!   identified by their streaming FNV-1a content hash
+//!   ([`crate::data::stream::content_hash`]); prebuilt cost factors are
+//!   archived per `(x, y, cost config)` in a
+//!   [`crate::pool::FactorStore`] (resident or spill-backed) under an
+//!   LRU byte budget.  A warm solve performs **zero factorisation
+//!   work** — it re-materialises the archive and goes straight to
+//!   refinement ([`crate::coordinator::hiref::HiRef::align_prefactored_source`]).
+//! * **Scheduling** ([`scheduler`]) — a bounded worker pool behind a
+//!   bounded admission queue (typed `overloaded` rejection, graceful
+//!   drain on shutdown), per-request deadlines enforced through
+//!   [`crate::coordinator::hiref::SolveHooks::cancelled`] (typed
+//!   `timeout` reply, no leaked checkouts or scratch), and a
+//!   [`scheduler::Microbatcher`] that merges same-shape LROT batches
+//!   from different in-flight requests into one strided
+//!   [`crate::solvers::lrot::solve_factored_batch`] call.
+//! * **Metrics** ([`metrics`]) — the `stats` verb: requests, cache
+//!   hits/misses, microbatched lane fraction, queue depth, spill
+//!   traffic, p50/p99 solve latency.
+//!
+//! **Bit-identity.** Every served permutation is bit-identical to a solo
+//! offline [`crate::coordinator::hiref::HiRef::align`] on the same data
+//! and config: warm archives return the exact bytes that were built
+//! ([`crate::pool::FactorStore`]'s contract), per-lane LROT outputs are
+//! independent of `threads` and of which other lanes share a batch
+//! (asserted in the LROT tests), and cancellation only fires between
+//! batches.  The serve integration tests assert the end-to-end property
+//! across concurrent clients, cache temperature, and merged lanes.
+
+pub mod metrics;
+pub mod protocol;
+pub mod scheduler;
+pub mod server;
+pub mod session;
+
+pub use metrics::ServeMetrics;
+pub use protocol::Json;
+pub use scheduler::{JobHooks, Microbatcher, Rejected, Scheduler};
+pub use server::{serve, ServeConfig, Server, ServerHandle};
+pub use session::{DatasetRegistry, SessionCache, SessionCacheStats};

@@ -1,0 +1,478 @@
+//! Wire protocol of `hiref serve`: **newline-delimited JSON over TCP**.
+//!
+//! One request per line, one reply per line, always in order.  Every
+//! request is a JSON object with a `"verb"` and an optional `"id"` the
+//! server echoes verbatim into the reply, so clients may correlate
+//! replies however they like.  Replies are `{"id":…, "ok":true, …}` or
+//! `{"id":…, "ok":false, "error":{"kind":…, "message":…}}` — the `kind`
+//! is a stable machine-matchable string mapped from
+//! [`SolveError`] (plus the protocol-level kinds `overloaded`,
+//! `timeout`, `bad_request`, `unknown_verb`, `unknown_dataset`,
+//! `shutting_down`).
+//!
+//! The vendored crate universe has no serde, so this module carries a
+//! small hand-rolled JSON value type ([`Json`]), parser and writer —
+//! complete for the protocol's needs (objects, arrays, escaped strings
+//! incl. `\uXXXX` surrogate pairs, f64 numbers, bools, null) and
+//! hardened with a nesting-depth cap.  See `docs/serve.md` for the full
+//! protocol reference with a worked client example.
+
+use crate::api::SolveError;
+
+/// Maximum nesting depth [`parse`] accepts — a cheap guard against
+/// stack-exhaustion from adversarial input on a listening socket.
+const MAX_DEPTH: usize = 64;
+
+/// A JSON value.  Object fields keep insertion order (`Vec`, not a map):
+/// replies render deterministically and duplicate keys are a client bug
+/// surfaced by [`Json::get`] returning the first match.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// First field named `key` of an object (None for non-objects).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Field `key` as a string.
+    pub fn str_field(&self, key: &str) -> Option<&str> {
+        match self.get(key) {
+            Some(Json::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Field `key` as a non-negative integer (rejects fractions and
+    /// anything beyond exact-f64 range).
+    pub fn u64_field(&self, key: &str) -> Option<u64> {
+        match self.get(key) {
+            Some(&Json::Num(n)) if n >= 0.0 && n.fract() == 0.0 && n <= 9.007_199_254_740_992e15 => {
+                Some(n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    /// The value as an array.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// The value as an f64.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            &Json::Num(n) => Some(n),
+            _ => None,
+        }
+    }
+
+    /// Serialise (compact, single line — ready for the wire).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    // integral values print as integers (permutation ids,
+                    // counters); Rust's f64 Display round-trips the rest
+                    if n.fract() == 0.0 && n.abs() < 9.007_199_254_740_992e15 {
+                        out.push_str(&format!("{}", *n as i64));
+                    } else {
+                        out.push_str(&format!("{n}"));
+                    }
+                } else {
+                    out.push_str("null"); // NaN/inf have no JSON spelling
+                }
+            }
+            Json::Str(s) => write_str(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Parse one JSON document (the whole input must be consumed).
+pub fn parse(s: &str) -> Result<Json, String> {
+    let mut p = Parser { b: s.as_bytes(), i: 0 };
+    p.skip_ws();
+    let v = p.value(0)?;
+    p.skip_ws();
+    if p.i != p.b.len() {
+        return Err(format!("trailing bytes at offset {}", p.i));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(&c) = self.b.get(self.i) {
+            if c == b' ' || c == b'\t' || c == b'\n' || c == b'\r' {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, lit: &str) -> Result<(), String> {
+        if self.b[self.i..].starts_with(lit.as_bytes()) {
+            self.i += lit.len();
+            Ok(())
+        } else {
+            Err(format!("expected `{lit}` at offset {}", self.i))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, String> {
+        if depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH}"));
+        }
+        match self.peek() {
+            None => Err("unexpected end of input".into()),
+            Some(b'n') => self.eat("null").map(|()| Json::Null),
+            Some(b't') => self.eat("true").map(|()| Json::Bool(true)),
+            Some(b'f') => self.eat("false").map(|()| Json::Bool(false)),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b'[') => {
+                self.i += 1;
+                let mut items = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                loop {
+                    self.skip_ws();
+                    items.push(self.value(depth + 1)?);
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b']') => {
+                            self.i += 1;
+                            return Ok(Json::Arr(items));
+                        }
+                        _ => return Err(format!("expected `,` or `]` at offset {}", self.i)),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.i += 1;
+                let mut fields = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                loop {
+                    self.skip_ws();
+                    let k = self.string()?;
+                    self.skip_ws();
+                    if self.peek() != Some(b':') {
+                        return Err(format!("expected `:` at offset {}", self.i));
+                    }
+                    self.i += 1;
+                    self.skip_ws();
+                    let v = self.value(depth + 1)?;
+                    fields.push((k, v));
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b'}') => {
+                            self.i += 1;
+                            return Ok(Json::Obj(fields));
+                        }
+                        _ => return Err(format!("expected `,` or `}}` at offset {}", self.i)),
+                    }
+                }
+            }
+            Some(_) => self.number(),
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        if self.peek() != Some(b'"') {
+            return Err(format!("expected string at offset {}", self.i));
+        }
+        self.i += 1;
+        let mut out = String::new();
+        loop {
+            let Some(c) = self.peek() else {
+                return Err("unterminated string".into());
+            };
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(e) = self.peek() else {
+                        return Err("unterminated escape".into());
+                    };
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let cp = if (0xD800..0xDC00).contains(&hi) {
+                                // surrogate pair: a low surrogate must follow
+                                self.eat("\\u").map_err(|_| "lone high surrogate".to_string())?;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err("invalid low surrogate".into());
+                                }
+                                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                            } else {
+                                hi
+                            };
+                            out.push(
+                                char::from_u32(cp)
+                                    .ok_or_else(|| format!("invalid codepoint {cp:#x}"))?,
+                            );
+                        }
+                        other => return Err(format!("bad escape `\\{}`", other as char)),
+                    }
+                }
+                _ => {
+                    // copy the full UTF-8 sequence this byte starts
+                    let start = self.i - 1;
+                    while self.peek().is_some_and(|b| b & 0xC0 == 0x80) {
+                        self.i += 1;
+                    }
+                    let chunk = std::str::from_utf8(&self.b[start..self.i])
+                        .map_err(|_| "invalid UTF-8 in string".to_string())?;
+                    out.push_str(chunk);
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        if self.i + 4 > self.b.len() {
+            return Err("truncated \\u escape".into());
+        }
+        let s = std::str::from_utf8(&self.b[self.i..self.i + 4])
+            .map_err(|_| "bad \\u escape".to_string())?;
+        let v = u32::from_str_radix(s, 16).map_err(|_| format!("bad \\u escape `{s}`"))?;
+        self.i += 4;
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        while self
+            .peek()
+            .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E'))
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        s.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("bad number `{s}` at offset {start}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reply construction + error kinds
+// ---------------------------------------------------------------------------
+
+/// The stable machine-matchable kind string of a [`SolveError`] (the
+/// protocol-level kinds `overloaded`/`timeout`/`bad_request`/… are minted
+/// directly by the server, not mapped from solver errors —
+/// [`SolveError::Cancelled`] is the one exception: a deadline observed
+/// mid-solve surfaces as `timeout`).
+pub fn error_kind(e: &SolveError) -> &'static str {
+    match e {
+        SolveError::ShapeMismatch { .. } => "shape_mismatch",
+        SolveError::DimMismatch { .. } => "dim_mismatch",
+        SolveError::EmptyInput => "empty_input",
+        SolveError::NotSquare { .. } => "not_square",
+        SolveError::InvalidConfig(_) => "invalid_config",
+        SolveError::UnknownSolver { .. } => "unknown_solver",
+        SolveError::Backend(_) => "backend",
+        SolveError::Cancelled => "timeout",
+        SolveError::IncompleteAssignment { .. } => "incomplete_assignment",
+    }
+}
+
+/// A success reply: `{"id":…, "ok":true, <fields>}`.
+pub fn reply_ok(id: Option<&Json>, fields: Vec<(String, Json)>) -> String {
+    let mut obj = vec![
+        ("id".to_string(), id.cloned().unwrap_or(Json::Null)),
+        ("ok".to_string(), Json::Bool(true)),
+    ];
+    obj.extend(fields);
+    Json::Obj(obj).render()
+}
+
+/// A typed error reply: `{"id":…, "ok":false, "error":{"kind":…, "message":…}}`.
+pub fn reply_err(id: Option<&Json>, kind: &str, message: &str) -> String {
+    Json::Obj(vec![
+        ("id".to_string(), id.cloned().unwrap_or(Json::Null)),
+        ("ok".to_string(), Json::Bool(false)),
+        (
+            "error".to_string(),
+            Json::Obj(vec![
+                ("kind".to_string(), Json::Str(kind.to_string())),
+                ("message".to_string(), Json::Str(message.to_string())),
+            ]),
+        ),
+    ])
+    .render()
+}
+
+/// [`reply_err`] from a typed [`SolveError`].
+pub fn reply_solve_err(id: Option<&Json>, e: &SolveError) -> String {
+    reply_err(id, error_kind(e), &e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(src: &str) -> Json {
+        let v = parse(src).unwrap();
+        let rendered = v.render();
+        assert_eq!(parse(&rendered).unwrap(), v, "render/parse drift for {src}");
+        v
+    }
+
+    #[test]
+    fn parses_the_protocol_shapes() {
+        let v = round_trip(r#"{"id":7,"verb":"solve","x":"ab12","deadline_ms":250}"#);
+        assert_eq!(v.str_field("verb"), Some("solve"));
+        assert_eq!(v.u64_field("id"), Some(7));
+        assert_eq!(v.u64_field("deadline_ms"), Some(250));
+        assert_eq!(v.u64_field("x"), None);
+        let v = round_trip(r#"{"rows":[[1.5,-2],[3e2,0.25]],"empty":[],"none":null,"t":true}"#);
+        let rows = v.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows[1].as_arr().unwrap()[0].as_f64(), Some(300.0));
+        assert_eq!(v.get("none"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn string_escapes_round_trip() {
+        let v = round_trip(r#""a\"b\\c\n\t\u00e9 \ud83e\udd80""#);
+        assert_eq!(v, Json::Str("a\"b\\c\n\té 🦀".to_string()));
+        // control characters render as escapes
+        assert_eq!(Json::Str("\u{1}".into()).render(), r#""\u0001""#);
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        for bad in [
+            "",
+            "{",
+            "[1,",
+            "{\"a\" 1}",
+            "tru",
+            "\"unterminated",
+            "1 2",
+            "{\"a\":}",
+            "\"\\ud800x\"",
+            "nan",
+        ] {
+            assert!(parse(bad).is_err(), "accepted malformed `{bad}`");
+        }
+        // the depth cap holds
+        let deep = "[".repeat(100) + &"]".repeat(100);
+        assert!(parse(&deep).is_err());
+        assert!(parse(&("[".repeat(10) + &"]".repeat(10))).is_ok());
+    }
+
+    #[test]
+    fn integers_render_without_fraction() {
+        assert_eq!(Json::Num(4096.0).render(), "4096");
+        assert_eq!(Json::Num(-3.0).render(), "-3");
+        assert_eq!(Json::Num(0.5).render(), "0.5");
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+    }
+
+    #[test]
+    fn replies_have_the_documented_shape() {
+        let id = Json::Num(3.0);
+        let ok = reply_ok(Some(&id), vec![("rows".into(), Json::Num(8.0))]);
+        let v = parse(&ok).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(v.u64_field("rows"), Some(8));
+        let err = reply_err(None, "overloaded", "queue full");
+        let v = parse(&err).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(v.get("error").unwrap().str_field("kind"), Some("overloaded"));
+        // SolveError mapping: every variant has a stable kind
+        assert_eq!(error_kind(&SolveError::Cancelled), "timeout");
+        assert_eq!(error_kind(&SolveError::EmptyInput), "empty_input");
+        let v = parse(&reply_solve_err(None, &SolveError::ShapeMismatch { n: 3, m: 5 })).unwrap();
+        assert_eq!(v.get("error").unwrap().str_field("kind"), Some("shape_mismatch"));
+    }
+}

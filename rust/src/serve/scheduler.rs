@@ -1,0 +1,663 @@
+//! Admission control and cross-request microbatching.
+//!
+//! Two pieces, both deliberately small:
+//!
+//! * [`Scheduler`] — a bounded worker pool behind a bounded admission
+//!   queue.  Admission fails fast with a typed rejection
+//!   ([`Rejected::Overloaded`]) instead of queueing unboundedly, and
+//!   [`Scheduler::drain`] performs the graceful-shutdown contract: stop
+//!   admitting, finish everything already admitted, then join the
+//!   workers.
+//! * [`Microbatcher`] — merges same-shape LROT batches from *different*
+//!   in-flight solves into one strided
+//!   [`lrot::solve_factored_batch`] call.  The engine already batches all
+//!   same-scale blocks of one solve ([`crate::coordinator::hiref`]'s
+//!   level-synchronous dispatch); this extends that across requests.  Lane
+//!   solves are independent of `threads` and of which other lanes share
+//!   the batch (asserted in the LROT tests), so the merge is
+//!   **bit-identical** to solo execution by construction — the serve
+//!   integration tests re-assert it end to end against offline
+//!   [`crate::coordinator::hiref::HiRef::align`].
+//!
+//! Merging protocol: the first submission for a shape becomes the lane
+//! *leader* and opens a collection window; later same-shape submissions
+//! join the open slot.  The leader closes the window early once every
+//! in-flight solve has joined (nobody else can arrive — each solve
+//! submits at most one batch at a time), merges the staged lanes, runs
+//! one strided solve, and hands each participant its slice.  Lock order
+//! is `slots → slot.state`, everywhere.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::metrics::ServeMetrics;
+use crate::coordinator::hiref::SolveHooks;
+use crate::linalg::{BatchItem, BatchView, Mat};
+use crate::pool::ScratchArena;
+use crate::solvers::lrot::{self, LrotConfig};
+
+// ---------------------------------------------------------------------------
+// Microbatcher
+// ---------------------------------------------------------------------------
+
+/// One request's staged lanes inside an open slot.
+struct Pending {
+    u: Vec<f32>,
+    v: Vec<f32>,
+    lanes: usize,
+    seeds: Vec<u64>,
+}
+
+#[derive(Default)]
+struct SlotState {
+    pendings: Vec<Pending>,
+    results: Vec<Option<Vec<(Mat, Mat)>>>,
+    done: bool,
+}
+
+/// An open collection window for one LROT shape.
+struct Slot {
+    cfg: LrotConfig,
+    len: usize,
+    k: usize,
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+/// Merges same-shape LROT batches from concurrent solves.  See the
+/// module docs for the protocol.
+pub struct Microbatcher {
+    window: Duration,
+    threads: usize,
+    arena: ScratchArena,
+    /// Solves currently in flight (potential joiners) — leaders close
+    /// their window early once every one of them has joined.
+    active: AtomicUsize,
+    slots: Mutex<HashMap<u64, Arc<Slot>>>,
+    metrics: Arc<ServeMetrics>,
+}
+
+/// RAII registration of one in-flight solve with the microbatcher;
+/// dropping it (solve finished, failed, or cancelled) un-counts the
+/// solve and wakes any leader waiting for it.
+pub struct SolveGuard {
+    micro: Arc<Microbatcher>,
+}
+
+impl Drop for SolveGuard {
+    fn drop(&mut self) {
+        self.micro.active.fetch_sub(1, Ordering::AcqRel);
+        // wake leaders: their "everyone joined" threshold just dropped
+        let slots = self.micro.slots.lock().unwrap();
+        for slot in slots.values() {
+            let _st = slot.state.lock().unwrap();
+            slot.cv.notify_all();
+        }
+    }
+}
+
+/// FNV-1a over the batch shape + solver hyper-parameters: only batches
+/// that would be solved with identical per-lane geometry may merge.
+fn shape_key(len: usize, k: usize, cfg: &LrotConfig) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for w in [
+        len as u64,
+        k as u64,
+        cfg.rank as u64,
+        cfg.outer as u64,
+        cfg.inner as u64,
+        u64::from(cfg.gamma.to_bits()),
+        u64::from(cfg.tau.to_bits()),
+    ] {
+        for &b in &w.to_le_bytes() {
+            h = (h ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Stage a batch view's lanes into one owned contiguous buffer.
+fn pack(view: BatchView<'_>) -> Vec<f32> {
+    let mut out = Vec::new();
+    for it in view.items {
+        out.extend_from_slice(&view.data[it.start()..it.end()]);
+    }
+    out
+}
+
+impl Microbatcher {
+    /// `window` caps how long a lane leader waits for co-travellers;
+    /// `Duration::ZERO` disables merging (every batch solves solo).
+    pub fn new(window: Duration, threads: usize, metrics: Arc<ServeMetrics>) -> Microbatcher {
+        Microbatcher {
+            window,
+            threads: threads.max(1),
+            arena: ScratchArena::new(threads.max(1)),
+            active: AtomicUsize::new(0),
+            slots: Mutex::new(HashMap::new()),
+            metrics,
+        }
+    }
+
+    /// Register a solve as in flight for the guard's lifetime.
+    pub fn begin_solve(self: &Arc<Self>) -> SolveGuard {
+        self.active.fetch_add(1, Ordering::AcqRel);
+        SolveGuard { micro: Arc::clone(self) }
+    }
+
+    /// Solve one same-shape batch, possibly merged with batches of other
+    /// in-flight solves.  Bit-identical to a solo
+    /// [`lrot::solve_factored_batch`] call regardless of merging.
+    pub fn submit(
+        &self,
+        u: BatchView<'_>,
+        v: BatchView<'_>,
+        active_rows: usize,
+        cfg: &LrotConfig,
+        seeds: &[u64],
+    ) -> Vec<(Mat, Mat)> {
+        let lanes = u.len();
+        if lanes == 0 {
+            return Vec::new();
+        }
+        self.metrics.micro_calls.fetch_add(1, Ordering::Relaxed);
+        self.metrics.micro_lanes.fetch_add(lanes, Ordering::Relaxed);
+        // nothing to merge with: skip staging copies and window latency
+        if self.window.is_zero() || self.active.load(Ordering::Acquire) <= 1 {
+            return self.solve_here(u, v, active_rows, cfg, seeds);
+        }
+        let len = active_rows;
+        let k = if lanes == 0 { 0 } else { u.items[0].cols };
+        let key = shape_key(len, k, cfg);
+        let pending = Pending { u: pack(u), v: pack(v), lanes, seeds: seeds.to_vec() };
+
+        // join an open slot or lead a new one (push happens under BOTH
+        // locks, so a leader that removed the slot from the map has
+        // already seen every joiner)
+        let mut slots = self.slots.lock().unwrap();
+        if let Some(slot) = slots.get(&key).map(Arc::clone) {
+            if slot.len == len && slot.k == k && same_cfg(&slot.cfg, cfg) {
+                let my_idx = {
+                    let mut st = slot.state.lock().unwrap();
+                    debug_assert!(!st.done, "joined a closed slot");
+                    st.pendings.push(pending);
+                    st.results.push(None);
+                    slot.cv.notify_all();
+                    st.pendings.len() - 1
+                };
+                drop(slots);
+                return self.wait_result(&slot, my_idx);
+            }
+            // 64-bit key collision between distinct shapes: solve solo
+            drop(slots);
+            return self.solve_here(u, v, active_rows, cfg, seeds);
+        }
+        let slot = Arc::new(Slot {
+            cfg: cfg.clone(),
+            len,
+            k,
+            state: Mutex::new(SlotState::default()),
+            cv: Condvar::new(),
+        });
+        {
+            let mut st = slot.state.lock().unwrap();
+            st.pendings.push(pending);
+            st.results.push(None);
+        }
+        slots.insert(key, Arc::clone(&slot));
+        drop(slots);
+        self.lead(key, &slot)
+    }
+
+    /// Leader path: wait out the window (closing early once every
+    /// in-flight solve joined), seal the slot, run the merged solve, and
+    /// distribute the per-participant slices.
+    fn lead(&self, key: u64, slot: &Arc<Slot>) -> Vec<(Mat, Mat)> {
+        let deadline = Instant::now() + self.window;
+        {
+            let mut st = slot.state.lock().unwrap();
+            loop {
+                if st.pendings.len() >= self.active.load(Ordering::Acquire) {
+                    break; // everyone who could join has
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (g, _) = slot.cv.wait_timeout(st, deadline - now).unwrap();
+                st = g;
+            }
+        }
+        // seal: remove from the map first (under `slots` alone), so no
+        // new joiner can reach the slot, then take the staged lanes
+        {
+            let mut slots = self.slots.lock().unwrap();
+            let removed = slots.remove(&key);
+            debug_assert!(removed.is_some(), "leader's slot vanished");
+        }
+        let pendings = std::mem::take(&mut slot.state.lock().unwrap().pendings);
+        let parts = pendings.len();
+        let total: usize = pendings.iter().map(|p| p.lanes).sum();
+        if parts >= 2 {
+            self.metrics.micro_merged_calls.fetch_add(1, Ordering::Relaxed);
+            self.metrics.micro_merged_lanes.fetch_add(total, Ordering::Relaxed);
+        }
+
+        // merge: uniform lanes (len rows × k cols on both sides — block
+        // co-clusters are square and share one factor width per scale)
+        let lane_elems = slot.len * slot.k;
+        let mut ud = Vec::with_capacity(total * lane_elems);
+        let mut vd = Vec::with_capacity(total * lane_elems);
+        let mut seeds = Vec::with_capacity(total);
+        for p in &pendings {
+            ud.extend_from_slice(&p.u);
+            vd.extend_from_slice(&p.v);
+            seeds.extend_from_slice(&p.seeds);
+        }
+        let items: Vec<BatchItem> =
+            (0..total).map(|l| BatchItem::new(l * slot.len..(l + 1) * slot.len, slot.k)).collect();
+        let actives = vec![(slot.len, slot.len); total];
+        let outs = lrot::solve_factored_batch(
+            BatchView::new(&ud, &items),
+            BatchView::new(&vd, &items),
+            &actives,
+            &slot.cfg,
+            &seeds,
+            &self.arena,
+            self.threads,
+        );
+
+        // distribute + wake the joiners; the leader is participant 0
+        let mut iter = outs.into_iter().map(|o| (o.q, o.r));
+        let mut mine = Vec::new();
+        {
+            let mut st = slot.state.lock().unwrap();
+            for (i, p) in pendings.iter().enumerate() {
+                let slice: Vec<(Mat, Mat)> = iter.by_ref().take(p.lanes).collect();
+                if i == 0 {
+                    mine = slice;
+                } else {
+                    st.results[i] = Some(slice);
+                }
+            }
+            st.done = true;
+            slot.cv.notify_all();
+        }
+        mine
+    }
+
+    /// Joiner path: block until the leader distributes.
+    fn wait_result(&self, slot: &Slot, my_idx: usize) -> Vec<(Mat, Mat)> {
+        let mut st = slot.state.lock().unwrap();
+        loop {
+            if st.done {
+                return st.results[my_idx].take().expect("leader distributed every slice");
+            }
+            st = slot.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Unmerged local solve (passthrough and collision fallback).
+    fn solve_here(
+        &self,
+        u: BatchView<'_>,
+        v: BatchView<'_>,
+        active_rows: usize,
+        cfg: &LrotConfig,
+        seeds: &[u64],
+    ) -> Vec<(Mat, Mat)> {
+        let actives = vec![(active_rows, active_rows); u.len()];
+        lrot::solve_factored_batch(u, v, &actives, cfg, seeds, &self.arena, self.threads)
+            .into_iter()
+            .map(|o| (o.q, o.r))
+            .collect()
+    }
+}
+
+fn same_cfg(a: &LrotConfig, b: &LrotConfig) -> bool {
+    a.rank == b.rank
+        && a.outer == b.outer
+        && a.inner == b.inner
+        && a.gamma.to_bits() == b.gamma.to_bits()
+        && a.tau.to_bits() == b.tau.to_bits()
+}
+
+// ---------------------------------------------------------------------------
+// JobHooks
+// ---------------------------------------------------------------------------
+
+/// Per-request [`SolveHooks`]: a deadline that cancels the run between
+/// batches, and an optional microbatcher that takes over LROT dispatch.
+pub struct JobHooks {
+    /// Absolute deadline; `None` means the request never times out.
+    pub deadline: Option<Instant>,
+    /// Cross-request lane merger; `None` solves every batch locally.
+    pub micro: Option<Arc<Microbatcher>>,
+}
+
+impl SolveHooks for JobHooks {
+    fn cancelled(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+
+    fn lrot_batch(
+        &self,
+        u: BatchView<'_>,
+        v: BatchView<'_>,
+        active: usize,
+        cfg: &LrotConfig,
+        seeds: &[u64],
+    ) -> Option<Vec<(Mat, Mat)>> {
+        self.micro.as_ref().map(|m| m.submit(u, v, active, cfg, seeds))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler
+// ---------------------------------------------------------------------------
+
+/// Why a job was refused at admission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rejected {
+    /// The admission queue is at capacity.
+    Overloaded,
+    /// The server is draining; no new work is admitted.
+    ShuttingDown,
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct SchedState {
+    queue: VecDeque<Job>,
+    stopping: bool,
+}
+
+/// Bounded worker pool with bounded admission and graceful drain.
+pub struct Scheduler {
+    state: Mutex<SchedState>,
+    cv: Condvar,
+    cap: usize,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    metrics: Arc<ServeMetrics>,
+}
+
+impl Scheduler {
+    /// Spawn `workers` threads consuming a queue of at most `cap` waiting
+    /// jobs (jobs being executed don't count against `cap`).
+    pub fn new(workers: usize, cap: usize, metrics: Arc<ServeMetrics>) -> Arc<Scheduler> {
+        let sched = Arc::new(Scheduler {
+            state: Mutex::new(SchedState { queue: VecDeque::new(), stopping: false }),
+            cv: Condvar::new(),
+            cap: cap.max(1),
+            workers: Mutex::new(Vec::new()),
+            metrics,
+        });
+        let mut handles = sched.workers.lock().unwrap();
+        for i in 0..workers.max(1) {
+            let s = Arc::clone(&sched);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("hiref-serve-worker-{i}"))
+                    .spawn(move || s.worker_loop())
+                    .expect("spawn worker"),
+            );
+        }
+        drop(handles);
+        sched
+    }
+
+    fn worker_loop(&self) {
+        loop {
+            let job = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if let Some(job) = st.queue.pop_front() {
+                        self.metrics.note_queue_depth(st.queue.len());
+                        break Some(job);
+                    }
+                    if st.stopping {
+                        break None; // drained: queue empty and no more admits
+                    }
+                    st = self.cv.wait(st).unwrap();
+                }
+            };
+            match job {
+                Some(job) => job(),
+                None => return,
+            }
+        }
+    }
+
+    /// Admit a job, or refuse with a typed reason.  Never blocks.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) -> Result<(), Rejected> {
+        let mut st = self.state.lock().unwrap();
+        if st.stopping {
+            return Err(Rejected::ShuttingDown);
+        }
+        if st.queue.len() >= self.cap {
+            return Err(Rejected::Overloaded);
+        }
+        st.queue.push_back(Box::new(job));
+        self.metrics.note_queue_depth(st.queue.len());
+        drop(st);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Graceful shutdown: stop admitting, run everything already queued,
+    /// join the workers.  Idempotent.
+    pub fn drain(&self) {
+        {
+            let mut st = self.state.lock().unwrap();
+            st.stopping = true;
+        }
+        self.cv.notify_all();
+        let handles = std::mem::take(&mut *self.workers.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn metrics() -> Arc<ServeMetrics> {
+        Arc::new(ServeMetrics::default())
+    }
+
+    /// A deterministic little factor batch: `lanes` lanes of `len × k`.
+    fn batch_data(lanes: usize, len: usize, k: usize, seed: u64) -> (Vec<f32>, Vec<BatchItem>) {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> =
+            (0..lanes * len * k).map(|_| (rng.next_u64() % 997) as f32 / 331.0).collect();
+        let items = (0..lanes).map(|l| BatchItem::new(l * len..(l + 1) * len, k)).collect();
+        (data, items)
+    }
+
+    fn solo(
+        data: &(Vec<f32>, Vec<BatchItem>),
+        vdata: &(Vec<f32>, Vec<BatchItem>),
+        len: usize,
+        cfg: &LrotConfig,
+        seeds: &[u64],
+    ) -> Vec<(Mat, Mat)> {
+        let arena = ScratchArena::new(2);
+        lrot::solve_factored_batch(
+            BatchView::new(&data.0, &data.1),
+            BatchView::new(&vdata.0, &vdata.1),
+            &vec![(len, len); data.1.len()],
+            cfg,
+            seeds,
+            &arena,
+            2,
+        )
+        .into_iter()
+        .map(|o| (o.q, o.r))
+        .collect()
+    }
+
+    fn assert_outs_eq(a: &[(Mat, Mat)], b: &[(Mat, Mat)]) {
+        assert_eq!(a.len(), b.len());
+        for ((q1, r1), (q2, r2)) in a.iter().zip(b) {
+            assert_eq!(q1.data, q2.data, "Q drifted");
+            assert_eq!(r1.data, r2.data, "R drifted");
+        }
+    }
+
+    #[test]
+    fn merged_submissions_are_bit_identical_to_solo() {
+        let (len, k) = (8, 4);
+        let cfg = LrotConfig { rank: 2, outer: 12, inner: 6, gamma: 8.0, tau: 0.01 };
+        let a_u = batch_data(2, len, k, 11);
+        let a_v = batch_data(2, len, k, 12);
+        let b_u = batch_data(3, len, k, 13);
+        let b_v = batch_data(3, len, k, 14);
+        let a_seeds = [101u64, 102];
+        let b_seeds = [201u64, 202, 203];
+        let want_a = solo(&a_u, &a_v, len, &cfg, &a_seeds);
+        let want_b = solo(&b_u, &b_v, len, &cfg, &b_seeds);
+
+        let m = Arc::new(Microbatcher::new(Duration::from_millis(2000), 2, metrics()));
+        // both guards exist before either submit, so the leader's
+        // "everyone joined" close fires deterministically at 2 parts
+        let ga = m.begin_solve();
+        let gb = m.begin_solve();
+        let (got_a, got_b) = std::thread::scope(|s| {
+            let ma = Arc::clone(&m);
+            let mb = Arc::clone(&m);
+            let (cfg_a, cfg_b) = (&cfg, &cfg);
+            let ta = s.spawn(move || {
+                let out = ma.submit(
+                    BatchView::new(&a_u.0, &a_u.1),
+                    BatchView::new(&a_v.0, &a_v.1),
+                    len,
+                    cfg_a,
+                    &a_seeds,
+                );
+                drop(ga);
+                out
+            });
+            let tb = s.spawn(move || {
+                let out = mb.submit(
+                    BatchView::new(&b_u.0, &b_u.1),
+                    BatchView::new(&b_v.0, &b_v.1),
+                    len,
+                    cfg_b,
+                    &b_seeds,
+                );
+                drop(gb);
+                out
+            });
+            (ta.join().unwrap(), tb.join().unwrap())
+        });
+        assert_outs_eq(&got_a, &want_a);
+        assert_outs_eq(&got_b, &want_b);
+        assert_eq!(m.metrics.micro_calls.load(Ordering::Relaxed), 2);
+        assert_eq!(m.metrics.micro_lanes.load(Ordering::Relaxed), 5);
+        assert_eq!(m.metrics.micro_merged_calls.load(Ordering::Relaxed), 1, "one merged solve");
+        assert_eq!(m.metrics.micro_merged_lanes.load(Ordering::Relaxed), 5, "all lanes rode it");
+        assert!(m.slots.lock().unwrap().is_empty(), "slot sealed and removed");
+    }
+
+    #[test]
+    fn lone_or_windowless_submissions_pass_through() {
+        let (len, k) = (8, 4);
+        let cfg = LrotConfig { rank: 2, outer: 10, inner: 5, gamma: 8.0, tau: 0.01 };
+        let u = batch_data(2, len, k, 5);
+        let v = batch_data(2, len, k, 6);
+        let seeds = [7u64, 8];
+        let want = solo(&u, &v, len, &cfg, &seeds);
+        // no guard registered → instant passthrough
+        let m = Arc::new(Microbatcher::new(Duration::from_millis(2000), 2, metrics()));
+        let got = m.submit(BatchView::new(&u.0, &u.1), BatchView::new(&v.0, &v.1), len, &cfg, &seeds);
+        assert_outs_eq(&got, &want);
+        // zero window → passthrough even with other solves in flight
+        let m0 = Arc::new(Microbatcher::new(Duration::ZERO, 2, metrics()));
+        let _g1 = m0.begin_solve();
+        let _g2 = m0.begin_solve();
+        let got0 =
+            m0.submit(BatchView::new(&u.0, &u.1), BatchView::new(&v.0, &v.1), len, &cfg, &seeds);
+        assert_outs_eq(&got0, &want);
+        for m in [&m, &m0] {
+            assert_eq!(m.metrics.micro_merged_calls.load(Ordering::Relaxed), 0);
+            assert_eq!(m.metrics.micro_calls.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn leader_window_expires_without_joiners() {
+        // two solves in flight, but only one submits: the leader must
+        // time its window out and solve alone (no deadlock, no merge)
+        let (len, k) = (4, 3);
+        let cfg = LrotConfig { rank: 2, outer: 6, inner: 4, gamma: 8.0, tau: 0.01 };
+        let u = batch_data(1, len, k, 1);
+        let v = batch_data(1, len, k, 2);
+        let want = solo(&u, &v, len, &cfg, &[9]);
+        let m = Arc::new(Microbatcher::new(Duration::from_millis(20), 2, metrics()));
+        let _g1 = m.begin_solve();
+        let _g2 = m.begin_solve(); // never submits
+        let got = m.submit(BatchView::new(&u.0, &u.1), BatchView::new(&v.0, &v.1), len, &cfg, &[9]);
+        assert_outs_eq(&got, &want);
+        assert_eq!(m.metrics.micro_merged_calls.load(Ordering::Relaxed), 0);
+        assert!(m.slots.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn scheduler_overload_is_typed_and_deterministic() {
+        let met = metrics();
+        let sched = Scheduler::new(1, 1, Arc::clone(&met));
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let running = Arc::new((Mutex::new(false), Condvar::new()));
+        let (g, r) = (Arc::clone(&gate), Arc::clone(&running));
+        // occupy the single worker until we open the gate
+        sched
+            .submit(move || {
+                *r.0.lock().unwrap() = true;
+                r.1.notify_all();
+                let mut open = g.0.lock().unwrap();
+                while !*open {
+                    open = g.1.wait(open).unwrap();
+                }
+            })
+            .unwrap();
+        {
+            let mut started = running.0.lock().unwrap();
+            while !*started {
+                started = running.1.wait(started).unwrap();
+            }
+        }
+        let ran = Arc::new(AtomicUsize::new(0));
+        let r2 = Arc::clone(&ran);
+        sched.submit(move || { r2.fetch_add(1, Ordering::Relaxed); }).unwrap(); // fills the queue
+        let r3 = Arc::clone(&ran);
+        assert_eq!(
+            sched.submit(move || { r3.fetch_add(1, Ordering::Relaxed); }),
+            Err(Rejected::Overloaded)
+        );
+        *gate.0.lock().unwrap() = true;
+        gate.1.notify_all();
+        sched.drain();
+        assert_eq!(ran.load(Ordering::Relaxed), 1, "queued job ran, rejected job did not");
+        assert_eq!(sched.submit(|| {}), Err(Rejected::ShuttingDown));
+        assert!(met.queue_peak.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn drain_finishes_admitted_work() {
+        let sched = Scheduler::new(2, 64, metrics());
+        let ran = Arc::new(AtomicUsize::new(0));
+        for _ in 0..16 {
+            let r = Arc::clone(&ran);
+            sched.submit(move || { r.fetch_add(1, Ordering::Relaxed); }).unwrap();
+        }
+        sched.drain();
+        assert_eq!(ran.load(Ordering::Relaxed), 16, "drain ran every admitted job");
+    }
+}

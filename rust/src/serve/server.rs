@@ -1,0 +1,593 @@
+//! The `hiref serve` daemon: TCP accept loop, per-connection NDJSON
+//! dispatch, and the solve job that ties sessions, scheduling, and
+//! microbatching together.
+//!
+//! One thread per connection reads requests and writes replies in
+//! request order; solve work itself runs on the bounded [`Scheduler`]
+//! pool, so connection count does not set CPU concurrency.  Graceful
+//! shutdown (`shutdown` verb or [`ServerHandle::shutdown`]) stops
+//! admission, drains everything already admitted, then half-closes every
+//! connection's *read* side — blocked readers wake with EOF while replies
+//! still in flight go out on the intact write side.
+
+use std::collections::HashMap;
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::metrics::ServeMetrics;
+use super::protocol::{self, Json};
+use super::scheduler::{JobHooks, Microbatcher, Rejected, Scheduler};
+use super::session::{DatasetEntry, DatasetRegistry, SessionCache};
+use crate::api::SolveError;
+use crate::coordinator::hiref::{HiRef, HiRefConfig};
+use crate::costs::{self, CostKind};
+use crate::data::stream::BinFileSource;
+use crate::linalg::Mat;
+use crate::pool::ScratchArena;
+
+/// Everything `hiref serve` needs to run.
+pub struct ServeConfig {
+    /// Bind address (`127.0.0.1:0` picks a free port; see
+    /// [`ServerHandle::addr`]).
+    pub listen: String,
+    /// Solver configuration shared by every request (must have
+    /// `batching` enabled — the microbatcher intercepts the batched
+    /// dispatch path).
+    pub solver: HiRefConfig,
+    /// Worker threads executing solves.
+    pub workers: usize,
+    /// Admitted-but-not-started solves allowed before requests are
+    /// refused with a typed `overloaded` reply.
+    pub queue_depth: usize,
+    /// Byte budget for warm session factor archives (LRU beyond it).
+    pub session_budget: usize,
+    /// Archive factors in spill files under this directory instead of
+    /// resident memory.
+    pub session_spill_dir: Option<PathBuf>,
+    /// Cross-request microbatch collection window (zero disables
+    /// merging; every batch then solves solo, still bit-identically).
+    pub micro_window: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            listen: "127.0.0.1:0".to_string(),
+            solver: HiRefConfig::default(),
+            workers: 2,
+            queue_depth: 32,
+            session_budget: 256 << 20,
+            session_spill_dir: None,
+            micro_window: Duration::from_millis(2),
+        }
+    }
+}
+
+/// A finished solve, as handed from the worker back to the connection
+/// thread that owns the reply.
+struct SolveDone {
+    perm: Vec<u32>,
+    warm: bool,
+    elapsed_ms: f64,
+}
+
+/// One-shot reply slot: the worker fills it, the connection thread waits.
+#[derive(Default)]
+struct ReplySlot {
+    state: Mutex<Option<Result<SolveDone, SolveError>>>,
+    cv: Condvar,
+}
+
+impl ReplySlot {
+    fn fill(&self, r: Result<SolveDone, SolveError>) {
+        *self.state.lock().unwrap() = Some(r);
+        self.cv.notify_all();
+    }
+
+    fn take(&self) -> Result<SolveDone, SolveError> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = st.take() {
+                return r;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+}
+
+/// Shared state of one serve instance.
+pub struct Server {
+    solver_cfg: HiRefConfig,
+    registry: DatasetRegistry,
+    sessions: SessionCache,
+    micro: Arc<Microbatcher>,
+    sched: Arc<Scheduler>,
+    metrics: Arc<ServeMetrics>,
+    stopping: AtomicBool,
+    addr: SocketAddr,
+    /// Read-half handles of live connections, for shutdown wakeup.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    next_conn: AtomicU64,
+    arena: ScratchArena,
+}
+
+/// Handle to a running server: its bound address plus the accept/worker
+/// threads to join on exit.
+pub struct ServerHandle {
+    server: Arc<Server>,
+    accept: Option<JoinHandle<()>>,
+    conn_handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+/// Bind and start serving; returns once the listener is live.
+pub fn serve(cfg: ServeConfig) -> Result<ServerHandle, SolveError> {
+    if !cfg.solver.batching {
+        return Err(SolveError::InvalidConfig(
+            "serve requires the level-synchronous batched execution path (batching = true)".into(),
+        ));
+    }
+    if cfg.solver.record_scales {
+        return Err(SolveError::InvalidConfig(
+            "record_scales retains O(n log n) diagnostics per request; disable it for serving"
+                .into(),
+        ));
+    }
+    let listener = TcpListener::bind(&cfg.listen)
+        .map_err(|e| SolveError::Backend(format!("bind {}: {e}", cfg.listen)))?;
+    let addr = listener.local_addr().map_err(SolveError::from)?;
+    let metrics = Arc::new(ServeMetrics::default());
+    let threads = cfg.solver.threads.max(1);
+    let server = Arc::new(Server {
+        registry: DatasetRegistry::new(cfg.solver.chunk_rows),
+        sessions: SessionCache::new(
+            cfg.session_budget,
+            cfg.session_spill_dir.clone(),
+            Arc::clone(&metrics),
+        ),
+        micro: Arc::new(Microbatcher::new(cfg.micro_window, threads, Arc::clone(&metrics))),
+        sched: Scheduler::new(cfg.workers, cfg.queue_depth, Arc::clone(&metrics)),
+        metrics,
+        stopping: AtomicBool::new(false),
+        addr,
+        conns: Mutex::new(HashMap::new()),
+        next_conn: AtomicU64::new(0),
+        arena: ScratchArena::new(threads),
+        solver_cfg: cfg.solver,
+    });
+    let conn_handles = Arc::new(Mutex::new(Vec::new()));
+    let accept = {
+        let server = Arc::clone(&server);
+        let handles = Arc::clone(&conn_handles);
+        std::thread::Builder::new()
+            .name("hiref-serve-accept".into())
+            .spawn(move || server.accept_loop(listener, &handles))
+            .expect("spawn accept thread")
+    };
+    Ok(ServerHandle { server, accept: Some(accept), conn_handles })
+}
+
+impl ServerHandle {
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.server.addr
+    }
+
+    /// Service counters (same numbers as the `stats` verb).
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.server.metrics
+    }
+
+    /// Initiate graceful shutdown from the host side (equivalent to the
+    /// `shutdown` protocol verb; idempotent).
+    pub fn shutdown(&self) {
+        self.server.shutdown();
+    }
+
+    /// Shut down (if not already) and join every server thread.
+    pub fn join(self) {
+        self.server.shutdown();
+        self.wait();
+    }
+
+    /// Join every server thread **without** initiating shutdown — blocks
+    /// until some client sends the `shutdown` verb (the `hiref serve`
+    /// foreground mode).
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles = std::mem::take(&mut *self.conn_handles.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Server {
+    fn accept_loop(self: Arc<Server>, listener: TcpListener, handles: &Mutex<Vec<JoinHandle<()>>>) {
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if self.stopping.load(Ordering::Acquire) {
+                        return; // the shutdown wake-up connection
+                    }
+                    let id = self.next_conn.fetch_add(1, Ordering::Relaxed);
+                    if let Ok(clone) = stream.try_clone() {
+                        self.conns.lock().unwrap().insert(id, clone);
+                    }
+                    let server = Arc::clone(&self);
+                    let h = std::thread::Builder::new()
+                        .name(format!("hiref-serve-conn-{id}"))
+                        .spawn(move || {
+                            server.handle_conn(stream);
+                            server.conns.lock().unwrap().remove(&id);
+                        })
+                        .expect("spawn connection thread");
+                    handles.lock().unwrap().push(h);
+                }
+                Err(_) => {
+                    if self.stopping.load(Ordering::Acquire) {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Stop admission, drain admitted work, wake blocked readers.
+    fn shutdown(&self) {
+        if self.stopping.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        self.sched.drain();
+        // half-close the read side of every connection: idle readers see
+        // EOF, replies still being written go out untouched
+        for s in self.conns.lock().unwrap().values() {
+            let _ = s.shutdown(Shutdown::Read);
+        }
+        // wake the accept loop
+        let _ = TcpStream::connect(self.addr);
+    }
+
+    fn handle_conn(self: &Arc<Server>, stream: TcpStream) {
+        let mut reader = match stream.try_clone() {
+            Ok(s) => BufReader::new(s),
+            Err(_) => return,
+        };
+        let mut writer = stream;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) | Err(_) => return, // EOF or reset
+                Ok(_) => {}
+            }
+            if line.trim().is_empty() {
+                continue;
+            }
+            let reply = self.dispatch(&line);
+            if write_line(&mut writer, &reply).is_err() {
+                return;
+            }
+        }
+    }
+
+    /// One request line in, one reply line out.
+    fn dispatch(self: &Arc<Server>, line: &str) -> String {
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let req = match protocol::parse(line) {
+            Ok(v) => v,
+            Err(e) => return protocol::reply_err(None, "bad_request", &e),
+        };
+        let id = req.get("id").cloned();
+        let id = id.as_ref();
+        match req.str_field("verb") {
+            Some("ping") => protocol::reply_ok(id, vec![("pong".into(), Json::Bool(true))]),
+            Some("register") => self.handle_register(id, &req),
+            Some("solve") => self.handle_solve(id, &req),
+            Some("stats") => self.handle_stats(id),
+            Some("shutdown") => {
+                // drain first so in-flight replies precede the half-close;
+                // our own reply goes out after (write side stays open)
+                self.shutdown();
+                protocol::reply_ok(id, vec![("stopped".into(), Json::Bool(true))])
+            }
+            Some(other) => {
+                protocol::reply_err(id, "unknown_verb", &format!("unknown verb '{other}'"))
+            }
+            None => protocol::reply_err(id, "bad_request", "missing string field 'verb'"),
+        }
+    }
+
+    fn handle_register(&self, id: Option<&Json>, req: &Json) -> String {
+        let registered = if let Some(rows) = req.get("rows") {
+            match mat_from_rows(rows) {
+                Ok(m) => self.registry.register_mem(m, &self.arena),
+                Err(msg) => return protocol::reply_err(id, "bad_request", &msg),
+            }
+        } else if let Some(path) = req.str_field("path") {
+            let opened = if path.ends_with(".npy") {
+                BinFileSource::open_npy(path)
+            } else {
+                match req.u64_field("dim") {
+                    Some(d) if d > 0 => BinFileSource::open(path, d as usize),
+                    _ => {
+                        return protocol::reply_err(
+                            id,
+                            "bad_request",
+                            "registering a .bin path requires a positive 'dim'",
+                        )
+                    }
+                }
+            };
+            match opened {
+                Ok(src) => self.registry.register_file(src, &self.arena),
+                Err(e) => return protocol::reply_solve_err(id, &SolveError::from(e)),
+            }
+        } else {
+            return protocol::reply_err(id, "bad_request", "register needs 'rows' or 'path'");
+        };
+        match registered {
+            Ok((ds_id, entry, new)) => protocol::reply_ok(
+                id,
+                vec![
+                    ("dataset".into(), Json::Str(ds_id)),
+                    ("rows".into(), Json::Num(entry.rows() as f64)),
+                    ("dim".into(), Json::Num(entry.dim() as f64)),
+                    ("new".into(), Json::Bool(new)),
+                ],
+            ),
+            Err(e) => protocol::reply_solve_err(id, &SolveError::from(e)),
+        }
+    }
+
+    fn handle_solve(self: &Arc<Server>, id: Option<&Json>, req: &Json) -> String {
+        if self.stopping.load(Ordering::Acquire) {
+            return protocol::reply_err(id, "shutting_down", "server is draining");
+        }
+        let (dx, dy) = match (self.lookup(req, "x"), self.lookup(req, "y")) {
+            (Ok(a), Ok(b)) => (a, b),
+            (Err(r), _) | (_, Err(r)) => return reply_for_lookup(id, r),
+        };
+        let deadline = req.u64_field("deadline_ms").map(|ms| Instant::now() + Duration::from_millis(ms));
+        let slot = Arc::new(ReplySlot::default());
+        let job_slot = Arc::clone(&slot);
+        let server = Arc::clone(self);
+        let admitted = self.sched.submit(move || {
+            job_slot.fill(server.run_solve(&dx, &dy, deadline));
+        });
+        match admitted {
+            Err(Rejected::Overloaded) => {
+                self.metrics.overloaded.fetch_add(1, Ordering::Relaxed);
+                protocol::reply_err(id, "overloaded", "admission queue is full")
+            }
+            Err(Rejected::ShuttingDown) => {
+                protocol::reply_err(id, "shutting_down", "server is draining")
+            }
+            Ok(()) => {
+                self.metrics.solves.fetch_add(1, Ordering::Relaxed);
+                match slot.take() {
+                    Ok(done) => {
+                        self.metrics.solves_ok.fetch_add(1, Ordering::Relaxed);
+                        protocol::reply_ok(
+                            id,
+                            vec![
+                                (
+                                    "perm".into(),
+                                    Json::Arr(
+                                        done.perm.iter().map(|&j| Json::Num(j as f64)).collect(),
+                                    ),
+                                ),
+                                ("warm".into(), Json::Bool(done.warm)),
+                                ("elapsed_ms".into(), Json::Num(done.elapsed_ms)),
+                            ],
+                        )
+                    }
+                    Err(e) => {
+                        if e == SolveError::Cancelled {
+                            self.metrics.timeouts.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            self.metrics.solve_errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                        protocol::reply_solve_err(id, &e)
+                    }
+                }
+            }
+        }
+    }
+
+    /// The worker-side solve: warm factors, hooks, streamed points.
+    fn run_solve(
+        &self,
+        dx: &DatasetEntry,
+        dy: &DatasetEntry,
+        deadline: Option<Instant>,
+    ) -> Result<SolveDone, SolveError> {
+        let t0 = Instant::now();
+        // a request that aged out in the queue never starts
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            return Err(SolveError::Cancelled);
+        }
+        // shape errors are cheap to detect — fail before factorising so a
+        // doomed pair never occupies a session slot
+        if dx.rows() != dy.rows() {
+            return Err(SolveError::ShapeMismatch { n: dx.rows(), m: dy.rows() });
+        }
+        if dx.dim() != dy.dim() {
+            return Err(SolveError::DimMismatch { dx: dx.dim(), dy: dy.dim() });
+        }
+        let cfg = &self.solver_cfg;
+        let key = session_key(dx.hash(), dy.hash(), cfg);
+        let (fu, fv, warm) = self.sessions.get_or_build(key, || {
+            let arena = ScratchArena::new(cfg.threads.max(1));
+            dx.with_source(|sx| {
+                dy.with_source(|sy| {
+                    costs::factors_for_source(
+                        sx,
+                        sy,
+                        cfg.cost,
+                        cfg.indyk_width,
+                        cfg.seed,
+                        cfg.chunk_rows,
+                        &arena,
+                        cfg.threads.max(1),
+                    )
+                    .map_err(SolveError::from)
+                })
+            })
+        })?;
+        // register with the microbatcher for the whole solve, so lane
+        // leaders know how many co-travellers may still join
+        let _guard = self.micro.begin_solve();
+        let hooks = JobHooks { deadline, micro: Some(Arc::clone(&self.micro)) };
+        let solver = HiRef::new(cfg.clone()).with_hooks(Arc::new(hooks));
+        let out = dx.with_source(|sx| {
+            dy.with_source(|sy| solver.align_prefactored_source(fu, fv, sx, sy))
+        })?;
+        self.metrics
+            .spill_bytes_written
+            .fetch_add(out.stats.spill_bytes_written, Ordering::Relaxed);
+        self.metrics.spill_reads.fetch_add(out.stats.spill_reads, Ordering::Relaxed);
+        let elapsed = t0.elapsed();
+        self.metrics.record_latency(elapsed);
+        Ok(SolveDone { perm: out.perm, warm, elapsed_ms: elapsed.as_secs_f64() * 1e3 })
+    }
+
+    fn handle_stats(&self, id: Option<&Json>) -> String {
+        let mut stats = match self.metrics.to_json() {
+            Json::Obj(fields) => fields,
+            _ => unreachable!("metrics serialise to an object"),
+        };
+        let sess = self.sessions.stats();
+        stats.push(("sessions".into(), Json::Num(sess.sessions as f64)));
+        stats.push(("session_bytes".into(), Json::Num(sess.bytes as f64)));
+        stats.push(("session_pinned_bytes".into(), Json::Num(sess.pinned_bytes as f64)));
+        stats.push((
+            "session_spill_bytes_written".into(),
+            Json::Num(sess.spill_bytes_written as f64),
+        ));
+        stats.push(("session_spill_reads".into(), Json::Num(sess.spill_reads as f64)));
+        stats.push(("datasets".into(), Json::Num(self.registry.len() as f64)));
+        protocol::reply_ok(id, vec![("stats".into(), Json::Obj(stats))])
+    }
+
+    fn lookup(&self, req: &Json, field: &str) -> Result<Arc<DatasetEntry>, LookupErr> {
+        let id = req.str_field(field).ok_or(LookupErr::Missing(field.to_string()))?;
+        self.registry.get(id).ok_or_else(|| LookupErr::Unknown(id.to_string()))
+    }
+}
+
+enum LookupErr {
+    Missing(String),
+    Unknown(String),
+}
+
+fn reply_for_lookup(id: Option<&Json>, r: LookupErr) -> String {
+    match r {
+        LookupErr::Missing(f) => {
+            protocol::reply_err(id, "bad_request", &format!("solve needs string field '{f}'"))
+        }
+        LookupErr::Unknown(ds) => protocol::reply_err(
+            id,
+            "unknown_dataset",
+            &format!("no dataset registered under '{ds}'"),
+        ),
+    }
+}
+
+/// What the prebuilt factors depend on besides the data: the cost
+/// config.  Anything else (LROT hyper-parameters, thread count, base
+/// size) does not change the factor matrices.
+fn session_key(hx: u64, hy: u64, cfg: &HiRefConfig) -> u64 {
+    let kind = match cfg.cost {
+        CostKind::Euclidean => 1u64,
+        CostKind::SqEuclidean => 2u64,
+    };
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for w in [hx, hy, kind, cfg.indyk_width as u64, cfg.seed] {
+        for &b in &w.to_le_bytes() {
+            h = (h ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Inline `rows: [[f32; d]; n]` → matrix, with shape validation.
+fn mat_from_rows(rows: &Json) -> Result<Mat, String> {
+    let rows = rows.as_arr().ok_or("'rows' must be an array of arrays")?;
+    if rows.is_empty() {
+        return Err("'rows' must be nonempty".to_string());
+    }
+    let dim = rows[0].as_arr().map(<[Json]>::len).unwrap_or(0);
+    if dim == 0 {
+        return Err("'rows' entries must be nonempty arrays".to_string());
+    }
+    let mut m = Mat::zeros(rows.len(), dim);
+    for (i, row) in rows.iter().enumerate() {
+        let row = row.as_arr().ok_or_else(|| format!("row {i} is not an array"))?;
+        if row.len() != dim {
+            return Err(format!("row {i} has {} values, expected {dim}", row.len()));
+        }
+        for (j, v) in row.iter().enumerate() {
+            m.data[i * dim + j] =
+                v.as_f64().ok_or_else(|| format!("row {i} value {j} is not a number"))? as f32;
+        }
+    }
+    Ok(m)
+}
+
+fn write_line(w: &mut TcpStream, reply: &str) -> io::Result<()> {
+    w.write_all(reply.as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_from_rows_validates() {
+        let ok = protocol::parse(r#"{"rows":[[1,2],[3,4],[5,6]]}"#).unwrap();
+        let m = mat_from_rows(ok.get("rows").unwrap()).unwrap();
+        assert_eq!((m.rows, m.cols), (3, 2));
+        assert_eq!(m.data, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        for bad in [r#"{"rows":[]}"#, r#"{"rows":[[1,2],[3]]}"#, r#"{"rows":[1,2]}"#] {
+            let v = protocol::parse(bad).unwrap();
+            assert!(mat_from_rows(v.get("rows").unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn session_key_separates_cost_configs() {
+        let base = HiRefConfig::default();
+        let k0 = session_key(1, 2, &base);
+        assert_eq!(k0, session_key(1, 2, &base.clone()));
+        assert_ne!(k0, session_key(2, 1, &base), "sides are ordered");
+        let mut flipped = base.clone();
+        flipped.cost = CostKind::Euclidean;
+        assert_ne!(k0, session_key(1, 2, &flipped));
+        let mut seeded = base.clone();
+        seeded.seed = 7;
+        assert_ne!(k0, session_key(1, 2, &seeded));
+        let mut lrot_only = base;
+        lrot_only.lrot.outer += 5;
+        assert_eq!(k0, session_key(1, 2, &lrot_only), "LROT params don't touch factors");
+    }
+
+    #[test]
+    fn serve_rejects_unbatched_configs() {
+        let mut cfg = ServeConfig::default();
+        cfg.solver.batching = false;
+        match serve(cfg) {
+            Err(SolveError::InvalidConfig(msg)) => assert!(msg.contains("batching")),
+            Err(e) => panic!("expected InvalidConfig, got {e:?}"),
+            Ok(_) => panic!("an unbatched config must be rejected"),
+        }
+    }
+}

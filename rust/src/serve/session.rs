@@ -1,0 +1,417 @@
+//! Warm sessions: datasets registered once, factors built once.
+//!
+//! Two layers, both keyed by *content*:
+//!
+//! * [`DatasetRegistry`] — datasets registered over the protocol (inline
+//!   rows or a server-side file path), identified by their streaming
+//!   FNV-1a [`content_hash`].  Registering the same bytes twice — from
+//!   memory or from a `.bin` file — yields the same id, so clients can
+//!   treat the id as a cache key without coordinating.
+//! * [`SessionCache`] — prebuilt cost factors per `(x, y, cost config)`
+//!   tuple, stored in a [`FactorStore`] (resident, or spilled to disk when
+//!   the server runs with a spill directory) and evicted LRU under a byte
+//!   budget.  A warm hit materialises the archived factors and performs
+//!   **zero** factorisation work — the property the serve integration
+//!   tests assert through the `factor_builds` counter.
+//!
+//! The cache lock is held across a cold build on purpose: concurrent
+//! requests for the same pair serialise on it and every follower wakes up
+//! to a warm hit, so a thundering herd factorises exactly once.
+
+use std::collections::HashMap;
+use std::io;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+use super::metrics::ServeMetrics;
+use crate::api::SolveError;
+use crate::data::stream::{content_hash, DatasetSource, InMemorySource};
+use crate::data::BinFileSource;
+use crate::linalg::Mat;
+use crate::pool::{FactorStore, ResidentStore, ScratchArena, SpillStore};
+
+// ---------------------------------------------------------------------------
+// DatasetRegistry
+// ---------------------------------------------------------------------------
+
+/// Backing storage of a registered dataset.
+enum DatasetData {
+    /// Rows shipped inline over the protocol.
+    Mem(Mat),
+    /// A server-side `.bin`/`.npy` file, read on demand (beyond-RAM
+    /// datasets never materialise).
+    File(BinFileSource),
+}
+
+/// One registered dataset: shape, content hash, and a way to view it as a
+/// [`DatasetSource`] for the streaming factor builders.
+pub struct DatasetEntry {
+    hash: u64,
+    rows: usize,
+    dim: usize,
+    data: DatasetData,
+}
+
+impl DatasetEntry {
+    /// FNV-1a content hash (the registry id, as an integer).
+    pub fn hash(&self) -> u64 {
+        self.hash
+    }
+
+    /// Number of points.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Ambient dimension.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Run `f` with this dataset as a borrowed [`DatasetSource`].
+    pub fn with_source<R>(&self, f: impl FnOnce(&dyn DatasetSource) -> R) -> R {
+        match &self.data {
+            DatasetData::Mem(m) => f(&InMemorySource::new(m)),
+            DatasetData::File(b) => f(b),
+        }
+    }
+}
+
+/// Content-addressed dataset table: id = 16 hex digits of the streaming
+/// content hash.  Re-registration of identical content is a no-op that
+/// returns the existing entry.
+pub struct DatasetRegistry {
+    map: Mutex<HashMap<String, Arc<DatasetEntry>>>,
+    chunk_rows: usize,
+}
+
+impl DatasetRegistry {
+    /// `chunk_rows` bounds hashing memory (`O(chunk_rows · dim)`).
+    pub fn new(chunk_rows: usize) -> DatasetRegistry {
+        DatasetRegistry { map: Mutex::new(HashMap::new()), chunk_rows }
+    }
+
+    /// Register inline rows.  Returns `(id, entry, was_new)`.
+    pub fn register_mem(
+        &self,
+        m: Mat,
+        arena: &ScratchArena,
+    ) -> io::Result<(String, Arc<DatasetEntry>, bool)> {
+        let hash = content_hash(&InMemorySource::new(&m), self.chunk_rows, arena)?;
+        let (rows, dim) = (m.rows, m.cols);
+        self.insert(hash, rows, dim, DatasetData::Mem(m))
+    }
+
+    /// Register a server-side file already opened as a source.
+    pub fn register_file(
+        &self,
+        src: BinFileSource,
+        arena: &ScratchArena,
+    ) -> io::Result<(String, Arc<DatasetEntry>, bool)> {
+        let hash = content_hash(&src, self.chunk_rows, arena)?;
+        let (rows, dim) = (src.rows(), src.dim());
+        self.insert(hash, rows, dim, DatasetData::File(src))
+    }
+
+    fn insert(
+        &self,
+        hash: u64,
+        rows: usize,
+        dim: usize,
+        data: DatasetData,
+    ) -> io::Result<(String, Arc<DatasetEntry>, bool)> {
+        let id = format!("{hash:016x}");
+        let mut map = self.map.lock().unwrap();
+        if let Some(existing) = map.get(&id) {
+            return Ok((id, Arc::clone(existing), false));
+        }
+        let entry = Arc::new(DatasetEntry { hash, rows, dim, data });
+        map.insert(id.clone(), Arc::clone(&entry));
+        Ok((id, entry, true))
+    }
+
+    /// Look an id up (16 hex digits, as returned by registration).
+    pub fn get(&self, id: &str) -> Option<Arc<DatasetEntry>> {
+        self.map.lock().unwrap().get(id).cloned()
+    }
+
+    /// Number of registered datasets.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    /// True when nothing is registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SessionCache
+// ---------------------------------------------------------------------------
+
+/// One warm session: both factor archives plus LRU bookkeeping.
+struct Session {
+    fu: Box<dyn FactorStore>,
+    fv: Box<dyn FactorStore>,
+    bytes: usize,
+    last_use: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<u64, Session>,
+    tick: u64,
+    bytes: usize,
+    /// Spill counters of evicted sessions, folded in so the totals stay
+    /// monotonic across evictions.
+    retired_spill_bytes: usize,
+    retired_spill_reads: usize,
+}
+
+/// Point-in-time cache counters for the `stats` verb and the tests.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SessionCacheStats {
+    /// Live sessions.
+    pub sessions: usize,
+    /// Archive bytes accounted against the budget.
+    pub bytes: usize,
+    /// Bytes currently pinned by checkouts across all archives (0 unless a
+    /// solve is mid-flight; the timeout test asserts it returns to 0).
+    pub pinned_bytes: usize,
+    /// Spill bytes written by session archives, including evicted ones.
+    pub spill_bytes_written: usize,
+    /// Spill shard reads by session archives, including evicted ones.
+    pub spill_reads: usize,
+}
+
+/// LRU cache of prebuilt factor archives keyed by
+/// `(x hash, y hash, cost config)` — see `session_key` in the server.
+pub struct SessionCache {
+    inner: Mutex<Inner>,
+    budget_bytes: usize,
+    spill_dir: Option<PathBuf>,
+    metrics: Arc<ServeMetrics>,
+}
+
+impl SessionCache {
+    /// `budget_bytes` caps archived factor bytes (RAM for resident
+    /// archives, disk when `spill_dir` routes them to scratch files); at
+    /// least the most recent session is always kept.
+    pub fn new(
+        budget_bytes: usize,
+        spill_dir: Option<PathBuf>,
+        metrics: Arc<ServeMetrics>,
+    ) -> SessionCache {
+        SessionCache { inner: Mutex::new(Inner::default()), budget_bytes, spill_dir, metrics }
+    }
+
+    /// Fetch the factors for `key`, building them with `build` on a cold
+    /// miss.  Returns `(fu, fv, warm)`; `warm == true` means `build` did
+    /// not run (the zero-factorisation fast path).
+    pub fn get_or_build(
+        &self,
+        key: u64,
+        build: impl FnOnce() -> Result<(Mat, Mat), SolveError>,
+    ) -> Result<(Mat, Mat, bool), SolveError> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(s) = inner.map.get_mut(&key) {
+            s.last_use = tick;
+            let fu = materialise(s.fu.as_ref())?;
+            let fv = materialise(s.fv.as_ref())?;
+            self.metrics.session_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((fu, fv, true));
+        }
+        // Cold: factorise while holding the lock, so concurrent requests
+        // for the same pair wait here and wake up warm.
+        self.metrics.session_misses.fetch_add(1, Ordering::Relaxed);
+        self.metrics.factor_builds.fetch_add(1, Ordering::Relaxed);
+        let (fu, fv) = build()?;
+        let bytes = (fu.data.len() + fv.data.len()) * std::mem::size_of::<f32>();
+        let session = Session {
+            fu: self.archive(&fu)?,
+            fv: self.archive(&fv)?,
+            bytes,
+            last_use: tick,
+        };
+        inner.bytes += bytes;
+        inner.map.insert(key, session);
+        self.evict(&mut inner);
+        Ok((fu, fv, false))
+    }
+
+    /// Copy a freshly built factor matrix into its archive form.
+    fn archive(&self, m: &Mat) -> Result<Box<dyn FactorStore>, SolveError> {
+        match &self.spill_dir {
+            None => Ok(Box::new(ResidentStore::from_mat(m.clone()))),
+            Some(dir) => {
+                // Budget 0: the archive is a pure file — warm hits read it
+                // back, so resident memory stays O(1) per idle session.
+                let store = SpillStore::create(dir, m.rows, m.cols, 0)?;
+                // Safety: the store was just created; no checkout exists.
+                unsafe { store.write_rows(0, &m.data)? };
+                Ok(Box::new(store))
+            }
+        }
+    }
+
+    /// Evict least-recently-used sessions until under budget (always
+    /// keeping at least one — the session just used).
+    fn evict(&self, inner: &mut Inner) {
+        while inner.bytes > self.budget_bytes && inner.map.len() > 1 {
+            let victim = inner
+                .map
+                .iter()
+                .min_by_key(|(_, s)| s.last_use)
+                .map(|(k, _)| *k)
+                .expect("map is nonempty");
+            let s = inner.map.remove(&victim).expect("victim exists");
+            inner.bytes -= s.bytes;
+            let (fu, fv) = (s.fu.stats(), s.fv.stats());
+            inner.retired_spill_bytes += fu.spill_bytes_written + fv.spill_bytes_written;
+            inner.retired_spill_reads += fu.spill_reads + fv.spill_reads;
+            self.metrics.session_evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Current counters (live sessions + retired spill totals).
+    pub fn stats(&self) -> SessionCacheStats {
+        let inner = self.inner.lock().unwrap();
+        let mut st = SessionCacheStats {
+            sessions: inner.map.len(),
+            bytes: inner.bytes,
+            pinned_bytes: 0,
+            spill_bytes_written: inner.retired_spill_bytes,
+            spill_reads: inner.retired_spill_reads,
+        };
+        for s in inner.map.values() {
+            for f in [s.fu.stats(), s.fv.stats()] {
+                st.pinned_bytes += f.pinned_bytes;
+                st.spill_bytes_written += f.spill_bytes_written;
+                st.spill_reads += f.spill_reads;
+            }
+        }
+        st
+    }
+}
+
+/// Read a full archive back into a matrix for a warm solve.
+fn materialise(store: &dyn FactorStore) -> Result<Mat, SolveError> {
+    let mut m = Mat::zeros(store.rows(), store.cols());
+    // Safety: session archives are never checked out between solves (the
+    // cache hands out materialised copies, not the stores themselves), so
+    // no live writer or dirty checkout can overlap this read.
+    unsafe { store.read_rows(0, &mut m.data)? };
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn mat(rows: usize, cols: usize, seed: u32) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for (i, v) in m.data.iter_mut().enumerate() {
+            *v = ((i as u32).wrapping_mul(2654435761).wrapping_add(seed) % 1000) as f32 / 7.0;
+        }
+        m
+    }
+
+    fn cache(budget: usize, spill: Option<PathBuf>) -> SessionCache {
+        SessionCache::new(budget, spill, Arc::new(ServeMetrics::default()))
+    }
+
+    #[test]
+    fn warm_hit_skips_build_and_round_trips() {
+        let c = cache(usize::MAX, None);
+        let builds = AtomicUsize::new(0);
+        let build = |seed: u32| {
+            builds.fetch_add(1, Ordering::Relaxed);
+            Ok((mat(8, 3, seed), mat(8, 3, seed + 1)))
+        };
+        let (fu0, fv0, warm0) = c.get_or_build(42, || build(7)).unwrap();
+        let (fu1, fv1, warm1) = c.get_or_build(42, || build(9)).unwrap();
+        assert!(!warm0);
+        assert!(warm1, "second fetch must be warm");
+        assert_eq!(builds.load(Ordering::Relaxed), 1, "build ran twice");
+        assert_eq!(fu0.data, fu1.data);
+        assert_eq!(fv0.data, fv1.data);
+        assert_eq!(c.stats().sessions, 1);
+        assert_eq!(c.stats().pinned_bytes, 0);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_under_budget() {
+        // each session: 2 × 8×3 × 4 bytes = 192; budget fits one only
+        let c = cache(200, None);
+        let b = |s: u32| move || Ok((mat(8, 3, s), mat(8, 3, s + 1)));
+        c.get_or_build(1, b(10)).unwrap();
+        c.get_or_build(2, b(20)).unwrap();
+        let st = c.stats();
+        assert_eq!(st.sessions, 1, "budget holds one session");
+        assert!(st.bytes <= 200);
+        assert_eq!(c.metrics.session_evictions.load(Ordering::Relaxed), 1);
+        // key 1 was evicted, key 2 is warm
+        let (_, _, warm2) = c.get_or_build(2, b(99)).unwrap();
+        assert!(warm2);
+        let (_, _, warm1) = c.get_or_build(1, b(10)).unwrap();
+        assert!(!warm1, "evicted session rebuilds");
+    }
+
+    #[test]
+    fn spilled_sessions_round_trip_bit_identically() {
+        let dir = std::env::temp_dir().join(format!("hiref_serve_sess_{}", std::process::id()));
+        let c = cache(usize::MAX, Some(dir.clone()));
+        let fu = mat(17, 5, 3);
+        let fv = mat(17, 5, 4);
+        let (a, b, _) = c.get_or_build(7, || Ok((fu.clone(), fv.clone()))).unwrap();
+        let (a2, b2, warm) = c.get_or_build(7, || unreachable!("must be warm")).unwrap();
+        assert!(warm);
+        assert_eq!(a.data, fu.data);
+        assert_eq!(b.data, fv.data);
+        assert_eq!(a2.data, fu.data);
+        assert_eq!(b2.data, fv.data);
+        let st = c.stats();
+        assert!(st.spill_bytes_written >= 2 * 17 * 5 * 4, "archives hit the spill file");
+        assert!(st.spill_reads > 0, "warm hit read the spill file");
+        assert_eq!(st.pinned_bytes, 0);
+        drop(c);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn build_errors_do_not_poison_the_cache() {
+        let c = cache(usize::MAX, None);
+        let err = c.get_or_build(5, || Err(SolveError::EmptyInput));
+        assert_eq!(err.unwrap_err(), SolveError::EmptyInput);
+        assert_eq!(c.stats().sessions, 0);
+        let (_, _, warm) = c.get_or_build(5, || Ok((mat(4, 2, 1), mat(4, 2, 2)))).unwrap();
+        assert!(!warm, "failed build leaves the key cold");
+    }
+
+    #[test]
+    fn registry_is_content_addressed() {
+        let arena = ScratchArena::new(1);
+        let reg = DatasetRegistry::new(16);
+        let m = mat(40, 4, 11);
+        let (id1, e1, new1) = reg.register_mem(m.clone(), &arena).unwrap();
+        let (id2, _e2, new2) = reg.register_mem(m.clone(), &arena).unwrap();
+        assert_eq!(id1, id2, "same content, same id");
+        assert!(new1);
+        assert!(!new2, "re-registration dedupes");
+        assert_eq!(reg.len(), 1);
+        assert_eq!(id1, format!("{:016x}", e1.hash()));
+        assert_eq!((e1.rows(), e1.dim()), (40, 4));
+        assert!(reg.get(&id1).is_some());
+        assert!(reg.get("ffffffffffffffff").is_none());
+        // different content gets a different id
+        let (id3, _, new3) = reg.register_mem(mat(40, 4, 12), &arena).unwrap();
+        assert_ne!(id1, id3);
+        assert!(new3);
+        assert_eq!(reg.len(), 2);
+    }
+}

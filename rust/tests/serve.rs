@@ -1,0 +1,298 @@
+//! End-to-end tests of `hiref serve`: concurrent clients over real TCP,
+//! warm-session behaviour, typed failure replies, and the bit-identity
+//! guarantee — every served permutation must equal a solo offline
+//! `HiRef::align` on the same data and config.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use hiref::coordinator::hiref::{BackendKind, HiRef, HiRefConfig};
+use hiref::data::stream::write_bin;
+use hiref::data::synthetic;
+use hiref::linalg::Mat;
+use hiref::serve::{protocol, serve, Json, ServeConfig, ServerHandle};
+
+fn native_cfg() -> HiRefConfig {
+    HiRefConfig {
+        backend: BackendKind::Native,
+        base_size: 32,
+        max_rank: 4,
+        threads: 2,
+        ..HiRefConfig::default()
+    }
+}
+
+fn serve_cfg(solver: HiRefConfig, workers: usize, queue_depth: usize) -> ServeConfig {
+    ServeConfig {
+        listen: "127.0.0.1:0".to_string(),
+        solver,
+        workers,
+        queue_depth,
+        session_budget: 1 << 30,
+        session_spill_dir: None,
+        micro_window: Duration::from_millis(20),
+    }
+}
+
+/// A blocking NDJSON client on one TCP connection.
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(handle: &ServerHandle) -> Client {
+        let stream = TcpStream::connect(handle.addr()).expect("connect to serve");
+        Client { reader: BufReader::new(stream.try_clone().expect("clone stream")), writer: stream }
+    }
+
+    fn call(&mut self, req: &Json) -> Json {
+        self.call_raw(&req.render())
+    }
+
+    fn call_raw(&mut self, line: &str) -> Json {
+        self.writer.write_all(line.as_bytes()).expect("send request");
+        self.writer.write_all(b"\n").expect("send newline");
+        self.writer.flush().expect("flush request");
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).expect("read reply");
+        protocol::parse(&reply).expect("parse reply")
+    }
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn rows_json(m: &Mat) -> Json {
+    Json::Arr(
+        (0..m.rows)
+            .map(|i| {
+                Json::Arr(
+                    m.data[i * m.cols..(i + 1) * m.cols]
+                        .iter()
+                        .map(|&v| Json::Num(f64::from(v)))
+                        .collect(),
+                )
+            })
+            .collect(),
+    )
+}
+
+fn register_inline(c: &mut Client, id: u64, m: &Mat) -> (String, bool) {
+    let reply =
+        c.call(&obj(vec![("id", Json::Num(id as f64)), ("verb", Json::Str("register".into())), ("rows", rows_json(m))]));
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{}", reply.render());
+    assert_eq!(reply.u64_field("id"), Some(id), "id echoes back");
+    let new = reply.get("new") == Some(&Json::Bool(true));
+    (reply.str_field("dataset").expect("dataset id").to_string(), new)
+}
+
+fn solve_req(x: &str, y: &str, deadline_ms: Option<u64>) -> Json {
+    let mut fields = vec![
+        ("id", Json::Num(7.0)),
+        ("verb", Json::Str("solve".into())),
+        ("x", Json::Str(x.to_string())),
+        ("y", Json::Str(y.to_string())),
+    ];
+    if let Some(ms) = deadline_ms {
+        fields.push(("deadline_ms", Json::Num(ms as f64)));
+    }
+    obj(fields)
+}
+
+fn perm_of(reply: &Json) -> Vec<u32> {
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{}", reply.render());
+    reply
+        .get("perm")
+        .and_then(Json::as_arr)
+        .expect("perm array")
+        .iter()
+        .map(|v| v.as_f64().expect("perm entry") as u32)
+        .collect()
+}
+
+fn error_kind_of(reply: &Json) -> String {
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(false)), "{}", reply.render());
+    reply.get("error").and_then(|e| e.str_field("kind")).expect("error kind").to_string()
+}
+
+fn stats_of(c: &mut Client) -> Json {
+    let reply = c.call(&obj(vec![("verb", Json::Str("stats".into()))]));
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)));
+    reply.get("stats").expect("stats object").clone()
+}
+
+fn stat(stats: &Json, key: &str) -> u64 {
+    stats.u64_field(key).unwrap_or_else(|| panic!("stat {key} in {}", stats.render()))
+}
+
+#[test]
+fn concurrent_clients_get_bit_identical_warm_solves() {
+    let (x, y) = synthetic::half_moon_s_curve(256, 0);
+    let want = HiRef::new(native_cfg()).align(&x, &y).expect("offline align").perm;
+
+    let handle = serve(serve_cfg(native_cfg(), 2, 16)).expect("start server");
+    let mut c = Client::connect(&handle);
+    let (xid, xnew) = register_inline(&mut c, 1, &x);
+    assert!(xnew);
+    // the y side goes in as a server-side .bin file
+    let ypath = std::env::temp_dir().join(format!("hiref_serve_y_{}.bin", std::process::id()));
+    write_bin(&ypath, &y).expect("write y.bin");
+    let reply = c.call(&obj(vec![
+        ("id", Json::Num(2.0)),
+        ("verb", Json::Str("register".into())),
+        ("path", Json::Str(ypath.to_string_lossy().into_owned())),
+        ("dim", Json::Num(y.cols as f64)),
+    ]));
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{}", reply.render());
+    let yid = reply.str_field("dataset").expect("y dataset id").to_string();
+    assert_ne!(xid, yid);
+    // re-registering identical content dedupes to the same id
+    let (xid2, xnew2) = register_inline(&mut c, 3, &x);
+    assert_eq!(xid, xid2);
+    assert!(!xnew2);
+
+    // four concurrent clients solving the same pair: exactly one cold
+    // factorisation, everyone bit-identical to the offline solve
+    let warm_count = Arc::new(AtomicUsize::new(0));
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let (xid, yid) = (xid.clone(), yid.clone());
+            let (handle, want, warm_count) = (&handle, &want, Arc::clone(&warm_count));
+            s.spawn(move || {
+                let mut c = Client::connect(handle);
+                let reply = c.call(&solve_req(&xid, &yid, None));
+                assert_eq!(&perm_of(&reply), want, "served perm drifted from offline align");
+                if reply.get("warm") == Some(&Json::Bool(true)) {
+                    warm_count.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    assert_eq!(warm_count.load(Ordering::Relaxed), 3, "one cold build, three warm hits");
+
+    let stats = stats_of(&mut c);
+    assert_eq!(stat(&stats, "factor_builds"), 1, "warm solves must skip factorisation");
+    assert_eq!(stat(&stats, "session_misses"), 1);
+    assert_eq!(stat(&stats, "session_hits"), 3);
+    assert_eq!(stat(&stats, "solves_ok"), 4);
+    assert_eq!(stat(&stats, "session_pinned_bytes"), 0, "no leaked checkouts");
+    assert_eq!(stat(&stats, "datasets"), 2);
+    assert!(stat(&stats, "micro_calls") > 0, "batched dispatch went through the microbatcher");
+
+    let reply = c.call(&obj(vec![("verb", Json::Str("shutdown".into()))]));
+    assert_eq!(reply.get("stopped"), Some(&Json::Bool(true)));
+    handle.join();
+    let _ = std::fs::remove_file(&ypath);
+}
+
+#[test]
+fn deadline_exceeded_is_a_typed_timeout_and_leaks_nothing() {
+    let (x, y) = synthetic::half_moon_s_curve(128, 1);
+    let want = HiRef::new(native_cfg()).align(&x, &y).expect("offline align").perm;
+
+    let handle = serve(serve_cfg(native_cfg(), 1, 8)).expect("start server");
+    let mut c = Client::connect(&handle);
+    let (xid, _) = register_inline(&mut c, 1, &x);
+    let (yid, _) = register_inline(&mut c, 2, &y);
+
+    // a zero deadline has always expired by the time the job starts
+    let reply = c.call(&solve_req(&xid, &yid, Some(0)));
+    assert_eq!(error_kind_of(&reply), "timeout");
+    let stats = stats_of(&mut c);
+    assert_eq!(stat(&stats, "timeouts"), 1);
+    assert_eq!(stat(&stats, "session_pinned_bytes"), 0, "timeout released every checkout");
+
+    // the session recovers: the next solve succeeds and stays bit-identical
+    let reply = c.call(&solve_req(&xid, &yid, None));
+    assert_eq!(perm_of(&reply), want);
+    let stats = stats_of(&mut c);
+    assert_eq!(stat(&stats, "solves_ok"), 1);
+    assert_eq!(stat(&stats, "session_pinned_bytes"), 0);
+    handle.join();
+}
+
+#[test]
+fn overload_is_typed_and_successes_stay_bit_identical() {
+    let (x, y) = synthetic::half_moon_s_curve(2048, 2);
+    let want = HiRef::new(native_cfg()).align(&x, &y).expect("offline align").perm;
+
+    // one worker, one queue slot: a burst of 8 must overflow admission
+    let handle = serve(serve_cfg(native_cfg(), 1, 1)).expect("start server");
+    let mut c = Client::connect(&handle);
+    let (xid, _) = register_inline(&mut c, 1, &x);
+    let (yid, _) = register_inline(&mut c, 2, &y);
+
+    let ok = AtomicUsize::new(0);
+    let overloaded = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            let (xid, yid) = (xid.clone(), yid.clone());
+            let (handle, want, ok, overloaded) = (&handle, &want, &ok, &overloaded);
+            s.spawn(move || {
+                let mut c = Client::connect(handle);
+                let reply = c.call(&solve_req(&xid, &yid, None));
+                if reply.get("ok") == Some(&Json::Bool(true)) {
+                    assert_eq!(&perm_of(&reply), want, "overload must not corrupt results");
+                    ok.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    assert_eq!(error_kind_of(&reply), "overloaded");
+                    overloaded.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    assert_eq!(ok.load(Ordering::Relaxed) + overloaded.load(Ordering::Relaxed), 8);
+    assert!(ok.load(Ordering::Relaxed) >= 1, "some solve must get through");
+    assert!(
+        overloaded.load(Ordering::Relaxed) >= 1,
+        "an 8-burst into a 1-worker/1-slot server must shed load"
+    );
+    let stats = stats_of(&mut c);
+    assert_eq!(stat(&stats, "overloaded"), overloaded.load(Ordering::Relaxed) as u64);
+    assert_eq!(stat(&stats, "factor_builds"), 1, "rejections never factorise");
+    handle.join();
+}
+
+#[test]
+fn protocol_failures_are_typed() {
+    let (x, _) = synthetic::half_moon_s_curve(8, 3);
+    let (big, _) = synthetic::half_moon_s_curve(12, 3);
+    let handle = serve(serve_cfg(native_cfg(), 1, 4)).expect("start server");
+    let mut c = Client::connect(&handle);
+
+    assert_eq!(error_kind_of(&c.call_raw("this is not json")), "bad_request");
+    assert_eq!(error_kind_of(&c.call(&obj(vec![("no_verb", Json::Bool(true))]))), "bad_request");
+    assert_eq!(
+        error_kind_of(&c.call(&obj(vec![("verb", Json::Str("frobnicate".into()))]))),
+        "unknown_verb"
+    );
+    assert_eq!(
+        error_kind_of(&c.call(&solve_req("0000000000000000", "0000000000000000", None))),
+        "unknown_dataset"
+    );
+    let bad_rows = c.call(&obj(vec![
+        ("verb", Json::Str("register".into())),
+        ("rows", Json::Arr(vec![Json::Num(1.0)])),
+    ]));
+    assert_eq!(error_kind_of(&bad_rows), "bad_request");
+
+    // typed solver errors pass through: 8 vs 12 points is a shape mismatch
+    let (xid, _) = register_inline(&mut c, 1, &x);
+    let (bid, _) = register_inline(&mut c, 2, &big);
+    let reply = c.call(&solve_req(&xid, &bid, None));
+    assert_eq!(error_kind_of(&reply), "shape_mismatch");
+    let stats = stats_of(&mut c);
+    assert_eq!(stat(&stats, "solve_errors"), 1);
+    assert_eq!(stat(&stats, "factor_builds"), 0, "shape mismatch fails before factorising");
+
+    // ping still answers on the same connection
+    let pong = c.call(&obj(vec![("id", Json::Num(9.0)), ("verb", Json::Str("ping".into()))]));
+    assert_eq!(pong.get("pong"), Some(&Json::Bool(true)));
+    assert_eq!(pong.u64_field("id"), Some(9));
+    handle.join();
+}
