@@ -1,0 +1,234 @@
+//! Kernel-dispatch microbench: time the five dispatched linalg kernels
+//! against their scalar references (asserting bit-identity on every
+//! shape), then run one end-to-end batched LROT solve and record the
+//! lane-crew spawn count — which must equal `min(threads, lanes)` for
+//! the whole batch, not `O(iters · threads)`.  Emits
+//! `BENCH_kernels.json` so per-kernel throughput and the active dispatch
+//! path (`scalar`/`avx2`/`neon`) are recorded run over run.  CI runs
+//! this at small sizes as an advisory step; profile bigger shapes
+//! locally with
+//!
+//! ```sh
+//! HIREF_KERN_S=2048 HIREF_KERN_LANES=256 cargo bench --bench bench_kernels
+//! ```
+
+use hiref::linalg::kernels::{self, scalar};
+use hiref::linalg::{BatchItem, BatchView, MatView, NEG_LOGMASS};
+use hiref::pool::{self, ScratchArena};
+use hiref::prng::Rng;
+use hiref::report::{section, timed};
+use hiref::solvers::lrot::{solve_factored_batch, LrotConfig};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Time `reps` calls of `f` after one warm-up call, returning ns/call.
+fn bench_ns(reps: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let (_, secs) = timed(|| {
+        for _ in 0..reps {
+            f();
+        }
+    });
+    secs * 1e9 / reps as f64
+}
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal(&mut v);
+    v
+}
+
+fn main() {
+    // one lane's shapes: Q/R are s×r, factors s×k — the LROT hot loop's
+    // actual operand sizes, not square-matrix fantasy shapes
+    let s = env_usize("HIREF_KERN_S", 256);
+    let k = env_usize("HIREF_KERN_K", 32);
+    let r = env_usize("HIREF_KERN_R", 16);
+    let lanes = env_usize("HIREF_KERN_LANES", 64);
+    let reps = env_usize("HIREF_KERN_REPS", 400);
+    let threads = pool::default_threads();
+    let path = kernels::active().as_str();
+    section(&format!(
+        "bench_kernels — s = {s}, k = {k}, r = {r}, lanes = {lanes}, \
+         threads = {threads}, kernels = {path}"
+    ));
+
+    let mut rng = Rng::new(0xBE7C_4E55);
+    let a = rand_vec(&mut rng, s * k); // s×k
+    let b = rand_vec(&mut rng, k * r); // k×r
+    let g = rand_vec(&mut rng, s * r); // s×r (vt_matmul right operand)
+    let av = MatView::from_slice(s, k, &a);
+    let bv = MatView::from_slice(k, r, &b);
+    let gv = MatView::from_slice(s, r, &g);
+    // exp sweep over the usual mirror-descent operand range, with a
+    // sprinkle of NEG sentinels like a padded lane would have
+    let mut e = rand_vec(&mut rng, s * r);
+    for (i, x) in e.iter_mut().enumerate() {
+        *x *= 4.0;
+        if i % 97 == 0 {
+            *x = NEG_LOGMASS;
+        }
+    }
+    let logits = {
+        let mut l = rand_vec(&mut rng, s * r);
+        for x in l[(s - 8) * r..].iter_mut() {
+            *x = NEG_LOGMASS; // padded tail rows
+        }
+        l
+    };
+    let lv = MatView::from_slice(s, r, &logits);
+
+    let mut c_ref = vec![0.0f32; s * r];
+    let mut c_disp = vec![0.0f32; s * r];
+    let mut t_ref = vec![0.0f32; k * r];
+    let mut t_disp = vec![0.0f32; k * r];
+    let mut e_ref = vec![0.0f32; s * r];
+    let mut e_disp = vec![0.0f32; s * r];
+    let mut sm_ref = vec![0.0f32; s * r];
+    let mut sm_disp = vec![0.0f32; s * r];
+
+    // bit-identity first — a fast dispatched kernel that diverges from the
+    // scalar reference is a bug, not a win
+    scalar::matmul_into_slice(av, bv, &mut c_ref);
+    kernels::matmul_into_slice(av, bv, &mut c_disp);
+    assert_eq!(to_bits(&c_ref), to_bits(&c_disp), "matmul parity");
+    scalar::vt_matmul_into_slice(av, gv, &mut t_ref);
+    kernels::vt_matmul_into_slice(av, gv, &mut t_disp);
+    assert_eq!(to_bits(&t_ref), to_bits(&t_disp), "vt_matmul parity");
+    scalar::exp_slice(&e, &mut e_ref);
+    kernels::exp_slice(&e, &mut e_disp);
+    assert_eq!(to_bits(&e_ref), to_bits(&e_disp), "exp_slice parity");
+    assert_eq!(
+        scalar::slice_max_abs(&e).to_bits(),
+        kernels::slice_max_abs(&e).to_bits(),
+        "max_abs parity"
+    );
+    scalar::row_softmax(lv, &mut sm_ref);
+    kernels::row_softmax_item(lv, &mut sm_disp);
+    assert_eq!(to_bits(&sm_ref), to_bits(&sm_disp), "row_softmax parity");
+
+    let rows = [
+        (
+            "matmul",
+            bench_ns(reps, || scalar::matmul_into_slice(av, bv, &mut c_ref)),
+            bench_ns(reps, || kernels::matmul_into_slice(av, bv, &mut c_disp)),
+        ),
+        (
+            "vt_matmul",
+            bench_ns(reps, || scalar::vt_matmul_into_slice(av, gv, &mut t_ref)),
+            bench_ns(reps, || kernels::vt_matmul_into_slice(av, gv, &mut t_disp)),
+        ),
+        (
+            "exp_slice",
+            bench_ns(reps, || scalar::exp_slice(&e, &mut e_ref)),
+            bench_ns(reps, || kernels::exp_slice(&e, &mut e_disp)),
+        ),
+        (
+            "max_abs",
+            bench_ns(reps, || {
+                std::hint::black_box(scalar::slice_max_abs(&e));
+            }),
+            bench_ns(reps, || {
+                std::hint::black_box(kernels::slice_max_abs(&e));
+            }),
+        ),
+        (
+            "row_softmax",
+            bench_ns(reps, || scalar::row_softmax(lv, &mut sm_ref)),
+            bench_ns(reps, || kernels::row_softmax_item(lv, &mut sm_disp)),
+        ),
+    ];
+    for (name, ns_scalar, ns_disp) in &rows {
+        println!(
+            "{name:<12} scalar {:>9.0} ns   dispatched {:>9.0} ns   ({:.2}x)",
+            ns_scalar,
+            ns_disp,
+            ns_scalar / ns_disp.max(1e-9)
+        );
+    }
+
+    // --- end-to-end: one batched solve, with the crew spawn count ------
+    // pack `lanes` same-shape factor blocks into one strided batch, the
+    // way the level-synchronous engine does
+    let ud = rand_vec(&mut rng, lanes * s * k);
+    let vd = rand_vec(&mut rng, lanes * s * k);
+    let items: Vec<BatchItem> =
+        (0..lanes).map(|l| BatchItem::new(l * s..(l + 1) * s, k)).collect();
+    let cfg = LrotConfig { rank: r, ..Default::default() };
+    let seeds: Vec<u64> = (0..lanes as u64).collect();
+    let active: Vec<(usize, usize)> = vec![(s, s); lanes];
+    let arena = ScratchArena::new(threads.max(1));
+
+    let spawns0 = pool::crew_spawns();
+    let (outs, batch_secs) = timed(|| {
+        solve_factored_batch(
+            BatchView::new(&ud, &items),
+            BatchView::new(&vd, &items),
+            &active,
+            &cfg,
+            &seeds,
+            &arena,
+            threads,
+        )
+    });
+    let iter_spawns = pool::crew_spawns() - spawns0;
+    assert_eq!(outs.len(), lanes);
+    // the tentpole claim, asserted exactly: one persistent crew per batch
+    // (this bench owns its process, so the global counter is exact here)
+    let expected = if threads.max(1).min(lanes) <= 1 { 0 } else { threads.max(1).min(lanes) };
+    assert_eq!(
+        iter_spawns, expected,
+        "crew must spawn min(threads, lanes) workers once per batch"
+    );
+    println!(
+        "batched solve  {lanes} lanes of {s}x{k} in {:.1} ms ({iter_spawns} spawns)",
+        batch_secs * 1e3
+    );
+
+    // hand-rolled JSON (the vendored universe has no serde)
+    let kernel_rows: Vec<String> = rows
+        .iter()
+        .map(|(name, ns_s, ns_d)| {
+            format!(
+                "    {{\"kernel\": \"{name}\", \"scalar_ns\": {ns_s:.1}, \
+                 \"dispatched_ns\": {ns_d:.1}, \"speedup\": {:.4}}}",
+                ns_s / ns_d.max(1e-9)
+            )
+        })
+        .collect();
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"kernels\",\n",
+            "  \"kernel_path\": \"{}\",\n",
+            "  \"s\": {},\n",
+            "  \"k\": {},\n",
+            "  \"r\": {},\n",
+            "  \"lanes\": {},\n",
+            "  \"reps\": {},\n",
+            "  \"threads\": {},\n",
+            "  \"kernels\": [\n{}\n  ],\n",
+            "  \"batch_elapsed_ms\": {:.3},\n",
+            "  \"iter_spawns\": {}\n",
+            "}}\n"
+        ),
+        path,
+        s,
+        k,
+        r,
+        lanes,
+        reps,
+        threads,
+        kernel_rows.join(",\n"),
+        batch_secs * 1e3,
+        iter_spawns,
+    );
+    std::fs::write("BENCH_kernels.json", &json).expect("writing BENCH_kernels.json");
+    println!("\nwrote BENCH_kernels.json");
+}
+
+fn to_bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}

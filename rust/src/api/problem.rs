@@ -146,6 +146,16 @@ impl SolveStats {
     pub fn resident_factor_bytes(&self) -> usize {
         self.hiref.as_ref().map_or(0, |rs| rs.resident_factor_bytes)
     }
+
+    /// The kernel implementation the solve's linalg primitives dispatched
+    /// to — `"scalar"`, `"avx2"` or `"neon"` (see
+    /// [`crate::linalg::kernels`]).  Every solver funnels through the
+    /// dispatched kernels, so this is reported even for non-HiRef solves.
+    pub fn kernel_path(&self) -> &'static str {
+        self.hiref
+            .as_ref()
+            .map_or_else(|| crate::linalg::kernels::active().as_str(), |rs| rs.kernel_path)
+    }
 }
 
 /// A coupling plus how it was obtained.

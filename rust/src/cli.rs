@@ -351,6 +351,7 @@ fn cmd_align(flags: &Flags) -> Result<()> {
             rs.arena_hit_rate() * 100.0
         );
         println!("factor bytes  = {}", metrics::human_bytes(rs.factor_bytes));
+        println!("kernels       = {} ({} iter spawns)", rs.kernel_path, rs.iter_spawns);
         if cfg.spill.is_some() {
             println!(
                 "spill         = wrote {}, {} shard reads, resident factor peak {}",
@@ -490,6 +491,10 @@ fn cmd_solvers() -> Result<()> {
         table.row(vec![s.name().to_string(), s.describe().to_string()]);
     }
     table.print();
+    println!(
+        "\nlinalg kernels: {} (override with HIREF_KERNELS=scalar|avx2|neon)",
+        crate::linalg::kernels::active().as_str()
+    );
     println!("\nUse any name with `hiref align --solver <name>` or");
     println!("`hiref compare --solvers a,b,c`.");
     Ok(())

@@ -274,6 +274,14 @@ pub struct RunStats {
     /// windows — bounded by `spill_budget + one level batch's lane
     /// windows` — on spill runs.
     pub resident_factor_bytes: usize,
+    /// The kernel implementation every linalg primitive dispatched to —
+    /// `"scalar"`, `"avx2"` or `"neon"` (see [`crate::linalg::kernels`]).
+    pub kernel_path: &'static str,
+    /// Lane-crew worker threads spawned by this run: `min(threads,
+    /// lanes)` **per batch** — the persistent-pool acceptance property
+    /// (the historical loop spawned every iteration).  0 on the per-block
+    /// path and on single-threaded runs.
+    pub iter_spawns: usize,
     pub elapsed: Duration,
 }
 
@@ -655,6 +663,7 @@ impl HiRef {
         let k = fu.cols();
         debug_assert_eq!(k, fv.cols());
         let factor_bytes = (fu.rows() + fv.rows()) * k * std::mem::size_of::<f32>();
+        let spawns0 = pool::crew_spawns();
 
         let schedule = annealing::optimal_rank_schedule(
             n,
@@ -729,6 +738,12 @@ impl HiRef {
         });
         let mut stats = st.stats.snapshot(t0.elapsed(), &arena);
         stats.factor_bytes = factor_bytes;
+        // lane-crew worker threads spawned by this run: O(threads) per
+        // batch, not O(iterations · threads).  The underlying counter is
+        // process-global, so the delta is exact only when no other solve
+        // runs concurrently (true for the CLI and the benches; concurrent
+        // serve solves see the sum of their batches).
+        stats.iter_spawns = pool::crew_spawns() - spawns0;
         let (su, sv) = (fu.stats(), fv.stats());
         stats.spill_bytes_written = su.spill_bytes_written + sv.spill_bytes_written;
         stats.spill_reads = su.spill_reads + sv.spill_reads;
@@ -1247,6 +1262,8 @@ impl StatsAtomics {
             spill_bytes_written: 0, // store counters below
             spill_reads: 0,
             resident_factor_bytes: 0,
+            kernel_path: crate::linalg::kernels::active().as_str(),
+            iter_spawns: 0, // filled in by align_inner (crew-spawn delta)
             batches: self.batches.load(Ordering::Relaxed),
             lanes_max: self.lanes_max.load(Ordering::Relaxed),
             batched_frac: if lrot_calls == 0 {

@@ -206,6 +206,27 @@
 //! LROT batch interception, usable by any embedding, not just the TCP
 //! server.
 //!
+//! ## Performance
+//!
+//! Besides the memory tiers above, two raw-speed layers sit under every
+//! solver:
+//!
+//! * **SIMD kernel dispatch** ([`linalg::kernels`]) — the five hot
+//!   linalg primitives (both matmuls, the `fast_exp` sweep, max-abs,
+//!   masked row softmax) resolve once at startup to a scalar, AVX2
+//!   (x86_64) or NEON (aarch64) implementation.  The SIMD paths are
+//!   **bit-identical** to the scalar reference (column-lane
+//!   vectorisation, unchanged reduction order, no FMA), so every
+//!   bit-identity invariant in the crate holds on every path.  Override
+//!   with `HIREF_KERNELS=scalar|avx2|neon`; the active path is reported
+//!   by `hiref solvers`, [`api::SolveStats::kernel_path`] and the serve
+//!   `stats` verb.  See `docs/kernels.md`.
+//! * **Persistent lane crews** ([`pool::LaneCrew`]) — a batched LROT
+//!   call spawns `min(threads, lanes)` workers **once** and parks them
+//!   between mirror-descent iterations, instead of respawning per
+//!   iteration; [`coordinator::hiref::RunStats::iter_spawns`] records
+//!   the spawn count per solve.
+//!
 //! ## Choosing a solver
 //!
 //! | Registry name | Paper baseline | Output representation |

@@ -1,7 +1,15 @@
 //! Minimal dense linear algebra: a row-major `Mat`, a borrowed [`MatView`]
 //! over a row range, plus the handful of BLAS-1/3 operations the solvers
-//! need.  No external dependencies; the matmul is blocked and written so
-//! LLVM auto-vectorises the inner loop.
+//! need.  No external dependencies.
+//!
+//! The five hot-loop primitives — [`matmul_into_slice`],
+//! [`vt_matmul_into_slice`], [`exp_slice`], [`batch_row_softmax_into`] and
+//! [`slice_max_abs`] — are **dispatched** through [`kernels`]: a runtime
+//! choice between the verbatim scalar reference and explicit AVX2/NEON
+//! implementations, resolved once per process and overridable with
+//! `HIREF_KERNELS=scalar|avx2|neon`.  Every path is bit-identical (see
+//! `kernels`' module docs for the column-lane argument), so the repo-wide
+//! execution-strategy invariants are untouched by the dispatch.
 //!
 //! The solve path is **view-based**: once the global cost factors exist,
 //! every sub-block is a [`MatView`] slice of them — `gather_rows` survives
@@ -19,6 +27,8 @@
 //! to each lane's persistent window — the same FLOPs in the same order,
 //! which the wrappers' unit tests pin down — so external callers get the
 //! batched form while the hot loop pays no per-iteration item plumbing.
+
+pub mod kernels;
 
 /// Row-major single-precision matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -302,41 +312,29 @@ pub fn matmul_into<'a, 'b>(a: impl Into<MatView<'a>>, b: impl Into<MatView<'b>>,
 }
 
 /// C = A @ B written straight into a row-major slice (e.g. a scratch-arena
-/// checkout): the allocation-free core of [`matmul_into`].
+/// checkout): the allocation-free core of [`matmul_into`].  Dispatches to
+/// the process's [`kernels`] path (scalar reference in
+/// [`kernels::scalar::matmul_into_slice`]).
+#[inline]
 pub fn matmul_into_slice(a: MatView<'_>, b: MatView<'_>, c: &mut [f32]) {
-    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
-    assert_eq!(c.len(), a.rows * b.cols);
-    c.fill(0.0);
-    let n = b.cols;
-    for i in 0..a.rows {
-        let arow = a.row(i);
-        let crow = &mut c[i * n..(i + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            let brow = &b.data[p * n..(p + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
-            }
-        }
-    }
+    kernels::matmul_into_slice(a, b, c)
 }
 
 /// `out = Aᵀ B` into a row-major slice without materialising the
-/// transpose (`A` is s×k, `B` is s×r, `out` is k×r).
+/// transpose (`A` is s×k, `B` is s×r, `out` is k×r).  Dispatches to the
+/// process's [`kernels`] path (scalar reference in
+/// [`kernels::scalar::vt_matmul_into_slice`]).
+#[inline]
 pub fn vt_matmul_into_slice(a: MatView<'_>, b: MatView<'_>, out: &mut [f32]) {
-    assert_eq!(a.rows, b.rows, "t_matmul shape mismatch");
-    assert_eq!(out.len(), a.cols * b.cols);
-    out.fill(0.0);
-    let n = b.cols;
-    for p in 0..a.rows {
-        let arow = a.row(p);
-        let brow = b.row(p);
-        for (i, &av) in arow.iter().enumerate() {
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (ov, &bv) in orow.iter_mut().zip(brow) {
-                *ov += av * bv;
-            }
-        }
-    }
+    kernels::vt_matmul_into_slice(a, b, out)
+}
+
+/// Element-wise `dst[i] = fast_exp(src[i])` over
+/// `min(src.len(), dst.len())` elements — the factor-exponential sweep of
+/// the LROT iteration, dispatched like the matmuls.
+#[inline]
+pub fn exp_slice(src: &[f32], dst: &mut [f32]) {
+    kernels::exp_slice(src, dst)
 }
 
 // ---------------------------------------------------------------------------
@@ -409,32 +407,16 @@ pub fn batch_row_softmax_into(
         let o = &out_items[i];
         assert_eq!(o.nrows(), l.rows, "softmax output shape mismatch");
         assert_eq!(o.cols, l.cols, "softmax output shape mismatch");
-        let dst = &mut out[o.start()..o.end()];
-        for (p, row) in dst.chunks_mut(l.cols).enumerate() {
-            let src = l.row(p);
-            let mx = src.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
-            if !(mx > NEG_LOGMASS / 2.0) {
-                row.fill(0.0);
-                continue;
-            }
-            let mut sum = 0.0f32;
-            for (d, &v) in row.iter_mut().zip(src) {
-                let e = fast_exp(v - mx);
-                *d = e;
-                sum += e;
-            }
-            let inv = 1.0 / sum;
-            for d in row.iter_mut() {
-                *d *= inv;
-            }
-        }
+        kernels::row_softmax_item(l, &mut out[o.start()..o.end()]);
     }
 }
 
-/// Max absolute entry of a slice (step-size normalisation).
+/// Max absolute entry of a slice (step-size normalisation).  Dispatched
+/// like the matmuls (scalar reference in
+/// [`kernels::scalar::slice_max_abs`]).
 #[inline]
 pub fn slice_max_abs(xs: &[f32]) -> f32 {
-    xs.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    kernels::slice_max_abs(xs)
 }
 
 /// Squared Euclidean distance between two vectors.

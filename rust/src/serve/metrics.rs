@@ -139,6 +139,10 @@ impl ServeMetrics {
             ("spill_reads".into(), ld(&self.spill_reads)),
             ("latency_p50_ms".into(), Json::Num(p50)),
             ("latency_p99_ms".into(), Json::Num(p99)),
+            // which kernel implementation every solve in this process
+            // dispatched to (scalar/avx2/neon) — so load-test records and
+            // `stats` probes know what actually ran
+            ("kernel_path".into(), Json::Str(crate::linalg::kernels::active().as_str().into())),
         ])
     }
 }

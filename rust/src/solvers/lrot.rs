@@ -21,10 +21,15 @@
 //! The mirror-descent loop is written once, over **lanes**: a level of the
 //! HiRef hierarchy hands all of its same-shape co-cluster blocks to
 //! [`solve_factored_batch`] as one strided [`BatchView`] pair, and every
-//! iteration runs one `parallel_map` over lane chunks instead of one task
-//! per block.  A **per-lane convergence mask** retires lanes whose hard
-//! co-clustering has stabilised, so early-converged blocks stop paying
-//! matmuls while their siblings finish.  [`solve_factored_in`] is the
+//! iteration runs one crew round over lane chunks instead of one task per
+//! block.  The workers are a persistent [`pool::LaneCrew`] spawned once
+//! per batch and parked on a condvar barrier between iterations — spawns
+//! are O(threads) per batch, not O(iterations · threads) — and each round
+//! hands the crew the same contiguous lane-chunk partition the historical
+//! spawn-per-iteration code used, so the work division (and therefore the
+//! arithmetic) is unchanged.  A **per-lane convergence mask** retires
+//! lanes whose hard co-clustering has stabilised, so early-converged
+//! blocks stop paying matmuls while their siblings finish.  [`solve_factored_in`] is the
 //! 1-lane case of the same loop — the per-block and batched paths share
 //! every floating-point operation and therefore cannot drift: lane `l` of
 //! a batch is bit-identical to a solo solve of the same block with the
@@ -35,16 +40,17 @@
 //! lives in strided per-batch state checked out of the arena *once* at
 //! batch setup, with per-lane window offsets fixed up front ([`Geo`]), so
 //! an iteration touches no allocator and no arena freelist.  The gradient
-//! stage applies the scalar kernels ([`crate::linalg::matmul_into_slice`]
-//! / [`crate::linalg::vt_matmul_into_slice`]) per lane window — the same
-//! FLOPs, in the same order, as the strided `batch_*` wrappers those
-//! kernels back.
+//! stage applies the dispatched kernels ([`crate::linalg::matmul_into_slice`]
+//! / [`crate::linalg::vt_matmul_into_slice`], scalar or SIMD — see
+//! [`crate::linalg::kernels`]) per lane window — the same FLOPs, in the
+//! same order, as the strided `batch_*` wrappers those kernels back, on
+//! every dispatch path.
 
 use crate::linalg::{
     fast_exp, matmul_into_slice, slice_max_abs, vt_matmul_into_slice, BatchItem, BatchView, Mat,
     MatView,
 };
-use crate::pool::{self, RangeShared, ScratchArena, SharedSlice};
+use crate::pool::{self, LaneCrew, RangeShared, ScratchArena, SharedSlice};
 use crate::prng::Rng;
 
 /// Row-parallelism threshold: blocks below this stay single-threaded (the
@@ -195,31 +201,37 @@ struct BatchState<'a> {
     ctl: RangeShared<LaneCtl>,
 }
 
-/// Partition `lanes` into at most `threads` contiguous chunks, run `f` on
-/// each chunk concurrently, and concatenate the returned lane lists.  The
-/// per-lane computation is self-contained, so results are bit-identical
-/// for any thread count.
-fn par_lane_chunks(
+/// Partition `lanes` into at most `crew.width()` contiguous chunks, run
+/// `f` on each chunk as one crew round, and concatenate the returned lane
+/// lists in chunk order.  The chunk math is exactly the historical
+/// spawn-per-iteration partition, so the per-lane computation — which is
+/// self-contained — runs over identical chunks and results are
+/// bit-identical for any crew width.
+fn crew_lane_chunks(
+    crew: &LaneCrew,
     lanes: &[u32],
-    threads: usize,
     f: impl Fn(&[u32]) -> Vec<u32> + Sync,
 ) -> Vec<u32> {
     if lanes.is_empty() {
         return Vec::new();
     }
-    let chunk = lanes.len().div_ceil(threads.max(1).min(lanes.len()));
+    let chunk = lanes.len().div_ceil(crew.width().max(1).min(lanes.len()));
     // re-derive the chunk count from the rounded-up chunk size: with e.g.
-    // 5 lanes over 4 threads (chunk 2) only 3 chunks exist — indexing by
-    // the thread count would step past the slice.
+    // 5 lanes over 4 workers (chunk 2) only 3 chunks exist — indexing by
+    // the crew width would step past the slice.
     let n_chunks = lanes.len().div_ceil(chunk);
-    pool::parallel_map(n_chunks, n_chunks, |c| {
-        let lo = c * chunk;
-        let hi = ((c + 1) * chunk).min(lanes.len());
-        f(&lanes[lo..hi])
-    })
-    .into_iter()
-    .flatten()
-    .collect()
+    let mut slots: Vec<Option<Vec<u32>>> = (0..n_chunks).map(|_| None).collect();
+    {
+        let out = SharedSlice::new(&mut slots);
+        crew.run(n_chunks, &|c| {
+            let lo = c * chunk;
+            let hi = ((c + 1) * chunk).min(lanes.len());
+            let v = f(&lanes[lo..hi]);
+            // SAFETY: chunk `c` runs on exactly one worker per round.
+            unsafe { out.slice_mut(c, c + 1) }[0] = Some(v);
+        });
+    }
+    slots.into_iter().flat_map(|v| v.expect("crew missed a chunk")).collect()
 }
 
 /// Solve many LROT sub-problems as **one strided batch**: lane `l` is the
@@ -233,6 +245,13 @@ fn par_lane_chunks(
 /// Lane `l`'s output is **bit-identical** to
 /// `solve_factored_in(u.item(l), v.item(l), ...)` with the same seed —
 /// independent of `threads` and of which other lanes share the batch.
+///
+/// Parallelism comes from a persistent [`pool::LaneCrew`]: `min(threads,
+/// lanes)` workers spawn once per call and park on a condvar barrier
+/// between iterations, so a batch costs O(threads) thread spawns rather
+/// than O(iterations · threads) (counted by [`pool::crew_spawns`],
+/// surfaced as `RunStats::iter_spawns`).  With `threads <= 1` the crew is
+/// worker-less and every round runs inline on the caller.
 pub fn solve_factored_batch(
     u: BatchView<'_>,
     v: BatchView<'_>,
@@ -309,45 +328,67 @@ pub fn solve_factored_batch(
         ctl: RangeShared::new((0..lanes).map(|_| LaneCtl::default()).collect()),
     };
 
-    // --- init every lane: product marginal + noise, projected ----------
-    let all: Vec<u32> = (0..lanes as u32).collect();
-    par_lane_chunks(&all, threads, |ids| {
-        for &l in ids {
-            init_lane(l as usize, r, logg, cfg, seeds, &geo, &st);
-        }
-        Vec::new()
-    });
-
-    // --- the shared mirror-descent loop with per-lane masks ------------
-    let mut live = all;
-    for it in 0..cfg.outer {
-        if live.is_empty() {
-            break;
-        }
-        let check = it % 5 == 4;
-        let converged =
-            par_lane_chunks(&live, threads, |ids| step_lanes(ids, check, u, v, cfg, r, logg, &geo, &st));
-        if !converged.is_empty() {
-            let mut gone = vec![false; lanes];
-            for &l in &converged {
-                gone[l as usize] = true;
+    // --- persistent crew: workers spawn ONCE here and park on a condvar
+    // --- barrier between iterations (O(threads) spawns per batch) ------
+    let width = threads.max(1).min(lanes);
+    pool::with_lane_crew(width, |crew| {
+        // --- init every lane: product marginal + noise, projected ------
+        let all: Vec<u32> = (0..lanes as u32).collect();
+        crew_lane_chunks(crew, &all, |ids| {
+            for &l in ids {
+                init_lane(l as usize, r, logg, cfg, seeds, &geo, &st);
             }
-            live.retain(|&l| !gone[l as usize]);
-        }
-    }
+            Vec::new()
+        });
 
-    // --- finalise: exp the projected logits into owned factors ---------
-    pool::parallel_map(lanes, threads, |l| {
-        let g = &geo[l];
-        // SAFETY: the iteration loop has completed; nothing writes any more.
-        let lq = unsafe { st.log_q.slice(g.off_sr, g.off_sr + g.s * r) };
-        let lr = unsafe { st.log_r.slice(g.off_svr, g.off_svr + g.sv * r) };
-        let mut q = vec![0.0f32; g.s * r];
-        let mut rr = vec![0.0f32; g.sv * r];
-        exp_into(lq, &mut q);
-        exp_into(lr, &mut rr);
-        let iters = unsafe { st.ctl.slice(l, l + 1) }[0].iters;
-        LrotOutput { q: Mat::from_vec(g.s, r, q), r: Mat::from_vec(g.sv, r, rr), iters }
+        // --- the shared mirror-descent loop with per-lane masks --------
+        let mut live = all;
+        for it in 0..cfg.outer {
+            if live.is_empty() {
+                break;
+            }
+            let check = it % 5 == 4;
+            let converged = crew_lane_chunks(crew, &live, |ids| {
+                step_lanes(ids, check, u, v, cfg, r, logg, &geo, &st)
+            });
+            if !converged.is_empty() {
+                let mut gone = vec![false; lanes];
+                for &l in &converged {
+                    gone[l as usize] = true;
+                }
+                live.retain(|&l| !gone[l as usize]);
+            }
+        }
+
+        // --- finalise: exp the projected logits into owned factors -----
+        let mut outs: Vec<Option<LrotOutput>> = (0..lanes).map(|_| None).collect();
+        {
+            let slots = SharedSlice::new(&mut outs);
+            let chunk = lanes.div_ceil(width.min(lanes));
+            let n_chunks = lanes.div_ceil(chunk);
+            crew.run(n_chunks, &|c| {
+                for l in c * chunk..((c + 1) * chunk).min(lanes) {
+                    let g = &geo[l];
+                    // SAFETY: the iteration loop has completed; nothing
+                    // writes the logits any more.
+                    let lq = unsafe { st.log_q.slice(g.off_sr, g.off_sr + g.s * r) };
+                    let lr = unsafe { st.log_r.slice(g.off_svr, g.off_svr + g.sv * r) };
+                    let mut q = vec![0.0f32; g.s * r];
+                    let mut rr = vec![0.0f32; g.sv * r];
+                    exp_into(lq, &mut q);
+                    exp_into(lr, &mut rr);
+                    let iters = unsafe { st.ctl.slice(l, l + 1) }[0].iters;
+                    let out = LrotOutput {
+                        q: Mat::from_vec(g.s, r, q),
+                        r: Mat::from_vec(g.sv, r, rr),
+                        iters,
+                    };
+                    // SAFETY: lane `l` belongs to exactly this chunk.
+                    unsafe { slots.slice_mut(l, l + 1) }[0] = Some(out);
+                }
+            });
+        }
+        outs.into_iter().map(|o| o.expect("crew missed a lane")).collect()
     })
 }
 
@@ -653,9 +694,9 @@ fn argmax_labels(m: &[f32], r: usize) -> Vec<u16> {
 }
 
 fn exp_into(src: &[f32], dst: &mut [f32]) {
-    for (d, &s) in dst.iter_mut().zip(src) {
-        *d = fast_exp(s); // fast_exp underflows the NEG sentinel to 0
-    }
+    // dispatched fast_exp sweep (scalar or SIMD, bit-identical either
+    // way); fast_exp underflows the NEG sentinel to 0
+    crate::linalg::exp_slice(src, dst);
 }
 
 #[cfg(test)]
@@ -788,8 +829,10 @@ mod tests {
         let (vdata, vitems) = stack_lanes(&mats.iter().map(|(_, v)| v).collect::<Vec<_>>());
         let seeds = [101u64, 102, 103];
         let active = [(64, 64); 3];
-        let arena = ScratchArena::new(4);
-        for threads in [1usize, 4] {
+        let arena = ScratchArena::new(8);
+        // 1 = inline (no crew workers), 2 = chunked lanes, 8 = more
+        // workers than lanes — the LaneCrew must be invisible in all three
+        for threads in [1usize, 2, 8] {
             let outs = solve_factored_batch(
                 BatchView::new(&udata, &uitems),
                 BatchView::new(&vdata, &vitems),
