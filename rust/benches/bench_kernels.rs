@@ -41,6 +41,14 @@ fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
 }
 
 fn main() {
+    // Release benches must carry zero race-detector code: the guard layer
+    // is cfg-gated on debug_assertions (or the opt-in `guard` feature),
+    // and a bench binary that compiled it in would measure the registry,
+    // not the kernels.
+    assert!(
+        !pool::guard::enabled(),
+        "pool::guard compiled into a release bench — timings would be garbage"
+    );
     // one lane's shapes: Q/R are s×r, factors s×k — the LROT hot loop's
     // actual operand sizes, not square-matrix fantasy shapes
     let s = env_usize("HIREF_KERN_S", 256);

@@ -40,6 +40,8 @@
 //! assert!(cost.is_finite() && solved.coupling.nnz() == 96);
 //! ```
 
+#![forbid(unsafe_code)]
+
 pub mod adapters;
 pub mod builder;
 pub mod coupling;

@@ -7,6 +7,8 @@
 //! [`crate::api::SolverRegistry`], so `--solver <name>` selects any
 //! registered backend uniformly.
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 use std::fmt;
 use std::path::PathBuf;

@@ -12,6 +12,8 @@
 //! into ±1-balanced parts, so exact divisibility of `n` is not required —
 //! see `assign.rs`).
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 
 /// Compute the optimal rank schedule.

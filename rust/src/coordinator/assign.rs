@@ -15,6 +15,8 @@
 //! room — the standard greedy that is exact when the factor is already a
 //! balanced partition.
 
+#![forbid(unsafe_code)]
+
 use crate::linalg::MatView;
 
 /// Exact child capacities for splitting `active` points into `r` parts:

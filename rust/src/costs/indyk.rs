@@ -437,6 +437,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "slow under Miri: many full factorization sweeps")]
     fn parallel_sweeps_bit_identical_to_serial_for_any_thread_count() {
         // the satellite contract: the deterministic tree reduction makes
         // the whole sampled factorisation (anchor mean → probabilities →
@@ -490,6 +491,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "file-backed: reads a real .bin dataset file")]
     fn chunked_factorization_from_file_matches_in_memory() {
         let mut rng = Rng::new(10);
         let x = rand_mat(&mut rng, 40, 2);

@@ -12,6 +12,8 @@
 //!   generator-backed, binary-file) for beyond-RAM datasets: the solver
 //!   consumes tiles of `chunk_rows` points, never the whole cloud.
 
+#![forbid(unsafe_code)]
+
 pub mod embeddings;
 pub mod stream;
 pub mod synthetic;

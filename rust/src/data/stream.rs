@@ -732,6 +732,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "file-backed: needs real file I/O")]
     fn bin_file_source_round_trips() {
         let m = rand_mat(7, 29, 5);
         let path = std::env::temp_dir()
@@ -788,6 +789,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "file-backed: needs real file I/O")]
     fn npy_f32_v1_round_trips() {
         let m = rand_mat(21, 13, 3);
         let payload: Vec<u8> = m.data.iter().flat_map(|v| v.to_le_bytes()).collect();
@@ -805,6 +807,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "file-backed: needs real file I/O")]
     fn npy_f64_v2_narrows_to_f32() {
         let m = rand_mat(22, 9, 2);
         let payload: Vec<u8> =
@@ -819,6 +822,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "file-backed: needs real file I/O")]
     fn npy_one_dimensional_shape_reads_as_dim_1() {
         let vals = [1.5f32, -2.0, 3.25];
         let payload: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
@@ -831,6 +835,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "file-backed: needs real file I/O")]
     fn npy_rejects_fortran_wrong_dtype_and_bad_lengths() {
         let payload = [0u8; 24];
         let path = tmp("bad.npy");
@@ -848,6 +853,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "file-backed: needs real file I/O")]
     fn convert_to_bin_round_trips_npy() {
         let m = rand_mat(23, 17, 4);
         let payload: Vec<u8> = m.data.iter().flat_map(|v| v.to_le_bytes()).collect();
@@ -934,6 +940,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "file-backed: needs real file I/O")]
     fn content_hash_is_chunk_invariant_and_location_independent() {
         let arena = ScratchArena::new(1);
         let m = rand_mat(3, 41, 5);

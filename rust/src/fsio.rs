@@ -7,6 +7,8 @@
 //! provides the same interface.  One implementation, two consumers — the
 //! platform-conditional code cannot drift between them.
 
+#![forbid(unsafe_code)]
+
 use std::fs::File;
 use std::io;
 #[cfg(not(unix))]
@@ -67,6 +69,7 @@ mod tests {
     use std::fs::OpenOptions;
 
     #[test]
+    #[cfg_attr(miri, ignore = "file-backed: needs real file I/O")]
     fn positioned_round_trip() {
         let path = std::env::temp_dir().join(format!("hiref_fsio_{}.bin", std::process::id()));
         let file =

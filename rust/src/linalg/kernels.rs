@@ -140,17 +140,28 @@ fn by_name(name: &str) -> Option<&'static KernelOps> {
 }
 
 fn resolve() -> &'static KernelOps {
-    if let Ok(want) = std::env::var("HIREF_KERNELS") {
-        if let Some(o) = by_name(&want) {
-            return o;
-        }
-        eprintln!(
-            "hiref: HIREF_KERNELS={want} not available on this host \
-             (expected scalar|avx2|neon); using the scalar reference"
-        );
-        return &SCALAR_OPS;
+    // Under Miri the scalar reference is pinned unconditionally: vendor
+    // intrinsics and runtime CPU-feature probes are not interpretable, and
+    // the scalar kernels are the semantics the SIMD paths are proven
+    // bit-identical to anyway (docs/kernels.md, "Miri").
+    #[cfg(miri)]
+    {
+        &SCALAR_OPS
     }
-    detect()
+    #[cfg(not(miri))]
+    {
+        if let Ok(want) = std::env::var("HIREF_KERNELS") {
+            if let Some(o) = by_name(&want) {
+                return o;
+            }
+            eprintln!(
+                "hiref: HIREF_KERNELS={want} not available on this host \
+                 (expected scalar|avx2|neon); using the scalar reference"
+            );
+            return &SCALAR_OPS;
+        }
+        detect()
+    }
 }
 
 fn detect() -> &'static KernelOps {
@@ -343,45 +354,63 @@ pub mod avx2 {
     /// `*cv += av * bv` rounds the product before the add, and so must we.
     #[target_feature(enable = "avx2")]
     unsafe fn axpy(av: f32, x: &[f32], y: &mut [f32]) {
-        debug_assert_eq!(x.len(), y.len());
-        let n = y.len();
-        let va = _mm256_set1_ps(av);
-        let mut j = 0;
-        while j + 8 <= n {
-            let vx = _mm256_loadu_ps(x.as_ptr().add(j));
-            let vy = _mm256_loadu_ps(y.as_mut_ptr().add(j));
-            let prod = _mm256_mul_ps(va, vx);
-            _mm256_storeu_ps(y.as_mut_ptr().add(j), _mm256_add_ps(vy, prod));
-            j += 8;
-        }
-        while j < n {
-            y[j] += av * x[j];
-            j += 1;
+        // SAFETY: the caller proves the target feature is present (the
+        // safe checked entries assert `available()`), and every pointer
+        // intrinsic stays in bounds: the vector loops advance `j` only
+        // while `j + LANES <= n` over slices of length ≥ `n`.
+        unsafe {
+            debug_assert_eq!(x.len(), y.len());
+            let n = y.len();
+            let va = _mm256_set1_ps(av);
+            let mut j = 0;
+            while j + 8 <= n {
+                let vx = _mm256_loadu_ps(x.as_ptr().add(j));
+                let vy = _mm256_loadu_ps(y.as_mut_ptr().add(j));
+                let prod = _mm256_mul_ps(va, vx);
+                _mm256_storeu_ps(y.as_mut_ptr().add(j), _mm256_add_ps(vy, prod));
+                j += 8;
+            }
+            while j < n {
+                y[j] += av * x[j];
+                j += 1;
+            }
         }
     }
 
     #[target_feature(enable = "avx2")]
     unsafe fn matmul_impl(a: MatView<'_>, b: MatView<'_>, c: &mut [f32]) {
-        c.fill(0.0);
-        let n = b.cols;
-        for i in 0..a.rows {
-            let arow = a.row(i);
-            let crow = &mut c[i * n..(i + 1) * n];
-            for (p, &av) in arow.iter().enumerate() {
-                axpy(av, &b.data[p * n..(p + 1) * n], crow);
+        // SAFETY: the caller proves the target feature is present (the
+        // safe checked entries assert `available()`), and every pointer
+        // intrinsic stays in bounds: the vector loops advance `j` only
+        // while `j + LANES <= n` over slices of length ≥ `n`.
+        unsafe {
+            c.fill(0.0);
+            let n = b.cols;
+            for i in 0..a.rows {
+                let arow = a.row(i);
+                let crow = &mut c[i * n..(i + 1) * n];
+                for (p, &av) in arow.iter().enumerate() {
+                    axpy(av, &b.data[p * n..(p + 1) * n], crow);
+                }
             }
         }
     }
 
     #[target_feature(enable = "avx2")]
     unsafe fn vt_matmul_impl(a: MatView<'_>, b: MatView<'_>, out: &mut [f32]) {
-        out.fill(0.0);
-        let n = b.cols;
-        for p in 0..a.rows {
-            let arow = a.row(p);
-            let brow = b.row(p);
-            for (i, &av) in arow.iter().enumerate() {
-                axpy(av, brow, &mut out[i * n..(i + 1) * n]);
+        // SAFETY: the caller proves the target feature is present (the
+        // safe checked entries assert `available()`), and every pointer
+        // intrinsic stays in bounds: the vector loops advance `j` only
+        // while `j + LANES <= n` over slices of length ≥ `n`.
+        unsafe {
+            out.fill(0.0);
+            let n = b.cols;
+            for p in 0..a.rows {
+                let arow = a.row(p);
+                let brow = b.row(p);
+                for (i, &av) in arow.iter().enumerate() {
+                    axpy(av, brow, &mut out[i * n..(i + 1) * n]);
+                }
             }
         }
     }
@@ -397,71 +426,91 @@ pub mod avx2 {
     /// (`y ≤ -126`) run through the pipeline with garbage and are masked
     /// to `+0.0` at the end — same result, no branch.
     #[target_feature(enable = "avx2")]
+    // On toolchains where safe-to-call target-feature intrinsics make
+    // this block redundant, the wrap is dead weight, not an error.
+    #[allow(unused_unsafe)]
     unsafe fn exp8(x: __m256) -> __m256 {
-        let y = _mm256_mul_ps(x, _mm256_set1_ps(std::f32::consts::LOG2_E));
-        let under = _mm256_cmp_ps::<_CMP_LE_OQ>(y, _mm256_set1_ps(-126.0));
-        // scalar `y.min(127.0)` returns 127.0 when y is NaN; min_ps
-        // returns the SECOND operand on NaN, so (y, 127) matches.
-        let y = _mm256_min_ps(y, _mm256_set1_ps(127.0));
-        let t = _mm256_round_ps::<{ _MM_FROUND_TO_ZERO | _MM_FROUND_NO_EXC }>(y);
-        let d = _mm256_sub_ps(y, t);
-        let one = _mm256_set1_ps(1.0);
-        let inc = _mm256_and_ps(_mm256_cmp_ps::<_CMP_GE_OQ>(d, _mm256_set1_ps(0.5)), one);
-        let dec = _mm256_and_ps(_mm256_cmp_ps::<_CMP_LE_OQ>(d, _mm256_set1_ps(-0.5)), one);
-        let k = _mm256_sub_ps(_mm256_add_ps(t, inc), dec);
-        let f = _mm256_sub_ps(y, k);
-        // Horner, innermost first, mul-then-add — scalar rounding order
-        let mut p = _mm256_set1_ps(C5);
-        p = _mm256_add_ps(_mm256_set1_ps(C4), _mm256_mul_ps(f, p));
-        p = _mm256_add_ps(_mm256_set1_ps(C3), _mm256_mul_ps(f, p));
-        p = _mm256_add_ps(_mm256_set1_ps(C2), _mm256_mul_ps(f, p));
-        p = _mm256_add_ps(_mm256_set1_ps(C1), _mm256_mul_ps(f, p));
-        p = _mm256_add_ps(_mm256_set1_ps(C0), _mm256_mul_ps(f, p));
-        // 2^k through the exponent bits; k is integral so the (nearest)
-        // cvt is exact.  Out-of-range lanes are underflow lanes — masked.
-        let ki = _mm256_cvtps_epi32(k);
-        let bits = _mm256_slli_epi32::<23>(_mm256_add_epi32(ki, _mm256_set1_epi32(127)));
-        let r = _mm256_mul_ps(p, _mm256_castsi256_ps(bits));
-        _mm256_andnot_ps(under, r)
+        // SAFETY: value intrinsics only — sound whenever the target
+        // feature is present, which the caller proves (the safe checked
+        // entries assert `available()` before entering this module).
+        unsafe {
+            let y = _mm256_mul_ps(x, _mm256_set1_ps(std::f32::consts::LOG2_E));
+            let under = _mm256_cmp_ps::<_CMP_LE_OQ>(y, _mm256_set1_ps(-126.0));
+            // scalar `y.min(127.0)` returns 127.0 when y is NaN; min_ps
+            // returns the SECOND operand on NaN, so (y, 127) matches.
+            let y = _mm256_min_ps(y, _mm256_set1_ps(127.0));
+            let t = _mm256_round_ps::<{ _MM_FROUND_TO_ZERO | _MM_FROUND_NO_EXC }>(y);
+            let d = _mm256_sub_ps(y, t);
+            let one = _mm256_set1_ps(1.0);
+            let inc = _mm256_and_ps(_mm256_cmp_ps::<_CMP_GE_OQ>(d, _mm256_set1_ps(0.5)), one);
+            let dec = _mm256_and_ps(_mm256_cmp_ps::<_CMP_LE_OQ>(d, _mm256_set1_ps(-0.5)), one);
+            let k = _mm256_sub_ps(_mm256_add_ps(t, inc), dec);
+            let f = _mm256_sub_ps(y, k);
+            // Horner, innermost first, mul-then-add — scalar rounding order
+            let mut p = _mm256_set1_ps(C5);
+            p = _mm256_add_ps(_mm256_set1_ps(C4), _mm256_mul_ps(f, p));
+            p = _mm256_add_ps(_mm256_set1_ps(C3), _mm256_mul_ps(f, p));
+            p = _mm256_add_ps(_mm256_set1_ps(C2), _mm256_mul_ps(f, p));
+            p = _mm256_add_ps(_mm256_set1_ps(C1), _mm256_mul_ps(f, p));
+            p = _mm256_add_ps(_mm256_set1_ps(C0), _mm256_mul_ps(f, p));
+            // 2^k through the exponent bits; k is integral so the (nearest)
+            // cvt is exact.  Out-of-range lanes are underflow lanes — masked.
+            let ki = _mm256_cvtps_epi32(k);
+            let bits = _mm256_slli_epi32::<23>(_mm256_add_epi32(ki, _mm256_set1_epi32(127)));
+            let r = _mm256_mul_ps(p, _mm256_castsi256_ps(bits));
+            _mm256_andnot_ps(under, r)
+        }
     }
 
     #[target_feature(enable = "avx2")]
     unsafe fn exp_slice_impl(src: &[f32], dst: &mut [f32]) {
-        let n = src.len().min(dst.len());
-        let mut j = 0;
-        while j + 8 <= n {
-            let v = _mm256_loadu_ps(src.as_ptr().add(j));
-            _mm256_storeu_ps(dst.as_mut_ptr().add(j), exp8(v));
-            j += 8;
-        }
-        while j < n {
-            dst[j] = fast_exp(src[j]);
-            j += 1;
+        // SAFETY: the caller proves the target feature is present (the
+        // safe checked entries assert `available()`), and every pointer
+        // intrinsic stays in bounds: the vector loops advance `j` only
+        // while `j + LANES <= n` over slices of length ≥ `n`.
+        unsafe {
+            let n = src.len().min(dst.len());
+            let mut j = 0;
+            while j + 8 <= n {
+                let v = _mm256_loadu_ps(src.as_ptr().add(j));
+                _mm256_storeu_ps(dst.as_mut_ptr().add(j), exp8(v));
+                j += 8;
+            }
+            while j < n {
+                dst[j] = fast_exp(src[j]);
+                j += 1;
+            }
         }
     }
 
     #[target_feature(enable = "avx2")]
     unsafe fn max_abs_impl(xs: &[f32]) -> f32 {
-        // |v| is non-negative, so the lane-folded max is order-independent.
-        // max_ps(v, acc) returns acc when v is NaN — the scalar fold's
-        // NaN-skip semantics.
-        let sign = _mm256_set1_ps(-0.0);
-        let mut acc = _mm256_setzero_ps();
-        let n = xs.len();
-        let mut j = 0;
-        while j + 8 <= n {
-            let v = _mm256_andnot_ps(sign, _mm256_loadu_ps(xs.as_ptr().add(j)));
-            acc = _mm256_max_ps(v, acc);
-            j += 8;
+        // SAFETY: the caller proves the target feature is present (the
+        // safe checked entries assert `available()`), and every pointer
+        // intrinsic stays in bounds: the vector loops advance `j` only
+        // while `j + LANES <= n` over slices of length ≥ `n`.
+        unsafe {
+            // |v| is non-negative, so the lane-folded max is order-independent.
+            // max_ps(v, acc) returns acc when v is NaN — the scalar fold's
+            // NaN-skip semantics.
+            let sign = _mm256_set1_ps(-0.0);
+            let mut acc = _mm256_setzero_ps();
+            let n = xs.len();
+            let mut j = 0;
+            while j + 8 <= n {
+                let v = _mm256_andnot_ps(sign, _mm256_loadu_ps(xs.as_ptr().add(j)));
+                acc = _mm256_max_ps(v, acc);
+                j += 8;
+            }
+            let mut buf = [0.0f32; 8];
+            _mm256_storeu_ps(buf.as_mut_ptr(), acc);
+            let mut m = buf.iter().fold(0.0f32, |m, &v| m.max(v));
+            while j < n {
+                m = m.max(xs[j].abs());
+                j += 1;
+            }
+            m
         }
-        let mut buf = [0.0f32; 8];
-        _mm256_storeu_ps(buf.as_mut_ptr(), acc);
-        let mut m = buf.iter().fold(0.0f32, |m, &v| m.max(v));
-        while j < n {
-            m = m.max(xs[j].abs());
-            j += 1;
-        }
-        m
     }
 
     /// Row max with the scalar fold's NaN-skip (`max_ps(v, acc)` operand
@@ -470,78 +519,102 @@ pub mod avx2 {
     /// docs).
     #[target_feature(enable = "avx2")]
     unsafe fn row_max(src: &[f32]) -> f32 {
-        let mut acc = _mm256_set1_ps(f32::NEG_INFINITY);
-        let n = src.len();
-        let mut j = 0;
-        while j + 8 <= n {
-            let v = _mm256_loadu_ps(src.as_ptr().add(j));
-            acc = _mm256_max_ps(v, acc);
-            j += 8;
+        // SAFETY: the caller proves the target feature is present (the
+        // safe checked entries assert `available()`), and every pointer
+        // intrinsic stays in bounds: the vector loops advance `j` only
+        // while `j + LANES <= n` over slices of length ≥ `n`.
+        unsafe {
+            let mut acc = _mm256_set1_ps(f32::NEG_INFINITY);
+            let n = src.len();
+            let mut j = 0;
+            while j + 8 <= n {
+                let v = _mm256_loadu_ps(src.as_ptr().add(j));
+                acc = _mm256_max_ps(v, acc);
+                j += 8;
+            }
+            let mut buf = [0.0f32; 8];
+            _mm256_storeu_ps(buf.as_mut_ptr(), acc);
+            let mut m = buf.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            while j < n {
+                m = m.max(src[j]);
+                j += 1;
+            }
+            m
         }
-        let mut buf = [0.0f32; 8];
-        _mm256_storeu_ps(buf.as_mut_ptr(), acc);
-        let mut m = buf.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
-        while j < n {
-            m = m.max(src[j]);
-            j += 1;
-        }
-        m
     }
 
     #[target_feature(enable = "avx2")]
     unsafe fn exp_sub(src: &[f32], mx: f32, dst: &mut [f32]) {
-        let vm = _mm256_set1_ps(mx);
-        let n = dst.len();
-        let mut j = 0;
-        while j + 8 <= n {
-            let v = _mm256_sub_ps(_mm256_loadu_ps(src.as_ptr().add(j)), vm);
-            _mm256_storeu_ps(dst.as_mut_ptr().add(j), exp8(v));
-            j += 8;
-        }
-        while j < n {
-            dst[j] = fast_exp(src[j] - mx);
-            j += 1;
+        // SAFETY: the caller proves the target feature is present (the
+        // safe checked entries assert `available()`), and every pointer
+        // intrinsic stays in bounds: the vector loops advance `j` only
+        // while `j + LANES <= n` over slices of length ≥ `n`.
+        unsafe {
+            let vm = _mm256_set1_ps(mx);
+            let n = dst.len();
+            let mut j = 0;
+            while j + 8 <= n {
+                let v = _mm256_sub_ps(_mm256_loadu_ps(src.as_ptr().add(j)), vm);
+                _mm256_storeu_ps(dst.as_mut_ptr().add(j), exp8(v));
+                j += 8;
+            }
+            while j < n {
+                dst[j] = fast_exp(src[j] - mx);
+                j += 1;
+            }
         }
     }
 
     #[target_feature(enable = "avx2")]
     unsafe fn scale(xs: &mut [f32], inv: f32) {
-        let vi = _mm256_set1_ps(inv);
-        let n = xs.len();
-        let mut j = 0;
-        while j + 8 <= n {
-            let v = _mm256_mul_ps(_mm256_loadu_ps(xs.as_ptr().add(j)), vi);
-            _mm256_storeu_ps(xs.as_mut_ptr().add(j), v);
-            j += 8;
-        }
-        while j < n {
-            xs[j] *= inv;
-            j += 1;
+        // SAFETY: the caller proves the target feature is present (the
+        // safe checked entries assert `available()`), and every pointer
+        // intrinsic stays in bounds: the vector loops advance `j` only
+        // while `j + LANES <= n` over slices of length ≥ `n`.
+        unsafe {
+            let vi = _mm256_set1_ps(inv);
+            let n = xs.len();
+            let mut j = 0;
+            while j + 8 <= n {
+                let v = _mm256_mul_ps(_mm256_loadu_ps(xs.as_ptr().add(j)), vi);
+                _mm256_storeu_ps(xs.as_mut_ptr().add(j), v);
+                j += 8;
+            }
+            while j < n {
+                xs[j] *= inv;
+                j += 1;
+            }
         }
     }
 
     #[target_feature(enable = "avx2")]
     unsafe fn row_softmax_impl(l: MatView<'_>, dst: &mut [f32]) {
-        for (p, row) in dst.chunks_mut(l.cols).enumerate() {
-            let src = l.row(p);
-            let mx = row_max(src);
-            if !(mx > NEG_LOGMASS / 2.0) {
-                row.fill(0.0);
-                continue;
+        // SAFETY: the caller proves the target feature is present (the
+        // safe checked entries assert `available()`), and every pointer
+        // intrinsic stays in bounds: the vector loops advance `j` only
+        // while `j + LANES <= n` over slices of length ≥ `n`.
+        unsafe {
+            for (p, row) in dst.chunks_mut(l.cols).enumerate() {
+                let src = l.row(p);
+                let mx = row_max(src);
+                if !(mx > NEG_LOGMASS / 2.0) {
+                    row.fill(0.0);
+                    continue;
+                }
+                exp_sub(src, mx, row);
+                // the sum walks the stored values in index order — the scalar
+                // reference accumulates sequentially, and a vector reduction
+                // would re-associate the rounding
+                let mut sum = 0.0f32;
+                for &e in row.iter() {
+                    sum += e;
+                }
+                if !(sum > 0.0) {
+                    row.fill(0.0);
+                    continue;
+                }
+                scale(row, 1.0 / sum);
             }
-            exp_sub(src, mx, row);
-            // the sum walks the stored values in index order — the scalar
-            // reference accumulates sequentially, and a vector reduction
-            // would re-associate the rounding
-            let mut sum = 0.0f32;
-            for &e in row.iter() {
-                sum += e;
-            }
-            if !(sum > 0.0) {
-                row.fill(0.0);
-                continue;
-            }
-            scale(row, 1.0 / sum);
         }
     }
 
@@ -606,45 +679,63 @@ pub mod neon {
     /// (scalar `*cv += av * bv` rounds the product first).
     #[target_feature(enable = "neon")]
     unsafe fn axpy(av: f32, x: &[f32], y: &mut [f32]) {
-        debug_assert_eq!(x.len(), y.len());
-        let n = y.len();
-        let va = vdupq_n_f32(av);
-        let mut j = 0;
-        while j + 4 <= n {
-            let vx = vld1q_f32(x.as_ptr().add(j));
-            let vy = vld1q_f32(y.as_ptr().add(j));
-            let prod = vmulq_f32(va, vx);
-            vst1q_f32(y.as_mut_ptr().add(j), vaddq_f32(vy, prod));
-            j += 4;
-        }
-        while j < n {
-            y[j] += av * x[j];
-            j += 1;
+        // SAFETY: the caller proves the target feature is present (the
+        // safe checked entries assert `available()`), and every pointer
+        // intrinsic stays in bounds: the vector loops advance `j` only
+        // while `j + LANES <= n` over slices of length ≥ `n`.
+        unsafe {
+            debug_assert_eq!(x.len(), y.len());
+            let n = y.len();
+            let va = vdupq_n_f32(av);
+            let mut j = 0;
+            while j + 4 <= n {
+                let vx = vld1q_f32(x.as_ptr().add(j));
+                let vy = vld1q_f32(y.as_ptr().add(j));
+                let prod = vmulq_f32(va, vx);
+                vst1q_f32(y.as_mut_ptr().add(j), vaddq_f32(vy, prod));
+                j += 4;
+            }
+            while j < n {
+                y[j] += av * x[j];
+                j += 1;
+            }
         }
     }
 
     #[target_feature(enable = "neon")]
     unsafe fn matmul_impl(a: MatView<'_>, b: MatView<'_>, c: &mut [f32]) {
-        c.fill(0.0);
-        let n = b.cols;
-        for i in 0..a.rows {
-            let arow = a.row(i);
-            let crow = &mut c[i * n..(i + 1) * n];
-            for (p, &av) in arow.iter().enumerate() {
-                axpy(av, &b.data[p * n..(p + 1) * n], crow);
+        // SAFETY: the caller proves the target feature is present (the
+        // safe checked entries assert `available()`), and every pointer
+        // intrinsic stays in bounds: the vector loops advance `j` only
+        // while `j + LANES <= n` over slices of length ≥ `n`.
+        unsafe {
+            c.fill(0.0);
+            let n = b.cols;
+            for i in 0..a.rows {
+                let arow = a.row(i);
+                let crow = &mut c[i * n..(i + 1) * n];
+                for (p, &av) in arow.iter().enumerate() {
+                    axpy(av, &b.data[p * n..(p + 1) * n], crow);
+                }
             }
         }
     }
 
     #[target_feature(enable = "neon")]
     unsafe fn vt_matmul_impl(a: MatView<'_>, b: MatView<'_>, out: &mut [f32]) {
-        out.fill(0.0);
-        let n = b.cols;
-        for p in 0..a.rows {
-            let arow = a.row(p);
-            let brow = b.row(p);
-            for (i, &av) in arow.iter().enumerate() {
-                axpy(av, brow, &mut out[i * n..(i + 1) * n]);
+        // SAFETY: the caller proves the target feature is present (the
+        // safe checked entries assert `available()`), and every pointer
+        // intrinsic stays in bounds: the vector loops advance `j` only
+        // while `j + LANES <= n` over slices of length ≥ `n`.
+        unsafe {
+            out.fill(0.0);
+            let n = b.cols;
+            for p in 0..a.rows {
+                let arow = a.row(p);
+                let brow = b.row(p);
+                for (i, &av) in arow.iter().enumerate() {
+                    axpy(av, brow, &mut out[i * n..(i + 1) * n]);
+                }
             }
         }
     }
@@ -652,140 +743,192 @@ pub mod neon {
     /// 4-lane `fast_exp`; see [`super::avx2::exp8`] for the annotated
     /// walk-through — this body differs only where NEON is more direct.
     #[target_feature(enable = "neon")]
+    // On toolchains where safe-to-call target-feature intrinsics make
+    // this block redundant, the wrap is dead weight, not an error.
+    #[allow(unused_unsafe)]
     unsafe fn exp4(x: float32x4_t) -> float32x4_t {
-        let y = vmulq_f32(x, vdupq_n_f32(std::f32::consts::LOG2_E));
-        let under = vcleq_f32(y, vdupq_n_f32(-126.0));
-        // scalar `y.min(127.0)` keeps y only when y < 127 and is 127 on
-        // NaN; the compare-select reproduces exactly that.
-        let c127 = vdupq_n_f32(127.0);
-        let y = vbslq_f32(vcltq_f32(y, c127), y, c127);
-        let k = vrndaq_f32(y); // round halves away from zero — scalar f32::round
-        let f = vsubq_f32(y, k);
-        let mut p = vdupq_n_f32(C5);
-        p = vaddq_f32(vdupq_n_f32(C4), vmulq_f32(f, p));
-        p = vaddq_f32(vdupq_n_f32(C3), vmulq_f32(f, p));
-        p = vaddq_f32(vdupq_n_f32(C2), vmulq_f32(f, p));
-        p = vaddq_f32(vdupq_n_f32(C1), vmulq_f32(f, p));
-        p = vaddq_f32(vdupq_n_f32(C0), vmulq_f32(f, p));
-        let ki = vcvtq_s32_f32(k); // truncating — exact on integral k
-        let bits = vshlq_n_s32::<23>(vaddq_s32(ki, vdupq_n_s32(127)));
-        let r = vmulq_f32(p, vreinterpretq_f32_s32(bits));
-        // clear underflow lanes to +0.0 (bits & !mask)
-        vreinterpretq_f32_u32(vbicq_u32(vreinterpretq_u32_f32(r), under))
+        // SAFETY: value intrinsics only — sound whenever the target
+        // feature is present, which the caller proves (the safe checked
+        // entries assert `available()` before entering this module).
+        unsafe {
+            let y = vmulq_f32(x, vdupq_n_f32(std::f32::consts::LOG2_E));
+            let under = vcleq_f32(y, vdupq_n_f32(-126.0));
+            // scalar `y.min(127.0)` keeps y only when y < 127 and is 127 on
+            // NaN; the compare-select reproduces exactly that.
+            let c127 = vdupq_n_f32(127.0);
+            let y = vbslq_f32(vcltq_f32(y, c127), y, c127);
+            let k = vrndaq_f32(y); // round halves away from zero — scalar f32::round
+            let f = vsubq_f32(y, k);
+            let mut p = vdupq_n_f32(C5);
+            p = vaddq_f32(vdupq_n_f32(C4), vmulq_f32(f, p));
+            p = vaddq_f32(vdupq_n_f32(C3), vmulq_f32(f, p));
+            p = vaddq_f32(vdupq_n_f32(C2), vmulq_f32(f, p));
+            p = vaddq_f32(vdupq_n_f32(C1), vmulq_f32(f, p));
+            p = vaddq_f32(vdupq_n_f32(C0), vmulq_f32(f, p));
+            let ki = vcvtq_s32_f32(k); // truncating — exact on integral k
+            let bits = vshlq_n_s32::<23>(vaddq_s32(ki, vdupq_n_s32(127)));
+            let r = vmulq_f32(p, vreinterpretq_f32_s32(bits));
+            // clear underflow lanes to +0.0 (bits & !mask)
+            vreinterpretq_f32_u32(vbicq_u32(vreinterpretq_u32_f32(r), under))
+        }
     }
 
     #[target_feature(enable = "neon")]
     unsafe fn exp_slice_impl(src: &[f32], dst: &mut [f32]) {
-        let n = src.len().min(dst.len());
-        let mut j = 0;
-        while j + 4 <= n {
-            let v = vld1q_f32(src.as_ptr().add(j));
-            vst1q_f32(dst.as_mut_ptr().add(j), exp4(v));
-            j += 4;
-        }
-        while j < n {
-            dst[j] = fast_exp(src[j]);
-            j += 1;
+        // SAFETY: the caller proves the target feature is present (the
+        // safe checked entries assert `available()`), and every pointer
+        // intrinsic stays in bounds: the vector loops advance `j` only
+        // while `j + LANES <= n` over slices of length ≥ `n`.
+        unsafe {
+            let n = src.len().min(dst.len());
+            let mut j = 0;
+            while j + 4 <= n {
+                let v = vld1q_f32(src.as_ptr().add(j));
+                vst1q_f32(dst.as_mut_ptr().add(j), exp4(v));
+                j += 4;
+            }
+            while j < n {
+                dst[j] = fast_exp(src[j]);
+                j += 1;
+            }
         }
     }
 
     /// Lane max with scalar-fold NaN-skip: keep `v` only when `v > acc`
     /// (false on NaN ⇒ acc survives, as in `f32::max`).
     #[target_feature(enable = "neon")]
+    // On toolchains where safe-to-call target-feature intrinsics make
+    // this block redundant, the wrap is dead weight, not an error.
+    #[allow(unused_unsafe)]
     unsafe fn lane_max(v: float32x4_t, acc: float32x4_t) -> float32x4_t {
-        vbslq_f32(vcgtq_f32(v, acc), v, acc)
+        // SAFETY: value intrinsics only — sound whenever the target
+        // feature is present, which the caller proves (the safe checked
+        // entries assert `available()` before entering this module).
+        unsafe {
+            vbslq_f32(vcgtq_f32(v, acc), v, acc)
+        }
     }
 
     #[target_feature(enable = "neon")]
     unsafe fn max_abs_impl(xs: &[f32]) -> f32 {
-        let mut acc = vdupq_n_f32(0.0);
-        let n = xs.len();
-        let mut j = 0;
-        while j + 4 <= n {
-            acc = lane_max(vabsq_f32(vld1q_f32(xs.as_ptr().add(j))), acc);
-            j += 4;
+        // SAFETY: the caller proves the target feature is present (the
+        // safe checked entries assert `available()`), and every pointer
+        // intrinsic stays in bounds: the vector loops advance `j` only
+        // while `j + LANES <= n` over slices of length ≥ `n`.
+        unsafe {
+            let mut acc = vdupq_n_f32(0.0);
+            let n = xs.len();
+            let mut j = 0;
+            while j + 4 <= n {
+                acc = lane_max(vabsq_f32(vld1q_f32(xs.as_ptr().add(j))), acc);
+                j += 4;
+            }
+            let mut buf = [0.0f32; 4];
+            vst1q_f32(buf.as_mut_ptr(), acc);
+            let mut m = buf.iter().fold(0.0f32, |m, &v| m.max(v));
+            while j < n {
+                m = m.max(xs[j].abs());
+                j += 1;
+            }
+            m
         }
-        let mut buf = [0.0f32; 4];
-        vst1q_f32(buf.as_mut_ptr(), acc);
-        let mut m = buf.iter().fold(0.0f32, |m, &v| m.max(v));
-        while j < n {
-            m = m.max(xs[j].abs());
-            j += 1;
-        }
-        m
     }
 
     #[target_feature(enable = "neon")]
     unsafe fn row_max(src: &[f32]) -> f32 {
-        let mut acc = vdupq_n_f32(f32::NEG_INFINITY);
-        let n = src.len();
-        let mut j = 0;
-        while j + 4 <= n {
-            acc = lane_max(vld1q_f32(src.as_ptr().add(j)), acc);
-            j += 4;
+        // SAFETY: the caller proves the target feature is present (the
+        // safe checked entries assert `available()`), and every pointer
+        // intrinsic stays in bounds: the vector loops advance `j` only
+        // while `j + LANES <= n` over slices of length ≥ `n`.
+        unsafe {
+            let mut acc = vdupq_n_f32(f32::NEG_INFINITY);
+            let n = src.len();
+            let mut j = 0;
+            while j + 4 <= n {
+                acc = lane_max(vld1q_f32(src.as_ptr().add(j)), acc);
+                j += 4;
+            }
+            let mut buf = [0.0f32; 4];
+            vst1q_f32(buf.as_mut_ptr(), acc);
+            let mut m = buf.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            while j < n {
+                m = m.max(src[j]);
+                j += 1;
+            }
+            m
         }
-        let mut buf = [0.0f32; 4];
-        vst1q_f32(buf.as_mut_ptr(), acc);
-        let mut m = buf.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
-        while j < n {
-            m = m.max(src[j]);
-            j += 1;
-        }
-        m
     }
 
     #[target_feature(enable = "neon")]
     unsafe fn exp_sub(src: &[f32], mx: f32, dst: &mut [f32]) {
-        let vm = vdupq_n_f32(mx);
-        let n = dst.len();
-        let mut j = 0;
-        while j + 4 <= n {
-            let v = vsubq_f32(vld1q_f32(src.as_ptr().add(j)), vm);
-            vst1q_f32(dst.as_mut_ptr().add(j), exp4(v));
-            j += 4;
-        }
-        while j < n {
-            dst[j] = fast_exp(src[j] - mx);
-            j += 1;
+        // SAFETY: the caller proves the target feature is present (the
+        // safe checked entries assert `available()`), and every pointer
+        // intrinsic stays in bounds: the vector loops advance `j` only
+        // while `j + LANES <= n` over slices of length ≥ `n`.
+        unsafe {
+            let vm = vdupq_n_f32(mx);
+            let n = dst.len();
+            let mut j = 0;
+            while j + 4 <= n {
+                let v = vsubq_f32(vld1q_f32(src.as_ptr().add(j)), vm);
+                vst1q_f32(dst.as_mut_ptr().add(j), exp4(v));
+                j += 4;
+            }
+            while j < n {
+                dst[j] = fast_exp(src[j] - mx);
+                j += 1;
+            }
         }
     }
 
     #[target_feature(enable = "neon")]
     unsafe fn scale(xs: &mut [f32], inv: f32) {
-        let vi = vdupq_n_f32(inv);
-        let n = xs.len();
-        let mut j = 0;
-        while j + 4 <= n {
-            let v = vmulq_f32(vld1q_f32(xs.as_ptr().add(j)), vi);
-            vst1q_f32(xs.as_mut_ptr().add(j), v);
-            j += 4;
-        }
-        while j < n {
-            xs[j] *= inv;
-            j += 1;
+        // SAFETY: the caller proves the target feature is present (the
+        // safe checked entries assert `available()`), and every pointer
+        // intrinsic stays in bounds: the vector loops advance `j` only
+        // while `j + LANES <= n` over slices of length ≥ `n`.
+        unsafe {
+            let vi = vdupq_n_f32(inv);
+            let n = xs.len();
+            let mut j = 0;
+            while j + 4 <= n {
+                let v = vmulq_f32(vld1q_f32(xs.as_ptr().add(j)), vi);
+                vst1q_f32(xs.as_mut_ptr().add(j), v);
+                j += 4;
+            }
+            while j < n {
+                xs[j] *= inv;
+                j += 1;
+            }
         }
     }
 
     #[target_feature(enable = "neon")]
     unsafe fn row_softmax_impl(l: MatView<'_>, dst: &mut [f32]) {
-        for (p, row) in dst.chunks_mut(l.cols).enumerate() {
-            let src = l.row(p);
-            let mx = row_max(src);
-            if !(mx > NEG_LOGMASS / 2.0) {
-                row.fill(0.0);
-                continue;
+        // SAFETY: the caller proves the target feature is present (the
+        // safe checked entries assert `available()`), and every pointer
+        // intrinsic stays in bounds: the vector loops advance `j` only
+        // while `j + LANES <= n` over slices of length ≥ `n`.
+        unsafe {
+            for (p, row) in dst.chunks_mut(l.cols).enumerate() {
+                let src = l.row(p);
+                let mx = row_max(src);
+                if !(mx > NEG_LOGMASS / 2.0) {
+                    row.fill(0.0);
+                    continue;
+                }
+                exp_sub(src, mx, row);
+                // scalar sequential sum in index order (see avx2 twin)
+                let mut sum = 0.0f32;
+                for &e in row.iter() {
+                    sum += e;
+                }
+                if !(sum > 0.0) {
+                    row.fill(0.0);
+                    continue;
+                }
+                scale(row, 1.0 / sum);
             }
-            exp_sub(src, mx, row);
-            // scalar sequential sum in index order (see avx2 twin)
-            let mut sum = 0.0f32;
-            for &e in row.iter() {
-                sum += e;
-            }
-            if !(sum > 0.0) {
-                row.fill(0.0);
-                continue;
-            }
-            scale(row, 1.0 / sum);
         }
     }
 
@@ -878,12 +1021,15 @@ mod tests {
 
     // -- SIMD-vs-scalar parity sweeps (skipped on hosts without the ISA) --
 
-    #[cfg(target_arch = "x86_64")]
+    // Not under Miri: `available()` needs runtime CPU-feature probes and
+    // the SIMD bodies need vendor intrinsics, neither of which the
+    // interpreter executes — dispatch is pinned to scalar there instead.
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
     use super::avx2 as simd;
-    #[cfg(target_arch = "aarch64")]
+    #[cfg(all(target_arch = "aarch64", not(miri)))]
     use super::neon as simd;
 
-    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    #[cfg(all(any(target_arch = "x86_64", target_arch = "aarch64"), not(miri)))]
     mod parity {
         use super::*;
         use crate::linalg::{fast_exp, NEG_LOGMASS};

@@ -2,6 +2,8 @@
 //!
 //! All heavy lifting lives in the library; see `hiref help`.
 
+#![forbid(unsafe_code)]
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = hiref::cli::run(args) {

@@ -2,6 +2,8 @@
 //! couplings, streaming for dense ones (the paper's headline point is
 //! precisely that HiRef's output needs `n` nonzeros, not `n²`).
 
+#![forbid(unsafe_code)]
+
 use crate::costs::CostKind;
 use crate::data::stream::DatasetSource;
 use crate::linalg::Mat;

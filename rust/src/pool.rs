@@ -40,7 +40,13 @@
 //! [`RangeShared`] underneath) and a file-backed spillable one
 //! ([`store::SpillStore`]) so that only the `O(n)` permutations must stay
 //! resident.
+//!
+//! Every disjointness contract above is machine-checked in debug builds
+//! by [`guard`] — a borrow registry that panics with both claim sites the
+//! moment two overlapping windows are live, and compiles to nothing in
+//! release (see `docs/safety.md`).
 
+pub mod guard;
 pub mod store;
 
 pub use store::{Checkout, FactorStore, ResidentStore, SpillStore, StoreStats};
@@ -80,6 +86,7 @@ pub struct RangeShared<T> {
     data: UnsafeCell<Vec<T>>,
     ptr: *mut T,
     len: usize,
+    guard: guard::Registry,
 }
 
 // SAFETY: exclusive access is coordinated by the caller-supplied
@@ -91,10 +98,16 @@ unsafe impl<T: Send + Sync> Sync for RangeShared<T> {}
 unsafe impl<T: Send> Send for RangeShared<T> {}
 
 impl<T> RangeShared<T> {
-    pub fn new(mut data: Vec<T>) -> RangeShared<T> {
-        let ptr = data.as_mut_ptr();
+    pub fn new(data: Vec<T>) -> RangeShared<T> {
         let len = data.len();
-        RangeShared { data: UnsafeCell::new(data), ptr, len }
+        let data = UnsafeCell::new(data);
+        // SAFETY: the cell is exclusively owned here (no other reference
+        // exists yet).  The buffer pointer is derived *after* the Vec
+        // reached its final place so it stays valid under Miri's aliasing
+        // models (moving a Vec may retag its internal unique pointer,
+        // invalidating raw pointers derived before the move).
+        let ptr = unsafe { (*data.get()).as_mut_ptr() };
+        RangeShared { data, ptr, len, guard: guard::Registry::new("RangeShared") }
     }
 
     pub fn len(&self) -> usize {
@@ -107,26 +120,73 @@ impl<T> RangeShared<T> {
 
     /// Shared view of `start..end`.  Bounds are checked in release builds
     /// too — an out-of-range window would be silent heap corruption, and
-    /// the check is O(1) per block, not per element.
+    /// the check is O(1) per block, not per element.  Debug builds also
+    /// register the window with the [`guard`] registry, so an overlapping
+    /// exclusive claim panics with both claim sites.
     ///
     /// # Safety
     /// No concurrently live *exclusive* borrow may overlap `start..end`.
     #[inline]
+    #[cfg_attr(any(debug_assertions, feature = "guard"), track_caller)]
     pub unsafe fn slice(&self, start: usize, end: usize) -> &[T] {
+        self.guard.claim_shared(start, end);
+        // SAFETY: bounds asserted below the claim; aliasing is the
+        // caller's contract (no overlapping exclusive borrow), checked in
+        // debug builds by the guard claim above.
+        unsafe { self.slice_unclaimed(start, end) }
+    }
+
+    /// [`RangeShared::slice`] without a guard claim — for internal callers
+    /// (e.g. [`store::ResidentStore`]) that register their own RAII-scoped
+    /// claims on [`RangeShared::guard_registry`] instead, with lifetimes
+    /// the fire-and-forget claim model cannot express.
+    ///
+    /// # Safety
+    /// Same contract as [`RangeShared::slice`].
+    #[inline]
+    pub(crate) unsafe fn slice_unclaimed(&self, start: usize, end: usize) -> &[T] {
         assert!(start <= end && end <= self.len, "range {start}..{end} out of 0..{}", self.len);
-        std::slice::from_raw_parts(self.ptr.add(start), end - start)
+        // SAFETY: in-bounds by the assert above; aliasing is the caller's
+        // contract.
+        unsafe { std::slice::from_raw_parts(self.ptr.add(start), end - start) }
     }
 
     /// Exclusive view of `start..end`.  Bounds checked in release builds
-    /// (see [`RangeShared::slice`]).
+    /// (see [`RangeShared::slice`]); debug builds register the window with
+    /// the [`guard`] registry.
     ///
     /// # Safety
     /// No concurrently live borrow of any kind may overlap `start..end`.
     #[inline]
     #[allow(clippy::mut_from_ref)]
+    #[cfg_attr(any(debug_assertions, feature = "guard"), track_caller)]
     pub unsafe fn slice_mut(&self, start: usize, end: usize) -> &mut [T] {
+        self.guard.claim_mut(start, end);
+        // SAFETY: bounds asserted below the claim; aliasing is the
+        // caller's contract (no overlapping borrow of any kind), checked
+        // in debug builds by the guard claim above.
+        unsafe { self.slice_mut_unclaimed(start, end) }
+    }
+
+    /// [`RangeShared::slice_mut`] without a guard claim — see
+    /// [`RangeShared::slice_unclaimed`].
+    ///
+    /// # Safety
+    /// Same contract as [`RangeShared::slice_mut`].
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn slice_mut_unclaimed(&self, start: usize, end: usize) -> &mut [T] {
         assert!(start <= end && end <= self.len, "range {start}..{end} out of 0..{}", self.len);
-        std::slice::from_raw_parts_mut(self.ptr.add(start), end - start)
+        // SAFETY: in-bounds by the assert above; aliasing is the caller's
+        // contract.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(start), end - start) }
+    }
+
+    /// The guard registry tracking this buffer's claims (element units).
+    /// Internal callers that bypass the claiming accessors register their
+    /// RAII-scoped claims and checkout pins here.
+    pub(crate) fn guard_registry(&self) -> &guard::Registry {
+        &self.guard
     }
 
     /// Reclaim the underlying vector (all borrows must have ended).
@@ -152,6 +212,7 @@ impl<T> RangeShared<T> {
 pub struct SharedSlice<'a, T> {
     ptr: *mut T,
     len: usize,
+    guard: guard::Registry,
     _borrow: PhantomData<&'a mut [T]>,
 }
 
@@ -163,7 +224,12 @@ unsafe impl<T: Send> Send for SharedSlice<'_, T> {}
 
 impl<'a, T> SharedSlice<'a, T> {
     pub fn new(data: &'a mut [T]) -> SharedSlice<'a, T> {
-        SharedSlice { ptr: data.as_mut_ptr(), len: data.len(), _borrow: PhantomData }
+        SharedSlice {
+            ptr: data.as_mut_ptr(),
+            len: data.len(),
+            guard: guard::Registry::new("SharedSlice"),
+            _borrow: PhantomData,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -175,25 +241,37 @@ impl<'a, T> SharedSlice<'a, T> {
     }
 
     /// Shared view of `start..end`.  Bounds checked in release builds too
-    /// (an out-of-range window would be silent heap corruption).
+    /// (an out-of-range window would be silent heap corruption); debug
+    /// builds register the window with the [`guard`] registry.
     ///
     /// # Safety
     /// No concurrently live *exclusive* borrow may overlap `start..end`.
     #[inline]
+    #[cfg_attr(any(debug_assertions, feature = "guard"), track_caller)]
     pub unsafe fn slice(&self, start: usize, end: usize) -> &[T] {
         assert!(start <= end && end <= self.len, "range {start}..{end} out of 0..{}", self.len);
-        std::slice::from_raw_parts(self.ptr.add(start), end - start)
+        self.guard.claim_shared(start, end);
+        // SAFETY: in-bounds by the assert above; aliasing is the caller's
+        // contract (no overlapping exclusive borrow), checked in debug
+        // builds by the guard claim.
+        unsafe { std::slice::from_raw_parts(self.ptr.add(start), end - start) }
     }
 
-    /// Exclusive view of `start..end`.  Bounds checked in release builds.
+    /// Exclusive view of `start..end`.  Bounds checked in release builds;
+    /// debug builds register the window with the [`guard`] registry.
     ///
     /// # Safety
     /// No concurrently live borrow of any kind may overlap `start..end`.
     #[inline]
     #[allow(clippy::mut_from_ref)]
+    #[cfg_attr(any(debug_assertions, feature = "guard"), track_caller)]
     pub unsafe fn slice_mut(&self, start: usize, end: usize) -> &mut [T] {
         assert!(start <= end && end <= self.len, "range {start}..{end} out of 0..{}", self.len);
-        std::slice::from_raw_parts_mut(self.ptr.add(start), end - start)
+        self.guard.claim_mut(start, end);
+        // SAFETY: in-bounds by the assert above; aliasing is the caller's
+        // contract (no overlapping borrow of any kind), checked in debug
+        // builds by the guard claim.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(start), end - start) }
     }
 }
 
@@ -400,7 +478,9 @@ impl<T> SlotWriter<T> {
     /// # Safety
     /// `i` must be in bounds and claimed by exactly one worker.
     unsafe fn write(&self, i: usize, v: T) {
-        *self.0.add(i) = Some(v);
+        // SAFETY: in-bounds and exclusively claimed per this fn's
+        // contract, so the write cannot race or alias.
+        unsafe { *self.0.add(i) = Some(v) };
     }
 }
 
@@ -421,6 +501,10 @@ where
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let slots = SlotWriter(out.as_mut_ptr());
     let cursor = AtomicUsize::new(0);
+    // Claims made by the caller before the fan-out (and by the short-lived
+    // workers inside it) belong to borrows that end at these boundaries:
+    // retire them so they cannot collide with the workers' windows.
+    guard::advance_epoch();
     std::thread::scope(|s| {
         for _ in 0..threads {
             s.spawn(|| loop {
@@ -435,6 +519,7 @@ where
             });
         }
     });
+    guard::advance_epoch();
     out.into_iter().map(|v| v.expect("worker missed a slot")).collect()
 }
 
@@ -549,6 +634,11 @@ impl LaneCrew {
             "round of {n_chunks} chunks exceeds crew width {}",
             self.workers
         );
+        // A round boundary ends every borrow of the previous round (the
+        // submitter blocks until all workers acknowledge), so claims from
+        // earlier rounds — possibly on lane windows a different worker
+        // owns this round — must not linger in the guard registry.
+        guard::advance_epoch();
         {
             let mut st = self.state.lock().unwrap();
             debug_assert_eq!(st.remaining, 0, "previous round still in flight");
@@ -567,8 +657,13 @@ impl LaneCrew {
                 st = self.done.wait(st).unwrap();
             }
             st.job = None;
-            if let Some(p) = st.panic.take() {
-                drop(st);
+            let panic = st.panic.take();
+            drop(st);
+            // All workers acknowledged: the round's borrows are over, so
+            // retire their claims before the submitter touches the same
+            // windows (finalisation reads lanes the workers just wrote).
+            guard::advance_epoch();
+            if let Some(p) = panic {
                 std::panic::resume_unwind(p);
             }
         }
@@ -807,6 +902,8 @@ mod tests {
                 for w in 0..4 {
                     let shared = &shared;
                     s.spawn(move || {
+                        // SAFETY: worker w owns exactly [w*16, (w+1)*16) —
+                        // the windows are pairwise disjoint.
                         let part = unsafe { shared.slice_mut(w * 16, (w + 1) * 16) };
                         for (o, v) in part.iter_mut().enumerate() {
                             *v = (w * 16 + o) as u32;
@@ -827,6 +924,8 @@ mod tests {
     fn shared_slice_bounds_checked() {
         let mut buf = vec![0u8; 4];
         let shared = SharedSlice::new(&mut buf);
+        // SAFETY: no other borrow is live; the call must die on the
+        // bounds assert before any pointer arithmetic happens.
         let _ = unsafe { shared.slice(2, 5) };
     }
 
@@ -837,7 +936,8 @@ mod tests {
             for w in 0..4 {
                 let shared = &shared;
                 s.spawn(move || {
-                    // worker w owns range [w*25, (w+1)*25)
+                    // SAFETY: worker w owns range [w*25, (w+1)*25) — the
+                    // windows are pairwise disjoint.
                     let part = unsafe { shared.slice_mut(w * 25, (w + 1) * 25) };
                     for (o, v) in part.iter_mut().enumerate() {
                         *v = (w * 25 + o) as u32;
@@ -1000,5 +1100,84 @@ mod tests {
         }));
         let msg = *caught.expect_err("panic must propagate").downcast::<&str>().unwrap();
         assert_eq!(msg, "lane worker exploded");
+    }
+
+    /// Seeded contract violations the [`guard`] registry must catch.
+    /// Only meaningful when the detector is compiled in.
+    #[cfg(any(debug_assertions, feature = "guard"))]
+    mod guard_negative {
+        use super::*;
+        use std::sync::Barrier;
+
+        /// An unrelated concurrent test can bump the global guard epoch
+        /// between the two seeded claims and prune the first one (the
+        /// documented miss-not-false-positive tradeoff), so each seeded
+        /// race retries until caught; a broken guard exhausts the retries
+        /// and dies with a non-matching message instead.
+        const SEED_ATTEMPTS: usize = 64;
+
+        #[test]
+        #[should_panic(expected = "conflicts with")]
+        fn overlapping_shared_slice_windows_across_threads_panic() {
+            for _ in 0..SEED_ATTEMPTS {
+                let mut buf = vec![0u32; 32];
+                let shared = SharedSlice::new(&mut buf);
+                // Both threads claim [8, 24) mutably.  The barrier makes
+                // the overlap cross-thread-concurrent (a sequential
+                // same-thread reborrow would be legal); whichever claims
+                // second dies, and the panic is re-raised here.
+                let barrier = Barrier::new(2);
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = (0..2)
+                        .map(|_| {
+                            let (shared, barrier) = (&shared, &barrier);
+                            s.spawn(move || {
+                                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                    barrier.wait();
+                                    // SAFETY: deliberately violated — this
+                                    // is the seeded overlap the guard must
+                                    // catch before any write happens.
+                                    let _w = unsafe { shared.slice_mut(8, 24) };
+                                }))
+                            })
+                        })
+                        .collect();
+                    for h in handles {
+                        if let Err(p) = h.join().expect("worker thread itself must not die") {
+                            std::panic::resume_unwind(p);
+                        }
+                    }
+                });
+            }
+            panic!("guard never caught the seeded SharedSlice overlap");
+        }
+
+        #[test]
+        #[should_panic(expected = "conflicts with")]
+        fn wrong_lane_crew_chunk_partition_panics() {
+            // A deliberately-wrong partition: chunk c claims [c, c+3), so
+            // chunks 0 and 1 overlap on [1, 3).  Claims from one round
+            // share an epoch and outlive the closure call, so the guard
+            // catches the overlap regardless of worker timing; the crew
+            // re-raises the panic on the submitter.
+            for _ in 0..SEED_ATTEMPTS {
+                let out = RangeShared::new(vec![0u8; 8]);
+                let got = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    with_lane_crew(2, |crew| {
+                        crew.run(2, &|c| {
+                            // SAFETY: deliberately violated — overlapping
+                            // windows across crew workers are the seeded
+                            // bug under test.
+                            let w = unsafe { out.slice_mut(c, c + 3) };
+                            w[0] = c as u8;
+                        });
+                    });
+                }));
+                if let Err(p) = got {
+                    std::panic::resume_unwind(p);
+                }
+            }
+            panic!("guard never caught the seeded crew overlap");
+        }
     }
 }

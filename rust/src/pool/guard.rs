@@ -1,0 +1,651 @@
+//! Debug-only disjointness race detector for the unsafe concurrency core.
+//!
+//! Every unsafe shared-mutation surface in the crate — [`RangeShared`] /
+//! [`SharedSlice`] windows, [`FactorStore`] row writes and checkout lanes,
+//! the [`LaneCrew`] chunk partition — rests on one informal contract: *no
+//! two concurrently live borrows overlap unless both are shared*.  This
+//! module makes that contract machine-checked in debug builds (and in the
+//! `guard`-feature CI leg): each underlying buffer owns a [`Registry`],
+//! every window accessor records a claim tagged with its thread, call
+//! site, the global epoch and the claiming thread's generation, and an
+//! overlapping conflict panics **immediately, naming both claim sites**.
+//!
+//! [`RangeShared`]: crate::pool::RangeShared
+//! [`SharedSlice`]: crate::pool::SharedSlice
+//! [`FactorStore`]: crate::pool::store::FactorStore
+//! [`LaneCrew`]: crate::pool::LaneCrew
+//!
+//! # Claim kinds
+//!
+//! * **Borrow claims** ([`Registry::claim_shared`] / [`Registry::claim_mut`])
+//!   are fire-and-forget: the accessors that hand out `&[T]` / `&mut [T]`
+//!   windows cannot know when the borrow ends, so liveness is inferred —
+//!   a claim is live while the global epoch ([`advance_epoch`]) and its
+//!   thread's generation ([`retire_thread`]) are unchanged.  The
+//!   parallelism entry points ([`LaneCrew::run`][crate::pool::LaneCrew::run],
+//!   [`parallel_map`][crate::pool::parallel_map]) advance the epoch at
+//!   round boundaries, and the refinement scheduler retires its claims
+//!   before publishing child blocks, so structurally-sequential reborrows
+//!   never alias a *live* claim.  A same-thread overlapping borrow claim
+//!   supersedes the old one (sequential reborrow).
+//! * **Scoped claims** ([`Registry::scoped_shared`] / [`Registry::scoped_mut`])
+//!   are RAII: registered for the duration of one store `write_rows` /
+//!   `read_rows` / `fill_rows_with` call and removed on drop, so writes
+//!   separated in time (a session archive now, a materialise later) can
+//!   never false-positive against each other.
+//! * **Pins** ([`Registry::pin`]) model checkout lane windows: created by
+//!   `FactorStore::checkout`, released exactly once by `release`.  Pinned
+//!   ranges must be pairwise disjoint and disjoint from every live pin;
+//!   an exclusive claim overlapping a live pin panics (a builder writing
+//!   rows out from under a checkout), double release panics, and checkout
+//!   accessors call [`PinToken::assert_live`] so use-after-release panics.
+//!
+//! # Soundness of the liveness inference
+//!
+//! Epoch/generation staleness only ever **prunes** claims, so the
+//! detector can miss a true race across concurrent solves (a stale claim
+//! forgotten early) but can never report a false one.  Single-crew and
+//! single-queue unit tests — the negative tests seeded in `pool`,
+//! `pool::store` and this module — detect their violations
+//! deterministically, because nothing advances the epoch between the two
+//! conflicting claims.
+//!
+//! # Zero release overhead
+//!
+//! In release builds without the `guard` feature every type here is a
+//! zero-sized no-op (see the `stub` twin at the bottom of this file):
+//! `Registry::new` constructs a unit struct and the claim calls are empty
+//! `#[inline(always)]` functions, so the layer compiles out entirely.
+//! `benches/bench_kernels.rs` asserts `!guard::enabled()` so the perf
+//! numbers can never silently include the checking.
+
+#[cfg(any(debug_assertions, feature = "guard"))]
+mod imp {
+    use std::collections::HashMap;
+    use std::ops::Range;
+    use std::panic::Location;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+    use std::thread::{self, ThreadId};
+
+    /// Whether the race detector is compiled in (true here; false in the
+    /// release stub).  Benches assert the negation.
+    pub fn enabled() -> bool {
+        true
+    }
+
+    /// Global round counter: borrow claims from before the current round
+    /// are stale (their borrows ended at the round boundary).
+    static EPOCH: AtomicU64 = AtomicU64::new(0);
+
+    /// Per-thread generation counters ([`retire_thread`] bumps the
+    /// caller's), keyed by [`ThreadId`].
+    fn gens() -> &'static Mutex<HashMap<ThreadId, u64>> {
+        static GENS: OnceLock<Mutex<HashMap<ThreadId, u64>>> = OnceLock::new();
+        GENS.get_or_init(|| Mutex::new(HashMap::new()))
+    }
+
+    /// Poison-recovering lock: when a guard panic unwinds through a held
+    /// lock, the *next* claimant must still receive the guard diagnostic,
+    /// not a `PoisonError` (two-thread negative tests rely on this).
+    fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+        m.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Start a new round: every borrow claim registered before this call
+    /// is considered dead.  Called by the parallelism entry points at
+    /// round boundaries (before work is published and after it joins).
+    pub fn advance_epoch() {
+        EPOCH.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Retire every borrow claim the calling thread has made so far
+    /// (bumps its generation).  The refinement scheduler calls this after
+    /// releasing a block's checkout and before publishing its children,
+    /// whose claims sub-window the parent's.
+    pub fn retire_thread() {
+        *lock(gens()).entry(thread::current().id()).or_insert(0) += 1;
+    }
+
+    struct Claim {
+        start: usize,
+        end: usize,
+        excl: bool,
+        thread: ThreadId,
+        epoch: u64,
+        gen: u64,
+        site: &'static Location<'static>,
+        /// `Some(id)` for RAII-scoped claims — exempt from epoch/gen
+        /// pruning and from same-thread supersession; removed on drop.
+        scope: Option<u64>,
+    }
+
+    struct Pin {
+        id: u64,
+        ranges: Vec<(usize, usize)>,
+        site: &'static Location<'static>,
+    }
+
+    #[derive(Default)]
+    struct State {
+        claims: Vec<Claim>,
+        pins: Vec<Pin>,
+        /// Released pin ids with their release site, kept for
+        /// double-release / use-after-release diagnostics.
+        released: Vec<(u64, &'static Location<'static>)>,
+        next_id: u64,
+    }
+
+    struct Inner {
+        label: &'static str,
+        state: Mutex<State>,
+    }
+
+    fn kind(excl: bool) -> &'static str {
+        if excl {
+            "exclusive"
+        } else {
+            "shared"
+        }
+    }
+
+    #[inline]
+    fn overlaps(a: (usize, usize), b: (usize, usize)) -> bool {
+        a.0 < b.1 && b.0 < a.1
+    }
+
+    /// Drop every fire-and-forget claim whose epoch or owning thread's
+    /// generation has moved on (its borrow ended at a round boundary).
+    fn prune(st: &mut State) {
+        let epoch = EPOCH.load(Ordering::SeqCst);
+        let gens = lock(gens());
+        st.claims.retain(|c| {
+            c.scope.is_some()
+                || (c.epoch == epoch && c.gen == gens.get(&c.thread).copied().unwrap_or(0))
+        });
+    }
+
+    /// Per-buffer borrow registry: one per [`RangeShared`] /
+    /// [`SharedSlice`] / checkout span / store row space.  Cloning shares
+    /// the underlying interval set.
+    ///
+    /// [`RangeShared`]: crate::pool::RangeShared
+    /// [`SharedSlice`]: crate::pool::SharedSlice
+    #[derive(Clone)]
+    pub struct Registry {
+        inner: Arc<Inner>,
+    }
+
+    impl Registry {
+        pub fn new(label: &'static str) -> Registry {
+            Registry { inner: Arc::new(Inner { label, state: Mutex::new(State::default()) }) }
+        }
+
+        /// Record a shared (read) borrow of `[start, end)`.
+        #[track_caller]
+        pub fn claim_shared(&self, start: usize, end: usize) {
+            self.claim(start, end, false, false);
+        }
+
+        /// Record an exclusive (write) borrow of `[start, end)`.
+        #[track_caller]
+        pub fn claim_mut(&self, start: usize, end: usize) {
+            self.claim(start, end, true, false);
+        }
+
+        /// Record a shared borrow for the lifetime of the returned token.
+        #[track_caller]
+        pub fn scoped_shared(&self, start: usize, end: usize) -> ScopedClaim {
+            ScopedClaim { id: self.claim(start, end, false, true), inner: self.inner.clone() }
+        }
+
+        /// Record an exclusive borrow for the lifetime of the returned
+        /// token.
+        #[track_caller]
+        pub fn scoped_mut(&self, start: usize, end: usize) -> ScopedClaim {
+            ScopedClaim { id: self.claim(start, end, true, true), inner: self.inner.clone() }
+        }
+
+        #[track_caller]
+        fn claim(&self, start: usize, end: usize, excl: bool, scoped: bool) -> u64 {
+            let site = Location::caller();
+            let me = thread::current().id();
+            let label = self.inner.label;
+            let mut st = lock(&self.inner.state);
+            prune(&mut st);
+            let (epoch, my_gen) = (
+                EPOCH.load(Ordering::SeqCst),
+                lock(gens()).get(&me).copied().unwrap_or(0),
+            );
+            // A same-thread overlapping borrow claim is a sequential
+            // reborrow (the old `&`/`&mut` cannot still be in use when the
+            // same thread derives a new one) — the new claim supersedes it.
+            st.claims.retain(|c| {
+                !(c.scope.is_none() && c.thread == me && overlaps((c.start, c.end), (start, end)))
+            });
+            if let Some(c) = st.claims.iter().find(|c| {
+                overlaps((c.start, c.end), (start, end))
+                    && (excl || c.excl)
+                    && (c.thread != me || c.scope.is_some())
+            }) {
+                panic!(
+                    "guard[{label}]: {} claim of [{start}, {end}) at {site} by {:?} \
+                     conflicts with {} claim of [{}, {}) at {} by {:?}",
+                    kind(excl),
+                    me,
+                    kind(c.excl),
+                    c.start,
+                    c.end,
+                    c.site,
+                    c.thread,
+                );
+            }
+            if excl {
+                for p in &st.pins {
+                    if let Some(&(ps, pe)) =
+                        p.ranges.iter().find(|&&r| overlaps(r, (start, end)))
+                    {
+                        panic!(
+                            "guard[{label}]: exclusive claim of [{start}, {end}) at {site} \
+                             by {me:?} overlaps pinned [{ps}, {pe}) (checked out at {})",
+                            p.site,
+                        );
+                    }
+                }
+            }
+            let id = st.next_id;
+            st.next_id += 1;
+            st.claims.push(Claim {
+                start,
+                end,
+                excl,
+                thread: me,
+                epoch,
+                gen: my_gen,
+                site,
+                scope: scoped.then_some(id),
+            });
+            id
+        }
+
+        /// Pin `ranges` (checkout lane windows).  Panics if the ranges
+        /// overlap each other, overlap a live pin, or overlap a live
+        /// exclusive claim.
+        #[track_caller]
+        pub fn pin(&self, ranges: &[Range<usize>]) -> PinToken {
+            let site = Location::caller();
+            let label = self.inner.label;
+            let mut st = lock(&self.inner.state);
+            prune(&mut st);
+            for (i, a) in ranges.iter().enumerate() {
+                for b in &ranges[i + 1..] {
+                    if overlaps((a.start, a.end), (b.start, b.end)) {
+                        panic!(
+                            "guard[{label}]: checkout lanes overlap: [{}, {}) and [{}, {}) \
+                             (checked out at {site})",
+                            a.start, a.end, b.start, b.end,
+                        );
+                    }
+                }
+            }
+            for r in ranges {
+                for p in &st.pins {
+                    if let Some(&(ps, pe)) =
+                        p.ranges.iter().find(|&&pr| overlaps(pr, (r.start, r.end)))
+                    {
+                        panic!(
+                            "guard[{label}]: checkout of [{}, {}) at {site} overlaps pinned \
+                             [{ps}, {pe}) (checked out at {})",
+                            r.start, r.end, p.site,
+                        );
+                    }
+                }
+                if let Some(c) = st
+                    .claims
+                    .iter()
+                    .find(|c| c.excl && overlaps((c.start, c.end), (r.start, r.end)))
+                {
+                    panic!(
+                        "guard[{label}]: checkout of [{}, {}) at {site} conflicts with \
+                         exclusive claim of [{}, {}) at {} by {:?}",
+                        r.start, r.end, c.start, c.end, c.site, c.thread,
+                    );
+                }
+            }
+            let id = st.next_id;
+            st.next_id += 1;
+            st.pins.push(Pin {
+                id,
+                ranges: ranges.iter().map(|r| (r.start, r.end)).collect(),
+                site,
+            });
+            PinToken { id, inner: self.inner.clone() }
+        }
+    }
+
+    /// RAII borrow claim returned by [`Registry::scoped_shared`] /
+    /// [`Registry::scoped_mut`]; the claim ends when this drops.
+    pub struct ScopedClaim {
+        id: u64,
+        inner: Arc<Inner>,
+    }
+
+    impl Drop for ScopedClaim {
+        fn drop(&mut self) {
+            let mut st = lock(&self.inner.state);
+            st.claims.retain(|c| c.scope != Some(self.id));
+        }
+    }
+
+    /// Handle to a live pin set ([`Registry::pin`]); released exactly once.
+    pub struct PinToken {
+        id: u64,
+        inner: Arc<Inner>,
+    }
+
+    impl PinToken {
+        /// Release the pin.  Panics on double release.
+        #[track_caller]
+        pub fn release(&self) {
+            let site = Location::caller();
+            let mut st = lock(&self.inner.state);
+            match st.pins.iter().position(|p| p.id == self.id) {
+                Some(i) => {
+                    st.pins.swap_remove(i);
+                    st.released.push((self.id, site));
+                }
+                None => {
+                    let first = st
+                        .released
+                        .iter()
+                        .find(|(id, _)| *id == self.id)
+                        .map(|(_, s)| *s)
+                        .expect("pin neither live nor released");
+                    panic!(
+                        "guard[{}]: double release of checkout pin at {site} \
+                         (first released at {first})",
+                        self.inner.label,
+                    );
+                }
+            }
+        }
+
+        /// Panics if the pin has been released (checkout use-after-release).
+        #[track_caller]
+        pub fn assert_live(&self) {
+            let site = Location::caller();
+            let st = lock(&self.inner.state);
+            if !st.pins.iter().any(|p| p.id == self.id) {
+                let released = st
+                    .released
+                    .iter()
+                    .find(|(id, _)| *id == self.id)
+                    .map(|(_, s)| *s)
+                    .expect("pin neither live nor released");
+                panic!(
+                    "guard[{}]: checkout access at {site} after release \
+                     (released at {released})",
+                    self.inner.label,
+                );
+            }
+        }
+    }
+}
+
+#[cfg(any(debug_assertions, feature = "guard"))]
+pub use imp::*;
+
+/// Zero-sized no-op twin: in release builds without the `guard` feature
+/// the whole detector is this stub, and every call site compiles to
+/// nothing (asserted by `benches/bench_kernels.rs` via [`enabled`]).
+#[cfg(not(any(debug_assertions, feature = "guard")))]
+mod stub {
+    use std::ops::Range;
+
+    /// False here: the detector is compiled out.
+    #[inline(always)]
+    pub fn enabled() -> bool {
+        false
+    }
+
+    #[inline(always)]
+    pub fn advance_epoch() {}
+
+    #[inline(always)]
+    pub fn retire_thread() {}
+
+    /// No-op twin of the debug registry.
+    #[derive(Clone, Default)]
+    pub struct Registry;
+
+    impl Registry {
+        #[inline(always)]
+        pub fn new(_label: &'static str) -> Registry {
+            Registry
+        }
+
+        #[inline(always)]
+        pub fn claim_shared(&self, _start: usize, _end: usize) {}
+
+        #[inline(always)]
+        pub fn claim_mut(&self, _start: usize, _end: usize) {}
+
+        #[inline(always)]
+        pub fn scoped_shared(&self, _start: usize, _end: usize) -> ScopedClaim {
+            ScopedClaim
+        }
+
+        #[inline(always)]
+        pub fn scoped_mut(&self, _start: usize, _end: usize) -> ScopedClaim {
+            ScopedClaim
+        }
+
+        #[inline(always)]
+        pub fn pin(&self, _ranges: &[Range<usize>]) -> PinToken {
+            PinToken
+        }
+    }
+
+    /// No-op twin of the RAII claim.
+    pub struct ScopedClaim;
+
+    /// No-op twin of the pin handle.
+    pub struct PinToken;
+
+    impl PinToken {
+        #[inline(always)]
+        pub fn release(&self) {}
+
+        #[inline(always)]
+        pub fn assert_live(&self) {}
+    }
+}
+
+#[cfg(not(any(debug_assertions, feature = "guard")))]
+pub use stub::*;
+
+#[cfg(all(test, any(debug_assertions, feature = "guard")))]
+mod tests {
+    use super::*;
+    use std::sync::Barrier;
+
+    #[test]
+    fn detector_is_enabled_in_debug_and_guard_builds() {
+        assert!(enabled());
+    }
+
+    #[test]
+    fn disjoint_and_shared_claims_coexist() {
+        let r = Registry::new("test");
+        r.claim_mut(0, 4);
+        r.claim_mut(4, 8); // disjoint: fine
+        r.claim_shared(8, 16);
+        r.claim_shared(12, 20); // shared/shared overlap: fine
+    }
+
+    #[test]
+    fn same_thread_overlap_is_a_sequential_reborrow() {
+        let r = Registry::new("test");
+        r.claim_mut(0, 8);
+        r.claim_mut(2, 6); // supersedes — same thread cannot race itself
+        r.claim_shared(0, 8);
+    }
+
+    /// A concurrent test elsewhere in the binary can bump the global
+    /// epoch between a pair of seeded claims and prune the first (the
+    /// documented miss-not-false-positive tradeoff), so the negative
+    /// race tests retry until caught; a broken detector exhausts the
+    /// retries and dies with a non-matching message instead.
+    const SEED_ATTEMPTS: usize = 64;
+
+    #[test]
+    #[should_panic(expected = "conflicts with")]
+    fn cross_thread_overlapping_mut_claims_panic() {
+        for _ in 0..SEED_ATTEMPTS {
+            let r = Registry::new("test");
+            let barrier = Barrier::new(2);
+            let got = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                std::thread::scope(|scope| {
+                    scope.spawn(|| {
+                        r.claim_mut(0, 6);
+                        barrier.wait();
+                    });
+                    barrier.wait();
+                    r.claim_mut(4, 8); // overlaps the other thread's live claim
+                });
+            }));
+            if let Err(p) = got {
+                std::panic::resume_unwind(p);
+            }
+        }
+        panic!("guard never caught the cross-thread mut/mut overlap");
+    }
+
+    #[test]
+    #[should_panic(expected = "conflicts with")]
+    fn cross_thread_shared_vs_mut_panics() {
+        for _ in 0..SEED_ATTEMPTS {
+            let r = Registry::new("test");
+            let barrier = Barrier::new(2);
+            let got = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                std::thread::scope(|scope| {
+                    scope.spawn(|| {
+                        r.claim_shared(0, 6);
+                        barrier.wait();
+                    });
+                    barrier.wait();
+                    r.claim_mut(4, 8);
+                });
+            }));
+            if let Err(p) = got {
+                std::panic::resume_unwind(p);
+            }
+        }
+        panic!("guard never caught the cross-thread shared/mut overlap");
+    }
+
+    #[test]
+    fn epoch_advance_retires_borrow_claims() {
+        let r = Registry::new("test");
+        let barrier = Barrier::new(2);
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                r.claim_mut(0, 6);
+                barrier.wait();
+            });
+            barrier.wait();
+            advance_epoch(); // round boundary: the other claim is stale
+            r.claim_mut(4, 8);
+        });
+    }
+
+    #[test]
+    fn retire_thread_retires_only_that_threads_claims() {
+        let r = Registry::new("test");
+        let barrier = Barrier::new(2);
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                r.claim_mut(0, 6);
+                retire_thread(); // this thread's claims end here
+                barrier.wait();
+            });
+            barrier.wait();
+            r.claim_mut(4, 8);
+        });
+    }
+
+    #[test]
+    fn scoped_claims_end_at_drop_not_at_epoch() {
+        let r = Registry::new("test");
+        let held = r.scoped_mut(0, 8);
+        advance_epoch(); // scoped claims survive round boundaries
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            std::thread::scope(|scope| {
+                scope.spawn(|| r.claim_mut(4, 6)).join().unwrap();
+            })
+        }));
+        assert!(res.is_err(), "scoped claim must still conflict after an epoch bump");
+        drop(held);
+        std::thread::scope(|scope| {
+            scope.spawn(|| r.claim_mut(4, 6)).join().unwrap();
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "lanes overlap")]
+    fn overlapping_pin_ranges_panic() {
+        let r = Registry::new("test");
+        let _ = r.pin(&[0..8, 4..12]);
+    }
+
+    #[test]
+    #[should_panic(expected = "overlaps pinned")]
+    fn pin_overlapping_live_pin_panics() {
+        let r = Registry::new("test");
+        let _a = r.pin(&[0..8]);
+        let _b = r.pin(&[4..12]);
+    }
+
+    #[test]
+    #[should_panic(expected = "overlaps pinned")]
+    fn exclusive_claim_over_live_pin_panics() {
+        let r = Registry::new("test");
+        let _pin = r.pin(&[0..8]);
+        r.claim_mut(2, 4);
+    }
+
+    #[test]
+    fn shared_claim_over_live_pin_is_allowed() {
+        let r = Registry::new("test");
+        let _pin = r.pin(&[0..8]);
+        r.claim_shared(2, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "double release")]
+    fn double_release_panics() {
+        let r = Registry::new("test");
+        let pin = r.pin(&[0..4]);
+        pin.release();
+        pin.release();
+    }
+
+    #[test]
+    #[should_panic(expected = "after release")]
+    fn use_after_release_panics() {
+        let r = Registry::new("test");
+        let pin = r.pin(&[0..4]);
+        pin.release();
+        pin.assert_live();
+    }
+
+    #[test]
+    fn release_then_new_pin_over_same_rows_is_fine() {
+        let r = Registry::new("test");
+        let pin = r.pin(&[0..4]);
+        pin.release();
+        let pin2 = r.pin(&[0..4]);
+        pin2.assert_live();
+        pin2.release();
+    }
+}

@@ -6,6 +6,8 @@
 //! LROT symmetry-breaking noise, mini-batch sampling — is seeded through
 //! this module, making every experiment bit-reproducible.
 
+#![forbid(unsafe_code)]
+
 /// SplitMix64: the standard seeding/stream-splitting generator.
 #[inline]
 pub fn splitmix64(state: &mut u64) -> u64 {

@@ -15,6 +15,8 @@
 //! experiment: regression targets from HiRef beat targets from small
 //! mini-batches.
 
+#![forbid(unsafe_code)]
+
 use crate::linalg::{invert_spd, Mat};
 use crate::prng::Rng;
 

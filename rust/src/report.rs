@@ -1,6 +1,8 @@
 //! Table/figure rendering helpers: the benches print paper-style rows
 //! through this module so every experiment reads the same way.
 
+#![forbid(unsafe_code)]
+
 use std::time::Instant;
 
 /// A simple fixed-width table printer.

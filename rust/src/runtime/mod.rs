@@ -27,6 +27,8 @@
 //! then degrades to the native LROT solver, and `BackendKind::Pjrt`
 //! surfaces a typed error at align time.
 
+#![forbid(unsafe_code)]
+
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Mutex};

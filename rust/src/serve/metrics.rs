@@ -7,6 +7,8 @@
 //! backpressure, session-cache effectiveness, cross-request microbatch
 //! shape, spill traffic, and p50/p99 solve latency.
 
+#![forbid(unsafe_code)]
+
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;

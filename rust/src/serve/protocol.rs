@@ -17,6 +17,8 @@
 //! hardened with a nesting-depth cap.  See `docs/serve.md` for the full
 //! protocol reference with a worked client example.
 
+#![forbid(unsafe_code)]
+
 use crate::api::SolveError;
 
 /// Maximum nesting depth [`parse`] accepts — a cheap guard against

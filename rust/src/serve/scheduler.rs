@@ -27,6 +27,8 @@
 //! one strided solve, and hands each participant its slice.  Lock order
 //! is `slots → slot.state`, everywhere.
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};

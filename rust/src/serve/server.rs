@@ -10,6 +10,8 @@
 //! connection's *read* side — blocked readers wake with EOF while replies
 //! still in flight go out on the intact write side.
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 use std::io::{self, BufRead, BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};

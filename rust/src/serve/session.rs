@@ -251,7 +251,7 @@ impl SessionCache {
                 // Budget 0: the archive is a pure file — warm hits read it
                 // back, so resident memory stays O(1) per idle session.
                 let store = SpillStore::create(dir, m.rows, m.cols, 0)?;
-                // Safety: the store was just created; no checkout exists.
+                // SAFETY: the store was just created; no checkout exists.
                 unsafe { store.write_rows(0, &m.data)? };
                 Ok(Box::new(store))
             }
@@ -301,7 +301,7 @@ impl SessionCache {
 /// Read a full archive back into a matrix for a warm solve.
 fn materialise(store: &dyn FactorStore) -> Result<Mat, SolveError> {
     let mut m = Mat::zeros(store.rows(), store.cols());
-    // Safety: session archives are never checked out between solves (the
+    // SAFETY: session archives are never checked out between solves (the
     // cache hands out materialised copies, not the stores themselves), so
     // no live writer or dirty checkout can overlap this read.
     unsafe { store.read_rows(0, &mut m.data)? };
@@ -363,6 +363,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "file-backed: session spill dirs need real file I/O")]
     fn spilled_sessions_round_trip_bit_identically() {
         let dir = std::env::temp_dir().join(format!("hiref_serve_sess_{}", std::process::id()));
         let c = cache(usize::MAX, Some(dir.clone()));

@@ -8,6 +8,8 @@
 //!   larger base-case blocks; the HiRef default above the Hungarian
 //!   crossover size.
 
+#![forbid(unsafe_code)]
+
 use crate::linalg::MatView;
 #[cfg(test)]
 use crate::linalg::Mat;

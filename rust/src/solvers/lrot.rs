@@ -372,11 +372,14 @@ pub fn solve_factored_batch(
                     // SAFETY: the iteration loop has completed; nothing
                     // writes the logits any more.
                     let lq = unsafe { st.log_q.slice(g.off_sr, g.off_sr + g.s * r) };
+                    // SAFETY: as above — iteration is over, reads only.
                     let lr = unsafe { st.log_r.slice(g.off_svr, g.off_svr + g.sv * r) };
                     let mut q = vec![0.0f32; g.s * r];
                     let mut rr = vec![0.0f32; g.sv * r];
                     exp_into(lq, &mut q);
                     exp_into(lr, &mut rr);
+                    // SAFETY: iteration is over; no worker writes lane
+                    // ctl entries any more, so a shared read is sound.
                     let iters = unsafe { st.ctl.slice(l, l + 1) }[0].iters;
                     let out = LrotOutput {
                         q: Mat::from_vec(g.s, r, q),
@@ -407,14 +410,19 @@ fn init_lane(
     let mut rng = Rng::new(seeds[l] ^ 0x160_7);
     // SAFETY: lane l's windows are owned by this worker for the whole pass.
     let loga = unsafe { st.loga.slice_mut(g.off_s, g.off_s + g.s) };
+    // SAFETY: as above — lane l's `logb` window, this worker only.
     let logb = unsafe { st.logb.slice_mut(g.off_sv, g.off_sv + g.sv) };
     fill_log_marginal(loga, g.ax);
     fill_log_marginal(logb, g.ay);
+    // SAFETY: as above — lane l's `log_q` window, this worker only.
     let lq = unsafe { st.log_q.slice_mut(g.off_sr, g.off_sr + g.s * r) };
+    // SAFETY: as above — lane l's `log_r` window, this worker only.
     let lr = unsafe { st.log_r.slice_mut(g.off_svr, g.off_svr + g.sv * r) };
     init_logits(lq, loga, r, logg, cfg.tau, &mut rng);
     init_logits(lr, logb, r, logg, cfg.tau, &mut rng);
+    // SAFETY: as above — lane l's potential scratch, this worker only.
     let f = unsafe { st.fpot.slice_mut(g.off_f, g.off_f + g.s.max(g.sv)) };
+    // SAFETY: as above — lane l's column-potential window, this worker only.
     let h = unsafe { st.hpot.slice_mut(l * r, (l + 1) * r) };
     sinkhorn_project(lq, g.s, r, loga, logg, cfg.inner, &mut f[..g.s], h);
     sinkhorn_project(lr, g.sv, r, logb, logg, cfg.inner, &mut f[..g.sv], h);
@@ -449,17 +457,23 @@ fn step_lanes(
         let g = &geo[l];
         let k = u.items[l].cols;
         // Q = exp(log_Q), R = exp(log_R) into the persistent windows.
-        // SAFETY (here and below): lane l's windows are owned by this
-        // worker for the whole call — lane subsets are disjoint.
+        // SAFETY (this and every lane-window slice below): lane l's
+        // windows are owned by this worker for the whole call — the crew
+        // hands each worker a disjoint lane subset, and lane windows of
+        // distinct lanes never overlap (strided offsets from `Geo`).
         let lq = unsafe { st.log_q.slice(g.off_sr, g.off_sr + g.s * r) };
+        // SAFETY: lane l's `log_r` window — this worker only.
         let lr = unsafe { st.log_r.slice(g.off_svr, g.off_svr + g.sv * r) };
+        // SAFETY: lane l's `q_exp` window — this worker only.
         let qe = unsafe { st.q_exp.slice_mut(g.off_sr, g.off_sr + g.s * r) };
+        // SAFETY: lane l's `r_exp` window — this worker only.
         let re = unsafe { st.r_exp.slice_mut(g.off_svr, g.off_svr + g.sv * r) };
         exp_into(lq, qe);
         exp_into(lr, re);
 
         // Early stop: once the hard co-clustering is stable, further
         // mirror-descent steps cannot change HiRef's refinement decision.
+        // SAFETY: lane l's ctl entry — this worker only.
         let ctl = unsafe { &mut st.ctl.slice_mut(l, l + 1)[0] };
         ctl.iters += 1;
         if check {
@@ -475,12 +489,17 @@ fn step_lanes(
         // over this lane's windows (identical FLOPs to the batch_* form)
         let uv = u.item(l);
         let vv = v.item(l);
+        // SAFETY: lane l's workspace window — this worker only.
         let w = unsafe { st.w.slice_mut(g.off_w, g.off_w + k * r) };
+        // SAFETY: lane l's `gq` window — this worker only.
         let gq = unsafe { st.gq.slice_mut(g.off_sr, g.off_sr + g.s * r) };
         vt_matmul_into_slice(vv, MatView::from_slice(g.sv, r, re), w);
         matmul_into_slice(uv, MatView::from_slice(k, r, w), gq);
         gq.iter_mut().for_each(|x| *x *= inv_g);
+        // SAFETY: re-borrow of lane l's workspace window (the previous
+        // `w` borrow ended above) — this worker only.
         let w = unsafe { st.w.slice_mut(g.off_w, g.off_w + k * r) };
+        // SAFETY: lane l's `gr` window — this worker only.
         let gr = unsafe { st.gr.slice_mut(g.off_svr, g.off_svr + g.sv * r) };
         vt_matmul_into_slice(uv, MatView::from_slice(g.s, r, qe), w);
         matmul_into_slice(vv, MatView::from_slice(k, r, w), gr);
@@ -489,7 +508,10 @@ fn step_lanes(
         // step-size normalisation, mirror step, KL projections
         let scale = slice_max_abs(gq).max(slice_max_abs(gr)).max(1e-12);
         let step = cfg.gamma / scale;
+        // SAFETY: lane l's `log_q` window, re-borrowed mutably (the
+        // shared `lq` borrow ended at the exp) — this worker only.
         let lq = unsafe { st.log_q.slice_mut(g.off_sr, g.off_sr + g.s * r) };
+        // SAFETY: as above, for `log_r`.
         let lr = unsafe { st.log_r.slice_mut(g.off_svr, g.off_svr + g.sv * r) };
         for (x, &gv) in lq.iter_mut().zip(gq.iter()) {
             *x -= step * gv;
@@ -497,9 +519,14 @@ fn step_lanes(
         for (x, &gv) in lr.iter_mut().zip(gr.iter()) {
             *x -= step * gv;
         }
+        // SAFETY: lane l's `loga` window — written only at init, shared
+        // reads are sound for the rest of the batch.
         let loga = unsafe { st.loga.slice(g.off_s, g.off_s + g.s) };
+        // SAFETY: as above, for `logb`.
         let logb = unsafe { st.logb.slice(g.off_sv, g.off_sv + g.sv) };
+        // SAFETY: lane l's potential scratch — this worker only.
         let f = unsafe { st.fpot.slice_mut(g.off_f, g.off_f + g.s.max(g.sv)) };
+        // SAFETY: lane l's column-potential window — this worker only.
         let h = unsafe { st.hpot.slice_mut(l * r, (l + 1) * r) };
         sinkhorn_project(lq, g.s, r, loga, logg, cfg.inner, &mut f[..g.s], h);
         sinkhorn_project(lr, g.sv, r, logb, logg, cfg.inner, &mut f[..g.sv], h);
@@ -718,6 +745,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "slow under Miri: full mirror-descent solves")]
     fn feasibility_uniform_marginals() {
         let (x, y, _) = shuffled_pair(128, 2, 0);
         let (u, v) = sq_euclidean_factors(&x, &y);
@@ -731,6 +759,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "slow under Miri: full mirror-descent solves")]
     fn monge_co_clustering() {
         // Prop 3.1 behaviour: x and T(x) land in the same cluster
         let (x, y, perm) = shuffled_pair(256, 2, 2);
@@ -751,6 +780,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "slow under Miri: full mirror-descent solves")]
     fn padding_rows_get_zero_mass() {
         let (x, y, _) = shuffled_pair(64, 2, 4);
         let (u, v) = sq_euclidean_factors(&x, &y);
@@ -786,6 +816,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "slow under Miri: full mirror-descent solves")]
     fn higher_rank_lowers_cost() {
         // Fig. S3 trend: cost decreases as rank grows
         let (x, y, _) = shuffled_pair(128, 2, 8);
@@ -814,6 +845,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "slow under Miri: full mirror-descent solves")]
     fn batch_lanes_bit_identical_to_solo_solves() {
         // three same-shape lanes plus, separately, a ragged pair: every
         // lane of a batch must equal its solo solve exactly, for any
@@ -854,6 +886,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "slow under Miri: full mirror-descent solves")]
     fn ragged_batch_lanes_match_solo_solves() {
         let cfg = LrotConfig { rank: 2, ..Default::default() };
         let (xa, ya, _) = shuffled_pair(48, 2, 31);
@@ -935,6 +968,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "slow under Miri: full mirror-descent solves")]
     fn convergence_mask_stops_iterating_converged_lanes() {
         // lane A: two tight, far-apart clusters — the argmax co-clustering
         // locks in almost immediately, so the mask must retire the lane
@@ -980,6 +1014,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "slow under Miri: full mirror-descent solves")]
     fn shared_arena_run_matches_private_arena_run() {
         // solve_factored_in with a reused arena must be bit-identical to
         // the standalone entry point (buffers are zeroed on checkout).

@@ -11,6 +11,8 @@
 //! is a one-to-one map comparable with HiRef's (the paper's transfer task
 //! does the same via row-argmax).
 
+#![forbid(unsafe_code)]
+
 use crate::costs::{dense_cost, CostKind};
 use crate::linalg::Mat;
 use crate::pool;

@@ -11,6 +11,8 @@
 //! stays linear — and, as the paper reports, the locality of the
 //! propagation costs accuracy (MOP trails the other methods in Table S4).
 
+#![forbid(unsafe_code)]
+
 use crate::api::coupling::SparseCoupling;
 use crate::costs::CostKind;
 use crate::linalg::Mat;

@@ -8,6 +8,8 @@
 //! coupling; like the original, it is markedly sparser than one-shot
 //! Sinkhorn at the same final ε (Table S3).
 
+#![forbid(unsafe_code)]
+
 use crate::costs::{dense_cost, CostKind};
 use crate::linalg::Mat;
 use crate::solvers::sinkhorn::{self, SinkhornConfig};

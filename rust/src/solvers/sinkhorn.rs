@@ -6,6 +6,8 @@
 //! (Fig. S2b, Tables S2/S6).  Runs on uniform marginals as everywhere in
 //! the paper.
 
+#![forbid(unsafe_code)]
+
 use crate::linalg::{fast_exp, Mat};
 
 /// Log-sum-exp over an f64 buffer — the dense baseline's O(n²)-per-sweep
