@@ -1,0 +1,160 @@
+//! Precision-accuracy profile: run the same HiRef instance with f32,
+//! bf16 and f16 factor storage and emit `BENCH_precision.json` (elapsed,
+//! resident/spill factor bytes and final-bijection-cost relative delta vs
+//! f32 per precision) so the cost of narrowing the stored factors is
+//! recorded run over run.  Asserts the acceptance properties on every
+//! run: the explicit-f32 config is bit-identical to the default, the
+//! half-width formats halve both the persistent factor footprint and the
+//! spill traffic, and the low-precision bijection cost stays within the
+//! documented 5% relative tolerance (docs/precision.md).
+//!
+//! CI runs this at small `n`; locally:
+//!
+//! ```sh
+//! HIREF_PREC_N=262144 cargo bench --bench bench_precision
+//! ```
+
+use hiref::coordinator::hiref::{BackendKind, HiRef, HiRefConfig, SpillConfig};
+use hiref::data::synthetic;
+use hiref::metrics::human_bytes;
+use hiref::pool::{self, Precision};
+use hiref::report::{section, timed};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Documented accuracy bound: low-precision factor storage may move the
+/// final bijection cost by at most this relative amount.
+const COST_REL_TOL: f64 = 0.05;
+
+fn main() {
+    let n = env_usize("HIREF_PREC_N", 16384);
+    let spill_budget = env_usize("HIREF_PREC_SPILL_BUDGET", 1 << 20);
+    let threads = pool::default_threads();
+    let dir = std::env::temp_dir().join(format!("hiref_bench_prec_{}", std::process::id()));
+    section(&format!("bench_precision — n = {n}, threads = {threads}"));
+
+    let (x, y) = synthetic::half_moon_s_curve(n, 0);
+    let cfg = HiRefConfig { backend: BackendKind::Auto, threads, ..Default::default() };
+
+    // f32 baseline (one warm-up, then measured)
+    let baseline = HiRef::new(cfg.clone());
+    let _ = baseline.align(&x, &y).expect("warm-up align");
+    let (f32_out, f32_secs) = timed(|| baseline.align(&x, &y));
+    let f32_out = f32_out.expect("f32 align");
+    let f32_cost = f32_out.cost(&x, &y, cfg.cost);
+
+    // hard assert: the F32 default is the same code path as an explicit
+    // F32 config, bit for bit
+    let explicit = HiRef::new(HiRefConfig { factor_precision: Precision::F32, ..cfg.clone() })
+        .align(&x, &y)
+        .expect("explicit f32 align");
+    assert_eq!(explicit.perm, f32_out.perm, "explicit f32 diverged from the default");
+    assert_eq!(explicit.x_order, f32_out.x_order);
+    assert_eq!(explicit.y_order, f32_out.y_order);
+
+    // spilled f32 run for the spill-traffic baseline
+    let f32_spill = HiRef::new(HiRefConfig {
+        spill: Some(SpillConfig { dir: dir.clone(), budget_bytes: spill_budget }),
+        ..cfg.clone()
+    })
+    .align(&x, &y)
+    .expect("f32 spill align");
+
+    let mut entries = vec![format!(
+        concat!(
+            "    {{ \"precision\": \"f32\", \"elapsed_ms\": {:.3}, ",
+            "\"factor_bytes\": {}, \"resident_factor_bytes\": {}, ",
+            "\"spill_bytes_written\": {}, \"cost\": {:.6}, \"cost_rel_delta\": 0.0 }}"
+        ),
+        f32_secs * 1e3,
+        f32_out.stats.factor_bytes,
+        f32_out.stats.resident_factor_bytes,
+        f32_spill.stats.spill_bytes_written,
+        f32_cost,
+    )];
+    println!("f32    elapsed = {:.1} ms, cost = {f32_cost:.4}", f32_secs * 1e3);
+
+    for prec in [Precision::Bf16, Precision::F16] {
+        let lp_cfg = HiRefConfig { factor_precision: prec, ..cfg.clone() };
+        let solver = HiRef::new(lp_cfg.clone());
+        let (out, secs) = timed(|| solver.align(&x, &y));
+        let out = out.expect("low-precision align");
+        let cost = out.cost(&x, &y, cfg.cost);
+        let rel = (cost - f32_cost).abs() / f32_cost.max(1e-9);
+
+        // the acceptance properties, enforced on every bench run
+        assert_eq!(out.stats.factor_precision, prec.as_str());
+        assert_eq!(
+            out.stats.factor_bytes * 2,
+            f32_out.stats.factor_bytes,
+            "{} must halve the factor footprint",
+            prec.as_str()
+        );
+        assert_eq!(out.stats.resident_factor_bytes * 2, f32_out.stats.resident_factor_bytes);
+        assert!(
+            rel <= COST_REL_TOL,
+            "{} cost {cost:.6} vs f32 {f32_cost:.6}: rel delta {rel:.4} exceeds {COST_REL_TOL}",
+            prec.as_str()
+        );
+
+        let spilled = HiRef::new(HiRefConfig {
+            spill: Some(SpillConfig { dir: dir.clone(), budget_bytes: spill_budget }),
+            ..lp_cfg
+        })
+        .align(&x, &y)
+        .expect("low-precision spill align");
+        // the hierarchy shape depends only on sizes, so the spilled lane
+        // writes are the f32 run's at half the element width
+        assert_eq!(
+            spilled.stats.spill_bytes_written * 2,
+            f32_spill.stats.spill_bytes_written,
+            "{} must halve the spill traffic",
+            prec.as_str()
+        );
+
+        println!(
+            "{:<6} elapsed = {:.1} ms ({:.2}x f32), cost rel delta = {rel:.4}, factors = {}",
+            prec.as_str(),
+            secs * 1e3,
+            secs / f32_secs.max(1e-9),
+            human_bytes(out.stats.factor_bytes),
+        );
+        entries.push(format!(
+            concat!(
+                "    {{ \"precision\": \"{}\", \"elapsed_ms\": {:.3}, ",
+                "\"factor_bytes\": {}, \"resident_factor_bytes\": {}, ",
+                "\"spill_bytes_written\": {}, \"cost\": {:.6}, \"cost_rel_delta\": {:.6} }}"
+            ),
+            prec.as_str(),
+            secs * 1e3,
+            out.stats.factor_bytes,
+            out.stats.resident_factor_bytes,
+            spilled.stats.spill_bytes_written,
+            cost,
+            rel,
+        ));
+    }
+
+    // hand-rolled JSON (the vendored universe has no serde)
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"precision\",\n",
+            "  \"n\": {},\n",
+            "  \"threads\": {},\n",
+            "  \"cost_rel_tol\": {},\n",
+            "  \"f32_bit_identical\": true,\n",
+            "  \"runs\": [\n{}\n  ]\n",
+            "}}\n"
+        ),
+        n,
+        threads,
+        COST_REL_TOL,
+        entries.join(",\n"),
+    );
+    std::fs::write("BENCH_precision.json", &json).expect("writing BENCH_precision.json");
+    println!("\nwrote BENCH_precision.json");
+    let _ = std::fs::remove_dir_all(&dir);
+}

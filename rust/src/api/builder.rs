@@ -8,6 +8,7 @@ use std::path::PathBuf;
 
 use crate::coordinator::hiref::{BackendKind, HiRef, HiRefConfig, SpillConfig, DEFAULT_SPILL_BUDGET};
 use crate::costs::CostKind;
+use crate::pool::Precision;
 use crate::solvers::lrot::LrotConfig;
 
 use super::error::SolveError;
@@ -125,6 +126,16 @@ impl HiRefBuilder {
     /// bit-identical output, kept selectable for A/B comparison.
     pub fn batching(mut self, on: bool) -> Self {
         self.cfg.batching = on;
+        self
+    }
+
+    /// Stored element format of the factor working copies (default
+    /// [`Precision::F32`], bit-identical to prior releases).  `Bf16`/`F16`
+    /// halve the resident/spill factor footprint; the solve path still
+    /// accumulates in f32 — lane windows are widened on checkout and
+    /// narrowed (round-to-nearest-even) on dirty release.
+    pub fn factor_precision(mut self, prec: Precision) -> Self {
+        self.cfg.factor_precision = prec;
         self
     }
 
@@ -268,6 +279,7 @@ mod tests {
             .max_depth(3)
             .record_scales(true)
             .batching(false)
+            .factor_precision(Precision::Bf16)
             .artifacts_dir("some/dir")
             .build_config()
             .unwrap();
@@ -279,7 +291,16 @@ mod tests {
         assert_eq!(cfg.max_depth, Some(3));
         assert!(cfg.record_scales);
         assert!(!cfg.batching);
+        assert_eq!(cfg.factor_precision, Precision::Bf16);
         assert_eq!(cfg.artifacts_dir, std::path::PathBuf::from("some/dir"));
+    }
+
+    #[test]
+    fn factor_precision_defaults_to_f32() {
+        assert_eq!(
+            HiRefBuilder::new().build_config().unwrap().factor_precision,
+            Precision::F32
+        );
     }
 
     #[test]

@@ -156,6 +156,16 @@ impl SolveStats {
             .as_ref()
             .map_or_else(|| crate::linalg::kernels::active().as_str(), |rs| rs.kernel_path)
     }
+
+    /// Stored element format of a HiRef solve's factor working copies —
+    /// `"f32"`, `"bf16"` or `"f16"` (see
+    /// [`crate::pool::Precision`]); `"f32"` for non-HiRef solvers, which
+    /// never narrow.
+    pub fn factor_precision(&self) -> &'static str {
+        self.hiref
+            .as_ref()
+            .map_or(crate::pool::Precision::F32.as_str(), |rs| rs.factor_precision)
+    }
 }
 
 /// A coupling plus how it was obtained.

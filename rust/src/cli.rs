@@ -20,6 +20,7 @@ use crate::costs::CostKind;
 use crate::data::stream::InMemorySource;
 use crate::data::synthetic::Synthetic;
 use crate::metrics;
+use crate::pool::Precision;
 use crate::report::{f4, Table};
 
 /// CLI-level error: a message for the terminal.
@@ -112,6 +113,8 @@ const COST_CHOICES: [&str; 6] = ["sq", "sqeuclidean", "w2", "euclid", "euclidean
 const BACKEND_CHOICES: [&str; 3] = ["auto", "native", "pjrt"];
 /// Valid `--batching` values.
 const BATCHING_CHOICES: [&str; 2] = ["on", "off"];
+/// Valid `--factor-precision` values.
+const PRECISION_CHOICES: [&str; 3] = ["f32", "bf16", "f16"];
 /// Valid `--dataset` values.
 const DATASET_CHOICES: [&str; 8] = [
     "halfmoon",
@@ -200,6 +203,10 @@ pub fn config_from_flags(flags: &Flags) -> Result<HiRefConfig> {
         _ => BackendKind::Auto,
     });
     b = b.batching(flags.get_choice("batching", "on", &BATCHING_CHOICES)? == "on");
+    let prec = flags.get_choice("factor-precision", "f32", &PRECISION_CHOICES)?;
+    b = b.factor_precision(
+        Precision::parse(&prec).expect("get_choice admits only listed precisions"),
+    );
     if let Some(dir) = flags.named.get("spill-dir") {
         b = b.spill_dir(PathBuf::from(dir));
     }
@@ -352,7 +359,11 @@ fn cmd_align(flags: &Flags) -> Result<()> {
             metrics::human_bytes(rs.peak_scratch_bytes),
             rs.arena_hit_rate() * 100.0
         );
-        println!("factor bytes  = {}", metrics::human_bytes(rs.factor_bytes));
+        println!(
+            "factors       = {} ({})",
+            rs.factor_precision,
+            metrics::human_bytes(rs.factor_bytes)
+        );
         println!("kernels       = {} ({} iter spawns)", rs.kernel_path, rs.iter_spawns);
         if cfg.spill.is_some() {
             println!(
@@ -497,6 +508,11 @@ fn cmd_solvers() -> Result<()> {
         "\nlinalg kernels: {} (override with HIREF_KERNELS=scalar|avx2|neon)",
         crate::linalg::kernels::active().as_str()
     );
+    println!(
+        "factor storage: --factor-precision f32|bf16|f16 [f32] — bf16/f16 \
+         store HiRef's factor working copies at half width (f32 compute; \
+         see docs/precision.md)"
+    );
     println!("\nUse any name with `hiref align --solver <name>` or");
     println!("`hiref compare --solvers a,b,c`.");
     Ok(())
@@ -572,6 +588,9 @@ COMMON FLAGS
   --backend auto|native|pjrt                         [auto]
   --batching on|off     level-synchronous batched execution (off =
                         per-block work-queue path, for A/B)      [on]
+  --factor-precision f32|bf16|f16   stored factor element format (bf16/
+                        f16 halve factor RAM/spill bytes; f32 compute
+                        throughout — see docs/precision.md)      [f32]
   --max-rank <int>      annealing max rank C         [16]
   --base-size <int>     exact base-case block Q      [256]
   --hungarian-cutoff <int>  Hungarian/auction crossover (≤ base-size)
@@ -838,5 +857,21 @@ mod tests {
                 "listed --solver {s} rejected"
             );
         }
+        for p in PRECISION_CHOICES {
+            assert!(
+                Precision::parse(p).is_some(),
+                "listed --factor-precision {p} rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn factor_precision_flag_reaches_config() {
+        let f = flags(&["--factor-precision", "bf16"]);
+        assert_eq!(config_from_flags(&f).unwrap().factor_precision, Precision::Bf16);
+        // default stays f32; junk is rejected with the valid list
+        assert_eq!(config_from_flags(&flags(&[])).unwrap().factor_precision, Precision::F32);
+        let e = config_from_flags(&flags(&["--factor-precision", "f64"])).unwrap_err();
+        assert!(e.to_string().contains("bf16"), "{e}");
     }
 }

@@ -130,7 +130,8 @@ use crate::data::stream::{self, DatasetSource};
 use crate::linalg::{BatchItem, BatchView, Mat, MatView};
 use crate::metrics;
 use crate::pool::{
-    self, Checkout, FactorStore, RangeShared, ResidentStore, ScratchArena, SpillStore, WorkQueue,
+    self, Checkout, FactorStore, Precision, RangeShared, ResidentStore, ScratchArena, SpillStore,
+    WorkQueue,
 };
 use crate::runtime::PjrtEngine;
 use crate::solvers::exact;
@@ -208,6 +209,12 @@ pub struct HiRefConfig {
     /// working copies fully resident ([`ResidentStore`]); `Some` moves
     /// them behind a file-backed [`SpillStore`] (see [`SpillConfig`]).
     pub spill: Option<SpillConfig>,
+    /// Stored element format of the factor working copies
+    /// ([`Precision::F32`] default — bit-identical to prior releases).
+    /// bf16/f16 halve resident/spill factor bytes; the solve path stays
+    /// f32 (checkouts decode, dirty releases re-encode RNE), so the
+    /// bijection cost moves only by the factor-quantisation error.
+    pub factor_precision: Precision,
 }
 
 impl Default for HiRefConfig {
@@ -228,6 +235,7 @@ impl Default for HiRefConfig {
             chunk_rows: 1 << 16,
             batching: true,
             spill: None,
+            factor_precision: Precision::F32,
         }
     }
 }
@@ -248,7 +256,8 @@ pub struct RunStats {
     pub arena_hits: usize,
     /// Scratch checkouts that allocated a fresh buffer.
     pub arena_misses: usize,
-    /// Bytes held by the cost-factor working copies (`2·n·k·4`) — the
+    /// Bytes held by the cost-factor working copies (`2·n·k·w`, where
+    /// `w` is the stored element width of `factor_precision`) — the
     /// persistent term of the memory model; together with
     /// `peak_scratch_bytes` this is the whole solve-path footprint of a
     /// streaming run (`O(n·r)` factors + `O(chunk_rows·d)`-bounded tiles).
@@ -277,6 +286,9 @@ pub struct RunStats {
     /// The kernel implementation every linalg primitive dispatched to —
     /// `"scalar"`, `"avx2"` or `"neon"` (see [`crate::linalg::kernels`]).
     pub kernel_path: &'static str,
+    /// Stored element format of the factor working copies — `"f32"`,
+    /// `"bf16"` or `"f16"` ([`HiRefConfig::factor_precision`]).
+    pub factor_precision: &'static str,
     /// Lane-crew worker threads spawned by this run: `min(threads,
     /// lanes)` **per batch** — the persistent-pool acceptance property
     /// (the historical loop spawned every iteration).  0 on the per-block
@@ -512,11 +524,15 @@ impl HiRef {
         fu: Mat,
         fv: Mat,
     ) -> Result<(Box<dyn FactorStore>, Box<dyn FactorStore>), SolveError> {
+        let prec = self.cfg.factor_precision;
         match &self.cfg.spill {
-            None => Ok((Box::new(ResidentStore::from_mat(fu)), Box::new(ResidentStore::from_mat(fv)))),
+            None => Ok((
+                Box::new(ResidentStore::from_mat_with(fu, prec)),
+                Box::new(ResidentStore::from_mat_with(fv, prec)),
+            )),
             Some(sc) => {
-                let su = SpillStore::create(&sc.dir, fu.rows, fu.cols, sc.budget_bytes / 2)?;
-                let sv = SpillStore::create(&sc.dir, fv.rows, fv.cols, sc.budget_bytes / 2)?;
+                let su = SpillStore::create_with(&sc.dir, fu.rows, fu.cols, sc.budget_bytes / 2, prec)?;
+                let sv = SpillStore::create_with(&sc.dir, fv.rows, fv.cols, sc.budget_bytes / 2, prec)?;
                 // SAFETY: no checkouts exist yet; single-threaded writes.
                 unsafe {
                     su.write_rows(0, &fu.data)?;
@@ -535,11 +551,15 @@ impl HiRef {
         m: usize,
         k: usize,
     ) -> Result<(Box<dyn FactorStore>, Box<dyn FactorStore>), SolveError> {
+        let prec = self.cfg.factor_precision;
         match &self.cfg.spill {
-            None => Ok((Box::new(ResidentStore::zeroed(n, k)), Box::new(ResidentStore::zeroed(m, k)))),
+            None => Ok((
+                Box::new(ResidentStore::zeroed_with(n, k, prec)),
+                Box::new(ResidentStore::zeroed_with(m, k, prec)),
+            )),
             Some(sc) => Ok((
-                Box::new(SpillStore::create(&sc.dir, n, k, sc.budget_bytes / 2)?),
-                Box::new(SpillStore::create(&sc.dir, m, k, sc.budget_bytes / 2)?),
+                Box::new(SpillStore::create_with(&sc.dir, n, k, sc.budget_bytes / 2, prec)?),
+                Box::new(SpillStore::create_with(&sc.dir, m, k, sc.budget_bytes / 2, prec)?),
             )),
         }
     }
@@ -662,7 +682,7 @@ impl HiRef {
         let n = fu.rows();
         let k = fu.cols();
         debug_assert_eq!(k, fv.cols());
-        let factor_bytes = (fu.rows() + fv.rows()) * k * std::mem::size_of::<f32>();
+        let factor_bytes = (fu.rows() + fv.rows()) * k * fu.precision().bytes();
         let spawns0 = pool::crew_spawns();
 
         let schedule = annealing::optimal_rank_schedule(
@@ -738,6 +758,7 @@ impl HiRef {
         });
         let mut stats = st.stats.snapshot(t0.elapsed(), &arena);
         stats.factor_bytes = factor_bytes;
+        stats.factor_precision = fu.precision().as_str();
         // lane-crew worker threads spawned by this run: O(threads) per
         // batch, not O(iterations · threads).  The underlying counter is
         // process-global, so the delta is exact only when no other solve
@@ -968,7 +989,10 @@ impl HiRef {
         match &self.cfg.spill {
             None => usize::MAX,
             Some(sc) => {
-                let lane_bytes = (len * k * 4).max(1);
+                // lanes are pinned at the stored element width, so a
+                // bf16/f16 run fits twice the lanes per batch under the
+                // same budget
+                let lane_bytes = (len * k * self.cfg.factor_precision.bytes()).max(1);
                 ((sc.budget_bytes / 2) / lane_bytes).max(1)
             }
         }
@@ -1268,6 +1292,7 @@ impl StatsAtomics {
             spill_reads: 0,
             resident_factor_bytes: 0,
             kernel_path: crate::linalg::kernels::active().as_str(),
+            factor_precision: Precision::F32.as_str(), // filled in by align_inner
             iter_spawns: 0, // filled in by align_inner (crew-spawn delta)
             batches: self.batches.load(Ordering::Relaxed),
             lanes_max: self.lanes_max.load(Ordering::Relaxed),
@@ -1306,6 +1331,17 @@ mod tests {
             *v += 0.001 * rng.normal_f32();
         }
         (x, y, perm)
+    }
+
+    /// Two independent clouds: O(1)-scale bijection costs, so relative
+    /// cost comparisons (the precision harness) are well-conditioned.
+    fn rand_pair(n: usize, d: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let mut x = Mat::zeros(n, d);
+        rng.fill_normal(&mut x.data);
+        let mut y = Mat::zeros(n, d);
+        rng.fill_normal(&mut y.data);
+        (x, y)
     }
 
     #[test]
@@ -1671,6 +1707,103 @@ mod tests {
         let out = HiRef::new(cfg).align(&x, &y).unwrap();
         assert_eq!(out.perm, want.perm);
         assert_eq!(out.x_order, want.x_order);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn explicit_f32_precision_is_bit_identical_to_default() {
+        // the F32 default regression: `factor_precision: F32` must be the
+        // same zero-copy code path as an untouched config, bit for bit
+        let (x, y, _) = shuffled_pair(200, 2, 45);
+        let want = HiRef::new(native_cfg()).align(&x, &y).unwrap();
+        assert_eq!(want.stats.factor_precision, "f32");
+        let cfg = HiRefConfig { factor_precision: Precision::F32, ..native_cfg() };
+        let out = HiRef::new(cfg).align(&x, &y).unwrap();
+        assert_eq!(out.perm, want.perm);
+        assert_eq!(out.x_order, want.x_order);
+        assert_eq!(out.y_order, want.y_order);
+        assert_eq!(out.stats.factor_bytes, want.stats.factor_bytes);
+        assert_eq!(out.stats.resident_factor_bytes, want.stats.resident_factor_bytes);
+    }
+
+    #[test]
+    fn low_precision_cost_within_tolerance_of_f32_across_configs() {
+        // the precision-accuracy harness: quantising the stored factors
+        // perturbs the cost model, not the solver, so the low-precision
+        // bijection must stay near-optimal — within 5% relative cost of
+        // the f32 run across sizes, base blocks, ranks and thread counts.
+        // Independent clouds keep the optimal cost O(1) so the relative
+        // comparison is well-conditioned (a shuffled pair's near-zero
+        // cost would make any ratio meaningless).
+        for (n, base_size, max_rank, threads) in
+            [(160usize, 32usize, 4usize, 1usize), (256, 32, 8, 2), (97, 16, 4, 2)]
+        {
+            let (x, y) = rand_pair(n, 3, 40 + n as u64);
+            let cfg = HiRefConfig { base_size, max_rank, threads, ..native_cfg() };
+            let f32_out = HiRef::new(cfg.clone()).align(&x, &y).unwrap();
+            let c_f32 = f32_out.cost(&x, &y, CostKind::SqEuclidean);
+            for prec in [Precision::Bf16, Precision::F16] {
+                let cfg = HiRefConfig { factor_precision: prec, ..cfg.clone() };
+                let out = HiRef::new(cfg).align(&x, &y).unwrap();
+                assert!(out.is_bijection(), "{} n={n}", prec.as_str());
+                assert_eq!(out.stats.factor_precision, prec.as_str());
+                // two-byte elements: exactly half the persistent footprint
+                assert_eq!(out.stats.factor_bytes * 2, f32_out.stats.factor_bytes);
+                assert_eq!(
+                    out.stats.resident_factor_bytes * 2,
+                    f32_out.stats.resident_factor_bytes
+                );
+                let c = out.cost(&x, &y, CostKind::SqEuclidean);
+                let rel = (c - c_f32).abs() / c_f32.max(1e-6);
+                assert!(
+                    rel < 0.05,
+                    "{} n={n} base={base_size} rank={max_rank}: cost {c} vs f32 {c_f32} (rel {rel:.4})",
+                    prec.as_str()
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "file-backed: spill dirs need real file I/O")]
+    fn bf16_spill_bit_identical_to_bf16_resident_and_halves_spill_traffic() {
+        // bit-identity across execution strategies holds *per precision*:
+        // a bf16 spilled run replays the bf16 resident run exactly, at
+        // every cache budget, while writing half the bytes of f32 spill
+        let (x, y) = rand_pair(200, 2, 44);
+        let bf16_cfg = HiRefConfig { factor_precision: Precision::Bf16, ..native_cfg() };
+        let want = HiRef::new(bf16_cfg.clone()).align(&x, &y).unwrap();
+        let c_want = want.cost(&x, &y, CostKind::SqEuclidean);
+        let dir = spill_dir("bf16");
+        let mut bf16_written = 0;
+        for budget in [0usize, 4096, 1 << 24] {
+            let cfg = HiRefConfig {
+                spill: Some(SpillConfig { dir: dir.clone(), budget_bytes: budget }),
+                ..bf16_cfg.clone()
+            };
+            let out = HiRef::new(cfg).align(&x, &y).unwrap();
+            assert_eq!(out.perm, want.perm, "budget {budget}");
+            assert_eq!(out.x_order, want.x_order, "budget {budget}");
+            assert_eq!(out.y_order, want.y_order, "budget {budget}");
+            assert!(out.stats.spill_bytes_written > 0, "nothing was spilled");
+            assert!(
+                out.stats.resident_factor_bytes <= budget + out.stats.factor_bytes,
+                "resident {} > budget {budget} + factors {}",
+                out.stats.resident_factor_bytes,
+                out.stats.factor_bytes
+            );
+            assert!((out.cost(&x, &y, CostKind::SqEuclidean) - c_want).abs() < 1e-9);
+            bf16_written = out.stats.spill_bytes_written;
+        }
+        // the hierarchy shape (levels, blocks, dirty releases) depends only
+        // on sizes, so an f32 run at the same budget writes the same lane
+        // rows — at twice the element width
+        let f32_cfg = HiRefConfig {
+            spill: Some(SpillConfig { dir: dir.clone(), budget_bytes: 1 << 24 }),
+            ..native_cfg()
+        };
+        let f32_out = HiRef::new(f32_cfg).align(&x, &y).unwrap();
+        assert_eq!(bf16_written * 2, f32_out.stats.spill_bytes_written);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

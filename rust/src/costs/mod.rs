@@ -335,6 +335,57 @@ mod tests {
     }
 
     #[test]
+    fn low_precision_builders_encode_on_write_and_agree_across_stores() {
+        use crate::data::stream::InMemorySource;
+        use crate::pool::{Precision, SpillStore};
+        let mut rng = Rng::new(19);
+        let x = rand_mat(&mut rng, 37, 3);
+        let y = rand_mat(&mut rng, 37, 3);
+        let arena = ScratchArena::new(2);
+        let (xs, ys) = (InMemorySource::new(&x), InMemorySource::new(&y));
+        let dir = std::env::temp_dir().join(format!("hiref_costs_lp_{}", std::process::id()));
+        for kind in [CostKind::SqEuclidean, CostKind::Euclidean] {
+            let k = factor_width(kind, 3, 37, 37, 8);
+            let ru = ResidentStore::zeroed_with(37, k, Precision::Bf16);
+            let rv = ResidentStore::zeroed_with(37, k, Precision::Bf16);
+            factors_for_source_into(&xs, &ys, kind, 8, 4, 7, &arena, 2, &ru, &rv).unwrap();
+            let su = SpillStore::create_with(&dir, 37, k, 0, Precision::Bf16).unwrap();
+            let sv = SpillStore::create_with(&dir, 37, k, 0, Precision::Bf16).unwrap();
+            factors_for_source_into(&xs, &ys, kind, 8, 4, 7, &arena, 2, &su, &sv).unwrap();
+            // encode-on-write: every tile went to disk as 2-byte elements,
+            // never materialising the factors at f32 width
+            let written = su.stats().spill_bytes_written;
+            assert!(
+                written >= 37 * k * 2 && written < 37 * k * 4,
+                "{kind:?}: {written} bytes for {} bf16 elements",
+                37 * k
+            );
+            // resident and spilled stores hold the same encoded bits, so
+            // they decode to the same factors (the Indyk path reads its
+            // regression sample back through the store — both builds see
+            // the same quantised read-back)
+            let (ru, rv) =
+                (Box::new(ru).into_mat().unwrap(), Box::new(rv).into_mat().unwrap());
+            let (su, sv) =
+                (Box::new(su).into_mat().unwrap(), Box::new(sv).into_mat().unwrap());
+            assert_eq!(ru.data, su.data, "{kind:?} U diverges across store backends");
+            assert_eq!(rv.data, sv.data, "{kind:?} V diverges across store backends");
+            if kind == CostKind::SqEuclidean {
+                // the exact path never reads back mid-build, so its stored
+                // factors are exactly the narrowed in-memory factors
+                let (u, v) = factors_for(&x, &y, kind, 8, 4);
+                let want_u =
+                    Box::new(ResidentStore::from_mat_with(u, Precision::Bf16)).into_mat().unwrap();
+                let want_v =
+                    Box::new(ResidentStore::from_mat_with(v, Precision::Bf16)).into_mat().unwrap();
+                assert_eq!(ru.data, want_u.data);
+                assert_eq!(rv.data, want_v.data);
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn factors_for_source_propagates_read_errors() {
         struct Failing;
         impl crate::data::stream::DatasetSource for Failing {

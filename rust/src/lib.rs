@@ -80,7 +80,14 @@
 //!    by default ([`pool::ResidentStore`], zero-cost), or file-backed
 //!    ([`pool::SpillStore`], via [`api::HiRefBuilder::spill_dir`]) so
 //!    that only a bounded shard cache plus **one in-flight level batch's
-//!    lane windows** occupy memory, with bit-identical output.
+//!    lane windows** occupy memory, with bit-identical output.  Either
+//!    backend can store its elements at half width
+//!    ([`pool::Precision::Bf16`]/[`pool::Precision::F16`], via
+//!    [`api::HiRefBuilder::factor_precision`]): checkouts widen lane
+//!    windows to f32 scratch and dirty releases narrow them back
+//!    (round-to-nearest-even), so every byte in this tier — RAM, shard
+//!    cache, spill file — is halved while the solve math stays f32.  See
+//!    `docs/precision.md`.
 //! 3. **Resident permutations, `O(n)`** — the position→id orders, the
 //!    output bijection, and transient arena scratch that tracks one
 //!    in-flight level (`O(n·r)` LROT state at any scale,
@@ -151,6 +158,7 @@
 //! | `chunk_rows` | streaming ingestion tiles, `O(chunk_rows·d)` | 65536 |
 //! | `spill_dir` | factor working copies → file-backed shards | off (resident) |
 //! | `spill_budget_bytes` | resident spill-shard cache | 256 MiB |
+//! | `factor_precision` | stored factor element width (f32/bf16/f16) | `f32` |
 //! | `base_size` | leaf dense tiles, `O(threads · base_size²)` | 256 |
 //! | `threads` | worker fan-out (and per-worker tiles) | all cores |
 //! | `batching` | level-synchronous batched execution | on |
@@ -213,8 +221,9 @@
 //!
 //! * **SIMD kernel dispatch** ([`linalg::kernels`]) — the five hot
 //!   linalg primitives (both matmuls, the `fast_exp` sweep, max-abs,
-//!   masked row softmax) resolve once at startup to a scalar, AVX2
-//!   (x86_64) or NEON (aarch64) implementation.  The SIMD paths are
+//!   masked row softmax) plus the four precision convert kernels
+//!   (bf16/f16 widen and narrow) resolve once at startup to a scalar,
+//!   AVX2 (x86_64) or NEON (aarch64) implementation.  The SIMD paths are
 //!   **bit-identical** to the scalar reference (column-lane
 //!   vectorisation, unchanged reduction order, no FMA), so every
 //!   bit-identity invariant in the crate holds on every path.  Override

@@ -8,6 +8,11 @@
 //! implementation next to the **verbatim scalar reference** ([`scalar`]),
 //! picks one implementation per process at first use, and exposes the
 //! choice ([`active`]) so stats lines and bench JSONs record what ran.
+//! The same table carries the four precision-convert kernels
+//! (f32 ↔ bf16/f16, round-to-nearest-even narrowing) that back
+//! low-precision factor storage (`pool::store::Precision`): encode on
+//! store write/release, decode on checkout, held to the identical
+//! scalar-vs-SIMD bit-parity bar as the hot-loop primitives.
 //!
 //! # Dispatch rules
 //!
@@ -71,7 +76,9 @@ impl KernelPath {
     }
 }
 
-/// One implementation of the five hot-loop primitives.
+/// One implementation of the five hot-loop primitives plus the four
+/// precision-convert kernels (`pool::store`'s low-precision factor path:
+/// encode on write/release, decode on checkout).
 struct KernelOps {
     path: KernelPath,
     matmul: fn(MatView<'_>, MatView<'_>, &mut [f32]),
@@ -79,6 +86,10 @@ struct KernelOps {
     exp_slice: fn(&[f32], &mut [f32]),
     max_abs: fn(&[f32]) -> f32,
     row_softmax: fn(MatView<'_>, &mut [f32]),
+    enc_bf16: fn(&[f32], &mut [u16]),
+    dec_bf16: fn(&[u16], &mut [f32]),
+    enc_f16: fn(&[f32], &mut [u16]),
+    dec_f16: fn(&[u16], &mut [f32]),
 }
 
 static SCALAR_OPS: KernelOps = KernelOps {
@@ -88,6 +99,10 @@ static SCALAR_OPS: KernelOps = KernelOps {
     exp_slice: scalar::exp_slice,
     max_abs: scalar::slice_max_abs,
     row_softmax: scalar::row_softmax,
+    enc_bf16: scalar::f32_to_bf16_slice,
+    dec_bf16: scalar::bf16_to_f32_slice,
+    enc_f16: scalar::f32_to_f16_slice,
+    dec_f16: scalar::f16_to_f32_slice,
 };
 
 #[cfg(target_arch = "x86_64")]
@@ -98,6 +113,10 @@ static AVX2_OPS: KernelOps = KernelOps {
     exp_slice: avx2::exp_slice,
     max_abs: avx2::slice_max_abs,
     row_softmax: avx2::row_softmax,
+    enc_bf16: avx2::f32_to_bf16_slice,
+    dec_bf16: avx2::bf16_to_f32_slice,
+    enc_f16: avx2::f32_to_f16_slice,
+    dec_f16: avx2::f16_to_f32_slice,
 };
 
 #[cfg(target_arch = "aarch64")]
@@ -108,6 +127,10 @@ static NEON_OPS: KernelOps = KernelOps {
     exp_slice: neon::exp_slice,
     max_abs: neon::slice_max_abs,
     row_softmax: neon::row_softmax,
+    enc_bf16: neon::f32_to_bf16_slice,
+    dec_bf16: neon::bf16_to_f32_slice,
+    enc_f16: neon::f32_to_f16_slice,
+    dec_f16: neon::f16_to_f32_slice,
 };
 
 static OPS: OnceLock<&'static KernelOps> = OnceLock::new();
@@ -223,6 +246,30 @@ pub fn row_softmax_item(l: MatView<'_>, dst: &mut [f32]) {
     (ops().row_softmax)(l, dst)
 }
 
+/// Dispatched RNE narrowing `dst[i] = bf16(src[i])` (lengths must match).
+#[inline]
+pub fn f32_to_bf16_slice(src: &[f32], dst: &mut [u16]) {
+    (ops().enc_bf16)(src, dst)
+}
+
+/// Dispatched exact widening `dst[i] = f32(bf16 src[i])`.
+#[inline]
+pub fn bf16_to_f32_slice(src: &[u16], dst: &mut [f32]) {
+    (ops().dec_bf16)(src, dst)
+}
+
+/// Dispatched RNE narrowing `dst[i] = f16(src[i])` (IEEE binary16).
+#[inline]
+pub fn f32_to_f16_slice(src: &[f32], dst: &mut [u16]) {
+    (ops().enc_f16)(src, dst)
+}
+
+/// Dispatched exact widening `dst[i] = f32(f16 src[i])`.
+#[inline]
+pub fn f16_to_f32_slice(src: &[u16], dst: &mut [f32]) {
+    (ops().dec_f16)(src, dst)
+}
+
 // ---------------------------------------------------------------------------
 // Scalar reference
 // ---------------------------------------------------------------------------
@@ -314,6 +361,137 @@ pub mod scalar {
             for d in row.iter_mut() {
                 *d *= inv;
             }
+        }
+    }
+
+    // -- precision converts (low-precision FactorStore element formats) --
+    //
+    // bf16 is the top 16 bits of an f32 (1+8+7), so widening is a shift
+    // and narrowing is round-to-nearest-even on the dropped 16 bits.
+    // f16 is IEEE binary16 (1+5+10): re-bias the exponent, RNE on the 13
+    // dropped mantissa bits, with explicit subnormal/overflow handling.
+    // NaN policy (both formats): truncate the payload and force the
+    // quiet bit — the hardware convert instructions (x86 F16C, ARM FCVT)
+    // quiet signalling NaNs the same way, which is what keeps the SIMD
+    // paths bit-identical to these references.
+
+    /// Narrow one f32 to bf16 (RNE on the dropped 16 bits).
+    #[inline]
+    pub fn f32_to_bf16(x: f32) -> u16 {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // force the quiet bit so a low-bits-only NaN payload cannot
+            // truncate to an infinity encoding
+            return ((bits >> 16) as u16) | 0x0040;
+        }
+        let round = ((bits >> 16) & 1) + 0x7FFF;
+        ((bits + round) >> 16) as u16
+    }
+
+    /// Widen one bf16 to f32 (exact).
+    #[inline]
+    pub fn bf16_to_f32(h: u16) -> f32 {
+        f32::from_bits((h as u32) << 16)
+    }
+
+    /// Narrow one f32 to IEEE binary16 (RNE, subnormals, signed zeros).
+    #[inline]
+    pub fn f32_to_f16(x: f32) -> u16 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xFF) as i32;
+        let man = bits & 0x007F_FFFF;
+        if exp == 0xFF {
+            if man == 0 {
+                return sign | 0x7C00; // infinity
+            }
+            return sign | 0x7C00 | 0x0200 | (man >> 13) as u16; // quieted NaN
+        }
+        let unbiased = exp - 127;
+        if unbiased >= 16 {
+            return sign | 0x7C00; // ≥ 2^16 > 65520: RNE overflows to inf
+        }
+        if unbiased >= -14 {
+            // normal f16; the RNE carry may roll the exponent (1.11… →
+            // 10.0…) and may roll exponent 30 into the infinity encoding
+            // — both are exactly RNE's overflow behaviour
+            let mut h = (((unbiased + 15) as u32) << 10) | (man >> 13);
+            let rem = bits & 0x1FFF;
+            if rem > 0x1000 || (rem == 0x1000 && (h & 1) == 1) {
+                h += 1;
+            }
+            return sign | h as u16;
+        }
+        if unbiased >= -25 {
+            // subnormal f16: shift the 24-bit significand into place, RNE
+            // on the dropped bits; a carry into bit 10 yields the
+            // smallest normal, which is again exactly RNE
+            let full = 0x0080_0000 | man;
+            let shift = (-1 - unbiased) as u32; // 14..=24
+            let mut h = full >> shift;
+            let rem = full & ((1u32 << shift) - 1);
+            let half = 1u32 << (shift - 1);
+            if rem > half || (rem == half && (h & 1) == 1) {
+                h += 1;
+            }
+            return sign | h as u16;
+        }
+        sign // magnitude < 2^-25 (f32 subnormals included): RNE to ±0
+    }
+
+    /// Widen one IEEE binary16 to f32 (exact).
+    #[inline]
+    pub fn f16_to_f32(h: u16) -> f32 {
+        let sign = ((h as u32) & 0x8000) << 16;
+        let exp = ((h >> 10) & 0x1F) as u32;
+        let man = (h & 0x03FF) as u32;
+        let bits = if exp == 0x1F {
+            if man == 0 {
+                sign | 0x7F80_0000 // infinity
+            } else {
+                sign | 0x7FC0_0000 | (man << 13) // quieted NaN, payload kept
+            }
+        } else if exp != 0 {
+            sign | ((exp + 112) << 23) | (man << 13)
+        } else if man != 0 {
+            // subnormal: normalise into an f32 normal
+            let n = 31 - man.leading_zeros(); // MSB position, 0..=9
+            sign | ((n + 103) << 23) | ((man << (23 - n)) & 0x007F_FFFF)
+        } else {
+            sign // signed zero
+        };
+        f32::from_bits(bits)
+    }
+
+    /// `dst[i] = bf16(src[i])` (lengths must match).
+    pub fn f32_to_bf16_slice(src: &[f32], dst: &mut [u16]) {
+        assert_eq!(src.len(), dst.len(), "convert length mismatch");
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = f32_to_bf16(s);
+        }
+    }
+
+    /// `dst[i] = f32(bf16 src[i])` (lengths must match).
+    pub fn bf16_to_f32_slice(src: &[u16], dst: &mut [f32]) {
+        assert_eq!(src.len(), dst.len(), "convert length mismatch");
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = bf16_to_f32(s);
+        }
+    }
+
+    /// `dst[i] = f16(src[i])` (lengths must match).
+    pub fn f32_to_f16_slice(src: &[f32], dst: &mut [u16]) {
+        assert_eq!(src.len(), dst.len(), "convert length mismatch");
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = f32_to_f16(s);
+        }
+    }
+
+    /// `dst[i] = f32(f16 src[i])` (lengths must match).
+    pub fn f16_to_f32_slice(src: &[u16], dst: &mut [f32]) {
+        assert_eq!(src.len(), dst.len(), "convert length mismatch");
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = f16_to_f32(s);
         }
     }
 }
@@ -618,6 +796,133 @@ pub mod avx2 {
         }
     }
 
+    /// Whether the host CPU additionally has the F16C convert unit.
+    /// AVX2-without-F16C hosts exist (some early designs); the f16
+    /// entries below fall back to the scalar reference there, which is
+    /// bit-identical by definition.
+    pub fn f16c_available() -> bool {
+        is_x86_feature_detected!("f16c")
+    }
+
+    /// 8-lane bf16 narrowing: integer RNE add on the raw bits, NaN lanes
+    /// blended to truncate-and-quiet — the scalar reference's exact
+    /// operation sequence, per lane.
+    #[target_feature(enable = "avx2")]
+    // On toolchains where safe-to-call target-feature intrinsics make
+    // this block redundant, the wrap is dead weight, not an error.
+    #[allow(unused_unsafe)]
+    unsafe fn enc_bf16_8(v: __m256i) -> __m128i {
+        // SAFETY: value intrinsics only — sound whenever the target
+        // feature is present, which the caller proves (the safe checked
+        // entries assert `available()` before entering this module).
+        unsafe {
+            // NaN ⇔ (bits & 0x7FFF_FFFF) > 0x7F80_0000; both sides are
+            // < 2^31 so the signed compare is the unsigned one
+            let abs = _mm256_and_si256(v, _mm256_set1_epi32(0x7FFF_FFFF));
+            let nan = _mm256_cmpgt_epi32(abs, _mm256_set1_epi32(0x7F80_0000));
+            let lsb = _mm256_and_si256(_mm256_srli_epi32::<16>(v), _mm256_set1_epi32(1));
+            let bump = _mm256_add_epi32(lsb, _mm256_set1_epi32(0x7FFF));
+            let rounded = _mm256_srli_epi32::<16>(_mm256_add_epi32(v, bump));
+            let quiet = _mm256_or_si256(_mm256_srli_epi32::<16>(v), _mm256_set1_epi32(0x0040));
+            let out32 = _mm256_blendv_epi8(rounded, quiet, nan);
+            // pack the 8 ≤0xFFFF words into the low 128 bits (packus
+            // interleaves per 128-bit lane: qwords [0,_,2,_] hold them)
+            let packed = _mm256_packus_epi32(out32, out32);
+            _mm256_castsi256_si128(_mm256_permute4x64_epi64::<0x08>(packed))
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn enc_bf16_impl(src: &[f32], dst: &mut [u16]) {
+        // SAFETY: the caller proves the target feature is present (the
+        // safe checked entries assert `available()`), and every pointer
+        // intrinsic stays in bounds: the vector loops advance `j` only
+        // while `j + LANES <= n` over slices of length ≥ `n`.
+        unsafe {
+            let n = src.len();
+            let mut j = 0;
+            while j + 8 <= n {
+                let v = _mm256_loadu_si256(src.as_ptr().add(j) as *const __m256i);
+                _mm_storeu_si128(dst.as_mut_ptr().add(j) as *mut __m128i, enc_bf16_8(v));
+                j += 8;
+            }
+            while j < n {
+                dst[j] = super::scalar::f32_to_bf16(src[j]);
+                j += 1;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dec_bf16_impl(src: &[u16], dst: &mut [f32]) {
+        // SAFETY: the caller proves the target feature is present (the
+        // safe checked entries assert `available()`), and every pointer
+        // intrinsic stays in bounds: the vector loops advance `j` only
+        // while `j + LANES <= n` over slices of length ≥ `n`.
+        unsafe {
+            let n = src.len();
+            let mut j = 0;
+            while j + 8 <= n {
+                let h = _mm_loadu_si128(src.as_ptr().add(j) as *const __m128i);
+                let w = _mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(h));
+                _mm256_storeu_si256(dst.as_mut_ptr().add(j) as *mut __m256i, w);
+                j += 8;
+            }
+            while j < n {
+                dst[j] = super::scalar::bf16_to_f32(src[j]);
+                j += 1;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2,f16c")]
+    unsafe fn enc_f16_impl(src: &[f32], dst: &mut [u16]) {
+        // SAFETY: the caller proves both target features are present (the
+        // safe checked entries assert `available()` and `f16c_available()`),
+        // and every pointer intrinsic stays in bounds: the vector loops
+        // advance `j` only while `j + LANES <= n` over slices of length
+        // ≥ `n`.
+        unsafe {
+            let n = src.len();
+            let mut j = 0;
+            while j + 8 <= n {
+                let v = _mm256_loadu_ps(src.as_ptr().add(j));
+                // hardware RNE convert; F16C quiets SNaNs and handles
+                // subnormals regardless of MXCSR — the scalar reference's
+                // exact semantics
+                let h = _mm256_cvtps_ph::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(v);
+                _mm_storeu_si128(dst.as_mut_ptr().add(j) as *mut __m128i, h);
+                j += 8;
+            }
+            while j < n {
+                dst[j] = super::scalar::f32_to_f16(src[j]);
+                j += 1;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2,f16c")]
+    unsafe fn dec_f16_impl(src: &[u16], dst: &mut [f32]) {
+        // SAFETY: the caller proves both target features are present (the
+        // safe checked entries assert `available()` and `f16c_available()`),
+        // and every pointer intrinsic stays in bounds: the vector loops
+        // advance `j` only while `j + LANES <= n` over slices of length
+        // ≥ `n`.
+        unsafe {
+            let n = src.len();
+            let mut j = 0;
+            while j + 8 <= n {
+                let h = _mm_loadu_si128(src.as_ptr().add(j) as *const __m128i);
+                _mm256_storeu_ps(dst.as_mut_ptr().add(j), _mm256_cvtph_ps(h));
+                j += 8;
+            }
+            while j < n {
+                dst[j] = super::scalar::f16_to_f32(src[j]);
+                j += 1;
+            }
+        }
+    }
+
     // -- safe checked entries (used by the dispatch table and the tests) --
 
     pub fn matmul_into_slice(a: MatView<'_>, b: MatView<'_>, c: &mut [f32]) {
@@ -653,6 +958,40 @@ pub mod avx2 {
         assert_eq!(dst.len(), l.rows * l.cols, "softmax output shape mismatch");
         // SAFETY: availability checked above.
         unsafe { row_softmax_impl(l, dst) }
+    }
+
+    pub fn f32_to_bf16_slice(src: &[f32], dst: &mut [u16]) {
+        assert!(available(), "avx2 kernels dispatched on a non-avx2 host");
+        assert_eq!(src.len(), dst.len(), "convert length mismatch");
+        // SAFETY: availability checked above.
+        unsafe { enc_bf16_impl(src, dst) }
+    }
+
+    pub fn bf16_to_f32_slice(src: &[u16], dst: &mut [f32]) {
+        assert!(available(), "avx2 kernels dispatched on a non-avx2 host");
+        assert_eq!(src.len(), dst.len(), "convert length mismatch");
+        // SAFETY: availability checked above.
+        unsafe { dec_bf16_impl(src, dst) }
+    }
+
+    pub fn f32_to_f16_slice(src: &[f32], dst: &mut [u16]) {
+        assert!(available(), "avx2 kernels dispatched on a non-avx2 host");
+        assert_eq!(src.len(), dst.len(), "convert length mismatch");
+        if !f16c_available() {
+            return super::scalar::f32_to_f16_slice(src, dst);
+        }
+        // SAFETY: availability of avx2 and f16c checked above.
+        unsafe { enc_f16_impl(src, dst) }
+    }
+
+    pub fn f16_to_f32_slice(src: &[u16], dst: &mut [f32]) {
+        assert!(available(), "avx2 kernels dispatched on a non-avx2 host");
+        assert_eq!(src.len(), dst.len(), "convert length mismatch");
+        if !f16c_available() {
+            return super::scalar::f16_to_f32_slice(src, dst);
+        }
+        // SAFETY: availability of avx2 and f16c checked above.
+        unsafe { dec_f16_impl(src, dst) }
     }
 }
 
@@ -932,6 +1271,72 @@ pub mod neon {
         }
     }
 
+    /// 4-lane bf16 narrowing: integer RNE add on the raw bits, NaN lanes
+    /// selected to truncate-and-quiet — the scalar reference's exact
+    /// operation sequence, per lane.
+    #[target_feature(enable = "neon")]
+    // On toolchains where safe-to-call target-feature intrinsics make
+    // this block redundant, the wrap is dead weight, not an error.
+    #[allow(unused_unsafe)]
+    unsafe fn enc_bf16_4(v: uint32x4_t) -> uint16x4_t {
+        // SAFETY: value intrinsics only — sound whenever the target
+        // feature is present, which the caller proves (the safe checked
+        // entries assert `available()` before entering this module).
+        unsafe {
+            let abs = vandq_u32(v, vdupq_n_u32(0x7FFF_FFFF));
+            let nan = vcgtq_u32(abs, vdupq_n_u32(0x7F80_0000));
+            let lsb = vandq_u32(vshrq_n_u32::<16>(v), vdupq_n_u32(1));
+            let bump = vaddq_u32(lsb, vdupq_n_u32(0x7FFF));
+            let rounded = vshrq_n_u32::<16>(vaddq_u32(v, bump));
+            let quiet = vorrq_u32(vshrq_n_u32::<16>(v), vdupq_n_u32(0x0040));
+            // narrowing move keeps the low 16 bits — all lanes are ≤ 0xFFFF
+            vmovn_u32(vbslq_u32(nan, quiet, rounded))
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn enc_bf16_impl(src: &[f32], dst: &mut [u16]) {
+        // SAFETY: the caller proves the target feature is present (the
+        // safe checked entries assert `available()`), and every pointer
+        // intrinsic stays in bounds: the vector loops advance `j` only
+        // while `j + LANES <= n` over slices of length ≥ `n`.
+        unsafe {
+            let n = src.len();
+            let mut j = 0;
+            while j + 4 <= n {
+                let v = vld1q_u32(src.as_ptr().add(j) as *const u32);
+                vst1_u16(dst.as_mut_ptr().add(j), enc_bf16_4(v));
+                j += 4;
+            }
+            while j < n {
+                dst[j] = super::scalar::f32_to_bf16(src[j]);
+                j += 1;
+            }
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn dec_bf16_impl(src: &[u16], dst: &mut [f32]) {
+        // SAFETY: the caller proves the target feature is present (the
+        // safe checked entries assert `available()`), and every pointer
+        // intrinsic stays in bounds: the vector loops advance `j` only
+        // while `j + LANES <= n` over slices of length ≥ `n`.
+        unsafe {
+            let n = src.len();
+            let mut j = 0;
+            while j + 4 <= n {
+                let h = vld1_u16(src.as_ptr().add(j));
+                let w = vshlq_n_u32::<16>(vmovl_u16(h));
+                vst1q_u32(dst.as_mut_ptr().add(j) as *mut u32, w);
+                j += 4;
+            }
+            while j < n {
+                dst[j] = super::scalar::bf16_to_f32(src[j]);
+                j += 1;
+            }
+        }
+    }
+
     // -- safe checked entries (used by the dispatch table and the tests) --
 
     pub fn matmul_into_slice(a: MatView<'_>, b: MatView<'_>, c: &mut [f32]) {
@@ -967,6 +1372,35 @@ pub mod neon {
         assert_eq!(dst.len(), l.rows * l.cols, "softmax output shape mismatch");
         // SAFETY: availability checked above.
         unsafe { row_softmax_impl(l, dst) }
+    }
+
+    pub fn f32_to_bf16_slice(src: &[f32], dst: &mut [u16]) {
+        assert!(available(), "neon kernels dispatched on a non-neon host");
+        assert_eq!(src.len(), dst.len(), "convert length mismatch");
+        // SAFETY: availability checked above.
+        unsafe { enc_bf16_impl(src, dst) }
+    }
+
+    pub fn bf16_to_f32_slice(src: &[u16], dst: &mut [f32]) {
+        assert!(available(), "neon kernels dispatched on a non-neon host");
+        assert_eq!(src.len(), dst.len(), "convert length mismatch");
+        // SAFETY: availability checked above.
+        unsafe { dec_bf16_impl(src, dst) }
+    }
+
+    /// f16 narrowing on aarch64 delegates to the scalar reference: the
+    /// FCVTN hardware path needs the unstable `float16x4_t` vector type,
+    /// and the scalar algorithm is bit-identical to it by construction
+    /// (bf16 is the vectorised low-precision format on this arch).
+    pub fn f32_to_f16_slice(src: &[f32], dst: &mut [u16]) {
+        assert!(available(), "neon kernels dispatched on a non-neon host");
+        super::scalar::f32_to_f16_slice(src, dst)
+    }
+
+    /// See [`f32_to_f16_slice`]: scalar reference, same bits.
+    pub fn f16_to_f32_slice(src: &[u16], dst: &mut [f32]) {
+        assert!(available(), "neon kernels dispatched on a non-neon host");
+        super::scalar::f16_to_f32_slice(src, dst)
     }
 }
 
@@ -1017,6 +1451,105 @@ mod tests {
 
     fn bits(xs: &[f32]) -> Vec<u32> {
         xs.iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn dispatched_converts_match_scalar_reference() {
+        let mut rng = Rng::new(99);
+        let mut xs = vec![0.0f32; 37];
+        rng.fill_normal(&mut xs);
+        let mut a = vec![0u16; 37];
+        let mut b = vec![1u16; 37];
+        f32_to_bf16_slice(&xs, &mut a);
+        scalar::f32_to_bf16_slice(&xs, &mut b);
+        assert_eq!(a, b);
+        let mut da = vec![0.0f32; 37];
+        let mut db = vec![1.0f32; 37];
+        bf16_to_f32_slice(&a, &mut da);
+        scalar::bf16_to_f32_slice(&b, &mut db);
+        assert_eq!(bits(&da), bits(&db));
+        f32_to_f16_slice(&xs, &mut a);
+        scalar::f32_to_f16_slice(&xs, &mut b);
+        assert_eq!(a, b);
+        f16_to_f32_slice(&a, &mut da);
+        scalar::f16_to_f32_slice(&b, &mut db);
+        assert_eq!(bits(&da), bits(&db));
+    }
+
+    #[test]
+    fn bf16_narrowing_is_rne_not_truncation() {
+        use scalar::{bf16_to_f32, f32_to_bf16};
+        // exactly representable values pass through
+        assert_eq!(f32_to_bf16(1.0), 0x3F80);
+        assert_eq!(f32_to_bf16(-2.0), 0xC000);
+        // just above the halfway point rounds up — truncation would say 0x3F80
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8001)), 0x3F81);
+        // exact ties round to even: odd mantissa bumps, even stays
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F81_8000)), 0x3F82);
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8000)), 0x3F80);
+        // signed zeros and infinities survive
+        assert_eq!(f32_to_bf16(0.0), 0x0000);
+        assert_eq!(f32_to_bf16(-0.0), 0x8000);
+        assert_eq!(f32_to_bf16(f32::INFINITY), 0x7F80);
+        assert_eq!(f32_to_bf16(f32::NEG_INFINITY), 0xFF80);
+        // f32::MAX overflows to inf under RNE (bf16 max finite is 0x7F7F)
+        assert_eq!(f32_to_bf16(f32::MAX), 0x7F80);
+        // NaN stays NaN even when the payload lives only in the dropped
+        // bits — naive truncation would yield an infinity encoding
+        let h = f32_to_bf16(f32::from_bits(0x7F80_0001));
+        assert_eq!(h, 0x7FC0); // quiet bit forced
+        assert!(bf16_to_f32(h).is_nan());
+        // f32 subnormals narrow to bf16 subnormals, exactly when aligned
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::from_bits(0x0001_0000))).to_bits(), 0x0001_0000);
+    }
+
+    #[test]
+    fn f16_narrowing_handles_edges() {
+        use scalar::{f16_to_f32, f32_to_f16};
+        assert_eq!(f32_to_f16(1.0), 0x3C00);
+        assert_eq!(f32_to_f16(-1.5), 0xBE00);
+        assert_eq!(f32_to_f16(65504.0), 0x7BFF); // max finite f16
+        // RNE overflow boundary: below the 65520 midpoint keeps 65504
+        assert_eq!(f32_to_f16(65519.0), 0x7BFF);
+        assert_eq!(f32_to_f16(65520.0), 0x7C00); // tie rolls to inf
+        assert_eq!(f32_to_f16(1.0e9), 0x7C00);
+        // subnormal f16s: 2^-24 is the smallest; 2^-25 ties to even (zero)
+        assert_eq!(f32_to_f16(2.0f32.powi(-24)), 0x0001);
+        assert_eq!(f32_to_f16(2.0f32.powi(-25)), 0x0000);
+        assert_eq!(f32_to_f16(1.5 * 2.0f32.powi(-25)), 0x0001);
+        assert_eq!(f32_to_f16(-(2.0f32.powi(-24))), 0x8001);
+        // f32 subnormals underflow to the signed zero
+        assert_eq!(f32_to_f16(f32::from_bits(0x0000_0001)), 0x0000);
+        assert_eq!(f32_to_f16(-1.0e-40), 0x8000);
+        // signed zeros, infinities, NaN quieting
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16(f32::NAN), 0x7E00);
+        assert!(f16_to_f32(f32_to_f16(f32::from_bits(0x7F80_0001))).is_nan());
+        // the mantissa carry can roll the exponent: 1.11…1|1000 → 2.0
+        assert_eq!(f32_to_f16(f32::from_bits(0x3FFF_F000)), 0x4000);
+    }
+
+    #[test]
+    fn convert_roundtrip_identity_on_every_u16() {
+        // widening is exact, so encode(decode(h)) must reproduce h for
+        // every non-NaN pattern — RNE of a representable value is itself.
+        // NaN patterns only need to stay NaN (encode quiets them).
+        for h in 0..=u16::MAX {
+            let w = scalar::bf16_to_f32(h);
+            if w.is_nan() {
+                assert!(scalar::bf16_to_f32(scalar::f32_to_bf16(w)).is_nan(), "bf16 {h:#06x}");
+            } else {
+                assert_eq!(scalar::f32_to_bf16(w), h, "bf16 {h:#06x}");
+            }
+            let w = scalar::f16_to_f32(h);
+            if w.is_nan() {
+                assert!(scalar::f16_to_f32(scalar::f32_to_f16(w)).is_nan(), "f16 {h:#06x}");
+            } else {
+                assert_eq!(scalar::f32_to_f16(w), h, "f16 {h:#06x}");
+            }
+        }
     }
 
     // -- SIMD-vs-scalar parity sweeps (skipped on hosts without the ISA) --
@@ -1186,6 +1719,77 @@ mod tests {
                     assert_eq!(got.to_bits(), want.to_bits(), "max_abs len {len}");
                 }
             }
+        }
+
+        #[test]
+        fn converts_bit_identical_incl_specials() {
+            if !simd::available() {
+                eprintln!("skipping: SIMD path unavailable on this host");
+                return;
+            }
+            let mut rng = Rng::new(0xBF16);
+            let mut buf = Vec::new();
+            for len in 0..=41 {
+                for round in 0..8 {
+                    let r = window(&mut rng, &mut buf, len);
+                    // magnitudes sweeping through f16's normal range, its
+                    // subnormal floor, and past its overflow ceiling
+                    for v in buf[r.clone()].iter_mut() {
+                        *v *= 10.0f32.powi(round - 4);
+                    }
+                    spice(&mut rng, &mut buf[r.clone()]);
+                    let mut want = vec![0u16; len];
+                    let mut got = vec![1u16; len];
+                    scalar::f32_to_bf16_slice(&buf[r.clone()], &mut want);
+                    simd::f32_to_bf16_slice(&buf[r.clone()], &mut got);
+                    assert_eq!(want, got, "bf16 encode len {len}");
+                    scalar::f32_to_f16_slice(&buf[r.clone()], &mut want);
+                    simd::f32_to_f16_slice(&buf[r], &mut got);
+                    assert_eq!(want, got, "f16 encode len {len}");
+                }
+            }
+        }
+
+        #[test]
+        fn decode_parity_is_exhaustive_over_u16() {
+            if !simd::available() {
+                eprintln!("skipping: SIMD path unavailable on this host");
+                return;
+            }
+            // every possible stored element, both formats
+            let all: Vec<u16> = (0..=u16::MAX).collect();
+            let mut want = vec![0.0f32; all.len()];
+            let mut got = vec![1.0f32; all.len()];
+            scalar::bf16_to_f32_slice(&all, &mut want);
+            simd::bf16_to_f32_slice(&all, &mut got);
+            assert_bits_eq(&got, &want, "bf16 decode");
+            scalar::f16_to_f32_slice(&all, &mut want);
+            simd::f16_to_f32_slice(&all, &mut got);
+            assert_bits_eq(&got, &want, "f16 decode");
+        }
+
+        #[test]
+        fn encode_parity_is_exhaustive_over_roundtripped_u16() {
+            if !simd::available() {
+                eprintln!("skipping: SIMD path unavailable on this host");
+                return;
+            }
+            // encode every exactly-representable value of each format —
+            // together with the random/special sweeps this pins the SIMD
+            // encoders at every exponent, both signs, and all NaN/inf
+            // encodings
+            let all: Vec<u16> = (0..=u16::MAX).collect();
+            let mut wide = vec![0.0f32; all.len()];
+            let mut want = vec![0u16; all.len()];
+            let mut got = vec![1u16; all.len()];
+            scalar::bf16_to_f32_slice(&all, &mut wide);
+            scalar::f32_to_bf16_slice(&wide, &mut want);
+            simd::f32_to_bf16_slice(&wide, &mut got);
+            assert_eq!(want, got, "bf16 encode over all bf16 values");
+            scalar::f16_to_f32_slice(&all, &mut wide);
+            scalar::f32_to_f16_slice(&wide, &mut want);
+            simd::f32_to_f16_slice(&wide, &mut got);
+            assert_eq!(want, got, "f16 encode over all f16 values");
         }
 
         #[test]

@@ -49,7 +49,7 @@
 pub mod guard;
 pub mod store;
 
-pub use store::{Checkout, FactorStore, ResidentStore, SpillStore, StoreStats};
+pub use store::{Checkout, FactorStore, Precision, ResidentStore, SpillStore, StoreStats};
 
 use std::cell::UnsafeCell;
 use std::marker::PhantomData;
@@ -293,6 +293,7 @@ fn class_of(len: usize) -> usize {
 struct Shard {
     f32s: Vec<Vec<Vec<f32>>>,
     u32s: Vec<Vec<Vec<u32>>>,
+    u16s: Vec<Vec<Vec<u16>>>,
 }
 
 impl Shard {
@@ -300,6 +301,7 @@ impl Shard {
         Shard {
             f32s: (0..NUM_CLASSES).map(|_| Vec::new()).collect(),
             u32s: (0..NUM_CLASSES).map(|_| Vec::new()).collect(),
+            u16s: (0..NUM_CLASSES).map(|_| Vec::new()).collect(),
         }
     }
 }
@@ -460,6 +462,9 @@ macro_rules! scratch_impl {
 
 scratch_impl!(ScratchF32, take_f32, f32, f32s, 0.0f32);
 scratch_impl!(ScratchU32, take_u32, u32, u32s, 0u32);
+// u16 staging for the low-precision factor stores: encoded bf16/f16 rows
+// on their way to a spill file or shard cache (see `store::Precision`).
+scratch_impl!(ScratchU16, take_u16, u16, u16s, 0u16);
 
 // ---------------------------------------------------------------------------
 // parallel_map

@@ -32,6 +32,18 @@
 //! checkout hands back exactly the same `f32` rows either way (the spill
 //! file round-trips raw bits), and the solver consumes the same
 //! [`crate::linalg::MatView`]/`BatchView` windows over them.
+//!
+//! Element precision is a store property ([`Precision`], default
+//! [`Precision::F32`]): bf16/f16 stores hold rows in a 2-byte format and
+//! narrow/widen through the dispatched convert kernels
+//! ([`crate::linalg::kernels`]) — writes encode on the way in
+//! (round-to-nearest-even), `checkout` decodes lane windows into f32
+//! arena scratch, dirty `release` re-encodes — so the solver consumes
+//! f32 either way and the F32 default keeps the zero-copy resident path
+//! and raw-bits spill format unchanged.  Spilled == resident
+//! bit-identity holds *per precision*: both stores decode the same
+//! stored bits, and every byte counter (stats, cache budget) is in the
+//! true stored width.
 
 use std::fs::OpenOptions;
 use std::io;
@@ -41,8 +53,77 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::fsio::PositionedFile;
-use crate::linalg::Mat;
+use crate::linalg::{kernels, Mat};
 use crate::pool::{guard, RangeShared, ScratchArena, ScratchF32};
+
+/// Stored element format of a [`FactorStore`].  The solve path is always
+/// f32 (decode on checkout, f32 accumulation, RNE re-encode on dirty
+/// release); this only chooses what the rows look like at rest —
+/// resident buffers, shard cache, and spill file all hold this format.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// IEEE binary32 — bit-identical to the pre-precision behaviour
+    /// (zero-copy resident checkouts, raw-bits spill round-trip).
+    #[default]
+    F32,
+    /// bfloat16: f32's full exponent range, 8-bit significand, 2
+    /// bytes/element.  The robust low-precision default — narrowing can
+    /// never overflow or flush to zero, only round.
+    Bf16,
+    /// IEEE binary16: 11-bit significand but a narrow exponent (±6.5e4,
+    /// subnormals below 6.1e-5), 2 bytes/element.  More mantissa than
+    /// bf16 for factors known to be well-scaled.
+    F16,
+}
+
+impl Precision {
+    /// Stored bytes per element.
+    pub const fn bytes(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::Bf16 | Precision::F16 => 2,
+        }
+    }
+
+    /// Canonical flag/display name (`f32`/`bf16`/`f16`).
+    pub const fn as_str(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+            Precision::F16 => "f16",
+        }
+    }
+
+    /// Parse a flag value as printed by [`Precision::as_str`].
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f32" => Some(Precision::F32),
+            "bf16" => Some(Precision::Bf16),
+            "f16" => Some(Precision::F16),
+            _ => None,
+        }
+    }
+
+    /// Narrow f32 values into this format's stored `u16` representation
+    /// (round-to-nearest-even, via the dispatched convert kernels).
+    pub(crate) fn encode(self, src: &[f32], dst: &mut [u16]) {
+        match self {
+            Precision::F32 => unreachable!("f32 stores hold raw f32 rows"),
+            Precision::Bf16 => kernels::f32_to_bf16_slice(src, dst),
+            Precision::F16 => kernels::f32_to_f16_slice(src, dst),
+        }
+    }
+
+    /// Widen stored `u16` values back to f32 (exact — every bf16/f16
+    /// value is representable in f32).
+    pub(crate) fn decode(self, src: &[u16], dst: &mut [f32]) {
+        match self {
+            Precision::F32 => unreachable!("f32 stores hold raw f32 rows"),
+            Precision::Bf16 => kernels::bf16_to_f32_slice(src, dst),
+            Precision::F16 => kernels::f16_to_f32_slice(src, dst),
+        }
+    }
+}
 
 /// Storage counters of a [`FactorStore`], all in bytes unless noted.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -195,17 +276,26 @@ impl Checkout<'_> {
 
 /// Ownership abstraction for one side's factor working copy: `rows()`
 /// row-major rows of `cols()` f32 columns, accessed through pinned
-/// [`Checkout`]s of contiguous level ranges.
+/// [`Checkout`]s of contiguous level ranges.  Rows may rest in a
+/// narrower element format ([`FactorStore::precision`]); the f32 access
+/// surface is unchanged — writes narrow (round-to-nearest-even), reads
+/// widen.
 ///
 /// Implementations must hand back bit-identical rows regardless of where
 /// they live — the refinement engine relies on this for the spilled ==
-/// resident equivalence.
+/// resident equivalence (which holds per precision: same stored bits,
+/// same decode).
 pub trait FactorStore: Send + Sync {
     /// Number of factor rows (`n`).
     fn rows(&self) -> usize;
 
     /// Factor width (`d + 2` for squared Euclidean, `t` for Indyk).
     fn cols(&self) -> usize;
+
+    /// Stored element format ([`Precision::F32`] unless the store was
+    /// built with a `*_with` constructor).  All byte accounting — stats,
+    /// cache budgets, spill-file size — is in this width.
+    fn precision(&self) -> Precision;
 
     /// Write `data.len()/cols()` rows starting at `start_row` (initial
     /// population by the chunked factor builders — tiles go straight into
@@ -278,32 +368,87 @@ pub trait FactorStore: Send + Sync {
 // ResidentStore
 // ---------------------------------------------------------------------------
 
-/// The zero-cost [`FactorStore`]: factor rows live in one
-/// [`RangeShared`] buffer (exactly the pre-store behaviour), and a
-/// checkout is a pointer into it — no copy, no I/O, `release` is a no-op.
+/// The in-memory [`FactorStore`]: factor rows live in one
+/// [`RangeShared`] buffer.  At [`Precision::F32`] (the default) this is
+/// exactly the pre-store behaviour — zero-cost: a checkout is a pointer
+/// into the buffer, no copy, no I/O, `release` is a no-op.  At bf16/f16
+/// the buffer holds encoded `u16` rows: writes narrow on the way in,
+/// checkouts decode the lane windows packed into f32 arena scratch, and
+/// a dirty release re-encodes in place (round-to-nearest-even).
 pub struct ResidentStore {
     rows: usize,
     k: usize,
-    buf: RangeShared<f32>,
+    prec: Precision,
+    buf: ResidentBuf,
     pinned: AtomicUsize,
     pinned_peak: AtomicUsize,
 }
 
+/// Stored representation of a [`ResidentStore`]: raw f32 rows, or rows
+/// encoded in a 2-byte format ([`Precision::Bf16`]/[`Precision::F16`]).
+enum ResidentBuf {
+    F32(RangeShared<f32>),
+    U16(RangeShared<u16>),
+}
+
+impl ResidentBuf {
+    /// The borrow registry guarding the buffer.  Both representations
+    /// index claims by element, so range arithmetic is width-agnostic.
+    fn registry(&self) -> &guard::Registry {
+        match self {
+            ResidentBuf::F32(b) => b.guard_registry(),
+            ResidentBuf::U16(b) => b.guard_registry(),
+        }
+    }
+}
+
 impl ResidentStore {
-    /// Take ownership of prebuilt factors.
+    /// Take ownership of prebuilt factors (stored as raw f32).
     pub fn from_mat(m: Mat) -> ResidentStore {
+        ResidentStore::from_mat_with(m, Precision::F32)
+    }
+
+    /// Take ownership of prebuilt factors, narrowing them into `prec`'s
+    /// stored format (round-to-nearest-even for bf16/f16).
+    pub fn from_mat_with(m: Mat, prec: Precision) -> ResidentStore {
+        let (rows, k) = (m.rows, m.cols);
+        let buf = match prec {
+            Precision::F32 => ResidentBuf::F32(RangeShared::new(m.data)),
+            _ => {
+                let mut enc = vec![0u16; m.data.len()];
+                prec.encode(&m.data, &mut enc);
+                ResidentBuf::U16(RangeShared::new(enc))
+            }
+        };
         ResidentStore {
-            rows: m.rows,
-            k: m.cols,
-            buf: RangeShared::new(m.data),
+            rows,
+            k,
+            prec,
+            buf,
             pinned: AtomicUsize::new(0),
             pinned_peak: AtomicUsize::new(0),
         }
     }
 
-    /// An all-zero store for the chunked builders to fill.
+    /// An all-zero f32 store for the chunked builders to fill.
     pub fn zeroed(rows: usize, k: usize) -> ResidentStore {
-        ResidentStore::from_mat(Mat::zeros(rows, k))
+        ResidentStore::zeroed_with(rows, k, Precision::F32)
+    }
+
+    /// An all-zero store in `prec`'s format (+0.0 encodes as all-zero
+    /// bits in every supported format, so no conversion pass runs).
+    pub fn zeroed_with(rows: usize, k: usize, prec: Precision) -> ResidentStore {
+        match prec {
+            Precision::F32 => ResidentStore::from_mat_with(Mat::zeros(rows, k), prec),
+            _ => ResidentStore {
+                rows,
+                k,
+                prec,
+                buf: ResidentBuf::U16(RangeShared::new(vec![0u16; rows * k])),
+                pinned: AtomicUsize::new(0),
+                pinned_peak: AtomicUsize::new(0),
+            },
+        }
     }
 }
 
@@ -316,34 +461,48 @@ impl FactorStore for ResidentStore {
         self.k
     }
 
+    fn precision(&self) -> Precision {
+        self.prec
+    }
+
     unsafe fn write_rows(&self, start_row: usize, data: &[f32]) -> io::Result<()> {
         debug_assert_eq!(data.len() % self.k, 0);
+        let (lo, hi) = (start_row * self.k, start_row * self.k + data.len());
         // RAII-scoped (not fire-and-forget) claim: a store write's borrow
         // provably ends when this call returns, so writes separated in
         // time must never conflict — but a live checkout pin over these
         // rows or a concurrent overlapping write panics here.
-        let _claim = self
-            .buf
-            .guard_registry()
-            .scoped_mut(start_row * self.k, start_row * self.k + data.len());
-        // SAFETY: caller promises disjoint concurrent windows (trait
-        // contract, guard-checked above); bounds checked by the slice.
-        unsafe { self.buf.slice_mut_unclaimed(start_row * self.k, start_row * self.k + data.len()) }
-            .copy_from_slice(data);
+        let _claim = self.buf.registry().scoped_mut(lo, hi);
+        match &self.buf {
+            // SAFETY: caller promises disjoint concurrent windows (trait
+            // contract, guard-checked above); bounds checked by the slice.
+            ResidentBuf::F32(buf) => {
+                unsafe { buf.slice_mut_unclaimed(lo, hi) }.copy_from_slice(data)
+            }
+            // encode-on-write: the f32 tile narrows straight into the
+            // stored format, never materializing at f32 width.
+            // SAFETY: as above.
+            ResidentBuf::U16(buf) => {
+                self.prec.encode(data, unsafe { buf.slice_mut_unclaimed(lo, hi) })
+            }
+        }
         Ok(())
     }
 
     unsafe fn read_rows(&self, start_row: usize, out: &mut [f32]) -> io::Result<()> {
         debug_assert_eq!(out.len() % self.k, 0);
-        let _claim = self
-            .buf
-            .guard_registry()
-            .scoped_shared(start_row * self.k, start_row * self.k + out.len());
-        // SAFETY: caller promises no overlapping concurrent writes (trait
-        // contract, guard-checked above); bounds checked by the slice.
-        out.copy_from_slice(unsafe {
-            self.buf.slice_unclaimed(start_row * self.k, start_row * self.k + out.len())
-        });
+        let (lo, hi) = (start_row * self.k, start_row * self.k + out.len());
+        let _claim = self.buf.registry().scoped_shared(lo, hi);
+        match &self.buf {
+            // SAFETY: caller promises no overlapping concurrent writes
+            // (trait contract, guard-checked above); bounds checked by
+            // the slice.
+            ResidentBuf::F32(buf) => out.copy_from_slice(unsafe { buf.slice_unclaimed(lo, hi) }),
+            // SAFETY: as above.
+            ResidentBuf::U16(buf) => {
+                self.prec.decode(unsafe { buf.slice_unclaimed(lo, hi) }, out)
+            }
+        }
         Ok(())
     }
 
@@ -351,74 +510,146 @@ impl FactorStore for ResidentStore {
         &self,
         start_row: usize,
         n_rows: usize,
-        _arena: &ScratchArena,
+        arena: &ScratchArena,
         fill: &mut dyn FnMut(&mut [f32]),
     ) -> io::Result<()> {
-        // copy-free: hand the builder our own row window directly.
-        let _claim = self
-            .buf
-            .guard_registry()
-            .scoped_mut(start_row * self.k, (start_row + n_rows) * self.k);
-        // SAFETY: caller promises disjoint concurrent windows (trait
-        // contract, guard-checked above); bounds checked by the slice.
-        fill(unsafe {
-            self.buf.slice_mut_unclaimed(start_row * self.k, (start_row + n_rows) * self.k)
-        });
-        Ok(())
+        let (lo, hi) = (start_row * self.k, (start_row + n_rows) * self.k);
+        match &self.buf {
+            ResidentBuf::F32(buf) => {
+                // copy-free: hand the builder our own row window directly.
+                let _claim = buf.guard_registry().scoped_mut(lo, hi);
+                // SAFETY: caller promises disjoint concurrent windows
+                // (trait contract, guard-checked above); bounds checked
+                // by the slice.
+                fill(unsafe { buf.slice_mut_unclaimed(lo, hi) });
+                Ok(())
+            }
+            ResidentBuf::U16(_) => {
+                // builders produce f32 rows: stage one tile in arena
+                // scratch and narrow through the write path.
+                let mut tile = arena.take_f32(hi - lo);
+                fill(&mut tile);
+                // SAFETY: forwards this fn's own contract (disjoint
+                // concurrent windows, no live checkout over them).
+                unsafe { self.write_rows(start_row, &tile) }
+            }
+        }
     }
 
     fn checkout<'a>(
         &'a self,
         ranges: &[Range<u32>],
-        _arena: &'a ScratchArena,
+        arena: &'a ScratchArena,
     ) -> io::Result<Checkout<'a>> {
         assert!(!ranges.is_empty(), "empty checkout");
         let lo = ranges.iter().map(|r| r.start).min().unwrap() as usize;
         let hi = ranges.iter().map(|r| r.end).max().unwrap() as usize;
         assert!(hi <= self.rows, "checkout {lo}..{hi} out of 0..{}", self.rows);
+        let k = self.k;
+        let w = self.prec.bytes();
+        // Pinned bytes are in store elements (`w` each) — the transient
+        // f32 decode scratch of a low-precision checkout is owned and
+        // accounted by the arena, not the store.
         let mut bytes = 0usize;
-        let lanes = ranges
-            .iter()
-            .map(|r| {
-                assert!(r.start <= r.end, "inverted range");
-                bytes += (r.end - r.start) as usize * self.k * 4;
-                Lane { start: r.start, rows: r.end - r.start, off_rows: (r.start as usize) - lo }
-            })
-            .collect();
+        let (ptr, len, lanes, dec_buf) = match &self.buf {
+            ResidentBuf::F32(buf) => {
+                let lanes = ranges
+                    .iter()
+                    .map(|r| {
+                        assert!(r.start <= r.end, "inverted range");
+                        bytes += (r.end - r.start) as usize * k * w;
+                        Lane {
+                            start: r.start,
+                            rows: r.end - r.start,
+                            off_rows: (r.start as usize) - lo,
+                        }
+                    })
+                    .collect::<Vec<_>>();
+                // SAFETY: lo·k is in bounds (hi ≤ rows was asserted
+                // above); aliasing is governed by the Checkout accessor
+                // contract.
+                (unsafe { buf.ptr.add(lo * k) }, (hi - lo) * k, lanes, None)
+            }
+            ResidentBuf::U16(buf) => {
+                // low-precision lanes decode packed into f32 arena
+                // scratch (the spill layout); the store's own rows stay
+                // encoded.
+                let total_rows: usize = ranges.iter().map(|r| (r.end - r.start) as usize).sum();
+                let mut dec = arena.take_f32(total_rows * k);
+                let mut lanes = Vec::with_capacity(ranges.len());
+                let mut off = 0usize;
+                for r in ranges {
+                    assert!(r.start <= r.end, "inverted range");
+                    let rows = r.end - r.start;
+                    bytes += rows as usize * k * w;
+                    let (slo, shi) = (r.start as usize * k, r.end as usize * k);
+                    let _claim = buf.guard_registry().scoped_shared(slo, shi);
+                    // SAFETY: no overlapping write may be live (trait
+                    // contract, guard-checked above); bounds checked by
+                    // the slice.
+                    self.prec.decode(
+                        unsafe { buf.slice_unclaimed(slo, shi) },
+                        &mut dec[off * k..(off + rows as usize) * k],
+                    );
+                    lanes.push(Lane { start: r.start, rows, off_rows: off });
+                    off += rows as usize;
+                }
+                let ptr = dec.as_mut_ptr();
+                let len = dec.len();
+                (ptr, len, lanes, Some(dec))
+            }
+        };
         let pinned = self.pinned.fetch_add(bytes, Ordering::Relaxed) + bytes;
         self.pinned_peak.fetch_max(pinned, Ordering::Relaxed);
         // Pin the lane windows (element units) in the buffer's registry:
         // overlapping concurrent checkouts and store writes under a live
         // checkout panic with both sites.
-        let pin = self.buf.guard_registry().pin(
+        let pin = self.buf.registry().pin(
             &ranges
                 .iter()
-                .map(|r| r.start as usize * self.k..r.end as usize * self.k)
+                .map(|r| r.start as usize * k..r.end as usize * k)
                 .collect::<Vec<_>>(),
         );
         Ok(Checkout {
-            // SAFETY: lo·k is in bounds (hi ≤ rows was asserted above);
-            // aliasing is governed by the Checkout accessor contract.
-            ptr: unsafe { self.buf.ptr.add(lo * self.k) },
-            len: (hi - lo) * self.k,
-            k: self.k,
+            ptr,
+            len,
+            k,
             lanes,
             bytes,
-            _buf: None,
+            _buf: dec_buf,
             span: guard::Registry::new("Checkout"),
             pin,
         })
     }
 
-    fn release(&self, co: Checkout<'_>, _dirty: bool) -> io::Result<()> {
-        // in-place mutation already landed in the shared buffer
+    fn release(&self, co: Checkout<'_>, dirty: bool) -> io::Result<()> {
+        if let ResidentBuf::U16(buf) = &self.buf {
+            if dirty {
+                // the re-index mutated the f32 decode scratch, not the
+                // store: narrow each lane back (round-to-nearest-even).
+                for (i, lane) in co.lanes.iter().enumerate() {
+                    // SAFETY: release owns `co` exclusively; no borrows
+                    // remain.
+                    let data = unsafe { co.lane(i) };
+                    let slo = lane.start as usize * self.k;
+                    // SAFETY: this checkout's live pin covers the window,
+                    // excluding every other writer (overlapping checkouts
+                    // and store writes panic against pins), and `release`
+                    // holds `co` exclusively — no aliasing borrow exists;
+                    // bounds checked by the slice.
+                    self.prec
+                        .encode(data, unsafe { buf.slice_mut_unclaimed(slo, slo + data.len()) });
+                }
+            }
+        }
+        // f32: in-place mutation already landed in the shared buffer
         self.pinned.fetch_sub(co.bytes, Ordering::Relaxed);
         co.pin.release();
         Ok(())
     }
 
     fn stats(&self) -> StoreStats {
-        let bytes = self.rows * self.k * 4;
+        let bytes = self.rows * self.k * self.prec.bytes();
         StoreStats {
             resident_bytes: bytes,
             resident_peak: bytes,
@@ -429,7 +660,15 @@ impl FactorStore for ResidentStore {
     }
 
     fn into_mat(self: Box<Self>) -> io::Result<Mat> {
-        Ok(Mat::from_vec(self.rows, self.k, self.buf.into_inner()))
+        match self.buf {
+            ResidentBuf::F32(buf) => Ok(Mat::from_vec(self.rows, self.k, buf.into_inner())),
+            ResidentBuf::U16(buf) => {
+                let enc = buf.into_inner();
+                let mut m = Mat::zeros(self.rows, self.k);
+                self.prec.decode(&enc, &mut m.data);
+                Ok(m)
+            }
+        }
     }
 }
 
@@ -453,14 +692,45 @@ fn f32s_as_bytes_mut(v: &mut [f32]) -> &mut [u8] {
     unsafe { std::slice::from_raw_parts_mut(v.as_mut_ptr().cast(), v.len() * 4) }
 }
 
+#[inline]
+fn u16s_as_bytes(v: &[u16]) -> &[u8] {
+    // SAFETY: u16 has no padding and alignment ≥ u8; the spill file is
+    // process-private native-endian scratch, never an interchange format.
+    unsafe { std::slice::from_raw_parts(v.as_ptr().cast(), v.len() * 2) }
+}
+
+#[inline]
+fn u16s_as_bytes_mut(v: &mut [u16]) -> &mut [u8] {
+    // SAFETY: as above; any bit pattern is a valid u16.
+    unsafe { std::slice::from_raw_parts_mut(v.as_mut_ptr().cast(), v.len() * 2) }
+}
+
+/// A cached shard's payload, in the store's element format (encoded
+/// `u16` for bf16/f16 — cache hits decode, exactly like file reads).
+#[derive(Clone)]
+enum ShardBuf {
+    F32(std::sync::Arc<[f32]>),
+    U16(std::sync::Arc<[u16]>),
+}
+
+impl ShardBuf {
+    /// Stored bytes (true element width).
+    fn bytes(&self) -> usize {
+        match self {
+            ShardBuf::F32(b) => b.len() * 4,
+            ShardBuf::U16(b) => b.len() * 2,
+        }
+    }
+}
+
 /// One cached shard: a contiguous level range released by a dirty
 /// checkout, kept resident until the LRU budget pushes it out.  The
-/// buffer is an `Arc` so checkout hits can clone the handle under the
-/// cache lock and memcpy outside it.
+/// buffer is refcounted so checkout hits can clone the handle under the
+/// cache lock and copy/decode outside it.
 struct Shard {
     start: u32,
     rows: u32,
-    buf: std::sync::Arc<[f32]>,
+    buf: ShardBuf,
     last_use: u64,
 }
 
@@ -487,6 +757,7 @@ pub struct SpillStore {
     path: PathBuf,
     rows: usize,
     k: usize,
+    prec: Precision,
     budget: usize,
     file: PositionedFile,
     state: Mutex<SpillState>,
@@ -499,26 +770,41 @@ pub struct SpillStore {
 }
 
 impl SpillStore {
-    /// Create an all-zero `rows × k` store backed by a fresh scratch file
-    /// under `dir` (created if absent), with a resident shard cache capped
-    /// at `budget_bytes` (0 disables caching — every checkout reads the
-    /// file).
+    /// Create an all-zero `rows × k` f32 store backed by a fresh scratch
+    /// file under `dir` (created if absent), with a resident shard cache
+    /// capped at `budget_bytes` (0 disables caching — every checkout
+    /// reads the file).
     pub fn create(
         dir: impl AsRef<Path>,
         rows: usize,
         k: usize,
         budget_bytes: usize,
     ) -> io::Result<SpillStore> {
+        SpillStore::create_with(dir, rows, k, budget_bytes, Precision::F32)
+    }
+
+    /// As [`SpillStore::create`], with rows stored in `prec`'s element
+    /// format: the file, the shard cache, and every byte counter are in
+    /// the true stored width, so a bf16 store spills and caches half the
+    /// bytes of an f32 one.
+    pub fn create_with(
+        dir: impl AsRef<Path>,
+        rows: usize,
+        k: usize,
+        budget_bytes: usize,
+        prec: Precision,
+    ) -> io::Result<SpillStore> {
         let dir = dir.as_ref();
         std::fs::create_dir_all(dir)?;
         let id = SPILL_FILE_ID.fetch_add(1, Ordering::Relaxed);
         let path = dir.join(format!("hiref-factors-{}-{id}.spill", std::process::id()));
         let file = OpenOptions::new().read(true).write(true).create_new(true).open(&path)?;
-        file.set_len((rows * k * 4) as u64)?;
+        file.set_len((rows * k * prec.bytes()) as u64)?;
         Ok(SpillStore {
             path,
             rows,
             k,
+            prec,
             budget: budget_bytes,
             file: PositionedFile::new(file),
             state: Mutex::new(SpillState::default()),
@@ -543,6 +829,15 @@ impl SpillStore {
     fn write_at(&self, offset: u64, bytes: &[u8]) -> io::Result<()> {
         self.file.write_at(offset, bytes)
     }
+
+    /// Write already-encoded low-precision rows at `start_row` (row-unit
+    /// guard claim; byte accounting in the stored width).
+    fn write_encoded(&self, start_row: usize, enc: &[u16]) -> io::Result<()> {
+        let _claim = self.guard.scoped_mut(start_row, start_row + enc.len() / self.k);
+        self.write_at((start_row * self.k * 2) as u64, u16s_as_bytes(enc))?;
+        self.bytes_written.fetch_add(enc.len() * 2, Ordering::Relaxed);
+        Ok(())
+    }
 }
 
 impl Drop for SpillStore {
@@ -560,9 +855,20 @@ impl FactorStore for SpillStore {
         self.k
     }
 
+    fn precision(&self) -> Precision {
+        self.prec
+    }
+
     unsafe fn write_rows(&self, start_row: usize, data: &[f32]) -> io::Result<()> {
         debug_assert_eq!(data.len() % self.k, 0);
         assert!(start_row * self.k + data.len() <= self.rows * self.k, "write out of bounds");
+        if self.prec != Precision::F32 {
+            // encode-on-write (cold path — the chunked builders come in
+            // through `fill_rows_with`, which stages in the arena).
+            let mut enc = vec![0u16; data.len()];
+            self.prec.encode(data, &mut enc);
+            return self.write_encoded(start_row, &enc);
+        }
         // Row-unit RAII claim: a concurrent overlapping write, or a write
         // under a live checkout pin of these rows, panics here (the file
         // itself would not corrupt, but the cache/checkout coherence
@@ -577,9 +883,39 @@ impl FactorStore for SpillStore {
         debug_assert_eq!(out.len() % self.k, 0);
         assert!(start_row * self.k + out.len() <= self.rows * self.k, "read out of bounds");
         let _claim = self.guard.scoped_shared(start_row, start_row + out.len() / self.k);
-        self.read_at((start_row * self.k * 4) as u64, f32s_as_bytes_mut(out))?;
+        match self.prec {
+            Precision::F32 => {
+                self.read_at((start_row * self.k * 4) as u64, f32s_as_bytes_mut(out))?
+            }
+            prec => {
+                let mut enc = vec![0u16; out.len()];
+                self.read_at((start_row * self.k * 2) as u64, u16s_as_bytes_mut(&mut enc))?;
+                prec.decode(&enc, out);
+            }
+        }
         self.reads.fetch_add(1, Ordering::Relaxed);
         Ok(())
+    }
+
+    unsafe fn fill_rows_with(
+        &self,
+        start_row: usize,
+        n_rows: usize,
+        arena: &ScratchArena,
+        fill: &mut dyn FnMut(&mut [f32]),
+    ) -> io::Result<()> {
+        let mut buf = arena.take_f32(n_rows * self.k);
+        fill(&mut buf);
+        if self.prec == Precision::F32 {
+            // SAFETY: forwards this fn's own contract (disjoint
+            // concurrent windows, no live checkout over them).
+            return unsafe { self.write_rows(start_row, &buf) };
+        }
+        // encode-on-write without the per-tile Vec of the write_rows cold
+        // path: the narrowed tile stages in pooled arena scratch too.
+        let mut enc = arena.take_u16(buf.len());
+        self.prec.encode(&buf, &mut enc);
+        self.write_encoded(start_row, &enc)
     }
 
     fn checkout<'a>(
@@ -589,13 +925,16 @@ impl FactorStore for SpillStore {
     ) -> io::Result<Checkout<'a>> {
         assert!(!ranges.is_empty(), "empty checkout");
         let k = self.k;
+        let w = self.prec.bytes();
         let total_rows: usize = ranges.iter().map(|r| (r.end - r.start) as usize).sum();
         let mut guard = arena.take_f32(total_rows * k);
-        let bytes = total_rows * k * 4;
+        // pinned bytes in store elements — the f32 decode scratch of a
+        // low-precision checkout is the arena's to account
+        let bytes = total_rows * k * w;
         let mut lanes = Vec::with_capacity(ranges.len());
         let mut misses: Vec<(usize, u32, u32)> = Vec::new();
         // (dest element offset, shard handle, source element offset, len)
-        let mut hits: Vec<(usize, std::sync::Arc<[f32]>, usize, usize)> = Vec::new();
+        let mut hits: Vec<(usize, ShardBuf, usize, usize)> = Vec::new();
         {
             let mut st = self.state.lock().unwrap();
             st.tick += 1;
@@ -633,12 +972,32 @@ impl FactorStore for SpillStore {
         // positional and the shard handles are refcounted, so concurrent
         // per-block checkouts don't serialise on the cache
         for (dst, buf, so, len) in hits {
-            guard[dst..dst + len].copy_from_slice(&buf[so..so + len]);
+            match &buf {
+                ShardBuf::F32(b) => guard[dst..dst + len].copy_from_slice(&b[so..so + len]),
+                // cached shards hold encoded elements: widen straight
+                // into the packed checkout window
+                ShardBuf::U16(b) => self.prec.decode(&b[so..so + len], &mut guard[dst..dst + len]),
+            }
             self.hits.fetch_add(1, Ordering::Relaxed);
         }
         for (off, start, rows) in misses {
-            let dst = &mut guard[off * k..(off + rows as usize) * k];
-            if let Err(e) = self.read_at((start as usize * k * 4) as u64, f32s_as_bytes_mut(dst)) {
+            let len = rows as usize * k;
+            let dst = &mut guard[off * k..off * k + len];
+            let res = match self.prec {
+                Precision::F32 => {
+                    self.read_at((start as usize * k * 4) as u64, f32s_as_bytes_mut(dst))
+                }
+                prec => {
+                    let mut enc = arena.take_u16(len);
+                    let res =
+                        self.read_at((start as usize * k * 2) as u64, u16s_as_bytes_mut(&mut enc));
+                    if res.is_ok() {
+                        prec.decode(&enc, dst);
+                    }
+                    res
+                }
+            };
+            if let Err(e) = res {
                 self.state.lock().unwrap().pinned -= bytes;
                 return Err(e);
             }
@@ -665,6 +1024,7 @@ impl FactorStore for SpillStore {
 
     fn release(&self, co: Checkout<'_>, dirty: bool) -> io::Result<()> {
         let k = self.k;
+        let w = self.prec.bytes();
         let mut write_err = None;
         // Only a suffix of the released lanes can survive this release's
         // own LRU churn (inserts share one tick; earlier inserts are the
@@ -674,7 +1034,7 @@ impl FactorStore for SpillStore {
         if dirty {
             let mut acc = 0usize;
             for (i, lane) in co.lanes.iter().enumerate().rev() {
-                let lane_bytes = lane.rows as usize * k * 4;
+                let lane_bytes = lane.rows as usize * k * w;
                 if lane_bytes == 0 || acc + lane_bytes > self.budget {
                     break;
                 }
@@ -683,18 +1043,33 @@ impl FactorStore for SpillStore {
             }
         }
         // staged outside the lock: (lane index, shard copy)
-        let mut staged: Vec<(usize, std::sync::Arc<[f32]>)> = Vec::new();
+        let mut staged: Vec<(usize, ShardBuf)> = Vec::new();
         if dirty {
             // write-through: the file is always authoritative, which makes
             // cache eviction free and shard lookups coherent
             for (i, lane) in co.lanes.iter().enumerate() {
                 // SAFETY: release owns `co` exclusively; no borrows remain.
                 let data = unsafe { co.lane(i) };
-                match self.write_at((lane.start as usize * k * 4) as u64, f32s_as_bytes(data)) {
+                let offset = (lane.start as usize * k * w) as u64;
+                // low precision narrows once (round-to-nearest-even): the
+                // file write and the cached shard share the encoding
+                let (res, buf) = match self.prec {
+                    Precision::F32 => (
+                        self.write_at(offset, f32s_as_bytes(data)),
+                        (i >= stage_from).then(|| ShardBuf::F32(std::sync::Arc::from(data))),
+                    ),
+                    prec => {
+                        let mut enc = vec![0u16; data.len()];
+                        prec.encode(data, &mut enc);
+                        let res = self.write_at(offset, u16s_as_bytes(&enc));
+                        (res, (i >= stage_from).then(|| ShardBuf::U16(std::sync::Arc::from(enc))))
+                    }
+                };
+                match res {
                     Ok(()) => {
-                        self.bytes_written.fetch_add(data.len() * 4, Ordering::Relaxed);
-                        if i >= stage_from {
-                            staged.push((i, std::sync::Arc::from(data)));
+                        self.bytes_written.fetch_add(data.len() * w, Ordering::Relaxed);
+                        if let Some(buf) = buf {
+                            staged.push((i, buf));
                         }
                     }
                     Err(e) => {
@@ -719,7 +1094,7 @@ impl FactorStore for SpillStore {
                     s.start < l.start + l.rows && l.start < s.start + s.rows
                 });
                 if overlaps {
-                    freed += s.buf.len() * 4;
+                    freed += s.buf.bytes();
                 }
                 !overlaps
             });
@@ -730,7 +1105,7 @@ impl FactorStore for SpillStore {
             let tick = st.tick;
             for (i, buf) in staged {
                 let lane = &co.lanes[i];
-                let lane_bytes = lane.rows as usize * k * 4;
+                let lane_bytes = lane.rows as usize * k * w;
                 while st.cached + lane_bytes > self.budget {
                     let victim = st
                         .shards
@@ -741,7 +1116,7 @@ impl FactorStore for SpillStore {
                     match victim {
                         Some(v) => {
                             let s = st.shards.swap_remove(v);
-                            st.cached -= s.buf.len() * 4;
+                            st.cached -= s.buf.bytes();
                         }
                         None => break,
                     }
@@ -781,7 +1156,14 @@ impl FactorStore for SpillStore {
 
     fn into_mat(self: Box<Self>) -> io::Result<Mat> {
         let mut m = Mat::zeros(self.rows, self.k);
-        self.read_at(0, f32s_as_bytes_mut(&mut m.data))?;
+        match self.prec {
+            Precision::F32 => self.read_at(0, f32s_as_bytes_mut(&mut m.data))?,
+            prec => {
+                let mut enc = vec![0u16; self.rows * self.k];
+                self.read_at(0, u16s_as_bytes_mut(&mut enc))?;
+                prec.decode(&enc, &mut m.data);
+            }
+        }
         Ok(m)
     }
 }
@@ -1123,6 +1505,167 @@ mod tests {
             res.release(a, false).unwrap();
             sp.release(b, false).unwrap();
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn to_bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|v| v.to_bits()).collect()
+    }
+
+    /// Reference narrowing round-trip: what a store at `prec` must hand
+    /// back after absorbing `xs`.
+    fn narrowed(prec: Precision, xs: &[f32]) -> Vec<f32> {
+        let mut enc = vec![0u16; xs.len()];
+        prec.encode(xs, &mut enc);
+        let mut dec = vec![0.0f32; xs.len()];
+        prec.decode(&enc, &mut dec);
+        dec
+    }
+
+    #[test]
+    fn low_precision_resident_round_trips_through_the_convert_kernels() {
+        for prec in [Precision::Bf16, Precision::F16] {
+            let m = rand_mat(11, 20, 3);
+            let want = narrowed(prec, &m.data);
+            let store = ResidentStore::zeroed_with(20, 3, prec);
+            assert_eq!(store.precision(), prec);
+            fill(&store, &m);
+            // stats are in the true element width
+            assert_eq!(store.stats().resident_bytes, 20 * 3 * 2);
+            let mut out = vec![0.0f32; 4 * 3];
+            // SAFETY: single-threaded — no concurrent writes or checkout.
+            unsafe { store.read_rows(5, &mut out) }.unwrap();
+            assert_eq!(to_bits(&out), to_bits(&want[15..27]));
+            let arena = ScratchArena::new(1);
+            let co = store.checkout(&[2..5, 9..12], &arena).unwrap();
+            // low-precision lanes are packed decode copies, not aliases
+            assert_eq!(co.lane_row(1), 3);
+            // SAFETY: no exclusive borrow is live anywhere in the span.
+            assert_eq!(to_bits(unsafe { co.lane(0) }), to_bits(&want[2 * 3..5 * 3]));
+            // SAFETY: as above.
+            assert_eq!(to_bits(unsafe { co.lane(1) }), to_bits(&want[9 * 3..12 * 3]));
+            assert_eq!(store.stats().pinned_bytes, 6 * 3 * 2);
+            store.release(co, false).unwrap();
+            assert!(arena.peak_bytes() > 0, "low-precision decode must stage in the arena");
+            let got = Box::new(store).into_mat().unwrap();
+            assert_eq!(to_bits(&got.data), to_bits(&want));
+        }
+    }
+
+    #[test]
+    fn dirty_release_reencodes_low_precision_lanes() {
+        for prec in [Precision::Bf16, Precision::F16] {
+            let m = rand_mat(12, 10, 2);
+            let store = ResidentStore::from_mat_with(m.clone(), prec);
+            let arena = ScratchArena::new(1);
+            let co = store.checkout(&[3..6], &arena).unwrap();
+            // SAFETY: the only live borrow of the lane (single-threaded).
+            unsafe { co.lane_mut(0) }.iter_mut().for_each(|v| *v = 0.1);
+            store.release(co, true).unwrap();
+            let got = Box::new(store).into_mat().unwrap();
+            // 0.1 is inexact in both formats: the store must hold its RNE
+            // narrowing, not the f32 value
+            let enc01 = narrowed(prec, &[0.1])[0];
+            assert!(enc01 != 0.1);
+            assert!(got.data[6..12].iter().all(|&v| v.to_bits() == enc01.to_bits()));
+            // untouched rows keep their original encoding
+            assert_eq!(to_bits(&got.data[..6]), to_bits(&narrowed(prec, &m.data[..6])));
+        }
+    }
+
+    #[test]
+    fn release_without_mutation_never_changes_stored_bits() {
+        // decode → re-encode is the identity on stored values (tested
+        // exhaustively at the kernel level), so checkout/release cycles —
+        // clean or dirty — must be idempotent on the stored bits.
+        for prec in [Precision::Bf16, Precision::F16] {
+            let m = rand_mat(13, 16, 2);
+            let store = ResidentStore::from_mat_with(m.clone(), prec);
+            let want = narrowed(prec, &m.data);
+            let arena = ScratchArena::new(1);
+            for dirty in [false, true] {
+                let co = store.checkout(&[0..16], &arena).unwrap();
+                store.release(co, dirty).unwrap();
+            }
+            let got = Box::new(store).into_mat().unwrap();
+            assert_eq!(to_bits(&got.data), to_bits(&want));
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "file-backed: spill files need real file I/O")]
+    fn spill_and_resident_agree_bitwise_at_every_precision() {
+        for prec in [Precision::F32, Precision::Bf16, Precision::F16] {
+            let dir = tmp_dir(prec.as_str());
+            let m = rand_mat(14, 48, 5);
+            let res = ResidentStore::from_mat_with(m.clone(), prec);
+            let sp = SpillStore::create_with(&dir, 48, 5, 64, prec).unwrap();
+            fill(&sp, &m);
+            let arena = ScratchArena::new(1);
+            for ranges in [vec![0u32..48], vec![3..9, 9..15, 40..48]] {
+                let a = res.checkout(&ranges, &arena).unwrap();
+                let b = sp.checkout(&ranges, &arena).unwrap();
+                for l in 0..ranges.len() {
+                    // SAFETY: no exclusive borrow is live in either span.
+                    let (la, lb) = unsafe { (a.lane(l), b.lane(l)) };
+                    assert_eq!(to_bits(la), to_bits(lb), "{} lane {l} diverges", prec.as_str());
+                }
+                // dirty releases on identical data keep them in lockstep
+                res.release(a, true).unwrap();
+                sp.release(b, true).unwrap();
+            }
+            let ga = Box::new(res).into_mat().unwrap();
+            let gb = Box::new(sp).into_mat().unwrap();
+            assert_eq!(to_bits(&ga.data), to_bits(&gb.data));
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "file-backed: spill files need real file I/O")]
+    fn spill_byte_accounting_uses_true_element_width() {
+        let dir = tmp_dir("width");
+        let n = 16usize;
+        let k = 4usize;
+        let m = rand_mat(15, n, k);
+        let store = SpillStore::create_with(&dir, n, k, 1 << 20, Precision::Bf16).unwrap();
+        assert_eq!(store.precision(), Precision::Bf16);
+        fill(&store, &m);
+        assert_eq!(store.stats().spill_bytes_written, n * k * 2);
+        // the file itself is laid out at 2 bytes/element
+        assert_eq!(std::fs::metadata(store.path()).unwrap().len(), (n * k * 2) as u64);
+        let arena = ScratchArena::new(1);
+        let co = store.checkout(&[0..8], &arena).unwrap();
+        assert_eq!(store.stats().pinned_bytes, 8 * k * 2);
+        store.release(co, true).unwrap();
+        let st = store.stats();
+        assert_eq!(st.pinned_bytes, 0);
+        assert_eq!(st.spill_bytes_written, n * k * 2 + 8 * k * 2);
+        // the re-admitted shard is cached at encoded width
+        assert_eq!(st.resident_bytes, 8 * k * 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "file-backed: spill files need real file I/O")]
+    fn low_precision_cache_hits_decode_the_same_bits_as_disk() {
+        let dir = tmp_dir("hitdec");
+        let m = rand_mat(16, 24, 3);
+        let store = SpillStore::create_with(&dir, 24, 3, 1 << 20, Precision::F16).unwrap();
+        fill(&store, &m);
+        let arena = ScratchArena::new(1);
+        // miss: decoded from the file
+        let co = store.checkout(&[4..12], &arena).unwrap();
+        // SAFETY: no exclusive borrow is live anywhere in the span.
+        let from_disk = unsafe { co.lane(0) }.to_vec();
+        store.release(co, true).unwrap();
+        // hit: decoded from the cached (still-encoded) shard
+        let hits0 = store.stats().cache_hits;
+        let co = store.checkout(&[4..12], &arena).unwrap();
+        // SAFETY: as above.
+        assert_eq!(to_bits(unsafe { co.lane(0) }), to_bits(&from_disk));
+        store.release(co, false).unwrap();
+        assert_eq!(store.stats().cache_hits, hits0 + 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -149,6 +149,7 @@ pub fn serve(cfg: ServeConfig) -> Result<ServerHandle, SolveError> {
         sessions: SessionCache::new(
             cfg.session_budget,
             cfg.session_spill_dir.clone(),
+            cfg.solver.factor_precision,
             Arc::clone(&metrics),
         ),
         micro: Arc::new(Microbatcher::new(cfg.micro_window, threads, Arc::clone(&metrics))),
@@ -510,8 +511,15 @@ fn session_key(hx: u64, hy: u64, cfg: &HiRefConfig) -> u64 {
         CostKind::Euclidean => 1u64,
         CostKind::SqEuclidean => 2u64,
     };
+    // the stored element format changes the archived bits, so two servers'
+    // worth of configs must never share a session
+    let prec = match cfg.factor_precision {
+        crate::pool::Precision::F32 => 0u64,
+        crate::pool::Precision::Bf16 => 1u64,
+        crate::pool::Precision::F16 => 2u64,
+    };
     let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for w in [hx, hy, kind, cfg.indyk_width as u64, cfg.seed] {
+    for w in [hx, hy, kind, cfg.indyk_width as u64, cfg.seed, prec] {
         for &b in &w.to_le_bytes() {
             h = (h ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3);
         }
@@ -577,6 +585,9 @@ mod tests {
         let mut seeded = base.clone();
         seeded.seed = 7;
         assert_ne!(k0, session_key(1, 2, &seeded));
+        let mut narrowed = base.clone();
+        narrowed.factor_precision = crate::pool::Precision::Bf16;
+        assert_ne!(k0, session_key(1, 2, &narrowed), "precision changes the archived bits");
         let mut lrot_only = base;
         lrot_only.lrot.outer += 5;
         assert_eq!(k0, session_key(1, 2, &lrot_only), "LROT params don't touch factors");

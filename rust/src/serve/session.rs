@@ -29,7 +29,7 @@ use crate::api::SolveError;
 use crate::data::stream::{content_hash, DatasetSource, InMemorySource};
 use crate::data::BinFileSource;
 use crate::linalg::Mat;
-use crate::pool::{FactorStore, ResidentStore, ScratchArena, SpillStore};
+use crate::pool::{FactorStore, Precision, ResidentStore, ScratchArena, SpillStore};
 
 // ---------------------------------------------------------------------------
 // DatasetRegistry
@@ -192,19 +192,29 @@ pub struct SessionCache {
     inner: Mutex<Inner>,
     budget_bytes: usize,
     spill_dir: Option<PathBuf>,
+    precision: Precision,
     metrics: Arc<ServeMetrics>,
 }
 
 impl SessionCache {
     /// `budget_bytes` caps archived factor bytes (RAM for resident
     /// archives, disk when `spill_dir` routes them to scratch files); at
-    /// least the most recent session is always kept.
+    /// least the most recent session is always kept.  Archives hold
+    /// elements at `precision` and the budget charges that true width, so
+    /// a bf16 server fits twice the pairs of an f32 one.
     pub fn new(
         budget_bytes: usize,
         spill_dir: Option<PathBuf>,
+        precision: Precision,
         metrics: Arc<ServeMetrics>,
     ) -> SessionCache {
-        SessionCache { inner: Mutex::new(Inner::default()), budget_bytes, spill_dir, metrics }
+        SessionCache {
+            inner: Mutex::new(Inner::default()),
+            budget_bytes,
+            spill_dir,
+            precision,
+            metrics,
+        }
     }
 
     /// Fetch the factors for `key`, building them with `build` on a cold
@@ -230,12 +240,21 @@ impl SessionCache {
         self.metrics.session_misses.fetch_add(1, Ordering::Relaxed);
         self.metrics.factor_builds.fetch_add(1, Ordering::Relaxed);
         let (fu, fv) = build()?;
-        let bytes = (fu.data.len() + fv.data.len()) * std::mem::size_of::<f32>();
+        // the budget charges what the archive actually holds: 2-byte
+        // elements at bf16/f16, so half the bytes per session
+        let bytes = (fu.data.len() + fv.data.len()) * self.precision.bytes();
         let session = Session {
             fu: self.archive(&fu)?,
             fv: self.archive(&fv)?,
             bytes,
             last_use: tick,
+        };
+        // Low precision narrows on archive, so hand the cold request the
+        // decoded bits too — every warm hit then replays the cold solve
+        // exactly (the per-precision bit-identity invariant).
+        let (fu, fv) = match self.precision {
+            Precision::F32 => (fu, fv),
+            _ => (materialise(session.fu.as_ref())?, materialise(session.fv.as_ref())?),
         };
         inner.bytes += bytes;
         inner.map.insert(key, session);
@@ -246,11 +265,11 @@ impl SessionCache {
     /// Copy a freshly built factor matrix into its archive form.
     fn archive(&self, m: &Mat) -> Result<Box<dyn FactorStore>, SolveError> {
         match &self.spill_dir {
-            None => Ok(Box::new(ResidentStore::from_mat(m.clone()))),
+            None => Ok(Box::new(ResidentStore::from_mat_with(m.clone(), self.precision))),
             Some(dir) => {
                 // Budget 0: the archive is a pure file — warm hits read it
                 // back, so resident memory stays O(1) per idle session.
-                let store = SpillStore::create(dir, m.rows, m.cols, 0)?;
+                let store = SpillStore::create_with(dir, m.rows, m.cols, 0, self.precision)?;
                 // SAFETY: the store was just created; no checkout exists.
                 unsafe { store.write_rows(0, &m.data)? };
                 Ok(Box::new(store))
@@ -322,7 +341,11 @@ mod tests {
     }
 
     fn cache(budget: usize, spill: Option<PathBuf>) -> SessionCache {
-        SessionCache::new(budget, spill, Arc::new(ServeMetrics::default()))
+        cache_at(budget, spill, Precision::F32)
+    }
+
+    fn cache_at(budget: usize, spill: Option<PathBuf>, prec: Precision) -> SessionCache {
+        SessionCache::new(budget, spill, prec, Arc::new(ServeMetrics::default()))
     }
 
     #[test]
@@ -380,6 +403,56 @@ mod tests {
         assert!(st.spill_bytes_written >= 2 * 17 * 5 * 4, "archives hit the spill file");
         assert!(st.spill_reads > 0, "warm hit read the spill file");
         assert_eq!(st.pinned_bytes, 0);
+        drop(c);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bf16_sessions_charge_half_the_budget_and_stay_self_consistent() {
+        // satellite: the budget charges the true archived element width —
+        // a budget that evicts at two f32 sessions holds two bf16 ones
+        let b = |s: u32| move || Ok((mat(8, 3, s), mat(8, 3, s + 1)));
+        let budget = 2 * 2 * 8 * 3 * 4 - 1; // one byte short of two f32 sessions
+        let f32_cache = cache(budget, None);
+        f32_cache.get_or_build(1, b(10)).unwrap();
+        f32_cache.get_or_build(2, b(20)).unwrap();
+        assert_eq!(f32_cache.stats().sessions, 1, "two f32 sessions exceed the budget");
+        let bf16_cache = cache_at(budget, None, Precision::Bf16);
+        bf16_cache.get_or_build(1, b(10)).unwrap();
+        bf16_cache.get_or_build(2, b(20)).unwrap();
+        let st = bf16_cache.stats();
+        assert_eq!(st.sessions, 2, "half-width archives fit twice the pairs");
+        assert_eq!(st.bytes, 2 * 2 * 8 * 3 * 2);
+        // cold returns the archived (narrowed) bits, so warm == cold
+        let (fu0, fv0, warm0) = bf16_cache.get_or_build(3, b(30)).unwrap();
+        let (fu1, fv1, warm1) = bf16_cache.get_or_build(3, || unreachable!()).unwrap();
+        assert!(!warm0);
+        assert!(warm1);
+        assert_eq!(fu0.data, fu1.data, "warm hit must replay the cold bits");
+        assert_eq!(fv0.data, fv1.data);
+        // and those bits really are quantised, not the builder's f32s
+        let raw = mat(8, 3, 30);
+        assert_ne!(fu0.data, raw.data, "bf16 archive must narrow the factors");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "file-backed: session spill dirs need real file I/O")]
+    fn bf16_spilled_sessions_warm_equals_cold() {
+        let dir =
+            std::env::temp_dir().join(format!("hiref_serve_bf16_{}", std::process::id()));
+        let c = cache_at(usize::MAX, Some(dir.clone()), Precision::Bf16);
+        let fu = mat(17, 5, 3);
+        let fv = mat(17, 5, 4);
+        let (a, b, _) = c.get_or_build(7, || Ok((fu.clone(), fv.clone()))).unwrap();
+        let (a2, b2, warm) = c.get_or_build(7, || unreachable!("must be warm")).unwrap();
+        assert!(warm);
+        assert_eq!(a.data, a2.data);
+        assert_eq!(b.data, b2.data);
+        let st = c.stats();
+        // the spill file holds 2-byte elements
+        assert_eq!(st.bytes, 2 * 17 * 5 * 2);
+        assert!(st.spill_bytes_written >= 2 * 17 * 5 * 2);
+        assert!(st.spill_bytes_written < 2 * 17 * 5 * 4, "archives wrote at f32 width");
         drop(c);
         let _ = std::fs::remove_dir_all(&dir);
     }
