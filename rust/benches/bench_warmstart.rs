@@ -1,0 +1,159 @@
+//! Cluster-warmstart profile: run the same HiRef instance cold (exact
+//! path) and with the top scales cluster-warmstarted, and emit
+//! `BENCH_warmstart.json` (elapsed, per-level native LROT iterations,
+//! final-bijection-cost relative delta and the cold/warm speedup) so the
+//! worth of skipping coarse-scale mirror descent is recorded run over
+//! run.  Asserts the acceptance properties on every run: an explicit
+//! `warmstart_levels = 0` config is bit-identical to the default,
+//! clustered scales run zero LROT iterations, the warm run solves fewer
+//! native iterations overall, and the warm bijection cost stays within
+//! the documented 5% relative tolerance (docs/warmstart.md).
+//!
+//! CI runs this at small `n`; locally:
+//!
+//! ```sh
+//! HIREF_WARM_N=131072 cargo bench --bench bench_warmstart
+//! ```
+
+use hiref::coordinator::hiref::{BackendKind, HiRef, HiRefConfig};
+use hiref::data::synthetic;
+use hiref::pool;
+use hiref::report::{section, timed};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Documented accuracy bound: cluster-warmstarting the coarse scales may
+/// move the final bijection cost by at most this relative amount.
+const COST_REL_TOL: f64 = 0.05;
+
+fn main() {
+    let n = env_usize("HIREF_WARM_N", 131072);
+    let levels = env_usize("HIREF_WARM_LEVELS", 2);
+    let threads = pool::default_threads();
+    section(&format!("bench_warmstart — n = {n}, warmstart_levels = {levels}, threads = {threads}"));
+
+    let (x, y) = synthetic::half_moon_s_curve(n, 0);
+    let cfg = HiRefConfig { backend: BackendKind::Auto, threads, ..Default::default() };
+
+    // cold baseline (one warm-up, then measured)
+    let baseline = HiRef::new(cfg.clone());
+    let _ = baseline.align(&x, &y).expect("warm-up align");
+    let (cold, cold_secs) = timed(|| baseline.align(&x, &y));
+    let cold = cold.expect("cold align");
+    let cold_cost = cold.cost(&x, &y, cfg.cost);
+
+    // hard assert: warmstart off is the same code path as an untouched
+    // config, bit for bit
+    let explicit = HiRef::new(HiRefConfig { warmstart_levels: 0, ..cfg.clone() })
+        .align(&x, &y)
+        .expect("explicit cold align");
+    assert_eq!(explicit.perm, cold.perm, "explicit warmstart-0 diverged from the default");
+    assert_eq!(explicit.x_order, cold.x_order);
+    assert_eq!(explicit.y_order, cold.y_order);
+    assert_eq!(cold.stats.cluster_calls, 0, "the cold path must never cluster");
+
+    // warm run
+    let warm_solver = HiRef::new(HiRefConfig { warmstart_levels: levels, ..cfg.clone() });
+    let _ = warm_solver.align(&x, &y).expect("warm-up align");
+    let (warm, warm_secs) = timed(|| warm_solver.align(&x, &y));
+    let warm = warm.expect("warm align");
+    assert!(warm.is_bijection(), "warmstarted run must still seal a bijection");
+    let warm_cost = warm.cost(&x, &y, cfg.cost);
+    let rel = (warm_cost - cold_cost).abs() / cold_cost.max(1e-9);
+    assert!(
+        rel <= COST_REL_TOL,
+        "warm cost {warm_cost:.6} vs cold {cold_cost:.6}: rel delta {rel:.4} exceeds {COST_REL_TOL}"
+    );
+
+    // the iteration ledger: identical level geometry, clustered scales at
+    // zero native iterations, fewer native iterations overall
+    assert_eq!(cold.stats.level_stats.len(), warm.stats.level_stats.len());
+    let clustered_levels = levels.min(warm.schedule.len());
+    let mut level_entries = Vec::new();
+    for (c, w) in cold.stats.level_stats.iter().zip(&warm.stats.level_stats) {
+        assert_eq!(c.blocks, w.blocks, "level {}: geometry diverged", c.level);
+        assert_eq!(c.lanes, w.lanes, "level {}: geometry diverged", c.level);
+        if w.level < clustered_levels {
+            assert_eq!(w.lrot_iters, 0, "clustered level {} ran LROT", w.level);
+            if c.lanes > 0 {
+                assert!(c.lrot_iters > 0, "cold level {} reported no LROT work", c.level);
+            }
+        }
+        println!(
+            "level {:>2}: lanes = {:>6}, iters cold = {:>8}, warm = {:>8}{}",
+            c.level,
+            c.lanes,
+            c.lrot_iters,
+            w.lrot_iters,
+            if w.warmstarted { "  (warm)" } else { "" },
+        );
+        level_entries.push(format!(
+            concat!(
+                "    {{ \"level\": {}, \"lanes\": {}, \"cold_iters\": {}, ",
+                "\"warm_iters\": {}, \"warmstarted\": {} }}"
+            ),
+            c.level, c.lanes, c.lrot_iters, w.lrot_iters, w.warmstarted,
+        ));
+    }
+    if clustered_levels > 0 {
+        assert!(warm.stats.cluster_calls > 0, "warm run never clustered a lane");
+        assert!(
+            warm.stats.lrot_iters < cold.stats.lrot_iters,
+            "warm run did not reduce native LROT iterations ({} vs {})",
+            warm.stats.lrot_iters,
+            cold.stats.lrot_iters
+        );
+    }
+
+    let speedup = cold_secs / warm_secs.max(1e-9);
+    println!(
+        "cold   elapsed = {:.1} ms, {} native iters, cost = {cold_cost:.4}",
+        cold_secs * 1e3,
+        cold.stats.lrot_iters
+    );
+    println!(
+        "warm   elapsed = {:.1} ms, {} native iters, {} lane clusterings, cost rel delta = {rel:.4}",
+        warm_secs * 1e3,
+        warm.stats.lrot_iters,
+        warm.stats.cluster_calls
+    );
+    println!("speedup = {speedup:.2}x");
+
+    // hand-rolled JSON (the vendored universe has no serde)
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"warmstart\",\n",
+            "  \"n\": {},\n",
+            "  \"threads\": {},\n",
+            "  \"warmstart_levels\": {},\n",
+            "  \"cost_rel_tol\": {},\n",
+            "  \"cold_bit_identical\": true,\n",
+            "  \"cold_elapsed_ms\": {:.3},\n",
+            "  \"warm_elapsed_ms\": {:.3},\n",
+            "  \"speedup\": {:.4},\n",
+            "  \"cold_lrot_iters\": {},\n",
+            "  \"warm_lrot_iters\": {},\n",
+            "  \"warm_cluster_calls\": {},\n",
+            "  \"cost_rel_delta\": {:.6},\n",
+            "  \"levels\": [\n{}\n  ]\n",
+            "}}\n"
+        ),
+        n,
+        threads,
+        levels,
+        COST_REL_TOL,
+        cold_secs * 1e3,
+        warm_secs * 1e3,
+        speedup,
+        cold.stats.lrot_iters,
+        warm.stats.lrot_iters,
+        warm.stats.cluster_calls,
+        rel,
+        level_entries.join(",\n"),
+    );
+    std::fs::write("BENCH_warmstart.json", &json).expect("writing BENCH_warmstart.json");
+    println!("\nwrote BENCH_warmstart.json");
+}

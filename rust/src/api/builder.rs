@@ -129,6 +129,18 @@ impl HiRefBuilder {
         self
     }
 
+    /// Cluster-warmstart the top `levels` scales of the hierarchy
+    /// (default 0: the exact path, bit-identical to prior releases).
+    /// Clustered scales co-cluster straight from the cost-factor rows —
+    /// no LROT solve — and the first exact scale below them starts its
+    /// mirror descent from a clustering of its lanes.  The bijection
+    /// stays exact and balanced; only coarse co-membership is
+    /// approximate (contract: docs/warmstart.md).
+    pub fn warmstart_levels(mut self, levels: usize) -> Self {
+        self.cfg.warmstart_levels = levels;
+        self
+    }
+
     /// Stored element format of the factor working copies (default
     /// [`Precision::F32`], bit-identical to prior releases).  `Bf16`/`F16`
     /// halve the resident/spill factor footprint; the solve path still
@@ -280,6 +292,7 @@ mod tests {
             .record_scales(true)
             .batching(false)
             .factor_precision(Precision::Bf16)
+            .warmstart_levels(2)
             .artifacts_dir("some/dir")
             .build_config()
             .unwrap();
@@ -292,7 +305,13 @@ mod tests {
         assert!(cfg.record_scales);
         assert!(!cfg.batching);
         assert_eq!(cfg.factor_precision, Precision::Bf16);
+        assert_eq!(cfg.warmstart_levels, 2);
         assert_eq!(cfg.artifacts_dir, std::path::PathBuf::from("some/dir"));
+    }
+
+    #[test]
+    fn warmstart_defaults_off() {
+        assert_eq!(HiRefBuilder::new().build_config().unwrap().warmstart_levels, 0);
     }
 
     #[test]

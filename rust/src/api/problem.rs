@@ -8,7 +8,7 @@
 use std::borrow::Cow;
 use std::time::Duration;
 
-use crate::coordinator::hiref::RunStats;
+use crate::coordinator::hiref::{LevelStat, RunStats};
 use crate::costs::{self, CostKind};
 use crate::linalg::Mat;
 
@@ -155,6 +155,14 @@ impl SolveStats {
         self.hiref
             .as_ref()
             .map_or_else(|| crate::linalg::kernels::active().as_str(), |rs| rs.kernel_path)
+    }
+
+    /// Per-level execution records of a HiRef solve — blocks, lanes,
+    /// native mirror-descent iterations, wall time and whether the level
+    /// was cluster-warmstarted (see `HiRefConfig::warmstart_levels`);
+    /// empty for non-HiRef solvers and per-block (unbatched) runs.
+    pub fn level_stats(&self) -> &[LevelStat] {
+        self.hiref.as_ref().map_or(&[], |rs| &rs.level_stats)
     }
 
     /// Stored element format of a HiRef solve's factor working copies —

@@ -203,6 +203,7 @@ pub fn config_from_flags(flags: &Flags) -> Result<HiRefConfig> {
         _ => BackendKind::Auto,
     });
     b = b.batching(flags.get_choice("batching", "on", &BATCHING_CHOICES)? == "on");
+    b = b.warmstart_levels(flags.get("warmstart-levels", d.warmstart_levels)?);
     let prec = flags.get_choice("factor-precision", "f32", &PRECISION_CHOICES)?;
     b = b.factor_precision(
         Precision::parse(&prec).expect("get_choice admits only listed precisions"),
@@ -306,6 +307,12 @@ fn cmd_align(flags: &Flags) -> Result<()> {
              not supported by --solver {solver_name} (valid with: hiref)"
         )));
     }
+    if flags.named.contains_key("warmstart-levels") && solver_name != "hiref" {
+        return Err(err(format!(
+            "--warmstart-levels configures HiRef's cluster-warmstart path and is \
+             not supported by --solver {solver_name} (valid with: hiref)"
+        )));
+    }
     let (solved, describe) = if streaming {
         // `--chunk-rows` routes HiRef through the streaming ingestion
         // path: chunked factorisation + on-demand base-case gathers.
@@ -354,6 +361,26 @@ fn cmd_align(flags: &Flags) -> Result<()> {
         } else {
             println!("batches       = 0 (per-block execution)");
         }
+        if rs.cluster_calls > 0 {
+            println!(
+                "warmstart     = {} lane clusterings ({} native LROT iters total)",
+                rs.cluster_calls, rs.lrot_iters
+            );
+        }
+        if !rs.level_stats.is_empty() {
+            let mut lv = Table::new(vec!["Level", "Blocks", "Lanes", "LROT iters", "ms", "Warm"]);
+            for ls in &rs.level_stats {
+                lv.row(vec![
+                    ls.level.to_string(),
+                    ls.blocks.to_string(),
+                    ls.lanes.to_string(),
+                    ls.lrot_iters.to_string(),
+                    format!("{:.1}", ls.elapsed.as_secs_f64() * 1e3),
+                    if ls.warmstarted { "yes" } else { "-" }.to_string(),
+                ]);
+            }
+            lv.print();
+        }
         println!(
             "scratch peak  = {} (arena hit rate {:.1}%)",
             metrics::human_bytes(rs.peak_scratch_bytes),
@@ -386,29 +413,38 @@ fn cmd_compare(flags: &Flags) -> Result<()> {
     // spill flags only affect hiref: with no hiref in the list they would
     // be a silent no-op, so reject that combination (same class of guard
     // as --chunk-rows on `align`)
-    if flags.named.contains_key("spill-dir") || flags.named.contains_key("spill-budget") {
+    let hiref_only = |what: &str| {
         let any_hiref = names
             .split(',')
             .map(str::trim)
             .any(|n| api::canonical_name(n) == "hiref");
-        if !any_hiref {
-            return Err(err(format!(
-                "--spill-dir/--spill-budget configure HiRef's factor spill storage but \
-                 --solvers {names} does not include hiref"
-            )));
+        if any_hiref {
+            Ok(())
+        } else {
+            Err(err(format!("{what} but --solvers {names} does not include hiref")))
         }
+    };
+    if flags.named.contains_key("spill-dir") || flags.named.contains_key("spill-budget") {
+        hiref_only("--spill-dir/--spill-budget configure HiRef's factor spill storage")?;
+    }
+    if flags.named.contains_key("warmstart-levels") {
+        hiref_only("--warmstart-levels configures HiRef's cluster-warmstart path")?;
     }
     let prob = TransportProblem::new(&x, &y, kind).with_seed(cfg.seed);
 
-    let mut table = Table::new(vec!["Solver", "Coupling", "Primal cost", "nnz", "Seconds"]);
+    let mut table = Table::new(vec!["Solver", "Coupling", "Primal cost", "nnz", "Iters", "Seconds"]);
     for name in names.split(',').map(str::trim).filter(|s| !s.is_empty()) {
         let solver = named_solver(name, &cfg)?;
         let solved = solver.solve(&prob)?;
+        // HiRef reports native mirror-descent iterations (the quantity
+        // the warmstart path reduces); other solvers their own count
+        let iters = solved.stats.hiref.as_ref().map_or(solved.stats.iterations, |rs| rs.lrot_iters);
         table.row(vec![
             solved.stats.solver.to_string(),
             solved.coupling.kind_label().to_string(),
             f4(metrics::coupling_cost(&x, &y, &solved.coupling, kind)),
             solved.coupling.nnz().to_string(),
+            iters.to_string(),
             format!("{:.2}", solved.stats.elapsed.as_secs_f64()),
         ]);
     }
@@ -588,6 +624,9 @@ COMMON FLAGS
   --backend auto|native|pjrt                         [auto]
   --batching on|off     level-synchronous batched execution (off =
                         per-block work-queue path, for A/B)      [on]
+  --warmstart-levels <int>  cluster-warmstart the top k scales (coarse
+                        co-clustering without LROT + warm-started
+                        descent below — see docs/warmstart.md)   [0]
   --factor-precision f32|bf16|f16   stored factor element format (bf16/
                         f16 halve factor RAM/spill bytes; f32 compute
                         throughout — see docs/precision.md)      [f32]
@@ -863,6 +902,15 @@ mod tests {
                 "listed --factor-precision {p} rejected"
             );
         }
+    }
+
+    #[test]
+    fn warmstart_flag_reaches_config() {
+        let f = flags(&["--warmstart-levels", "2"]);
+        assert_eq!(config_from_flags(&f).unwrap().warmstart_levels, 2);
+        // absent: the exact path
+        assert_eq!(config_from_flags(&flags(&[])).unwrap().warmstart_levels, 0);
+        assert!(config_from_flags(&flags(&["--warmstart-levels", "two"])).is_err());
     }
 
     #[test]

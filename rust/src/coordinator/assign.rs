@@ -46,7 +46,22 @@ pub fn cluster_offsets(caps: &[usize]) -> Vec<usize> {
 /// `r` clusters under [`capacities`].  Returns per-point labels.  Accepts
 /// `&Mat` or a borrowed [`MatView`] (the factors are read, never copied).
 pub fn balanced_assign<'a>(m: impl Into<MatView<'a>>, active: usize) -> Vec<u32> {
-    let m = m.into();
+    balanced_assign_impl(m.into(), active, true)
+}
+
+/// [`balanced_assign`] for general *score* matrices (higher = better)
+/// whose entries may be negative — the cluster-warmstart engine
+/// (`coordinator::warmstart`) feeds negated distances/costs through here.
+/// Identical greedy, but the confidence margin is `best − second` without
+/// the non-negative clamp on `second`: the clamp is a no-op for the
+/// strictly positive LROT factors `balanced_assign` sees (exp of logits),
+/// while for all-negative scores it would collapse every margin to the
+/// best score alone and mis-order the contested points.
+pub fn balanced_assign_scores<'a>(m: impl Into<MatView<'a>>, active: usize) -> Vec<u32> {
+    balanced_assign_impl(m.into(), active, false)
+}
+
+fn balanced_assign_impl(m: MatView<'_>, active: usize, clamp_margin: bool) -> Vec<u32> {
     let r = m.cols;
     let caps = capacities(active, r);
     let mut remaining = caps;
@@ -72,7 +87,7 @@ pub fn balanced_assign<'a>(m: impl Into<MatView<'a>>, active: usize) -> Vec<u32>
                         second = v;
                     }
                 }
-                best - second.max(0.0)
+                best - if clamp_margin { second.max(0.0) } else { second }
             };
             (margin, i as u32)
         })
@@ -259,6 +274,34 @@ mod tests {
             counts[z as usize] += 1;
         }
         assert_eq!(counts, [4, 4]);
+    }
+
+    #[test]
+    fn scores_variant_lets_confident_points_win_on_negative_scores() {
+        // negated distances (all-negative scores): point 0 is nearly
+        // indifferent, point 1 strongly prefers cluster 1.  The unclamped
+        // margin processes the confident point first, so it wins the
+        // contested slot; the clamped factor variant would collapse both
+        // margins to the best score and hand cluster 1 to point 0.
+        let m = Mat::from_vec(2, 2, vec![
+            -1.1, -1.0, //
+            -9.0, -2.0,
+        ]);
+        assert_eq!(balanced_assign_scores(&m, 2), vec![0, 1]);
+        assert_eq!(balanced_assign(&m, 2), vec![1, 0]);
+
+        // and it honours capacities exactly, like the factor variant
+        let mut rng = Rng::new(9);
+        let mut m = Mat::zeros(33, 3);
+        for v in m.data.iter_mut() {
+            *v = -rng.next_f32();
+        }
+        let labels = balanced_assign_scores(&m, 33);
+        let mut counts = vec![0usize; 3];
+        for &z in &labels {
+            counts[z as usize] += 1;
+        }
+        assert_eq!(counts, capacities(33, 3));
     }
 
     #[test]

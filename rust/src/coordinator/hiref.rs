@@ -125,6 +125,7 @@ use std::time::{Duration, Instant};
 use crate::api::SolveError;
 use crate::coordinator::annealing;
 use crate::coordinator::assign;
+use crate::coordinator::warmstart;
 use crate::costs::{self, CostKind};
 use crate::data::stream::{self, DatasetSource};
 use crate::linalg::{BatchItem, BatchView, Mat, MatView};
@@ -215,6 +216,18 @@ pub struct HiRefConfig {
     /// f32 (checkouts decode, dirty releases re-encode RNE), so the
     /// bijection cost moves only by the factor-quantisation error.
     pub factor_precision: Precision,
+    /// Cluster-warmstart the top `warmstart_levels` scales of the batched
+    /// hierarchy (docs/warmstart.md): those scales are co-clustered
+    /// directly from the factor rows by [`warmstart::cluster_block`]
+    /// (no LROT), and the first scale below them runs LROT warm-started
+    /// from a clustering of its lanes.  `0` (the default) is the exact
+    /// path, **bit-identical** to prior releases and kept for A/B; deeper
+    /// scales always run the exact solver, and the base case stays exact
+    /// either way, so only coarse co-membership is approximated (the
+    /// bijection cost stays within the documented 5% relative tolerance).
+    /// Ignored by the per-block A/B path (`batching = false`), which is
+    /// always exact.
+    pub warmstart_levels: usize,
 }
 
 impl Default for HiRefConfig {
@@ -236,8 +249,33 @@ impl Default for HiRefConfig {
             batching: true,
             spill: None,
             factor_precision: Precision::F32,
+            warmstart_levels: 0,
         }
     }
+}
+
+/// Per-scale breakdown of a batched run ([`RunStats::level_stats`]): one
+/// entry per scale the level scheduler walked, in depth order — the
+/// measurable record of what the cluster-warmstart engine did (empty on
+/// the per-block A/B path).
+#[derive(Clone, Debug, Default)]
+pub struct LevelStat {
+    /// Scale index (0 = root).
+    pub level: usize,
+    /// Blocks entering this scale (refinement + base-case).
+    pub blocks: usize,
+    /// Refinement lanes dispatched at this scale (0 once every block has
+    /// reached the base case).
+    pub lanes: usize,
+    /// Native mirror-descent iterations summed over the scale's lanes —
+    /// 0 at clustered scales (no LROT ran) and for lanes served by PJRT
+    /// or a host hook (those backends do not report iteration counts).
+    pub lrot_iters: usize,
+    /// Wall-clock spent on the scale (base seal + solves + re-index).
+    pub elapsed: Duration,
+    /// Scale was served by the warmstart engine: co-clustered outright,
+    /// or LROT warm-started from a clustering of its lanes.
+    pub warmstarted: bool,
 }
 
 /// Counters from a run.
@@ -294,6 +332,19 @@ pub struct RunStats {
     /// (the historical loop spawned every iteration).  0 on the per-block
     /// path and on single-threaded runs.
     pub iter_spawns: usize,
+    /// Lane clusterings performed by the warmstart engine
+    /// ([`HiRefConfig::warmstart_levels`]): blocks co-clustered instead
+    /// of LROT-solved at the clustered scales, plus the boundary scale's
+    /// warm-init clusterings.  0 on exact runs.
+    pub cluster_calls: usize,
+    /// Native mirror-descent iterations summed over every in-process
+    /// LROT solve (PJRT/hook-served lanes do not report iteration
+    /// counts) — the warmstart A/B's "fewer iterations" claim, end to
+    /// end.  Per-scale breakdown in [`RunStats::level_stats`].
+    pub lrot_iters: usize,
+    /// Per-scale breakdown of the batched run (empty on the per-block
+    /// A/B path).
+    pub level_stats: Vec<LevelStat>,
     pub elapsed: Duration,
 }
 
@@ -432,6 +483,9 @@ struct SolveState<'a> {
     perm: Mutex<Vec<u32>>,
     scales: Option<Vec<Mutex<Vec<(Range<u32>, Range<u32>)>>>>,
     stats: StatsAtomics,
+    /// Per-scale breakdown, pushed by the level scheduler in depth order
+    /// (stays empty on the per-block path).
+    level_stats: Mutex<Vec<LevelStat>>,
     /// First solver-internal failure (e.g. a mid-solve dataset I/O error
     /// on the streaming path).  Workers record it and bail out of their
     /// block; the run surfaces it as the solve result.
@@ -706,6 +760,7 @@ impl HiRef {
                 None
             },
             stats: StatsAtomics::default(),
+            level_stats: Mutex::new(Vec::new()),
             error: Mutex::new(None),
         };
 
@@ -757,6 +812,7 @@ impl HiRef {
                 .collect()
         });
         let mut stats = st.stats.snapshot(t0.elapsed(), &arena);
+        stats.level_stats = st.level_stats.into_inner().unwrap();
         stats.factor_bytes = factor_bytes;
         stats.factor_precision = fu.precision().as_str();
         // lane-crew worker threads spawned by this run: O(threads) per
@@ -818,20 +874,41 @@ impl HiRef {
         rmat: &Mat,
         st: &SolveState<'_>,
     ) -> Vec<Block> {
+        let len = (block.x.end - block.x.start) as usize;
+        let labels_x = assign::balanced_assign(q, len);
+        let labels_y = assign::balanced_assign(rmat, len);
+        self.split_block_with_labels(block, cox, coy, lane, &labels_x, &labels_y, q.cols, st)
+    }
+
+    /// The label-driven half of [`HiRef::split_block`]: reorder the
+    /// block's windows by pre-computed balanced co-cluster labels (from
+    /// an LROT factor pair's balanced assignment, or straight from the
+    /// warmstart engine — both honour [`assign::capacities`]`(len, rank)`
+    /// exactly, which the counting reorder requires) and emit the child
+    /// blocks.
+    #[allow(clippy::too_many_arguments)]
+    fn split_block_with_labels(
+        &self,
+        block: &Block,
+        cox: &Checkout<'_>,
+        coy: &Checkout<'_>,
+        lane: usize,
+        labels_x: &[u32],
+        labels_y: &[u32],
+        rank: usize,
+        st: &SolveState<'_>,
+    ) -> Vec<Block> {
         let (xs, xe) = (block.x.start as usize, block.x.end as usize);
         let (ys, ye) = (block.y.start as usize, block.y.end as usize);
         let len = xe - xs;
-        let rank = q.cols;
-        let labels_x = assign::balanced_assign(q, len);
-        let labels_y = assign::balanced_assign(rmat, len);
         let caps = assign::capacities(len, rank);
 
         // SAFETY: this block exclusively owns its lane and its order
         // window — sibling lanes/ranges are disjoint, and the batch's
         // LROT read phase has ended before any split runs.
         unsafe {
-            reorder_window(cox.lane_mut(lane), st.x_order.slice_mut(xs, xe), st.k, &labels_x, &caps, st.arena);
-            reorder_window(coy.lane_mut(lane), st.y_order.slice_mut(ys, ye), st.k, &labels_y, &caps, st.arena);
+            reorder_window(cox.lane_mut(lane), st.x_order.slice_mut(xs, xe), st.k, labels_x, &caps, st.arena);
+            reorder_window(coy.lane_mut(lane), st.y_order.slice_mut(ys, ye), st.k, labels_y, &caps, st.arena);
         }
 
         let mut children = Vec::with_capacity(caps.len());
@@ -931,6 +1008,7 @@ impl HiRef {
     /// same-shape group of refinement blocks as one strided LROT batch.
     fn run_levels(&self, schedule: &[usize], points: Points<'_>, root: Block, st: &SolveState<'_>) {
         let threads = self.cfg.threads;
+        let warm_levels = self.cfg.warmstart_levels.min(schedule.len());
         let mut current = vec![root];
         while !current.is_empty() {
             // fail fast: a recorded error (or a host cancellation — no
@@ -944,6 +1022,16 @@ impl HiRef {
             }
             let level = current[0].level;
             debug_assert!(current.iter().all(|b| b.level == level));
+            let t_level = Instant::now();
+            let blocks_in = current.len();
+            let iters0 = st.stats.lrot_iters.load(Ordering::Relaxed);
+            // The warmstart plan for this scale (docs/warmstart.md):
+            // scales above the boundary are co-clustered directly — no
+            // LROT at all — and the boundary scale itself runs LROT
+            // warm-started from a clustering of its lanes.  Every scale
+            // below is the unchanged exact path.
+            let clustered = level < warm_levels;
+            let warm_init = warm_levels > 0 && level == warm_levels;
             let (refine, base): (Vec<Block>, Vec<Block>) = current.into_iter().partition(|b| {
                 let len = (b.x.end - b.x.start) as usize;
                 len > self.cfg.base_size && b.level < schedule.len()
@@ -963,6 +1051,7 @@ impl HiRef {
                 groups.entry(len).or_default().push(b);
             }
             let mut next = Vec::new();
+            let mut lanes_total = 0usize;
             for (len, blocks) in groups {
                 let rank = schedule[level].min(len).max(2);
                 // With spill configured, cap the lanes pinned at once so
@@ -973,10 +1062,23 @@ impl HiRef {
                 let mut i = 0usize;
                 while i < blocks.len() {
                     let j = blocks.len().min(i.saturating_add(cap));
-                    next.extend(self.refine_batch(&blocks[i..j], len, rank, schedule, st));
+                    lanes_total += j - i;
+                    next.extend(if clustered {
+                        self.cluster_batch(&blocks[i..j], len, rank, schedule, st)
+                    } else {
+                        self.refine_batch(&blocks[i..j], len, rank, schedule, warm_init, st)
+                    });
                     i = j;
                 }
             }
+            st.level_stats.lock().unwrap().push(LevelStat {
+                level,
+                blocks: blocks_in,
+                lanes: lanes_total,
+                lrot_iters: st.stats.lrot_iters.load(Ordering::Relaxed) - iters0,
+                elapsed: t_level.elapsed(),
+                warmstarted: lanes_total > 0 && (clustered || warm_init),
+            });
             current = next;
         }
     }
@@ -1003,12 +1105,18 @@ impl HiRef {
     /// batched balanced-assign / re-index pass that produces the next
     /// level's blocks, then release the windows (dirty) so the store
     /// persists the re-indexed rows.
+    /// With `warm_init` set (the first scale below the clustered ones —
+    /// see [`HiRef::run_levels`]), every lane is first co-clustered by
+    /// the warmstart engine and LROT starts mirror descent from that
+    /// co-clustering instead of uniform factors.
+    #[allow(clippy::too_many_arguments)]
     fn refine_batch(
         &self,
         blocks: &[Block],
         len: usize,
         rank: usize,
         schedule: &[usize],
+        warm_init: bool,
         st: &SolveState<'_>,
     ) -> Vec<Block> {
         if st.has_error() || self.poll_cancel(st) {
@@ -1042,6 +1150,19 @@ impl HiRef {
             st.stats.batched_lanes.fetch_add(lanes, Ordering::Relaxed);
         }
         let seeds: Vec<u64> = blocks.iter().map(|b| self.block_seed(b, st)).collect();
+        // Warm-started descent at the boundary scale: cluster every lane
+        // first (shared lane reads; the claims are retired at the
+        // parallel_map epoch boundary, before the LROT read stage claims
+        // the spans) and hand the labels to the native solver as initial
+        // co-clusterings.
+        let warm: Option<Vec<warmstart::CoClusters>> = if warm_init {
+            st.stats.clustered.fetch_add(lanes, Ordering::Relaxed);
+            Some(pool::parallel_map(lanes, self.cfg.threads, |l| {
+                self.cluster_lane(&cox, &coy, l, len, rank, st)
+            }))
+        } else {
+            None
+        };
         let outs: Vec<(Mat, Mat)> = {
             // SAFETY: the LROT stage only *reads* the checked-out spans
             // (sliced into disjoint lane windows); nothing writes them
@@ -1063,7 +1184,7 @@ impl HiRef {
                 .collect();
             let u = BatchView::new(fu, &u_items);
             let v = BatchView::new(fv, &v_items);
-            self.solve_lrot_batch(u, v, len, rank, &seeds, st)
+            self.solve_lrot_batch(u, v, len, rank, &seeds, warm.as_deref(), st)
         };
         // one batched balanced-assign + re-index pass over the lanes;
         // sibling lane windows are disjoint, so the concurrent in-place
@@ -1087,8 +1208,115 @@ impl HiRef {
         children
     }
 
+    /// Cluster one checked-out lane into `rank` balanced co-clusters —
+    /// the warmstart engine's unit of work.  Initial centroids are `rank`
+    /// evenly spaced factor rows of the lane, read through the checkout
+    /// ([`Checkout::sample_lane_rows`]), so the clustering is
+    /// deterministic (no RNG) and identical on resident, spilled and
+    /// narrow-precision stores.
+    fn cluster_lane(
+        &self,
+        cox: &Checkout<'_>,
+        coy: &Checkout<'_>,
+        lane: usize,
+        len: usize,
+        rank: usize,
+        st: &SolveState<'_>,
+    ) -> warmstart::CoClusters {
+        let k = st.k;
+        let mut cent = st.arena.take_f32(rank * k);
+        // SAFETY: shared reads of this batch's lane windows — nothing
+        // writes them until the re-index pass, and these borrows end
+        // before any exclusive claim is taken (the parallel_map epoch
+        // boundary retires the claims).
+        let (ux, vy) = unsafe {
+            cox.sample_lane_rows(lane, &mut cent);
+            (cox.lane(lane), coy.lane(lane))
+        };
+        warmstart::cluster_block(ux, vy, len, k, rank, &cent, st.arena)
+    }
+
+    /// Co-cluster one same-shape group of blocks directly — the
+    /// coarse-scale path of the warmstart engine: no LROT solve, just a
+    /// clustering per lane followed by the same balanced re-index pass
+    /// [`HiRef::refine_batch`] runs.  Children have identical geometry to
+    /// the exact path (capacities depend only on `(len, rank)`), so every
+    /// scale below still partitions `0..n` and the same-shape grouping is
+    /// unchanged.
+    fn cluster_batch(
+        &self,
+        blocks: &[Block],
+        len: usize,
+        rank: usize,
+        schedule: &[usize],
+        st: &SolveState<'_>,
+    ) -> Vec<Block> {
+        if st.has_error() || self.poll_cancel(st) {
+            return Vec::new(); // doomed run: stop scheduling batches
+        }
+        let lanes = blocks.len();
+        let x_ranges: Vec<Range<u32>> = blocks.iter().map(|b| b.x.clone()).collect();
+        let y_ranges: Vec<Range<u32>> = blocks.iter().map(|b| b.y.clone()).collect();
+        let cox = match st.fu.checkout(&x_ranges, st.arena) {
+            Ok(c) => c,
+            Err(e) => {
+                st.set_error(e.into());
+                return Vec::new();
+            }
+        };
+        let coy = match st.fv.checkout(&y_ranges, st.arena) {
+            Ok(c) => c,
+            Err(e) => {
+                let _ = st.fu.release(cox, false);
+                st.set_error(e.into());
+                return Vec::new();
+            }
+        };
+        // clustered lanes count toward `cluster_calls`, not the LROT
+        // batch counters (`lrot_calls`/`batches`/`batched_frac` keep
+        // describing actual LROT dispatches)
+        st.stats.clustered.fetch_add(lanes, Ordering::Relaxed);
+        // one fused cluster + re-index pass per lane: the lane's shared
+        // read claims end inside `cluster_lane`, and the same thread may
+        // then take the exclusive re-index claim on its own lane (sibling
+        // lanes are disjoint windows).
+        let children: Vec<Block> = pool::parallel_map(lanes, self.cfg.threads, |l| {
+            let cc = self.cluster_lane(&cox, &coy, l, len, rank, st);
+            self.split_block_with_labels(
+                &blocks[l],
+                &cox,
+                &coy,
+                l,
+                &cc.labels_x,
+                &cc.labels_y,
+                rank,
+                st,
+            )
+        })
+        .into_iter()
+        .flatten()
+        .collect();
+        // write back only if some child will read these rows again (see
+        // any_child_refines); release both sides even if the first
+        // write-back fails
+        let dirty = self.any_child_refines(&children, schedule);
+        let ru = st.fu.release(cox, dirty);
+        let rv = st.fv.release(coy, dirty);
+        if let Err(e) = ru.and(rv) {
+            st.set_error(e.into());
+            return Vec::new();
+        }
+        children
+    }
+
     /// Batch-granularity LROT dispatch: the whole batch goes to PJRT when
     /// the backend can serve its shape, else to the native batched solver.
+    /// A warm-started batch (`warm` present) goes straight to the native
+    /// solver: the warm seam is a native-solver feature (host hooks and
+    /// the PJRT buckets take no initial co-clustering), and warmstart runs
+    /// are approximate by contract — there is no cross-backend bit-parity
+    /// to preserve.
+    #[allow(clippy::too_many_arguments)]
     fn solve_lrot_batch(
         &self,
         u: BatchView<'_>,
@@ -1096,22 +1324,25 @@ impl HiRef {
         active: usize,
         rank: usize,
         seeds: &[u64],
+        warm: Option<&[warmstart::CoClusters]>,
         st: &SolveState<'_>,
     ) -> Vec<(Mat, Mat)> {
         let lanes = u.len();
         // a host hook (the serve microbatcher) may take the whole batch —
         // e.g. to merge it with same-shape batches of other in-flight
         // requests; lane independence keeps the outputs bit-identical
-        if let Some(hooks) = &self.hooks {
-            let cfg = LrotConfig { rank, ..self.cfg.lrot.clone() };
-            if let Some(outs) = hooks.lrot_batch(u, v, active, &cfg, seeds) {
-                assert_eq!(outs.len(), lanes, "hook returned a wrong-sized batch");
-                st.stats.native.fetch_add(lanes, Ordering::Relaxed);
-                return outs;
+        if warm.is_none() {
+            if let Some(hooks) = &self.hooks {
+                let cfg = LrotConfig { rank, ..self.cfg.lrot.clone() };
+                if let Some(outs) = hooks.lrot_batch(u, v, active, &cfg, seeds) {
+                    assert_eq!(outs.len(), lanes, "hook returned a wrong-sized batch");
+                    st.stats.native.fetch_add(lanes, Ordering::Relaxed);
+                    return outs;
+                }
             }
         }
         let actives: Vec<(usize, usize)> = vec![(active, active); lanes];
-        if self.cfg.backend != BackendKind::Native {
+        if warm.is_none() && self.cfg.backend != BackendKind::Native {
             if let Some(engine) = &self.engine {
                 match engine.lrot_batch(u, v, &actives, rank, seeds) {
                     Ok(Some(outs)) => {
@@ -1128,10 +1359,27 @@ impl HiRef {
         }
         st.stats.native.fetch_add(lanes, Ordering::Relaxed);
         let cfg = LrotConfig { rank, ..self.cfg.lrot.clone() };
-        lrot::solve_factored_batch(u, v, &actives, &cfg, seeds, st.arena, self.cfg.threads)
-            .into_iter()
-            .map(|o| (o.q, o.r))
-            .collect()
+        let warm_lanes: Vec<Option<lrot::WarmLabels<'_>>> = warm
+            .map(|cs| {
+                cs.iter()
+                    .map(|c| Some(lrot::WarmLabels { x: &c.labels_x[..], y: &c.labels_y[..] }))
+                    .collect()
+            })
+            .unwrap_or_default();
+        let outs = lrot::solve_factored_batch_warm(
+            u,
+            v,
+            &actives,
+            &cfg,
+            seeds,
+            &warm_lanes,
+            st.arena,
+            self.cfg.threads,
+        );
+        st.stats
+            .lrot_iters
+            .fetch_add(outs.iter().map(|o| o.iters).sum::<usize>(), Ordering::Relaxed);
+        outs.into_iter().map(|o| (o.q, o.r)).collect()
     }
 
     /// LROT dispatch: PJRT bucket when available, else native.  Both paths
@@ -1163,6 +1411,7 @@ impl HiRef {
         st.stats.native.fetch_add(1, Ordering::Relaxed);
         let cfg = LrotConfig { rank, ..self.cfg.lrot.clone() };
         let out = lrot::solve_factored_in(u, v, active, active, &cfg, seed, st.arena);
+        st.stats.lrot_iters.fetch_add(out.iters, Ordering::Relaxed);
         (out.q, out.r)
     }
 
@@ -1273,6 +1522,10 @@ struct StatsAtomics {
     lanes_max: AtomicUsize,
     /// LROT block solves that shared a batch with ≥ 1 sibling lane.
     batched_lanes: AtomicUsize,
+    /// Warmstart-engine lane clusterings (see `RunStats::cluster_calls`).
+    clustered: AtomicUsize,
+    /// Native mirror-descent iterations, summed over lanes.
+    lrot_iters: AtomicUsize,
 }
 
 impl StatsAtomics {
@@ -1294,6 +1547,9 @@ impl StatsAtomics {
             kernel_path: crate::linalg::kernels::active().as_str(),
             factor_precision: Precision::F32.as_str(), // filled in by align_inner
             iter_spawns: 0, // filled in by align_inner (crew-spawn delta)
+            cluster_calls: self.clustered.load(Ordering::Relaxed),
+            lrot_iters: self.lrot_iters.load(Ordering::Relaxed),
+            level_stats: Vec::new(), // filled in by align_inner
             batches: self.batches.load(Ordering::Relaxed),
             lanes_max: self.lanes_max.load(Ordering::Relaxed),
             batched_frac: if lrot_calls == 0 {
@@ -1939,5 +2195,112 @@ mod tests {
         // final bijection is at least as good as the last block coupling
         let final_cost = out.cost(&x, &y, CostKind::SqEuclidean);
         assert!(final_cost <= costs_per_scale.last().unwrap() + 1e-6);
+    }
+
+    #[test]
+    fn explicit_warmstart_zero_is_bit_identical_to_default() {
+        // the cold-path regression: `warmstart_levels: 0` must be the same
+        // code path as an untouched config, bit for bit — no stray RNG
+        // draws, no extra float work anywhere in the pipeline
+        let (x, y, _) = shuffled_pair(300, 2, 46);
+        let want = HiRef::new(native_cfg()).align(&x, &y).unwrap();
+        let cfg = HiRefConfig { warmstart_levels: 0, ..native_cfg() };
+        let out = HiRef::new(cfg).align(&x, &y).unwrap();
+        assert_eq!(out.perm, want.perm);
+        assert_eq!(out.x_order, want.x_order);
+        assert_eq!(out.y_order, want.y_order);
+        assert_eq!(out.stats.lrot_iters, want.stats.lrot_iters);
+        // the cold run never clusters and never flags a level as warm
+        assert_eq!(want.stats.cluster_calls, 0);
+        assert!(want.stats.level_stats.iter().all(|ls| !ls.warmstarted));
+    }
+
+    #[test]
+    fn warmstart_level_stats_record_clustered_scales() {
+        let (x, y, _) = shuffled_pair(256, 2, 47);
+        let cold = HiRef::new(native_cfg()).align(&x, &y).unwrap();
+        let cfg = HiRefConfig { warmstart_levels: 1, ..native_cfg() };
+        let warm = HiRef::new(cfg).align(&x, &y).unwrap();
+        assert!(warm.is_bijection());
+        // one LevelStat per batched level, for both runs, and the child
+        // geometry is warmstart-invariant: identical blocks and lanes
+        assert!(warm.stats.level_stats.len() >= 2, "need a boundary level below the clustered one");
+        assert_eq!(cold.stats.level_stats.len(), warm.stats.level_stats.len());
+        for (c, w) in cold.stats.level_stats.iter().zip(&warm.stats.level_stats) {
+            assert_eq!(c.level, w.level);
+            assert_eq!(c.blocks, w.blocks);
+            assert_eq!(c.lanes, w.lanes);
+            assert!(!c.warmstarted);
+        }
+        // the clustered scale ran no mirror descent at all; cold did
+        let w0 = &warm.stats.level_stats[0];
+        assert!(w0.warmstarted);
+        assert_eq!(w0.lrot_iters, 0);
+        assert!(cold.stats.level_stats[0].lrot_iters > 0);
+        // the boundary level starts its descent from the lane clusterings
+        let w1 = &warm.stats.level_stats[1];
+        assert!(w1.warmstarted);
+        assert!(w1.lrot_iters > 0);
+        assert!(warm.stats.cluster_calls > 0);
+        assert_eq!(cold.stats.cluster_calls, 0);
+        // the per-level records account for every native descent iteration
+        assert_eq!(
+            warm.stats.lrot_iters,
+            warm.stats.level_stats.iter().map(|l| l.lrot_iters).sum::<usize>()
+        );
+        assert_eq!(
+            cold.stats.lrot_iters,
+            cold.stats.level_stats.iter().map(|l| l.lrot_iters).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn warmstart_cost_within_tolerance_across_configs() {
+        // the approximation contract (docs/warmstart.md): clustered coarse
+        // scales keep the final bijection within 5% relative cost of the
+        // exact path across sizes, base blocks, ranks, thread counts and
+        // factor precisions.  Independent clouds keep the optimal cost
+        // O(1) so the relative comparison is well-conditioned.
+        for (n, base_size, max_rank, threads) in
+            [(256usize, 32usize, 4usize, 2usize), (384, 32, 8, 1), (200, 16, 4, 4)]
+        {
+            let (x, y) = rand_pair(n, 3, 50 + n as u64);
+            let base_cfg = HiRefConfig { base_size, max_rank, threads, ..native_cfg() };
+            for prec in [Precision::F32, Precision::Bf16] {
+                let cfg = HiRefConfig { factor_precision: prec, ..base_cfg.clone() };
+                let exact = HiRef::new(cfg.clone()).align(&x, &y).unwrap();
+                let c_exact = exact.cost(&x, &y, CostKind::SqEuclidean);
+                for levels in [1usize, 2] {
+                    let cfg = HiRefConfig { warmstart_levels: levels, ..cfg.clone() };
+                    let out = HiRef::new(cfg).align(&x, &y).unwrap();
+                    assert!(out.is_bijection(), "n={n} w={levels}");
+                    assert!(out.stats.cluster_calls > 0, "n={n} w={levels}: nothing clustered");
+                    let c = out.cost(&x, &y, CostKind::SqEuclidean);
+                    let rel = (c - c_exact).abs() / c_exact.max(1e-6);
+                    assert!(
+                        rel < 0.05,
+                        "{} n={n} base={base_size} C={max_rank} w={levels}: \
+                         cost {c} vs exact {c_exact} (rel {rel:.4})",
+                        prec.as_str()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn warmstart_deeper_than_schedule_clamps_and_stays_valid() {
+        // asking for more clustered levels than the schedule has must not
+        // panic or leave LROT batches expecting a warm boundary that never
+        // comes — every refine level is clustered, the base case is exact
+        let (x, y, _) = shuffled_pair(200, 2, 48);
+        let cfg = HiRefConfig { warmstart_levels: 99, ..native_cfg() };
+        let out = HiRef::new(cfg).align(&x, &y).unwrap();
+        assert!(out.is_bijection());
+        // every level that ran lanes ran them clustered (base-only tail
+        // levels have no lanes and carry no flag)
+        assert!(out.stats.level_stats.iter().all(|ls| ls.lanes == 0 || ls.warmstarted));
+        assert!(out.stats.level_stats.iter().any(|ls| ls.warmstarted));
+        assert_eq!(out.stats.lrot_iters, 0, "a fully clustered run solves no LROT");
     }
 }

@@ -6,7 +6,11 @@
 //! * [`hiref`] — the Hierarchical Refinement engine (Algorithm 1/2):
 //!   recursion over co-clusters, LROT backend dispatch (PJRT artifacts or
 //!   native), base-case exact assignment, thread-pool fan-out.
+//! * [`warmstart`] — balanced co-clustering straight from the cost-factor
+//!   rows (no LROT): the coarse-scale fast path behind
+//!   `HiRefConfig::warmstart_levels` (docs/warmstart.md).
 
 pub mod annealing;
 pub mod assign;
 pub mod hiref;
+pub mod warmstart;

@@ -1,0 +1,299 @@
+//! Cluster-warmstart engine: balanced co-clustering of one co-cluster
+//! block **without an LROT solve** — the coarse-scale fast path of the
+//! ROADMAP's "cluster-based initialization" workload (Transport
+//! Clustering, arxiv 2603.03578: low-rank OT factors recovered via
+//! clustering).
+//!
+//! The refinement hierarchy only ever consumes a *hard balanced
+//! co-clustering* of each block (the LROT factors go through
+//! [`assign::balanced_assign`] and are then discarded), so a scale can be
+//! approximated by producing those labels directly:
+//!
+//! 1. **X side** — balanced k-means over the block's cost-factor rows
+//!    `u_i`: a few deterministic Lloyd sweeps (initial centroids are
+//!    evenly spaced rows, supplied by the caller so they come through the
+//!    [`crate::pool::FactorStore`] checkout — resident, spilled and
+//!    narrow-precision stores feed identical bytes), then one
+//!    capacity-constrained greedy pass
+//!    ([`assign::balanced_assign_scores`] on negated squared distances)
+//!    that restores the exact ±1-balanced child sizes the in-place
+//!    re-index requires.
+//! 2. **Y side** — with `C = U Vᵀ`, the mean transport cost between
+//!    x-cluster `z` and point `y_j` is `c̄_z · v_j` (`c̄_z` = mean factor
+//!    row of the cluster), so each `y_j` greedily joins the x-cluster of
+//!    lowest mean cost under the same capacities — the same objective the
+//!    LROT factors' balanced assignment approximates, for `O(len·r·k)`
+//!    instead of a mirror-descent solve.
+//!
+//! The child *geometry* is identical to the exact path (capacities depend
+//! only on `(len, rank)`), so every level below a clustered scale still
+//! partitions `0..n` and the base case still seals an exact bijection —
+//! only the coarse co-membership is approximate (contract: docs/warmstart.md).
+//! Everything here is deterministic — no RNG, no thread-count
+//! sensitivity — in the style of graspologic's refinable
+//! `leiden/hierarchical.rs` hierarchy: cluster-range bookkeeping stays
+//! with the caller, this module only maps one block to labels.
+
+#![forbid(unsafe_code)]
+
+use crate::coordinator::assign;
+use crate::linalg::MatView;
+use crate::pool::ScratchArena;
+
+/// Deterministic Lloyd sweeps before the balanced pass.  Diminishing
+/// returns beyond a handful: the greedy capacity pass re-shuffles the
+/// boundary points anyway, and the scales below refine the membership.
+const KMEANS_SWEEPS: usize = 6;
+
+/// Balanced co-cluster labels for one block: `labels_x[i]`/`labels_y[j]`
+/// in `0..rank`, each honouring [`assign::capacities`]`(len, rank)`
+/// exactly — drop-in for what [`assign::balanced_assign`] produces from
+/// an LROT factor pair.
+pub struct CoClusters {
+    pub labels_x: Vec<u32>,
+    pub labels_y: Vec<u32>,
+}
+
+/// Co-cluster one block into `rank` balanced parts from its cost-factor
+/// rows alone: `ux`/`vy` are the block's `len×k` row-major factor
+/// windows, `cent_seed` holds `rank` initial centroids (`rank×k`,
+/// typically evenly spaced rows of `ux` — see
+/// `Checkout::sample_lane_rows`).  Deterministic in its inputs.
+pub fn cluster_block(
+    ux: &[f32],
+    vy: &[f32],
+    len: usize,
+    k: usize,
+    rank: usize,
+    cent_seed: &[f32],
+    arena: &ScratchArena,
+) -> CoClusters {
+    debug_assert_eq!(ux.len(), len * k);
+    debug_assert_eq!(vy.len(), len * k);
+    debug_assert_eq!(cent_seed.len(), rank * k);
+    debug_assert!(rank >= 1 && rank <= len, "rank {rank} out of range for {len} points");
+
+    let mut cent = arena.take_f32(rank * k);
+    cent.copy_from_slice(cent_seed);
+    let mut labels = arena.take_u32(len);
+    let mut counts = vec![0usize; rank];
+
+    for _ in 0..KMEANS_SWEEPS {
+        // unbalanced nearest-centroid assignment (lowest index on ties);
+        // balance is restored by the capacity pass below
+        for i in 0..len {
+            let row = &ux[i * k..(i + 1) * k];
+            let mut best = 0usize;
+            let mut best_d = f32::INFINITY;
+            for z in 0..rank {
+                let d = dist2(row, &cent[z * k..(z + 1) * k]);
+                if d < best_d {
+                    best_d = d;
+                    best = z;
+                }
+            }
+            labels[i] = best as u32;
+        }
+        mean_rows(ux, &labels, len, k, &mut cent, &mut counts);
+        // re-seed any emptied cluster on the row farthest from its own
+        // centroid (deterministic; duplicates-heavy blocks hit this)
+        for z in 0..rank {
+            if counts[z] > 0 {
+                continue;
+            }
+            let mut far = 0usize;
+            let mut far_d = f32::NEG_INFINITY;
+            for i in 0..len {
+                let zc = labels[i] as usize;
+                if counts[zc] == 0 {
+                    continue; // stale centroid: not a meaningful distance
+                }
+                let d = dist2(&ux[i * k..(i + 1) * k], &cent[zc * k..(zc + 1) * k]);
+                if d > far_d {
+                    far_d = d;
+                    far = i;
+                }
+            }
+            cent[z * k..(z + 1) * k].copy_from_slice(&ux[far * k..(far + 1) * k]);
+            counts[z] = 1; // claimed: the next sweep re-assigns properly
+        }
+    }
+
+    // balanced X labels: capacity-constrained greedy on −‖u_i − c_z‖²
+    let mut scores = arena.take_f32(len * rank);
+    for i in 0..len {
+        let row = &ux[i * k..(i + 1) * k];
+        for z in 0..rank {
+            scores[i * rank + z] = -dist2(row, &cent[z * k..(z + 1) * k]);
+        }
+    }
+    let labels_x = assign::balanced_assign_scores(MatView::from_slice(len, rank, &scores), len);
+
+    // Y side scores against the centroids of the *balanced* clusters (the
+    // memberships the children will actually have)
+    mean_rows(ux, &labels_x, len, k, &mut cent, &mut counts);
+    for j in 0..len {
+        let row = &vy[j * k..(j + 1) * k];
+        for z in 0..rank {
+            scores[j * rank + z] = -dot(&cent[z * k..(z + 1) * k], row);
+        }
+    }
+    let labels_y = assign::balanced_assign_scores(MatView::from_slice(len, rank, &scores), len);
+
+    CoClusters { labels_x, labels_y }
+}
+
+/// Per-label mean rows of `data` into `cent` (counts as side output);
+/// empty clusters keep a zero centroid and `counts[z] == 0`.
+fn mean_rows(
+    data: &[f32],
+    labels: &[u32],
+    len: usize,
+    k: usize,
+    cent: &mut [f32],
+    counts: &mut [usize],
+) {
+    cent.fill(0.0);
+    counts.fill(0);
+    for i in 0..len {
+        let z = labels[i] as usize;
+        counts[z] += 1;
+        for (c, &x) in cent[z * k..(z + 1) * k].iter_mut().zip(&data[i * k..(i + 1) * k]) {
+            *c += x;
+        }
+    }
+    for (z, &n) in counts.iter().enumerate() {
+        if n > 0 {
+            let inv = 1.0 / n as f32;
+            for c in &mut cent[z * k..(z + 1) * k] {
+                *c *= inv;
+            }
+        }
+    }
+}
+
+#[inline]
+fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    /// Evenly spaced seed rows — the same sampling
+    /// `Checkout::sample_lane_rows` performs.
+    fn seed_rows(data: &[f32], len: usize, k: usize, rank: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; rank * k];
+        for t in 0..rank {
+            let src = t * len / rank;
+            out[t * k..(t + 1) * k].copy_from_slice(&data[src * k..(src + 1) * k]);
+        }
+        out
+    }
+
+    #[test]
+    fn labels_honour_capacities_and_are_deterministic() {
+        let (len, k, rank) = (101, 5, 4);
+        let mut rng = Rng::new(7);
+        let mut ux = vec![0.0f32; len * k];
+        let mut vy = vec![0.0f32; len * k];
+        for v in ux.iter_mut().chain(vy.iter_mut()) {
+            *v = rng.normal_f32();
+        }
+        let cent = seed_rows(&ux, len, k, rank);
+        let arena = ScratchArena::new(1);
+        let a = cluster_block(&ux, &vy, len, k, rank, &cent, &arena);
+        let b = cluster_block(&ux, &vy, len, k, rank, &cent, &arena);
+        assert_eq!(a.labels_x, b.labels_x);
+        assert_eq!(a.labels_y, b.labels_y);
+        let caps = assign::capacities(len, rank);
+        for labels in [&a.labels_x, &a.labels_y] {
+            let mut counts = vec![0usize; rank];
+            for &z in labels.iter() {
+                counts[z as usize] += 1;
+            }
+            assert_eq!(counts, caps);
+        }
+    }
+
+    #[test]
+    fn duplicate_rows_still_partition() {
+        // every row identical: k-means degenerates, the farthest-row
+        // re-seed and the capacity pass must still hand back a partition
+        let (len, k, rank) = (24, 3, 4);
+        let ux = vec![0.5f32; len * k];
+        let vy = vec![0.25f32; len * k];
+        let cent = seed_rows(&ux, len, k, rank);
+        let arena = ScratchArena::new(1);
+        let cc = cluster_block(&ux, &vy, len, k, rank, &cent, &arena);
+        let caps = assign::capacities(len, rank);
+        for labels in [&cc.labels_x, &cc.labels_y] {
+            let mut counts = vec![0usize; rank];
+            for &z in labels.iter() {
+                counts[z as usize] += 1;
+            }
+            assert_eq!(counts, caps);
+        }
+    }
+
+    #[test]
+    fn separated_blobs_co_cluster_below_mean_cost() {
+        // two x-blobs along ±e0; y factor rows are built so that y points
+        // matched to blob 0 have strongly negative cost against it (and
+        // ~0 against the other).  The induced co-clustering must price
+        // below the unclustered mean of C = U Vᵀ.
+        let (len, k, rank) = (64, 4, 2);
+        let mut rng = Rng::new(11);
+        let mut ux = vec![0.0f32; len * k];
+        let mut vy = vec![0.0f32; len * k];
+        for i in 0..len {
+            let sign = if i % 2 == 0 { 1.0f32 } else { -1.0 };
+            ux[i * k] = sign * 4.0 + 0.05 * rng.normal_f32();
+            vy[i * k] = -sign * 4.0 + 0.05 * rng.normal_f32();
+            for c in 1..k {
+                ux[i * k + c] = 0.05 * rng.normal_f32();
+                vy[i * k + c] = 0.05 * rng.normal_f32();
+            }
+        }
+        let cent = seed_rows(&ux, len, k, rank);
+        let arena = ScratchArena::new(1);
+        let cc = cluster_block(&ux, &vy, len, k, rank, &cent, &arena);
+        let cost = |i: usize, j: usize| {
+            dot(&ux[i * k..(i + 1) * k], &vy[j * k..(j + 1) * k]) as f64
+        };
+        let (mut within, mut wn) = (0.0f64, 0usize);
+        let (mut total, mut tn) = (0.0f64, 0usize);
+        for i in 0..len {
+            for j in 0..len {
+                let c = cost(i, j);
+                total += c;
+                tn += 1;
+                if cc.labels_x[i] == cc.labels_y[j] {
+                    within += c;
+                    wn += 1;
+                }
+            }
+        }
+        let (within, total) = (within / wn as f64, total / tn as f64);
+        assert!(
+            within < total - 1.0,
+            "co-clustered mean cost {within:.3} not below block mean {total:.3}"
+        );
+    }
+}

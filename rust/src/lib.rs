@@ -162,6 +162,7 @@
 //! | `base_size` | leaf dense tiles, `O(threads · base_size²)` | 256 |
 //! | `threads` | worker fan-out (and per-worker tiles) | all cores |
 //! | `batching` | level-synchronous batched execution | on |
+//! | `warmstart_levels` | coarse scales co-clustered without LROT | 0 (exact) |
 //!
 //! Every baseline the paper compares against is reachable through the
 //! same uniform interface — a [`api::TransportSolver`] that maps a
@@ -235,6 +236,16 @@
 //!   between mirror-descent iterations, instead of respawning per
 //!   iteration; [`coordinator::hiref::RunStats::iter_spawns`] records
 //!   the spawn count per solve.
+//! * **Cluster warmstart** ([`coordinator::warmstart`], opt-in via
+//!   [`api::HiRefBuilder::warmstart_levels`] / `--warmstart-levels`) —
+//!   the top scales of the hierarchy are co-clustered straight from the
+//!   cost-factor rows (balanced k-means, no mirror descent), and the
+//!   first exact scale below starts its descent pre-seeded with a lane
+//!   clustering so converged lanes retire in half the iteration floor.
+//!   The bijection stays exact and balanced; the coarse co-membership is
+//!   approximate within a documented 5% relative-cost contract
+//!   ([`coordinator::hiref::RunStats::level_stats`] records per-level
+//!   iterations; see `docs/warmstart.md`).
 //!
 //! ## Choosing a solver
 //!

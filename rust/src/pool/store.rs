@@ -251,6 +251,30 @@ impl Checkout<'_> {
         }
     }
 
+    /// Copy `dst.len() / cols` evenly spaced rows of lane `i` into `dst`
+    /// (sample row `t` is lane row `t·len_i/take`) — deterministic
+    /// centroid seeding for the cluster-warmstart engine, served through
+    /// the checkout so it reads identical rows on resident, spilled and
+    /// narrow-precision stores.
+    ///
+    /// # Safety
+    /// Same contract as [`Checkout::lane`]: no concurrently live
+    /// exclusive borrow may overlap lane `i`.
+    #[cfg_attr(any(debug_assertions, feature = "guard"), track_caller)]
+    pub unsafe fn sample_lane_rows(&self, i: usize, dst: &mut [f32]) {
+        let k = self.k;
+        let take = dst.len() / k;
+        debug_assert_eq!(dst.len(), take * k, "sample buffer must hold whole rows");
+        // SAFETY: forwarded caller contract — a shared read of lane `i`.
+        let rows = unsafe { self.lane(i) };
+        let len = rows.len() / k;
+        debug_assert!(take > 0 && take <= len, "cannot sample {take} of {len} rows");
+        for t in 0..take {
+            let src = t * len / take;
+            dst[t * k..(t + 1) * k].copy_from_slice(&rows[src * k..(src + 1) * k]);
+        }
+    }
+
     /// Lane `i` as an exclusive slice (the in-place re-index target).
     ///
     /// # Safety

@@ -66,6 +66,14 @@ pub struct ServeMetrics {
     pub spill_bytes_written: AtomicUsize,
     /// Spill shard reads across served solves (from `RunStats`).
     pub spill_reads: AtomicUsize,
+    /// Cluster-warmstarted hierarchy levels across served solves (from
+    /// `RunStats::level_stats` — 0 unless requests set `warmstart_levels`).
+    pub warm_levels: AtomicUsize,
+    /// Lane clusterings run by the warmstart engine (from `RunStats`).
+    pub warm_lanes: AtomicUsize,
+    /// Native mirror-descent iterations across served solves (from
+    /// `RunStats` — the quantity warmstarting reduces).
+    pub lrot_iters: AtomicUsize,
     lat: Mutex<LatRing>,
 }
 
@@ -139,6 +147,9 @@ impl ServeMetrics {
             ("microbatched_lane_frac".into(), Json::Num(self.microbatched_lane_frac())),
             ("spill_bytes_written".into(), ld(&self.spill_bytes_written)),
             ("spill_reads".into(), ld(&self.spill_reads)),
+            ("warm_levels".into(), ld(&self.warm_levels)),
+            ("warm_lanes".into(), ld(&self.warm_lanes)),
+            ("lrot_iters".into(), ld(&self.lrot_iters)),
             ("latency_p50_ms".into(), Json::Num(p50)),
             ("latency_p99_ms".into(), Json::Num(p99)),
             // which kernel implementation every solve in this process
@@ -185,5 +196,9 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.u64_field("micro_lanes"), Some(8));
         assert!(j.get("latency_p99_ms").is_some());
+        // warmstart counters are present (and zero on an untouched service)
+        assert_eq!(j.u64_field("warm_levels"), Some(0));
+        assert_eq!(j.u64_field("warm_lanes"), Some(0));
+        assert_eq!(j.u64_field("lrot_iters"), Some(0));
     }
 }

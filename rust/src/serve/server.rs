@@ -456,6 +456,10 @@ impl Server {
             .spill_bytes_written
             .fetch_add(out.stats.spill_bytes_written, Ordering::Relaxed);
         self.metrics.spill_reads.fetch_add(out.stats.spill_reads, Ordering::Relaxed);
+        let warm_levels = out.stats.level_stats.iter().filter(|ls| ls.warmstarted).count();
+        self.metrics.warm_levels.fetch_add(warm_levels, Ordering::Relaxed);
+        self.metrics.warm_lanes.fetch_add(out.stats.cluster_calls, Ordering::Relaxed);
+        self.metrics.lrot_iters.fetch_add(out.stats.lrot_iters, Ordering::Relaxed);
         let elapsed = t0.elapsed();
         self.metrics.record_latency(elapsed);
         Ok(SolveDone { perm: out.perm, warm, elapsed_ms: elapsed.as_secs_f64() * 1e3 })

@@ -93,6 +93,27 @@ impl Default for LrotConfig {
     }
 }
 
+/// Initial co-clustering for one lane of
+/// [`solve_factored_batch_warm`]: per-row cluster labels in `0..rank`
+/// for the X (`x`, first `active_x` rows) and Y (`y`, first `active_y`
+/// rows) sides — e.g. the parent split's membership, or a
+/// `coordinator::warmstart` clustering.  Labels bias the initial logits
+/// toward the given co-clustering; mirror descent can still overturn
+/// them wherever they are wrong.
+#[derive(Clone, Copy)]
+pub struct WarmLabels<'a> {
+    pub x: &'a [u32],
+    pub y: &'a [u32],
+}
+
+/// Log-domain bias a warm lane adds to its labelled column before the
+/// first KL projection: `e^4 ≈ 55×` the mass of the unlabelled columns —
+/// a strong prior (the first hard co-clustering equals the labels, so a
+/// lane near its fixed point retires at the first convergence check)
+/// that a few mirror-descent steps can still walk away from where the
+/// clustering was wrong.
+const WARM_BIAS: f32 = 4.0;
+
 /// Factors `(Q, R)`, each `s×r`, column sums = 1/r, row sums = marginals.
 pub struct LrotOutput {
     pub q: Mat,
@@ -261,10 +282,33 @@ pub fn solve_factored_batch(
     arena: &ScratchArena,
     threads: usize,
 ) -> Vec<LrotOutput> {
+    solve_factored_batch_warm(u, v, active, cfg, seeds, &[], arena, threads)
+}
+
+/// [`solve_factored_batch`] with optional per-lane **warm starts**: lane
+/// `l` with `warm[l] = Some(labels)` adds [`WARM_BIAS`] to each labelled
+/// logit column after the noisy product-coupling init (and, when the
+/// labels cover every row, pre-seeds the convergence mask with them, so
+/// a lane already at its fixed point retires at the *first* stability
+/// check instead of the second).  An empty `warm` slice — or `None` in
+/// every lane — is **bit-identical** to the cold solver: the RNG draw
+/// sequence and every subsequent floating-point operation are unchanged.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_factored_batch_warm(
+    u: BatchView<'_>,
+    v: BatchView<'_>,
+    active: &[(usize, usize)],
+    cfg: &LrotConfig,
+    seeds: &[u64],
+    warm: &[Option<WarmLabels<'_>>],
+    arena: &ScratchArena,
+    threads: usize,
+) -> Vec<LrotOutput> {
     let lanes = u.len();
     assert_eq!(lanes, v.len(), "u/v lane count mismatch");
     assert_eq!(lanes, active.len(), "active lane count mismatch");
     assert_eq!(lanes, seeds.len(), "seed lane count mismatch");
+    assert!(warm.is_empty() || warm.len() == lanes, "warm lane count mismatch");
     if lanes == 0 {
         return Vec::new();
     }
@@ -336,7 +380,7 @@ pub fn solve_factored_batch(
         let all: Vec<u32> = (0..lanes as u32).collect();
         crew_lane_chunks(crew, &all, |ids| {
             for &l in ids {
-                init_lane(l as usize, r, logg, cfg, seeds, &geo, &st);
+                init_lane(l as usize, r, logg, cfg, seeds, warm, &geo, &st);
             }
             Vec::new()
         });
@@ -395,14 +439,18 @@ pub fn solve_factored_batch(
     })
 }
 
-/// Lane initialisation: marginals, noisy product-coupling logits, first
-/// KL projection.  Same operation order as the historical per-block solve.
+/// Lane initialisation: marginals, noisy product-coupling logits,
+/// optional warm-start bias, first KL projection.  Same operation order
+/// as the historical per-block solve — a cold lane (no warm entry) draws
+/// the identical RNG sequence and computes the identical floats.
+#[allow(clippy::too_many_arguments)]
 fn init_lane(
     l: usize,
     r: usize,
     logg: f32,
     cfg: &LrotConfig,
     seeds: &[u64],
+    warm: &[Option<WarmLabels<'_>>],
     geo: &[Geo],
     st: &BatchState<'_>,
 ) {
@@ -420,6 +468,30 @@ fn init_lane(
     let lr = unsafe { st.log_r.slice_mut(g.off_svr, g.off_svr + g.sv * r) };
     init_logits(lq, loga, r, logg, cfg.tau, &mut rng);
     init_logits(lr, logb, r, logg, cfg.tau, &mut rng);
+    if let Some(w) = warm.get(l).copied().flatten() {
+        // warm start: bias the labelled column of each row before the
+        // first projection (the noise stays — symmetry breaking for rows
+        // the clustering got wrong)
+        debug_assert!(w.x.len() <= g.s && w.y.len() <= g.sv, "warm labels exceed lane shape");
+        for (i, &z) in w.x.iter().enumerate() {
+            lq[i * r + z as usize] += WARM_BIAS;
+        }
+        for (j, &z) in w.y.iter().enumerate() {
+            lr[j * r + z as usize] += WARM_BIAS;
+        }
+        if w.x.len() == g.s && w.y.len() == g.sv {
+            // full-cover labels: pre-seed the convergence mask so the
+            // first stability check can already retire the lane (the
+            // row-argmax is preserved by the projection's row shifts and,
+            // for balanced labels, near-uniform column potentials)
+            // SAFETY: lane l's ctl entry — this worker only during init.
+            let ctl = unsafe { &mut st.ctl.slice_mut(l, l + 1)[0] };
+            ctl.prev = Some((
+                w.x.iter().map(|&z| z as u16).collect(),
+                w.y.iter().map(|&z| z as u16).collect(),
+            ));
+        }
+    }
     // SAFETY: as above — lane l's potential scratch, this worker only.
     let f = unsafe { st.fpot.slice_mut(g.off_f, g.off_f + g.s.max(g.sv)) };
     // SAFETY: as above — lane l's column-potential window, this worker only.
@@ -917,6 +989,98 @@ mod tests {
         // padding rows of the short lane carry zero mass
         for i in 30..33 {
             assert!(outs[1].q.row(i).iter().all(|&v| v == 0.0));
+        }
+    }
+
+    /// Two well-separated blobs; y is x plus tiny noise, so the rank-2
+    /// hard co-clustering is the blob split and stabilises immediately.
+    fn blob_pair(s: usize, d: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let mut x = Mat::zeros(s, d);
+        for i in 0..s {
+            let c = if i % 2 == 0 { 4.0f32 } else { -4.0 };
+            for v in x.row_mut(i) {
+                *v = c + 0.1 * rng.normal_f32();
+            }
+        }
+        let mut y = Mat::zeros(s, d);
+        y.data.copy_from_slice(&x.data);
+        for v in y.data.iter_mut() {
+            *v += 0.01 * rng.normal_f32();
+        }
+        (x, y)
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "slow under Miri: full mirror-descent solves")]
+    fn none_warm_lanes_are_bit_identical_to_cold() {
+        // the warm seam must be invisible when no lane carries labels:
+        // same RNG draws, same floats, same iteration counts
+        let cfg = LrotConfig { rank: 3, ..Default::default() };
+        let (x, y, _) = shuffled_pair(40, 2, 60);
+        let (u, v) = sq_euclidean_factors(&x, &y);
+        let (udata, uitems) = stack_lanes(&[&u]);
+        let (vdata, vitems) = stack_lanes(&[&v]);
+        let arena = ScratchArena::new(2);
+        let cold = solve_factored_batch(
+            BatchView::new(&udata, &uitems),
+            BatchView::new(&vdata, &vitems),
+            &[(40, 40)],
+            &cfg,
+            &[9],
+            &arena,
+            2,
+        );
+        let warm = solve_factored_batch_warm(
+            BatchView::new(&udata, &uitems),
+            BatchView::new(&vdata, &vitems),
+            &[(40, 40)],
+            &cfg,
+            &[9],
+            &[None],
+            &arena,
+            2,
+        );
+        assert_eq!(cold[0].q.data, warm[0].q.data);
+        assert_eq!(cold[0].r.data, warm[0].r.data);
+        assert_eq!(cold[0].iters, warm[0].iters);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "slow under Miri: full mirror-descent solves")]
+    fn warm_labels_retire_converged_lanes_sooner() {
+        // seed a lane with its own fixed-point co-clustering: the
+        // pre-seeded convergence mask must retire it at the FIRST
+        // stability check (5 iterations) instead of the second (10, the
+        // cold minimum), without walking away from the labels.
+        let cfg = LrotConfig { rank: 2, ..Default::default() };
+        let (x, y) = blob_pair(64, 3, 61);
+        let (u, v) = sq_euclidean_factors(&x, &y);
+        let cold = solve_factored(&u, &v, 64, 64, &cfg, 17);
+        let lx: Vec<u32> = (0..64).map(|i| argmax(cold.q.row(i)) as u32).collect();
+        let ly: Vec<u32> = (0..64).map(|j| argmax(cold.r.row(j)) as u32).collect();
+        let (udata, uitems) = stack_lanes(&[&u]);
+        let (vdata, vitems) = stack_lanes(&[&v]);
+        let arena = ScratchArena::new(2);
+        let warm = solve_factored_batch_warm(
+            BatchView::new(&udata, &uitems),
+            BatchView::new(&vdata, &vitems),
+            &[(64, 64)],
+            &cfg,
+            &[17],
+            &[Some(WarmLabels { x: &lx, y: &ly })],
+            &arena,
+            2,
+        );
+        assert!(
+            warm[0].iters <= cold.iters,
+            "warm {} vs cold {} iterations",
+            warm[0].iters,
+            cold.iters
+        );
+        assert!(warm[0].iters <= 10, "warm lane took {} iterations", warm[0].iters);
+        for i in 0..64 {
+            assert_eq!(argmax(warm[0].q.row(i)) as u32, lx[i], "warm solve left its labels");
         }
     }
 

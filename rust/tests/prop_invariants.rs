@@ -424,6 +424,50 @@ fn prop_ranges_partition_and_reindexing_stays_bijective() {
 }
 
 #[test]
+fn prop_warmstart_any_depth_keeps_layout_invariants() {
+    // Any `warmstart_levels` setting — 0 (exact), boundary depths, or past
+    // the schedule end (clamped) — must preserve the layout contract:
+    // the alignment is a bijection, both in-place re-index orders are
+    // permutations of 0..n, every complete recorded scale partitions 0..n
+    // on both sides, and blocks stay pairwise balanced.
+    check("warmstart layout invariants", 10, |rng| {
+        let n = 24 + rng.next_below(300);
+        let x = rand_mat(rng, n, 2);
+        let y = rand_mat(rng, n, 2);
+        let mut cfg = native_cfg(rng);
+        cfg.record_scales = true;
+        cfg.base_size = 8;
+        cfg.warmstart_levels = rng.next_below(4);
+        let out = HiRef::new(cfg).align(&x, &y).unwrap();
+        assert!(out.is_bijection());
+
+        let mut xo = out.x_order.clone();
+        let mut yo = out.y_order.clone();
+        assert_is_permutation_of_0_to_n(&mut xo, n, "x_order");
+        assert_is_permutation_of_0_to_n(&mut yo, n, "y_order");
+
+        for (lvl_idx, lvl) in out.scales.as_ref().unwrap().iter().enumerate() {
+            if lvl.is_empty() {
+                continue;
+            }
+            for (bx, by) in lvl {
+                assert_eq!(bx.len(), by.len(), "level {lvl_idx}: unbalanced block");
+            }
+            let mut xs: Vec<u32> = lvl.iter().flat_map(|(a, _)| a.iter().copied()).collect();
+            let mut ys: Vec<u32> = lvl.iter().flat_map(|(_, b)| b.iter().copied()).collect();
+            xs.sort_unstable();
+            ys.sort_unstable();
+            assert!(xs.windows(2).all(|w| w[0] != w[1]), "level {lvl_idx}: duplicate x id");
+            assert!(ys.windows(2).all(|w| w[0] != w[1]), "level {lvl_idx}: duplicate y id");
+            if xs.len() == n {
+                assert_is_permutation_of_0_to_n(&mut xs, n, "level x ids");
+                assert_is_permutation_of_0_to_n(&mut ys, n, "level y ids");
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_matview_solves_equal_gather_rows_solves() {
     // MatView-vs-gather_rows equivalence: running LROT on a contiguous
     // row-range *view* of the factor buffers must be bit-identical to
